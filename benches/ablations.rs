@@ -1,0 +1,196 @@
+//! ABL — design ablations for the choices the paper argues in §2:
+//!
+//! 1. **Deque memory-order style** (§2.1): fence-free (adopted,
+//!    Filament-style) vs `atomic_thread_fence`-based (Lê et al. /
+//!    Taskflow style) — owner push/pop throughput and steal throughput
+//!    under contention. The paper's claim is that the fence-free form
+//!    is cleaner under TSan *without* losing performance; this bench
+//!    shows the performance side.
+//! 2. **Injector choice**: Mutex<VecDeque> vs lock-free SegQueue under
+//!    external submission storms (the one path where it could matter).
+//! 3. **Inline continuation** (§2.2): first-ready-successor-inline vs
+//!    resubmit-everything, on chain and wavefront graphs.
+//! 4. **Spin rounds before parking**: wakeup latency vs CPU trade.
+//!
+//! Knobs: `BENCH_FAST=1`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::graph::RunOptions;
+use scheduling::pool::injector::{Injector, MutexInjector, SegQueue};
+use scheduling::pool::{deque, fence_deque, PoolConfig, Steal, ThreadPool};
+use scheduling::workloads::Dag;
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    deque_ablation(&opts);
+    injector_ablation(&opts);
+    inline_ablation(&opts);
+    spin_ablation(&opts);
+}
+
+fn deque_ablation(opts: &BenchOptions) {
+    let mut report = Report::new(
+        "ABL-1 deque memory-order style",
+        "per-op cost; owner = push+pop pairs, steal = cross-thread under owner churn",
+    );
+    const OPS: usize = 10_000;
+
+    // Owner-only throughput.
+    let (w, _s) = deque::<usize>(256);
+    let summary = bench_wall(opts, || {
+        for i in 0..OPS {
+            w.push(i);
+        }
+        for _ in 0..OPS {
+            w.pop().unwrap();
+        }
+    });
+    report.push("owner push+pop", "fence-free", summary);
+
+    let (fw, _fs) = fence_deque::<usize>(256);
+    let summary = bench_wall(opts, || {
+        for i in 0..OPS {
+            fw.push(i);
+        }
+        for _ in 0..OPS {
+            fw.pop().unwrap();
+        }
+    });
+    report.push("owner push+pop", "fence-based", summary);
+
+    // Steal throughput under concurrent owner churn. One macro per
+    // deque flavor (the two have identical shapes but distinct types).
+    macro_rules! churn_bench {
+        ($mk:expr) => {
+            bench_wall(opts, || {
+                let (w, s) = $mk;
+                let stop = Arc::new(AtomicBool::new(false));
+                let stolen = Arc::new(AtomicUsize::new(0));
+                let thief = {
+                    let (s, stop, stolen) = (s.clone(), stop.clone(), stolen.clone());
+                    std::thread::spawn(move || {
+                        while !stop.load(Ordering::Acquire) {
+                            if matches!(s.steal(), Steal::Success(_)) {
+                                stolen.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                };
+                for i in 0..20_000usize {
+                    w.push(i);
+                    if i % 2 == 0 {
+                        let _ = w.pop();
+                    }
+                }
+                stop.store(true, Ordering::Release);
+                thief.join().unwrap();
+            })
+        };
+    }
+
+    let summary = churn_bench!(deque::<usize>(256));
+    report.push("steal under churn", "fence-free", summary);
+
+    let summary = churn_bench!(fence_deque::<usize>(256));
+    report.push("steal under churn", "fence-based", summary);
+
+    report.print();
+    if let Some(r) = report.speedup("owner push+pop", "fence-free", "fence-based") {
+        println!("SHAPE fence-free-parity-owner: {r:.2}x {}", if (0.5..=2.0).contains(&r) { "PASS" } else { "CHECK" });
+    }
+}
+
+fn injector_ablation(opts: &BenchOptions) {
+    let mut report = Report::new(
+        "ABL-2 injector implementation",
+        "2 producers + 2 consumers, 20k items/iteration",
+    );
+    fn storm(q: Arc<dyn Injector<usize>>) {
+        const PER: usize = 10_000;
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for p in 0..2 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i);
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let (q, done) = (q.clone(), done.clone());
+            handles.push(std::thread::spawn(move || {
+                while done.load(Ordering::Acquire) < 2 * PER {
+                    if q.pop().is_some() {
+                        done.fetch_add(1, Ordering::AcqRel);
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    let q: Arc<dyn Injector<usize>> = Arc::new(MutexInjector::new());
+    let summary = bench_wall(opts, || storm(q.clone()));
+    report.push("mpmc storm", "mutex-vecdeque", summary);
+
+    let q: Arc<dyn Injector<usize>> = Arc::new(SegQueue::new());
+    let summary = bench_wall(opts, || storm(q.clone()));
+    report.push("mpmc storm", "lockfree-segqueue", summary);
+
+    report.print();
+}
+
+fn inline_ablation(opts: &BenchOptions) {
+    let mut report = Report::new(
+        "ABL-3 inline continuation (paper §2.2)",
+        "same graphs, inline first ready successor vs resubmit all; 2 threads",
+    );
+    let pool = ThreadPool::new(2);
+    for (dag, param) in [
+        (Dag::linear_chain(16_384), "chain(16384)"),
+        (Dag::wavefront(48), "wf(48x48)"),
+        (Dag::binary_tree(12), "btree(d=12)"),
+    ] {
+        for (inline, label) in [(true, "inline"), (false, "resubmit-all")] {
+            let (mut g, _c) = dag.to_task_graph(0);
+            let summary = bench_wall(opts, || {
+                g.run_with_options(&pool, RunOptions::inline(inline)).unwrap();
+            });
+            report.push(param, label, summary);
+        }
+        eprintln!("  {param} done");
+    }
+    report.print();
+    if let Some(r) = report.speedup("chain(16384)", "inline", "resubmit-all") {
+        println!("SHAPE inline-wins-on-chain: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+}
+
+fn spin_ablation(opts: &BenchOptions) {
+    let mut report = Report::new(
+        "ABL-4 spin rounds before parking",
+        "wavefront(32) wall time at varying spin_rounds; 2 threads",
+    );
+    let dag = Dag::wavefront(32);
+    for spin in [0u32, 2, 8, 32] {
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 2,
+            spin_rounds: spin,
+            ..PoolConfig::default()
+        });
+        let (mut g, _c) = dag.to_task_graph(64);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push(format!("spin={spin}"), "scheduling", summary);
+    }
+    report.print();
+}

@@ -1,0 +1,65 @@
+//! GH-BT — binary tree: fan-out over a complete binary tree of depth D
+//! (`2^D - 1` empty tasks, parent precedes children).
+//!
+//! The maximal-fan-out counterpart to the linear chain: every node
+//! unlocks two successors, so the §2.2 rule keeps one child inline and
+//! pushes the other to the local deque where thieves pick it up — the
+//! workload that exercises steal throughput. Expected shape: the
+//! work-stealing executors beat the mutex pool and the gap grows with
+//! depth.
+//!
+//! Knobs: `TREE_DEPTHS` (default 10,13,16), `THREADS`, `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+fn env_list(key: &str, default: &[u32]) -> Vec<u32> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let depths = env_list("TREE_DEPTHS", &[10, 13, 16]);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let opts = BenchOptions::from_env();
+
+    let mut report = Report::new(
+        "GH-BT binary tree",
+        format!("complete binary tree fan-out, empty task bodies; {threads} threads"),
+    );
+
+    for &d in &depths {
+        let dag = Dag::binary_tree(d);
+        let n = dag.len();
+
+        let pool = ThreadPool::new(threads);
+        let (mut g, _counter) = dag.to_task_graph(0);
+        let summary = bench_wall(&opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push(format!("btree(d={d})"), "scheduling", summary);
+        let steal_ratio = pool.metrics().steal_ratio();
+        eprintln!("  btree(d={d}) scheduling done (steal ratio {steal_ratio:.3})");
+
+        for name in ["taskflow", "mutex"] {
+            let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+            let summary = bench_wall(&opts, || {
+                assert_eq!(dag.run_countdown(&ex, 0), n);
+            });
+            report.push(format!("btree(d={d})"), ex.name(), summary);
+        }
+    }
+
+    report.print();
+
+    let last = format!("btree(d={})", depths[depths.len() - 1]);
+    if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {
+        println!("SHAPE tree-ws-beats-mutex@{last}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+}

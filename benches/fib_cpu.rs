@@ -1,0 +1,66 @@
+//! FIG2 — Fig. 2 reproduction: fibonacci **CPU time** per executor.
+//!
+//! Same workload as FIG1 but measuring process CPU time (user+sys over
+//! all threads, via /proc/self/stat). This is the chart that punishes
+//! busy-spinning schedulers: an executor can match on wall time while
+//! burning idle workers' cycles in the steal loop. Expected shape: CPU
+//! time tracks wall time × active-threads for the work-stealing pools
+//! (eventcount parking keeps idle workers asleep), and the mutex pool
+//! burns extra CPU in lock convoys as N grows.
+//!
+//! Knobs: `FIB_NS` (default 18,20,22), `THREADS` (default 2),
+//! `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_cpu, BenchOptions, Report};
+use scheduling::workloads::{fib_reference, run_fib};
+
+fn env_list(key: &str, default: &[u32]) -> Vec<u32> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let ns = env_list("FIB_NS", &[18, 20, 22]);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    // CPU-time resolution is 10 ms: force long samples.
+    let mut opts = BenchOptions::from_env();
+    opts.min_sample_time = opts.min_sample_time.max(std::time::Duration::from_millis(200));
+
+    let mut report = Report::new(
+        "FIG2 fibonacci CPU time",
+        format!(
+            "process CPU time (user+sys, all threads) per fib(N) run; {threads} worker threads; \
+             10 ms tick resolution, samples span >=200 ms"
+        ),
+    );
+
+    for &n in &ns {
+        let expected = fib_reference(n);
+        for name in ["scheduling", "taskflow", "mutex"] {
+            let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+            let summary = bench_cpu(&opts, || {
+                assert_eq!(run_fib(&ex, n), expected);
+            });
+            report.push(format!("fib({n})"), ex.name(), summary);
+            eprintln!("  fib({n}) {name} done");
+        }
+    }
+
+    report.print();
+
+    let last = format!("fib({})", ns[ns.len() - 1]);
+    if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {
+        println!("SHAPE cpu-ws-beats-mutex@{last}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+    if let Some(r) = report.speedup(&last, "scheduling", "taskflow-like") {
+        println!(
+            "SHAPE cpu-parity-with-taskflow@{last}: {r:.2}x {}",
+            if (0.5..=2.0).contains(&r) { "PASS (within 2x)" } else { "CHECK" }
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! FIG1 — Fig. 1 reproduction: fibonacci **wall time** per executor.
+//!
+//! The paper plots wall time of `fib(N)` (recursive, no memoization,
+//! every call a task) for its pool vs Taskflow. We sweep N over all
+//! in-crate executors. Expected shape (DESIGN.md §3): the two
+//! work-stealing executors are within a small factor of each other;
+//! the centralized mutex pool falls behind as task count grows;
+//! thread-per-task is orders of magnitude slower (run only at small N).
+//!
+//! Knobs: `FIB_NS` (comma list, default 18,20,22,24), `THREADS`
+//! (default 2), `BENCH_FAST=1` (fewer samples).
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::workloads::{fib_reference, fib_task_count, run_fib};
+
+fn env_list(key: &str, default: &[u32]) -> Vec<u32> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let ns = env_list("FIB_NS", &[18, 20, 22, 24]);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let opts = BenchOptions::from_env();
+
+    let mut report = Report::new(
+        "FIG1 fibonacci wall time",
+        format!(
+            "recursive fib, no memoization; {threads} worker threads; 1-core container: \
+             pool-vs-pool deltas measure per-task scheduling overhead (see EXPERIMENTS.md §Testbed)"
+        ),
+    );
+
+    for &n in &ns {
+        let expected = fib_reference(n);
+        for name in ["scheduling", "taskflow", "mutex"] {
+            let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+            let summary = bench_wall(&opts, || {
+                assert_eq!(run_fib(&ex, n), expected);
+            });
+            report.push(format!("fib({n})"), ex.name(), summary);
+            eprintln!("  fib({n}) {} done ({} tasks)", name, fib_task_count(n));
+        }
+        // Thread-per-task only at small N (it would take minutes above).
+        if n <= 18 {
+            let ex: Arc<dyn Executor> = executor_by_name("spawn", threads).unwrap();
+            let summary = bench_wall(&opts, || {
+                assert_eq!(run_fib(&ex, n), expected);
+            });
+            report.push(format!("fib({n})"), ex.name(), summary);
+        }
+    }
+
+    report.print();
+
+    // Paper-shape checks (informational, printed for EXPERIMENTS.md).
+    let last = format!("fib({})", ns[ns.len() - 1]);
+    if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {
+        println!("SHAPE ws-beats-mutex@{last}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+    if let Some(r) = report.speedup(&last, "scheduling", "taskflow-like") {
+        println!(
+            "SHAPE parity-with-taskflow@{last}: {r:.2}x {}",
+            if (0.5..=2.0).contains(&r) { "PASS (within 2x)" } else { "CHECK" }
+        );
+    }
+    if let Some(r) = report.speedup("fib(18)", "scheduling", "spawn-per-task") {
+        println!("SHAPE ws-beats-spawn@fib(18): {r:.1}x {}", if r > 10.0 { "PASS (>10x)" } else { "CHECK" });
+    }
+}

@@ -1,0 +1,71 @@
+//! GH-GT — graph traversal: layered random DAG execution.
+//!
+//! The irregular-dependency workload: layers × width nodes with random
+//! next-layer edges (deterministic seed, recorded below). Mixed fan-in/
+//! fan-out exercises the predecessor-counter protocol and victim
+//! randomization together. Expected shape: work-stealing executors
+//! ahead of the mutex pool, scheduling ≈ taskflow-like.
+//!
+//! Knobs: `GT_SIZES` ("layers:width" list, default
+//! 32:32,64:64,128:64), `GT_P` (default 0.15), `SEED`, `THREADS`,
+//! `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+fn main() {
+    let sizes: Vec<(usize, usize)> = std::env::var("GT_SIZES")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| {
+                    let (l, w) = s.trim().split_once(':')?;
+                    Some((l.parse().ok()?, w.parse().ok()?))
+                })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![(32, 32), (64, 64), (128, 64)]);
+    let p: f64 = std::env::var("GT_P").ok().and_then(|v| v.parse().ok()).unwrap_or(0.15);
+    let seed: u64 = std::env::var("SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(42);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let opts = BenchOptions::from_env();
+
+    let mut report = Report::new(
+        "GH-GT graph traversal (layered random DAG)",
+        format!("p={p} seed={seed} threads={threads}; empty task bodies"),
+    );
+
+    for &(layers, width) in &sizes {
+        let dag = Dag::layered_random(layers, width, p, seed);
+        let n = dag.len();
+        let param = format!("dag({layers}x{width})");
+
+        let pool = ThreadPool::new(threads);
+        let (mut g, _c) = dag.to_task_graph(0);
+        let summary = bench_wall(&opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push(&param, "scheduling", summary);
+
+        for name in ["taskflow", "mutex"] {
+            let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+            let summary = bench_wall(&opts, || {
+                assert_eq!(dag.run_countdown(&ex, 0), n);
+            });
+            report.push(&param, ex.name(), summary);
+        }
+        eprintln!("  {param} ({} nodes, {} edges) done", n, dag.num_edges());
+    }
+
+    report.print();
+
+    let (l, w) = sizes[sizes.len() - 1];
+    let last = format!("dag({l}x{w})");
+    if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {
+        println!("SHAPE dag-ws-beats-mutex@{last}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+}

@@ -1,0 +1,72 @@
+//! GH-LC — linear chain: N tasks in a strict dependency chain.
+//!
+//! The degenerate graph for a scheduler: zero parallelism, pure
+//! handoff cost. The paper's §2.2 inline-continuation rule makes the
+//! whole chain run as ONE pool job on our executor; baselines resubmit
+//! every node. Expected shape: scheduling (inline) ≫ countdown
+//! executors, gap growing linearly with chain length.
+//!
+//! Knobs: `CHAIN_SIZES` (default 1024,8192,65536), `THREADS`,
+//! `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let sizes = env_list("CHAIN_SIZES", &[1024, 8192, 65536]);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let opts = BenchOptions::from_env();
+
+    let mut report = Report::new(
+        "GH-LC linear chain",
+        format!("strict chain of empty tasks; {threads} threads; 'scheduling' = §2.2 graph executor (inline continuations), others = countdown resubmission"),
+    );
+
+    for &n in &sizes {
+        let dag = Dag::linear_chain(n);
+
+        // Our pool, native graph executor.
+        let pool = ThreadPool::new(threads);
+        let (mut g, counter) = dag.to_task_graph(0);
+        let summary = bench_wall(&opts, || {
+            g.run(&pool).unwrap();
+        });
+        assert!(counter.load(std::sync::atomic::Ordering::Relaxed) >= n);
+        report.push(format!("chain({n})"), "scheduling", summary);
+
+        // Countdown closures on the comparators (and on our pool, to
+        // separate "inline continuation" from "pool quality").
+        for name in ["scheduling", "taskflow", "mutex"] {
+            let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+            let summary = bench_wall(&opts, || {
+                assert_eq!(dag.run_countdown(&ex, 0), n);
+            });
+            report.push(format!("chain({n})"), format!("{}+countdown", ex.name()), summary);
+        }
+        eprintln!("  chain({n}) done");
+    }
+
+    report.print();
+
+    let last = format!("chain({})", sizes[sizes.len() - 1]);
+    if let Some(r) = report.speedup(&last, "scheduling", "scheduling+countdown") {
+        println!(
+            "SHAPE inline-beats-resubmit@{last}: {r:.2}x {}",
+            if r > 1.0 { "PASS" } else { "FAIL" }
+        );
+    }
+    if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool+countdown") {
+        println!("SHAPE graph-beats-mutex@{last}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+}

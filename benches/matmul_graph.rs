@@ -1,0 +1,92 @@
+//! E2E — three-layer composition benchmark: blocked matmul task graph
+//! whose node bodies execute AOT-compiled XLA executables (L1 Pallas
+//! kernel inside an L2 jax graph, driven by the L3 pool).
+//!
+//! Series: task-graph execution at 1/2/4 workers vs single-threaded
+//! sequential execution of the same kernel calls (the no-scheduler
+//! baseline), both schedules (independent / wavefront). Numerics are
+//! verified against host math every iteration.
+//!
+//! Requires `make artifacts`. Knobs: `MM_SIZE` (default 256),
+//! `MM_TILE` (default 64), `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::runtime::{find_artifacts_dir, HostTensor, Registry, Runtime};
+use scheduling::workloads::matmul_graph::{BlockedMatmul, MatmulSchedule};
+
+fn main() {
+    if find_artifacts_dir().is_none() {
+        eprintln!("SKIP matmul_graph bench: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let size: usize = std::env::var("MM_SIZE").ok().and_then(|v| v.parse().ok()).unwrap_or(256);
+    let tile: usize = std::env::var("MM_TILE").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
+    let opts = BenchOptions::from_env();
+
+    let runtime = Arc::new(Runtime::cpu().expect("PJRT CPU client"));
+    let registry = Registry::open_default(runtime).expect("registry");
+    let a = HostTensor::random(&[size, size], 1);
+    let b = HostTensor::random(&[size, size], 2);
+    let expected = a.matmul_ref(&b);
+    let mm = BlockedMatmul::new(&registry, &a, &b, tile).expect("matmul setup");
+    let t = size / tile;
+
+    let mut report = Report::new(
+        "E2E blocked matmul over PJRT executables",
+        format!(
+            "C=A@B, {size}x{size}, tile {tile} ({}x{} tiles, {} kernel calls); \
+             node bodies run the Pallas matmul_acc executable; verified vs host math",
+            t,
+            t,
+            t * t * t
+        ),
+    );
+
+    // Sequential baseline: same kernel calls, no pool.
+    let exe = registry.get(&format!("matmul_tile_{tile}")).unwrap();
+    let summary = bench_wall(&opts, || {
+        let at = scheduling::workloads::matmul_graph::split_tiles(&a, tile);
+        let bt = scheduling::workloads::matmul_graph::split_tiles(&b, tile);
+        let mut acc_sum = 0.0f64;
+        for i in 0..t {
+            for j in 0..t {
+                let mut acc = HostTensor::zeros(&[tile, tile]);
+                for k in 0..t {
+                    acc = exe.run1(&[at[i][k].clone(), bt[k][j].clone(), acc]).unwrap();
+                }
+                acc_sum += acc.sum();
+            }
+        }
+        assert!((acc_sum - expected.sum()).abs() / expected.sum().abs().max(1.0) < 1e-3);
+    });
+    report.push(format!("{size}/{tile}"), "sequential", summary);
+    eprintln!("  sequential done");
+
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        for (schedule, label) in [
+            (MatmulSchedule::Independent, "graph-indep"),
+            (MatmulSchedule::Wavefront, "graph-wavefront"),
+        ] {
+            let summary = bench_wall(&opts, || {
+                let c = mm.run(&pool, schedule).unwrap();
+                assert!(c.allclose(&expected, 1e-3, 1e-3));
+            });
+            report.push(format!("{size}/{tile}"), format!("{label}-t{threads}"), summary);
+            eprintln!("  {label} t={threads} done");
+        }
+    }
+
+    report.print();
+
+    let param = format!("{size}/{tile}");
+    if let Some(r) = report.speedup(&param, "graph-indep-t1", "sequential") {
+        println!(
+            "SHAPE graph-overhead-vs-sequential@t1: {r:.2}x {}",
+            if r > 0.8 { "PASS (graph adds <25% overhead)" } else { "CHECK" }
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! E2E-2 — pipeline-parallel transformer-FFN inference (GPipe-style
+//! schedule) on the paper's executor.
+//!
+//! Sweeps stage count × micro-batch count at 1/2/4 workers; every node
+//! executes the `transformer_ffn_64` AOT executable. The interesting
+//! shape: with microbatches ≥ stages the pipeline saturates and
+//! per-node cost approaches the kernel dispatch floor; graph overhead
+//! stays in the noise (the §2.2 executor's diagonal chains run inline).
+//!
+//! Requires `make artifacts`. Knobs: `PIPE_STAGES` (default 4),
+//! `PIPE_MBS` (default 1,4,8), `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::runtime::{find_artifacts_dir, Registry, Runtime};
+use scheduling::workloads::Pipeline;
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    if find_artifacts_dir().is_none() {
+        eprintln!("SKIP pipeline bench: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let stages: usize = std::env::var("PIPE_STAGES").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let mbs = env_list("PIPE_MBS", &[1, 4, 8]);
+    let opts = BenchOptions::from_env();
+
+    let runtime = Arc::new(Runtime::cpu().expect("PJRT CPU client"));
+    let registry = Registry::open_default(runtime).expect("registry");
+    let pipeline = Pipeline::new(&registry, stages).expect("pipeline setup");
+
+    let mut report = Report::new(
+        "E2E-2 pipeline-parallel FFN inference",
+        format!(
+            "{stages} stages x M microbatches of {}x{}; node = transformer_ffn_64 via PJRT; \
+             output verified vs host oracle every iteration",
+            Pipeline::BATCH,
+            Pipeline::D
+        ),
+    );
+
+    for &m in &mbs {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let summary = bench_wall(&opts, || {
+                pipeline.run(&pool, m, None).expect("pipeline run");
+            });
+            report.push(format!("mb={m}"), format!("graph-t{threads}"), summary);
+            eprintln!("  mb={m} t={threads} done");
+        }
+    }
+
+    report.print();
+
+    // Per-node cost at saturation vs single microbatch.
+    if let (Some(sat), Some(single)) = (report.mean_of("mb=8", "graph-t2"), report.mean_of("mb=1", "graph-t2")) {
+        let per_node_sat = sat.as_secs_f64() / (stages as f64 * 8.0);
+        let per_node_single = single.as_secs_f64() / stages as f64;
+        println!(
+            "SHAPE pipeline-amortizes: per-node {:.0}us (mb=8) vs {:.0}us (mb=1) {}",
+            per_node_sat * 1e6,
+            per_node_single * 1e6,
+            if per_node_sat <= per_node_single * 1.5 { "PASS" } else { "CHECK" }
+        );
+    }
+}

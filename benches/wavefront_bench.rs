@@ -1,0 +1,70 @@
+//! GH-WF — wavefront: G×G grid, cell (i,j) waits on (i-1,j) and
+//! (i,j-1).
+//!
+//! The classic dependency-bound pattern (DP tables, tiled Cholesky):
+//! available parallelism ramps 1..G..1 along anti-diagonals, so the
+//! scheduler must exploit parallelism the instant it appears. Swept at
+//! two task granularities: empty bodies (pure scheduling) and
+//! `WORK_STEPS` PRNG iterations (amortized regime, where all
+//! reasonable executors converge — the paper's "in simple use cases
+//! performance is comparable" claim from the other side).
+//!
+//! Knobs: `WF_SIZES` (default 16,32,64), `WORK_STEPS` (default 0,512),
+//! `THREADS`, `BENCH_FAST=1`.
+
+use std::sync::Arc;
+
+use scheduling::baseline::{executor_by_name, Executor};
+use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+fn env_list(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let sizes = env_list("WF_SIZES", &[16, 32, 64]);
+    let works: Vec<u32> = env_list("WORK_STEPS", &[0, 512]).into_iter().map(|x| x as u32).collect();
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let opts = BenchOptions::from_env();
+
+    let mut report = Report::new(
+        "GH-WF wavefront",
+        format!("GxG grid, (i,j) <- (i-1,j),(i,j-1); threads={threads}; work = PRNG steps per node"),
+    );
+
+    for &g_size in &sizes {
+        let dag = Dag::wavefront(g_size);
+        let n = dag.len();
+        for &work in &works {
+            let param = format!("wf({g_size}x{g_size},w={work})");
+
+            let pool = ThreadPool::new(threads);
+            let (mut g, _c) = dag.to_task_graph(work);
+            let summary = bench_wall(&opts, || {
+                g.run(&pool).unwrap();
+            });
+            report.push(&param, "scheduling", summary);
+
+            for name in ["taskflow", "mutex"] {
+                let ex: Arc<dyn Executor> = executor_by_name(name, threads).unwrap();
+                let summary = bench_wall(&opts, || {
+                    assert_eq!(dag.run_countdown(&ex, work), n);
+                });
+                report.push(&param, ex.name(), summary);
+            }
+            eprintln!("  {param} done");
+        }
+    }
+
+    report.print();
+
+    let last0 = format!("wf({0}x{0},w=0)", sizes[sizes.len() - 1]);
+    if let Some(r) = report.speedup(&last0, "scheduling", "mutex-pool") {
+        println!("SHAPE wf-ws-beats-mutex@{last0}: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
+    }
+}

@@ -1,0 +1,47 @@
+//! Fibonacci — the paper's §3 benchmark workload as a runnable
+//! example: compute fib(N) by spawning the full recursive call tree as
+//! tasks on every executor, and print a mini comparison table.
+//!
+//! Run: `cargo run --release --example fibonacci -- [N] [THREADS]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use scheduling::baseline::all_executors;
+use scheduling::util::process_cpu_time;
+use scheduling::workloads::{fib_reference, fib_task_count, run_fib};
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let n: u32 = args.next().and_then(|v| v.parse().ok()).unwrap_or(22);
+    let threads: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let expected = fib_reference(n);
+    println!(
+        "fib({n}) = {expected} — {} tasks per run, {threads} worker threads\n",
+        fib_task_count(n)
+    );
+    println!("{:<16} {:>12} {:>12} {:>14}", "executor", "wall", "cpu", "ns/task");
+
+    for ex in all_executors(threads) {
+        if ex.name() == "spawn-per-task" && n > 18 {
+            println!("{:<16} {:>12} {:>12} {:>14}", ex.name(), "(skipped)", "-", "-");
+            continue;
+        }
+        let ex: Arc<_> = ex;
+        let wall_start = Instant::now();
+        let cpu_start = process_cpu_time();
+        let got = run_fib(&ex, n);
+        let wall = wall_start.elapsed();
+        let cpu = process_cpu_time().saturating_sub(cpu_start);
+        assert_eq!(got, expected, "{} computed a wrong value", ex.name());
+        let per_task = wall.as_nanos() as f64 / fib_task_count(n) as f64;
+        println!(
+            "{:<16} {:>12} {:>12} {:>12.0}ns",
+            ex.name(),
+            format!("{:.2?}", wall),
+            format!("{:.2?}", cpu),
+            per_task
+        );
+    }
+    println!("\nfibonacci OK");
+}

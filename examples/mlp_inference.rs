@@ -1,0 +1,121 @@
+//! MLP inference serving — batched requests through the pool + PJRT.
+//!
+//! A miniature serving driver: a closed-loop load generator produces
+//! inference requests (batch 32, d=64 feature vectors); the pool runs
+//! each request as a task whose body executes the two-layer MLP
+//! executable (`mlp2_64`: L1 Pallas matmul + fused bias/GeLU kernels).
+//! Reports throughput and latency percentiles, and verifies a sample
+//! of responses against host math.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example mlp_inference -- [REQUESTS] [THREADS]`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use scheduling::pool::ThreadPool;
+use scheduling::runtime::{find_artifacts_dir, HostTensor, Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let requests: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(200);
+    let threads: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(2);
+
+    if find_artifacts_dir().is_none() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let runtime = Arc::new(Runtime::cpu()?);
+    let registry = Registry::open_default(runtime)?;
+    let exe = registry.get("mlp2_64")?;
+
+    // Fixed model weights (shared by all requests).
+    let w1 = Arc::new(HostTensor::random(&[64, 128], 100));
+    let b1 = Arc::new(HostTensor::random(&[128], 101));
+    let w2 = Arc::new(HostTensor::random(&[128, 64], 102));
+    let b2 = Arc::new(HostTensor::random(&[64], 103));
+
+    let pool = ThreadPool::new(threads);
+    let latencies: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::with_capacity(requests)));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let checked = Arc::new(AtomicUsize::new(0));
+
+    println!("serving {requests} requests (batch 32, 64->128->64 MLP) on {threads} workers");
+    let start = Instant::now();
+    for req in 0..requests {
+        let exe = exe.clone();
+        let (w1, b1, w2, b2) = (w1.clone(), b1.clone(), w2.clone(), b2.clone());
+        let (latencies, errors, checked) = (latencies.clone(), errors.clone(), checked.clone());
+        pool.submit(move || {
+            let t0 = Instant::now();
+            let x = HostTensor::random(&[32, 64], req as u64);
+            match exe.run1(&[x.clone(), (*w1).clone(), (*b1).clone(), (*w2).clone(), (*b2).clone()]) {
+                Ok(y) => {
+                    if y.shape != vec![32, 64] {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    } else if req % 50 == 0 {
+                        // Spot-check numerics against host math.
+                        let h = mlp2_host(&x, &w1, &b1, &w2, &b2);
+                        if y.allclose(&h, 1e-3, 1e-3) {
+                            checked.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    latencies.lock().unwrap().push(t0.elapsed());
+                }
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+    }
+    pool.wait_idle();
+    let took = start.elapsed();
+
+    let mut lat = latencies.lock().unwrap().clone();
+    lat.sort_unstable();
+    anyhow::ensure!(errors.load(Ordering::Relaxed) == 0, "request errors");
+    anyhow::ensure!(lat.len() == requests, "lost requests");
+    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+    println!(
+        "throughput: {:.1} req/s ({} requests in {:.2?})",
+        requests as f64 / took.as_secs_f64(),
+        requests,
+        took
+    );
+    println!(
+        "latency: p50 {:.2?}  p90 {:.2?}  p99 {:.2?}  max {:.2?}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        lat[lat.len() - 1]
+    );
+    println!(
+        "verified {} sampled responses against host math; kernel executions: {}",
+        checked.load(Ordering::Relaxed),
+        exe.executions()
+    );
+    println!("mlp_inference OK");
+    Ok(())
+}
+
+fn mlp2_host(
+    x: &HostTensor,
+    w1: &HostTensor,
+    b1: &HostTensor,
+    w2: &HostTensor,
+    b2: &HostTensor,
+) -> HostTensor {
+    let layer = |x: &HostTensor, w: &HostTensor, b: &HostTensor| {
+        let xw = x.matmul_ref(w);
+        let d = w.shape[1];
+        HostTensor::from_fn(&xw.shape.clone(), |idx| {
+            let z = xw.data[idx] + b.data[idx % d];
+            let inner = 0.797_884_6_f32 * (z + 0.044715 * z * z * z);
+            0.5 * z * (1.0 + inner.tanh())
+        })
+    };
+    layer(&layer(x, w1, b1), w2, b2)
+}

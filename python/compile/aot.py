@@ -1,0 +1,119 @@
+"""AOT lowering: JAX/Pallas -> HLO text + manifest.tsv.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request path. The interchange format is HLO **text**, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids
+that the Rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`), while the text parser reassigns ids and round-trips cleanly.
+
+Manifest format (tab-separated, parsed by rust/src/runtime/registry.rs):
+
+    name <TAB> file <TAB> inputs <TAB> outputs
+
+with arg specs like ``f32[64,64]`` joined by ``;``.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*dims):
+    """ShapeDtypeStruct for an f32 array."""
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def render_spec(s) -> str:
+    return "f32[{}]".format(",".join(str(d) for d in s.shape))
+
+
+# Exported entry points: name -> (fn, input specs).
+# Sizes are chosen so interpret-mode tracing stays fast while tiles
+# remain MXU-multiple-shaped where it matters (see DESIGN.md §Perf).
+EXPORTS = {
+    # Blocked-matmul inner step at the tile sizes the L3 workloads use.
+    "matmul_tile_32": (model.matmul_tile, [spec(32, 32)] * 3),
+    "matmul_tile_64": (model.matmul_tile, [spec(64, 64)] * 3),
+    "matmul_tile_128": (model.matmul_tile, [spec(128, 128)] * 3),
+    # MLP layers for the serving example: batch 32.
+    "mlp_layer_64x128": (model.mlp_layer, [spec(32, 64), spec(64, 128), spec(128)]),
+    "mlp_layer_128x64": (model.mlp_layer, [spec(32, 128), spec(128, 64), spec(64)]),
+    "mlp2_64": (
+        model.mlp2,
+        [spec(32, 64), spec(64, 128), spec(128), spec(128, 64), spec(64)],
+    ),
+    # Wavefront node body.
+    "jacobi_64": (model.wavefront_step, [spec(64, 64)]),
+    # Attention scores (matmul + softmax kernels composed).
+    "attention_scores_32x64": (model.attention_scores, [spec(32, 64), spec(32, 64)]),
+    # Pre-LN transformer FFN block (layernorm + 2x matmul + 2x gelu).
+    "transformer_ffn_64": (
+        model.transformer_ffn,
+        [spec(32, 64), spec(64), spec(64), spec(64, 128), spec(128), spec(128, 64), spec(64)],
+    ),
+    # Runtime smoke test.
+    "axpy_256": (model.axpy, [spec(), spec(256), spec(256)]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, in_specs, out_dir):
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # Output specs from the jitted signature.
+    out_aval = lowered.out_info
+    flat, _ = jax.tree_util.tree_flatten(out_aval)
+    outs = ";".join(render_spec(o) for o in flat)
+    ins = ";".join(render_spec(s) for s in in_specs)
+    return f"{name}\t{fname}\t{ins}\t{outs}", len(text)
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of export names"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = list(EXPORTS)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    rows = ["# name\tfile\tinputs\toutputs"]
+    for name in names:
+        fn, in_specs = EXPORTS[name]
+        row, nbytes = lower_one(name, fn, in_specs, args.out)
+        rows.append(row)
+        print(f"  {name}: {nbytes} bytes of HLO text")
+    manifest = os.path.join(args.out, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {manifest} ({len(names)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas kernel: fused bias + GeLU.
+
+The elementwise epilogue of an MLP layer as a single VMEM-resident
+kernel (one load, one store per element; the five-op GeLU chain fuses
+in-register). Grid over row blocks so arbitrarily large batches stream
+through a bounded VMEM footprint.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _bias_gelu_kernel(x_ref, b_ref, o_ref):
+    z = x_ref[...] + b_ref[...]
+    inner = _SQRT_2_OVER_PI * (z + 0.044715 * z * z * z)
+    o_ref[...] = 0.5 * z * (1.0 + jnp.tanh(inner))
+
+
+def bias_gelu(x, b, *, block_rows: int = 128):
+    """``gelu(x + b)`` (tanh approximation), x: (rows, d), b: (d,)."""
+    rows, d = x.shape
+    assert b.shape == (d,), f"bias shape {b.shape} != ({d},)"
+    br = min(block_rows, rows)
+    assert rows % br == 0, f"rows {rows} not divisible by block {br}"
+    return pl.pallas_call(
+        _bias_gelu_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=True,
+    )(x, b)

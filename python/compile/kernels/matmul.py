@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels: tiled matmul with accumulation.
+
+TPU-shaped even though we validate on CPU (interpret=True): the grid
+iterates (M/bm, N/bn) output tiles with an in-kernel K loop over
+(bm, bk) x (bk, bn) VMEM blocks, accumulating in an f32 scratch tile —
+the HBM<->VMEM schedule a Mosaic compile would pipeline. Block sizes
+default to MXU-friendly multiples; DESIGN.md §Perf carries the VMEM
+footprint accounting (3 tiles: bm*bk + bk*bn + bm*bn floats).
+
+interpret=True is mandatory on this testbed: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO so the same computation runs natively from Rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_acc_kernel(a_ref, b_ref, c_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile: o = sum_k a[:, k] @ b[k, :] + c."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_acc(a, b, c, *, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """``A @ B + C`` as a Pallas call with a 3-D (m, n, k) grid.
+
+    The k axis is the innermost ("arbitrary" order) grid dimension;
+    o_ref is revisited across k steps, giving the accumulation loop.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    assert c.shape == (m, n), f"bad accumulator shape {c.shape}"
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    nk = k // bk
+    kernel = functools.partial(_matmul_acc_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, c)
+
+
+def matmul(a, b, **kw):
+    """Plain ``A @ B`` via the same kernel with a zero accumulator."""
+    m, n = a.shape[0], b.shape[1]
+    return matmul_acc(a, b, jnp.zeros((m, n), jnp.float32), **kw)

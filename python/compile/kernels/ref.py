@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+pytest compares each kernel against these references (the CORE
+correctness signal for Layer 1); the Rust side re-verifies end-to-end
+against its own host-math references.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_acc_ref(a, b, c):
+    """C' = A @ B + C (the blocked-matmul inner step)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32) + c
+
+
+def matmul_ref(a, b):
+    """Plain matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def bias_gelu_ref(x, b):
+    """y = gelu(x + b) with the tanh approximation (matches kernel)."""
+    z = x + b
+    return (
+        0.5
+        * z
+        * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (z + 0.044715 * z**3)))
+    )
+
+
+def jacobi_ref(grid):
+    """One 5-point Jacobi relaxation step with fixed boundary.
+
+    interior[i,j] = 0.25 * (up + down + left + right); edges unchanged.
+    """
+    grid = jnp.asarray(grid)  # accept numpy inputs (tests feed ndarray)
+    up = grid[:-2, 1:-1]
+    down = grid[2:, 1:-1]
+    left = grid[1:-1, :-2]
+    right = grid[1:-1, 2:]
+    interior = 0.25 * (up + down + left + right)
+    return grid.at[1:-1, 1:-1].set(interior)
+
+
+def softmax_ref(x):
+    """Numerically-stable row softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Row LayerNorm with affine parameters."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention_scores_ref(q, k):
+    """Scaled dot-product scores + softmax: softmax(q @ k.T / sqrt(d))."""
+    d = q.shape[-1]
+    return softmax_ref(jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(d))
+
+
+def mlp_layer_ref(x, w, b):
+    """One MLP layer: gelu(x @ w + b)."""
+    return bias_gelu_ref(matmul_ref(x, w), b)
+
+
+def mlp2_ref(x, w1, b1, w2, b2):
+    """Two stacked MLP layers (the L2 composition check)."""
+    return mlp_layer_ref(mlp_layer_ref(x, w1, b1), w2, b2)

@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernel: 5-point Jacobi relaxation step.
+
+One wavefront-style grid update: interior cells become the average of
+their four neighbours, boundary cells are fixed. The kernel takes the
+whole grid as a single VMEM block (grids used by the task-graph
+workloads are tile-sized, e.g. 64x64 = 16 KiB — comfortably VMEM-
+resident); shifted reads express the neighbour accesses that a Mosaic
+compile would turn into register rotates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    up = g[:-2, 1:-1]
+    down = g[2:, 1:-1]
+    left = g[1:-1, :-2]
+    right = g[1:-1, 2:]
+    interior = 0.25 * (up + down + left + right)
+    out = g.at[1:-1, 1:-1].set(interior)
+    o_ref[...] = out
+
+
+def jacobi_step(grid):
+    """One Jacobi step over a (n, n) grid with fixed boundary."""
+    n, n2 = grid.shape
+    assert n == n2, f"square grids only, got {grid.shape}"
+    assert n >= 3, "grid too small for a 5-point stencil"
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(grid)

@@ -1,0 +1,74 @@
+"""Layer-2: JAX compute graphs calling the Layer-1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text; the Rust runtime
+executes them by artifact name. Everything here traces through the
+Pallas kernels (interpret=True) so the kernels land inside the same
+HLO module — one compiled executable per exported entry point.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.elementwise import bias_gelu
+from .kernels.matmul import matmul, matmul_acc
+from .kernels.normalize import layernorm, softmax
+from .kernels.stencil import jacobi_step
+
+
+def matmul_tile(a, b, c):
+    """Blocked-matmul inner step: ``A @ B + C`` on one tile.
+
+    The L3 blocked-matmul task graph calls this once per (i, j, k);
+    the accumulator threading keeps the k-loop on the Rust side so the
+    graph can schedule it.
+    """
+    return (matmul_acc(a, b, c),)
+
+
+def mlp_layer(x, w, b):
+    """One MLP layer ``gelu(x @ w + b)`` — matmul kernel + fused
+    bias/GeLU epilogue kernel."""
+    return (bias_gelu(matmul(x, w), b),)
+
+
+def mlp2(x, w1, b1, w2, b2):
+    """Two stacked MLP layers in one executable (the L2 composition:
+    XLA fuses the inter-layer boundary)."""
+    h = bias_gelu(matmul(x, w1), b1)
+    return (bias_gelu(matmul(h, w2), b2),)
+
+
+def wavefront_step(grid):
+    """One Jacobi relaxation step (the wavefront workload's node body).
+
+    Also returns the interior residual so the L3 driver can check
+    convergence without a second kernel launch.
+    """
+    out = jacobi_step(grid)
+    residual = jnp.max(jnp.abs(out - grid))
+    return (out, residual)
+
+
+def attention_scores(q, k):
+    """Scaled dot-product attention scores: softmax(q @ k.T / sqrt(d)).
+
+    Two L1 kernels composed in one L2 graph (matmul + softmax); the
+    transpose and scale fold into XLA between them.
+    """
+    d = q.shape[-1]
+    scores = matmul(q, jnp.transpose(k)) / jnp.sqrt(jnp.float32(d))
+    return (softmax(scores),)
+
+
+def transformer_ffn(x, gamma, beta, w1, b1, w2, b2):
+    """Pre-LN transformer feed-forward block:
+    ``x + mlp2(layernorm(x))`` — four L1 kernels in one executable."""
+    h = layernorm(x, gamma, beta)
+    h = bias_gelu(matmul(h, w1), b1)
+    h = bias_gelu(matmul(h, w2), b2)
+    return (x + h,)
+
+
+def axpy(alpha, x, y):
+    """``alpha * x + y`` — the trivial smoke-test entry point used by
+    runtime integration tests (fast to execute, exercises scalars)."""
+    return (alpha * x + y,)

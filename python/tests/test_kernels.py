@@ -1,0 +1,153 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes; fixed-seed numpy data keeps runs
+reproducible. Tolerances are f32-tight (the kernels and oracles run
+the same math in the same precision)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.elementwise import bias_gelu
+from compile.kernels.matmul import matmul, matmul_acc
+from compile.kernels.stencil import jacobi_step
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(rng, *shape):
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 128, 128)])
+def test_matmul_acc_matches_ref(m, n, k):
+    rng = np.random.default_rng(0)
+    a, b, c = rand(rng, m, k), rand(rng, k, n), rand(rng, m, n)
+    got = matmul_acc(a, b, c, block_m=min(32, m), block_n=min(32, n), block_k=min(32, k))
+    np.testing.assert_allclose(got, ref.matmul_acc_ref(a, b, c), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_zero_acc_equals_plain():
+    rng = np.random.default_rng(1)
+    a, b = rand(rng, 32, 16), rand(rng, 16, 32)
+    np.testing.assert_allclose(
+        matmul(a, b, block_m=16, block_n=16, block_k=16),
+        ref.matmul_ref(a, b),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_matmul_multiblock_k_accumulates():
+    # k split across 4 grid steps must equal single-block result.
+    rng = np.random.default_rng(2)
+    a, b, c = rand(rng, 16, 64), rand(rng, 64, 16), rand(rng, 16, 16)
+    multi = matmul_acc(a, b, c, block_m=16, block_n=16, block_k=16)
+    single = matmul_acc(a, b, c, block_m=16, block_n=16, block_k=64)
+    np.testing.assert_allclose(multi, single, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mexp=st.integers(2, 5),
+    nexp=st.integers(2, 5),
+    kexp=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_acc_hypothesis_pow2_shapes(mexp, nexp, kexp, seed):
+    m, n, k = 2**mexp, 2**nexp, 2**kexp
+    rng = np.random.default_rng(seed)
+    a, b, c = rand(rng, m, k), rand(rng, k, n), rand(rng, m, n)
+    bm, bn, bk = min(8, m), min(8, n), min(8, k)
+    got = matmul_acc(a, b, c, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul_acc_ref(a, b, c), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_indivisible_blocks():
+    rng = np.random.default_rng(3)
+    a, b, c = rand(rng, 12, 12), rand(rng, 12, 12), rand(rng, 12, 12)
+    with pytest.raises(AssertionError):
+        matmul_acc(a, b, c, block_m=8, block_n=8, block_k=8)
+
+
+# ------------------------------------------------------------- bias_gelu
+
+
+@pytest.mark.parametrize("rows,d", [(8, 16), (32, 64), (128, 32)])
+def test_bias_gelu_matches_ref(rows, d):
+    rng = np.random.default_rng(4)
+    x, b = rand(rng, rows, d), rand(rng, d)
+    got = bias_gelu(x, b, block_rows=min(32, rows))
+    np.testing.assert_allclose(got, ref.bias_gelu_ref(x, b), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rexp=st.integers(0, 5),
+    dexp=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 10.0),
+)
+def test_bias_gelu_hypothesis(rexp, dexp, seed, scale):
+    rows, d = 2**rexp, 2**dexp
+    rng = np.random.default_rng(seed)
+    x = (rng.uniform(-1, 1, size=(rows, d)) * scale).astype(np.float32)
+    b = rand(rng, d)
+    got = bias_gelu(x, b, block_rows=rows)
+    np.testing.assert_allclose(got, ref.bias_gelu_ref(x, b), rtol=1e-4, atol=1e-4)
+
+
+def test_bias_gelu_known_values():
+    # gelu(0) = 0; gelu(large) ~ large; gelu(-large) ~ 0.
+    x = np.array([[0.0, 10.0, -10.0]], dtype=np.float32)
+    b = np.zeros(3, dtype=np.float32)
+    got = np.asarray(bias_gelu(x, b, block_rows=1))
+    assert abs(got[0, 0]) < 1e-6
+    assert abs(got[0, 1] - 10.0) < 1e-3
+    assert abs(got[0, 2]) < 1e-3
+
+
+# ---------------------------------------------------------------- jacobi
+
+
+@pytest.mark.parametrize("n", [3, 8, 64])
+def test_jacobi_matches_ref(n):
+    rng = np.random.default_rng(5)
+    g = rand(rng, n, n)
+    np.testing.assert_allclose(jacobi_step(g), ref.jacobi_ref(g), rtol=RTOL, atol=ATOL)
+
+
+def test_jacobi_boundary_fixed():
+    rng = np.random.default_rng(6)
+    g = rand(rng, 16, 16)
+    out = np.asarray(jacobi_step(g))
+    np.testing.assert_array_equal(out[0, :], g[0, :])
+    np.testing.assert_array_equal(out[-1, :], g[-1, :])
+    np.testing.assert_array_equal(out[:, 0], g[:, 0])
+    np.testing.assert_array_equal(out[:, -1], g[:, -1])
+
+
+def test_jacobi_converges_on_laplace():
+    # Repeated relaxation with zero boundary decays the interior.
+    rng = np.random.default_rng(7)
+    g = rand(rng, 16, 16)
+    g[0, :] = g[-1, :] = g[:, 0] = g[:, -1] = 0.0
+    before = np.abs(g[1:-1, 1:-1]).max()
+    out = g
+    for _ in range(50):
+        out = np.asarray(jacobi_step(out))
+    after = np.abs(out[1:-1, 1:-1]).max()
+    assert after < before * 0.25
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(3, 48), seed=st.integers(0, 2**31 - 1))
+def test_jacobi_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, n, n)
+    np.testing.assert_allclose(jacobi_step(g), ref.jacobi_ref(g), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,74 @@
+"""Layer-2 correctness: model graphs vs composed oracles + shapes."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+def test_matmul_tile_matches_ref():
+    rng = np.random.default_rng(0)
+    a, b, c = rand(rng, 64, 64), rand(rng, 64, 64), rand(rng, 64, 64)
+    (got,) = model.matmul_tile(a, b, c)
+    np.testing.assert_allclose(got, ref.matmul_acc_ref(a, b, c), rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_layer_matches_ref():
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 32, 64), rand(rng, 64, 128), rand(rng, 128)
+    (got,) = model.mlp_layer(x, w, b)
+    assert got.shape == (32, 128)
+    np.testing.assert_allclose(got, ref.mlp_layer_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp2_composition():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 32, 64)
+    w1, b1 = rand(rng, 64, 128), rand(rng, 128)
+    w2, b2 = rand(rng, 128, 64), rand(rng, 64)
+    (got,) = model.mlp2(x, w1, b1, w2, b2)
+    assert got.shape == (32, 64)
+    np.testing.assert_allclose(got, ref.mlp2_ref(x, w1, b1, w2, b2), rtol=1e-4, atol=1e-4)
+
+
+def test_wavefront_step_residual():
+    rng = np.random.default_rng(3)
+    g = rand(rng, 64, 64)
+    out, residual = model.wavefront_step(g)
+    np.testing.assert_allclose(out, ref.jacobi_ref(g), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(residual, np.abs(np.asarray(out) - g).max(), rtol=1e-5, atol=1e-6)
+
+
+def test_wavefront_fixed_point_residual_zero():
+    g = np.ones((8, 8), dtype=np.float32)
+    out, residual = model.wavefront_step(g)
+    np.testing.assert_allclose(out, g)
+    assert float(residual) == 0.0
+
+
+def test_axpy():
+    rng = np.random.default_rng(4)
+    x, y = rand(rng, 256), rand(rng, 256)
+    (got,) = model.axpy(np.float32(2.5), x, y)
+    np.testing.assert_allclose(got, 2.5 * x + y, rtol=1e-6, atol=1e-6)
+
+
+def test_mlp_layer_rejects_inner_dim_mismatch():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 32, 63)  # inner dim 63 != w's 64
+    w, b = rand(rng, 64, 128), rand(rng, 128)
+    with pytest.raises(Exception):
+        model.mlp_layer(x, w, b)
+
+
+def test_mlp_layer_rejects_bias_mismatch():
+    rng = np.random.default_rng(6)
+    x, w = rand(rng, 32, 64), rand(rng, 64, 128)
+    b = rand(rng, 127)
+    with pytest.raises(Exception):
+        model.mlp_layer(x, w, b)

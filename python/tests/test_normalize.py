@@ -1,0 +1,126 @@
+"""Layer-1 correctness: softmax + layernorm kernels vs oracles, and
+the composed L2 graphs (attention scores, transformer FFN)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.normalize import layernorm, softmax
+
+
+def rand(rng, *shape):
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+# --------------------------------------------------------------- softmax
+
+
+@pytest.mark.parametrize("rows,d", [(4, 8), (32, 64), (128, 16)])
+def test_softmax_matches_ref(rows, d):
+    rng = np.random.default_rng(0)
+    x = rand(rng, rows, d) * 5.0
+    got = softmax(x, block_rows=min(32, rows))
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 16, 33) * 10.0
+    got = np.asarray(softmax(x, block_rows=16))
+    np.testing.assert_allclose(got.sum(axis=-1), np.ones(16), rtol=1e-5)
+    assert (got >= 0).all()
+
+
+def test_softmax_stability_large_logits():
+    # Stability: huge logits must not overflow (the max-subtraction).
+    x = np.array([[1000.0, 1000.0, -1000.0]], dtype=np.float32)
+    got = np.asarray(softmax(x, block_rows=1))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got[0, :2], [0.5, 0.5], atol=1e-6)
+    assert got[0, 2] == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rexp=st.integers(0, 5),
+    d=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 30.0),
+)
+def test_softmax_hypothesis(rexp, d, seed, scale):
+    rows = 2**rexp
+    rng = np.random.default_rng(seed)
+    x = (rng.uniform(-1, 1, size=(rows, d)) * scale).astype(np.float32)
+    got = softmax(x, block_rows=rows)
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- layernorm
+
+
+@pytest.mark.parametrize("rows,d", [(8, 16), (32, 64)])
+def test_layernorm_matches_ref(rows, d):
+    rng = np.random.default_rng(2)
+    x, g, b = rand(rng, rows, d), rand(rng, d), rand(rng, d)
+    got = layernorm(x, g, b, block_rows=min(16, rows))
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    # With unit gamma / zero beta, rows have ~zero mean, ~unit variance.
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 256) * 7.0
+    g = np.ones(256, dtype=np.float32)
+    b = np.zeros(256, dtype=np.float32)
+    got = np.asarray(layernorm(x, g, b, block_rows=16))
+    np.testing.assert_allclose(got.mean(axis=-1), np.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(got.var(axis=-1), np.ones(16), rtol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(rexp=st.integers(0, 4), d=st.integers(4, 96), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_hypothesis(rexp, d, seed):
+    rows = 2**rexp
+    rng = np.random.default_rng(seed)
+    x, g, b = rand(rng, rows, d), rand(rng, d), rand(rng, d)
+    got = layernorm(x, g, b, block_rows=rows)
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, g, b), rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------- composed graphs
+
+
+def test_attention_scores_matches_ref():
+    rng = np.random.default_rng(4)
+    q, k = rand(rng, 32, 64), rand(rng, 32, 64)
+    (got,) = model.attention_scores(q, k)
+    np.testing.assert_allclose(got, ref.attention_scores_ref(q, k), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=-1), np.ones(32), rtol=1e-5)
+
+
+def test_transformer_ffn_matches_composed_ref():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 32, 64)
+    gamma, beta = rand(rng, 64), rand(rng, 64)
+    w1, b1 = rand(rng, 64, 128), rand(rng, 128)
+    w2, b2 = rand(rng, 128, 64), rand(rng, 64)
+    (got,) = model.transformer_ffn(x, gamma, beta, w1, b1, w2, b2)
+    h = ref.layernorm_ref(x, gamma, beta)
+    h = ref.bias_gelu_ref(ref.matmul_ref(h, w1), b1)
+    h = ref.bias_gelu_ref(ref.matmul_ref(h, w2), b2)
+    np.testing.assert_allclose(got, x + h, rtol=1e-3, atol=1e-4)
+
+
+def test_transformer_ffn_residual_dominates_at_zero_weights():
+    rng = np.random.default_rng(6)
+    x = rand(rng, 32, 64)
+    gamma, beta = np.ones(64, np.float32), np.zeros(64, np.float32)
+    w1 = np.zeros((64, 128), np.float32)
+    b1 = np.zeros(128, np.float32)
+    w2 = np.zeros((128, 64), np.float32)
+    b2 = np.zeros(64, np.float32)
+    (got,) = model.transformer_ffn(x, gamma, beta, w1, b1, w2, b2)
+    # gelu(0) = 0 -> output == residual input.
+    np.testing.assert_allclose(got, x, atol=1e-6)

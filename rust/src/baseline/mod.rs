@@ -1,0 +1,139 @@
+//! Comparator executors for the paper's benchmarks (§3).
+//!
+//! The paper benchmarks its pool against Taskflow. The authors'
+//! testbed and the C++ library are not available here, so we implement
+//! the comparators in-crate (see DESIGN.md §5 Substitutions):
+//!
+//! * [`TaskflowLike`] — a work-stealing executor built on the
+//!   *fence-based* Chase–Lev deque plus a bounded steal loop, the
+//!   algorithmic core of Taskflow's executor. This is the stand-in for
+//!   the paper's Taskflow series in Fig. 1/Fig. 2.
+//! * [`MutexPool`] — the classic single-queue pool every work-stealing
+//!   paper implicitly compares against: one mutex-protected FIFO, one
+//!   condvar.
+//! * [`SpawnPool`] — thread-per-task, the §1 anti-pattern (creation/
+//!   destruction overhead), included to reproduce the motivation.
+//!
+//! All executors (including [`crate::pool::ThreadPool`]) are unified
+//! behind the object-safe [`Executor`] trait so benches can sweep them.
+
+mod mutex_pool;
+mod spawn_pool;
+mod taskflow_like;
+
+pub use mutex_pool::MutexPool;
+pub use spawn_pool::SpawnPool;
+pub use taskflow_like::TaskflowLike;
+
+use std::sync::Arc;
+
+/// Object-safe common interface over all executors.
+pub trait Executor: Send + Sync + 'static {
+    /// Submits a boxed task.
+    fn submit_boxed(&self, f: Box<dyn FnOnce() + Send + 'static>);
+    /// Blocks until all submitted work (transitively) has finished.
+    fn wait_idle(&self);
+    /// Short display name for benchmark tables.
+    fn name(&self) -> &'static str;
+    /// Worker count (1 for SpawnPool: conceptually unbounded).
+    fn num_threads(&self) -> usize;
+}
+
+/// Convenience: generic submit over any `Arc<dyn Executor>`.
+pub fn submit<F: FnOnce() + Send + 'static>(ex: &Arc<dyn Executor>, f: F) {
+    ex.submit_boxed(Box::new(f));
+}
+
+impl Executor for crate::pool::ThreadPool {
+    fn submit_boxed(&self, f: Box<dyn FnOnce() + Send + 'static>) {
+        self.submit(f);
+    }
+
+    fn wait_idle(&self) {
+        crate::pool::ThreadPool::wait_idle(self);
+    }
+
+    fn name(&self) -> &'static str {
+        "scheduling"
+    }
+
+    fn num_threads(&self) -> usize {
+        crate::pool::ThreadPool::num_threads(self)
+    }
+}
+
+/// Builds every executor at a given thread count, in the order used by
+/// the benchmark tables: ours, taskflow-proxy, mutex queue, spawn.
+pub fn all_executors(num_threads: usize) -> Vec<Arc<dyn Executor>> {
+    vec![
+        Arc::new(crate::pool::ThreadPool::new(num_threads)),
+        Arc::new(TaskflowLike::new(num_threads)),
+        Arc::new(MutexPool::new(num_threads)),
+        Arc::new(SpawnPool::new()),
+    ]
+}
+
+/// Builds an executor by name (CLI: `--executor scheduling|taskflow|mutex|spawn`).
+pub fn executor_by_name(name: &str, num_threads: usize) -> Option<Arc<dyn Executor>> {
+    match name {
+        "scheduling" => Some(Arc::new(crate::pool::ThreadPool::new(num_threads))),
+        "taskflow" | "taskflow-like" => Some(Arc::new(TaskflowLike::new(num_threads))),
+        "mutex" | "mutex-pool" => Some(Arc::new(MutexPool::new(num_threads))),
+        "spawn" | "spawn-per-task" => Some(Arc::new(SpawnPool::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn smoke(ex: Arc<dyn Executor>) {
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let count = count.clone();
+            submit(&ex, move || {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ex.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 64, "{}", ex.name());
+    }
+
+    #[test]
+    fn every_executor_runs_tasks() {
+        for ex in all_executors(2) {
+            smoke(ex);
+        }
+    }
+
+    #[test]
+    fn executor_by_name_resolves() {
+        for name in ["scheduling", "taskflow", "mutex", "spawn"] {
+            assert!(executor_by_name(name, 1).is_some(), "{name}");
+        }
+        assert!(executor_by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn recursive_submission_through_trait() {
+        for ex in all_executors(2) {
+            let count = Arc::new(AtomicUsize::new(0));
+            fn fanout(ex: Arc<dyn Executor>, count: Arc<AtomicUsize>, depth: u32) {
+                count.fetch_add(1, Ordering::Relaxed);
+                if depth == 0 {
+                    return;
+                }
+                for _ in 0..2 {
+                    let (e, c) = (ex.clone(), count.clone());
+                    let e2 = e.clone();
+                    e.submit_boxed(Box::new(move || fanout(e2, c, depth - 1)));
+                }
+            }
+            fanout(ex.clone(), count.clone(), 5);
+            ex.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), (1 << 6) - 1, "{}", ex.name());
+        }
+    }
+}

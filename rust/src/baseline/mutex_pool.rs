@@ -1,0 +1,172 @@
+//! Centralized single-queue thread pool — the classic baseline.
+//!
+//! One `Mutex<VecDeque>` shared by all workers, one condvar. Every
+//! submit and every dequeue serializes on the same lock, so throughput
+//! collapses as task granularity shrinks — the contention problem that
+//! motivates per-worker deques (paper §2.1). Appears in Fig. 1/Fig. 2
+//! reproductions as the "mutex-pool" series.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    /// Submitted-but-unfinished count, for `wait_idle`.
+    pending: AtomicUsize,
+    idle_mutex: Mutex<()>,
+    idle_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// See module docs.
+pub struct MutexPool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl MutexPool {
+    /// Creates a pool with `num_threads` workers (clamped to >= 1).
+    pub fn new(num_threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            idle_mutex: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let threads = (0..num_threads.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mutex-pool-{i}"))
+                    .spawn(move || worker(shared))
+                    .expect("spawn failed")
+            })
+            .collect();
+        Self { shared, threads }
+    }
+
+    /// Submits a task.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Blocks until all submitted work has finished.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.idle_mutex.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            g = self.shared.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        let _ = catch_unwind(AssertUnwindSafe(task));
+        if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            drop(shared.idle_mutex.lock().unwrap());
+            shared.idle_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for MutexPool {
+    fn drop(&mut self) {
+        // Drain: workers exit only once the queue is empty AND shutdown
+        // is set (the pop check precedes the shutdown check).
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl super::Executor for MutexPool {
+    fn submit_boxed(&self, f: Box<dyn FnOnce() + Send + 'static>) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(f);
+        self.shared.available.notify_one();
+    }
+
+    fn wait_idle(&self) {
+        MutexPool::wait_idle(self);
+    }
+
+    fn name(&self) -> &'static str {
+        "mutex-pool"
+    }
+
+    fn num_threads(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_tasks() {
+        let pool = MutexPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn drop_drains() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = MutexPool::new(2);
+            for _ in 0..32 {
+                let c = count.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panic_contained() {
+        let pool = MutexPool::new(1);
+        pool.submit(|| panic!("x"));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let o = ok.clone();
+        pool.submit(move || {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Thread-per-task "pool" — the §1 anti-pattern, for the motivation
+//! row of the benchmark tables.
+//!
+//! Every submit spawns (and eventually joins) an OS thread. The paper's
+//! introduction names exactly the two failure modes this exhibits:
+//! context-switch pressure when thread count exceeds the hardware, and
+//! per-task creation/destruction overhead. Benches cap its workload
+//! sizes so the suite still finishes.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared {
+    active: AtomicUsize,
+    idle_mutex: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+/// See module docs.
+pub struct SpawnPool {
+    shared: Arc<Shared>,
+}
+
+impl Default for SpawnPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpawnPool {
+    /// Creates the pool (no threads are kept around).
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                active: AtomicUsize::new(0),
+                idle_mutex: Mutex::new(()),
+                idle_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Spawns a detached thread for `f`. Under spawn storms the OS can
+    /// transiently refuse new threads (EAGAIN) — exactly the §1
+    /// failure mode this baseline exists to demonstrate — so refusal
+    /// is retried with backoff rather than panicking the benchmark.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let shared = self.shared.clone();
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        // The body lives in an Arc so a failed spawn (which consumes
+        // its shim closure) leaves it intact for the retry.
+        let body = Arc::new(Mutex::new(Some(move || {
+            let _ = catch_unwind(AssertUnwindSafe(f));
+            if shared.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                drop(shared.idle_mutex.lock().unwrap());
+                shared.idle_cv.notify_all();
+            }
+        })));
+        let mut backoff_us = 50u64;
+        loop {
+            let b = body.clone();
+            let shim = move || {
+                if let Some(f) = b.lock().unwrap().take() {
+                    f();
+                }
+            };
+            match std::thread::Builder::new().spawn(shim) {
+                Ok(_) => return,
+                Err(_) if backoff_us < 2_000_000 => {
+                    // Thread creation refused; wait for some threads to
+                    // retire and retry (this is the measured overhead).
+                    std::thread::sleep(std::time::Duration::from_micros(backoff_us));
+                    backoff_us *= 2;
+                }
+                Err(e) => panic!("thread spawn failed permanently: {e}"),
+            }
+        }
+    }
+
+    /// Blocks until all spawned threads have finished.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.idle_mutex.lock().unwrap();
+        while self.shared.active.load(Ordering::SeqCst) != 0 {
+            g = self.shared.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+impl Drop for SpawnPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+    }
+}
+
+impl super::Executor for SpawnPool {
+    fn submit_boxed(&self, f: Box<dyn FnOnce() + Send + 'static>) {
+        self.submit(f);
+    }
+
+    fn wait_idle(&self) {
+        SpawnPool::wait_idle(self);
+    }
+
+    fn name(&self) -> &'static str {
+        "spawn-per-task"
+    }
+
+    fn num_threads(&self) -> usize {
+        1 // conceptually unbounded; reported as 1 for table layout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_tasks_and_waits() {
+        let pool = SpawnPool::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn nested_spawns_counted() {
+        let pool = Arc::new(SpawnPool::new());
+        let count = Arc::new(AtomicUsize::new(0));
+        let (p, c) = (pool.clone(), count.clone());
+        pool.submit(move || {
+            for _ in 0..4 {
+                let c2 = c.clone();
+                p.submit(move || {
+                    c2.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+}

@@ -1,0 +1,275 @@
+//! Taskflow-proxy executor: the paper's comparator, reimplemented.
+//!
+//! Taskflow's executor is itself a Chase–Lev work-stealer; what the
+//! paper's Fig. 1/Fig. 2 compare is two *flavors* of the same family.
+//! This stand-in reproduces the algorithmically relevant differences
+//! of Taskflow's executor so the comparison isolates them:
+//!
+//! * the **fence-based** Chase–Lev deque (`atomic_thread_fence` style,
+//!   [`crate::pool::fence_deque`]) — the exact code the paper quotes;
+//! * a **bounded steal loop** (`MAX_STEALS = 2 * (N + 1)` attempts with
+//!   `yield_now` between rounds, like Taskflow's
+//!   `executor.hpp` waiter loop) instead of our retry-informed sweep;
+//! * thread-id → worker lookup via a shared registration map (the
+//!   "typical approach" the paper contrasts with its thread-local
+//!   trick, §2.1) — each submit from a worker thread pays a hash
+//!   lookup.
+//!
+//! Everything else (eventcount parking, injector, drain-on-drop) is
+//! shared infrastructure, so measured deltas come from the above.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::{JoinHandle, ThreadId};
+
+use crate::pool::event_count::EventCount;
+use crate::pool::fence_deque::{fence_deque, FenceStealer, FenceWorker};
+use crate::pool::injector::{Injector, MutexInjector};
+use crate::pool::Steal;
+use crate::util::XorShift64Star;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    injector: MutexInjector<Task>,
+    stealers: Vec<FenceStealer<Task>>,
+    /// Thread-id → worker-index map: the lookup-based alternative to
+    /// the paper's thread-local registration.
+    registry: RwLock<HashMap<ThreadId, usize>>,
+    ec: EventCount,
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    idle_mutex: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+/// See module docs.
+pub struct TaskflowLike {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    /// Per-worker queue handles, owned by the worker threads via Arc
+    /// indirection (the map approach needs them reachable from submit).
+    locals: Vec<Arc<LocalQueue>>,
+}
+
+/// The owner side of a worker's deque, shared so that `submit` (after a
+/// registry lookup) can push to it from the owning thread.
+struct LocalQueue {
+    worker: FenceWorker<Task>,
+}
+
+// SAFETY: `worker` is only pushed/popped from its owning thread — the
+// registry maps exactly that thread's id to this slot, and `submit`
+// only uses the slot when called *on* that thread.
+unsafe impl Send for LocalQueue {}
+unsafe impl Sync for LocalQueue {}
+
+impl TaskflowLike {
+    /// Creates an executor with `num_threads` workers (clamped >= 1).
+    pub fn new(num_threads: usize) -> Self {
+        let n = num_threads.max(1);
+        let mut locals = Vec::with_capacity(n);
+        let mut stealers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (w, s) = fence_deque::<Task>(256);
+            locals.push(Arc::new(LocalQueue { worker: w }));
+            stealers.push(s);
+        }
+        let shared = Arc::new(Shared {
+            injector: MutexInjector::new(),
+            stealers,
+            registry: RwLock::new(HashMap::new()),
+            ec: EventCount::new(),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            idle_mutex: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        });
+        let threads = locals
+            .iter()
+            .enumerate()
+            .map(|(index, local)| {
+                let shared = shared.clone();
+                let local = local.clone();
+                std::thread::Builder::new()
+                    .name(format!("taskflow-like-{index}"))
+                    .spawn(move || {
+                        shared
+                            .registry
+                            .write()
+                            .unwrap()
+                            .insert(std::thread::current().id(), index);
+                        worker_loop(shared, index, local);
+                    })
+                    .expect("spawn failed")
+            })
+            .collect();
+        Self {
+            shared,
+            threads,
+            locals,
+        }
+    }
+
+    /// Submits a task: registry lookup first (a worker pushes to its
+    /// own deque), injector otherwise.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_task(Box::new(f));
+    }
+
+    fn submit_task(&self, task: Task) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        let tid = std::thread::current().id();
+        let idx = self.shared.registry.read().unwrap().get(&tid).copied();
+        match idx {
+            Some(i) => self.locals[i].worker.push(task),
+            None => self.shared.injector.push(task),
+        }
+        self.shared.ec.notify_one();
+    }
+
+    /// Blocks until all submitted work has finished.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.idle_mutex.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            g = self.shared.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize, local: Arc<LocalQueue>) {
+    let mut rng = XorShift64Star::from_entropy();
+    let n = shared.stealers.len();
+    let max_steals = 2 * (n + 1); // Taskflow's MAX_STEALS heuristic
+
+    let find_task = |rng: &mut XorShift64Star| -> Option<Task> {
+        if let Some(t) = local.worker.pop() {
+            return Some(t);
+        }
+        if let Some(t) = shared.injector.pop() {
+            return Some(t);
+        }
+        let mut attempts = 0;
+        while attempts < max_steals {
+            let victim = rng.next_below(n);
+            if victim != index {
+                match shared.stealers[victim].steal() {
+                    Steal::Success(t) => return Some(t),
+                    Steal::Retry => {}
+                    Steal::Empty => {}
+                }
+            }
+            attempts += 1;
+            if attempts % (n + 1) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        None
+    };
+
+    loop {
+        while let Some(task) = find_task(&mut rng) {
+            let _ = catch_unwind(AssertUnwindSafe(task));
+            if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                drop(shared.idle_mutex.lock().unwrap());
+                shared.idle_cv.notify_all();
+            }
+        }
+        let token = shared.ec.prepare_wait();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            shared.ec.cancel_wait(token);
+            while let Some(task) = find_task(&mut rng) {
+                let _ = catch_unwind(AssertUnwindSafe(task));
+                if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    drop(shared.idle_mutex.lock().unwrap());
+                    shared.idle_cv.notify_all();
+                }
+            }
+            return;
+        }
+        if !shared.injector.is_empty() || shared.stealers.iter().any(|s| !s.is_empty()) {
+            shared.ec.cancel_wait(token);
+            continue;
+        }
+        shared.ec.commit_wait(token);
+    }
+}
+
+impl Drop for TaskflowLike {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.ec.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl super::Executor for TaskflowLike {
+    fn submit_boxed(&self, f: Box<dyn FnOnce() + Send + 'static>) {
+        self.submit_task(f);
+    }
+
+    fn wait_idle(&self) {
+        TaskflowLike::wait_idle(self);
+    }
+
+    fn name(&self) -> &'static str {
+        "taskflow-like"
+    }
+
+    fn num_threads(&self) -> usize {
+        self.locals.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_tasks() {
+        let ex = TaskflowLike::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..200 {
+            let c = count.clone();
+            ex.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ex.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn worker_submit_goes_to_local_deque() {
+        let ex = Arc::new(TaskflowLike::new(1));
+        let done = Arc::new(AtomicUsize::new(0));
+        let (e, d) = (ex.clone(), done.clone());
+        ex.submit(move || {
+            let d2 = d.clone();
+            e.submit(move || {
+                d2.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        ex.wait_idle();
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_drains() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let ex = TaskflowLike::new(2);
+            for _ in 0..64 {
+                let c = count.clone();
+                ex.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+}

@@ -1,0 +1,171 @@
+//! Measurement loops: wall clock and process CPU time.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+use crate::util::process_cpu_time;
+
+/// What a benchmark run measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Measurement {
+    /// Elapsed wall-clock time per iteration (paper Fig. 1).
+    Wall,
+    /// Process CPU time (user+sys, all threads) per iteration
+    /// (paper Fig. 2). Resolution 10 ms — iterations are batched until
+    /// each sample spans at least [`BenchOptions::min_sample_time`].
+    Cpu,
+}
+
+/// Knobs for a measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOptions {
+    /// Warmup iterations (not recorded).
+    pub warmup_iters: u32,
+    /// Recorded samples.
+    pub samples: u32,
+    /// Minimum time one sample should span; the harness batches
+    /// multiple iterations into one sample to reach it (essential for
+    /// CPU time with its 10 ms granularity).
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            samples: 10,
+            min_sample_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BenchOptions {
+    /// Fast profile for CI / smoke runs (`BENCH_FAST=1`).
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 1,
+            samples: 3,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+
+    /// Reads `BENCH_FAST` from the environment.
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            Self::fast()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Calibrates how many iterations of `f` are needed to span
+/// `min_sample_time`, then records `samples` batched samples and
+/// reports the per-iteration wall time.
+pub fn bench_wall<F: FnMut()>(options: &BenchOptions, mut f: F) -> Summary {
+    for _ in 0..options.warmup_iters {
+        f();
+    }
+    let batch = calibrate(options, &mut f);
+    let mut samples = Vec::with_capacity(options.samples as usize);
+    for _ in 0..options.samples {
+        let start = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(start.elapsed() / batch);
+    }
+    Summary::from_samples(&samples)
+}
+
+/// Like [`bench_wall`] but reads process CPU time around each batch.
+pub fn bench_cpu<F: FnMut()>(options: &BenchOptions, mut f: F) -> Summary {
+    for _ in 0..options.warmup_iters {
+        f();
+    }
+    let batch = calibrate(options, &mut f);
+    let mut samples = Vec::with_capacity(options.samples as usize);
+    for _ in 0..options.samples {
+        let start = process_cpu_time();
+        for _ in 0..batch {
+            f();
+        }
+        let spent = process_cpu_time().saturating_sub(start);
+        samples.push(spent / batch);
+    }
+    Summary::from_samples(&samples)
+}
+
+fn calibrate<F: FnMut()>(options: &BenchOptions, f: &mut F) -> u32 {
+    // Double the batch until one batch spans min_sample_time.
+    let mut batch = 1u32;
+    loop {
+        let start = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let took = start.elapsed();
+        if took >= options.min_sample_time || batch >= 1 << 20 {
+            return batch;
+        }
+        // Jump close to the target, at least doubling, capped at 2^20.
+        let factor = (options.min_sample_time.as_secs_f64() / took.as_secs_f64().max(1e-9)).ceil();
+        batch = batch
+            .saturating_mul(factor.clamp(2.0, 64.0) as u32)
+            .min(1 << 20);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_measures_sleep() {
+        let opts = BenchOptions {
+            warmup_iters: 0,
+            samples: 3,
+            min_sample_time: Duration::from_millis(5),
+        };
+        let s = bench_wall(&opts, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(s.mean >= Duration::from_millis(1), "mean={:?}", s.mean);
+        assert!(s.mean < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn cpu_of_sleep_is_tiny_vs_spin() {
+        let opts = BenchOptions {
+            warmup_iters: 0,
+            samples: 2,
+            min_sample_time: Duration::from_millis(30),
+        };
+        let spin = bench_cpu(&opts, || {
+            let start = Instant::now();
+            let mut x = 0u64;
+            while start.elapsed() < Duration::from_millis(5) {
+                x = x.wrapping_add(1);
+            }
+            std::hint::black_box(x);
+        });
+        // Spinning for 5ms should cost ~5ms of CPU per iteration.
+        assert!(
+            spin.mean >= Duration::from_millis(2),
+            "spin cpu mean {:?}",
+            spin.mean
+        );
+    }
+
+    #[test]
+    fn calibrate_batches_fast_functions() {
+        let opts = BenchOptions {
+            warmup_iters: 0,
+            samples: 1,
+            min_sample_time: Duration::from_millis(10),
+        };
+        let mut count = 0u64;
+        let b = calibrate(&opts, &mut || {
+            count += 1;
+        });
+        assert!(b > 1, "trivial fn should batch, got {b}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Benchmark harness: measurement, statistics, and table/CSV output.
+//!
+//! criterion is not available in the offline vendor set, and the paper
+//! (§3) needs two measurement modes criterion does not provide out of
+//! the box anyway: wall time *and process CPU time* (Fig. 2). So the
+//! harness is implemented here: warmup, fixed-iteration measurement,
+//! robust statistics, aligned-table and CSV emitters. `cargo bench`
+//! targets (`benches/*.rs`, `harness = false`) drive it.
+
+mod measure;
+mod report;
+mod stats;
+
+pub use measure::{bench_cpu, bench_wall, BenchOptions, Measurement};
+pub use report::{csv_report, markdown_table, Report, Row};
+pub use stats::Summary;

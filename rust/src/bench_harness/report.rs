@@ -1,0 +1,194 @@
+//! Benchmark report assembly: aligned tables for the terminal, CSV for
+//! plotting, and paper-shape assertions recorded in EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use super::stats::{fmt_duration, Summary};
+
+/// One measured cell: a workload/executor combination.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Workload parameter rendered as text (e.g. "fib(30)").
+    pub param: String,
+    /// Executor / series name.
+    pub series: String,
+    /// Measured summary.
+    pub summary: Summary,
+}
+
+/// A named collection of rows — one table or figure reproduction.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// E.g. "FIG1 fibonacci wall time".
+    pub title: String,
+    /// Units note / testbed caveat printed under the title.
+    pub note: String,
+    /// Measured cells.
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    /// Creates an empty report.
+    pub fn new(title: impl Into<String>, note: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            note: note.into(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Appends a measurement.
+    pub fn push(&mut self, param: impl Into<String>, series: impl Into<String>, summary: Summary) {
+        self.rows.push(Row {
+            param: param.into(),
+            series: series.into(),
+            summary,
+        });
+    }
+
+    /// Mean duration for a (param, series) cell, if present.
+    pub fn mean_of(&self, param: &str, series: &str) -> Option<Duration> {
+        self.rows
+            .iter()
+            .find(|r| r.param == param && r.series == series)
+            .map(|r| r.summary.mean)
+    }
+
+    /// Speedup of `series_a` over `series_b` at `param`
+    /// (times; >1 means `a` is faster).
+    pub fn speedup(&self, param: &str, series_a: &str, series_b: &str) -> Option<f64> {
+        let a = self.mean_of(param, series_a)?.as_secs_f64();
+        let b = self.mean_of(param, series_b)?.as_secs_f64();
+        if a == 0.0 {
+            None
+        } else {
+            Some(b / a)
+        }
+    }
+
+    /// Prints the aligned table followed by the CSV block (both go to
+    /// stdout so `cargo bench | tee` captures everything).
+    pub fn print(&self) {
+        println!("{}", markdown_table(self));
+        println!();
+        println!("CSV {}", self.title);
+        print!("{}", csv_report(self));
+        println!();
+    }
+}
+
+/// Renders a report as a GitHub-flavored markdown table.
+pub fn markdown_table(report: &Report) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n## {}\n", report.title));
+    if !report.note.is_empty() {
+        out.push_str(&format!("_{}_\n", report.note));
+    }
+    let headers = ["param", "series", "mean", "median", "stddev", "min", "max", "samples"];
+    let mut table: Vec<[String; 8]> = Vec::new();
+    for r in &report.rows {
+        table.push([
+            r.param.clone(),
+            r.series.clone(),
+            fmt_duration(r.summary.mean),
+            fmt_duration(r.summary.median),
+            fmt_duration(r.summary.stddev),
+            fmt_duration(r.summary.min),
+            fmt_duration(r.summary.max),
+            r.summary.n.to_string(),
+        ]);
+    }
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in &table {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    out.push_str(&fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&format!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    ));
+    out.push('\n');
+    for row in &table {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Renders a report as CSV (`param,series,mean_ns,median_ns,...`).
+pub fn csv_report(report: &Report) -> String {
+    let mut out = String::from("param,series,mean_ns,median_ns,stddev_ns,min_ns,max_ns,samples\n");
+    for r in &report.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            r.param,
+            r.series,
+            r.summary.mean.as_nanos(),
+            r.summary.median.as_nanos(),
+            r.summary.stddev.as_nanos(),
+            r.summary.min.as_nanos(),
+            r.summary.max.as_nanos(),
+            r.summary.n
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(ms: u64) -> Summary {
+        Summary::from_samples(&[Duration::from_millis(ms)])
+    }
+
+    #[test]
+    fn table_contains_all_cells() {
+        let mut rep = Report::new("t", "n");
+        rep.push("fib(30)", "scheduling", summary(10));
+        rep.push("fib(30)", "taskflow-like", summary(12));
+        let t = markdown_table(&rep);
+        assert!(t.contains("fib(30)"));
+        assert!(t.contains("scheduling"));
+        assert!(t.contains("taskflow-like"));
+        assert!(t.contains("10.00 ms"));
+    }
+
+    #[test]
+    fn csv_round_numbers() {
+        let mut rep = Report::new("t", "");
+        rep.push("p", "s", summary(1));
+        let csv = csv_report(&rep);
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("p,s,1000000,"));
+    }
+
+    #[test]
+    fn speedup_math() {
+        let mut rep = Report::new("t", "");
+        rep.push("p", "fast", summary(10));
+        rep.push("p", "slow", summary(40));
+        let s = rep.speedup("p", "fast", "slow").unwrap();
+        assert!((s - 4.0).abs() < 1e-9);
+        assert!(rep.speedup("p", "fast", "missing").is_none());
+    }
+
+    #[test]
+    fn mean_of_lookup() {
+        let mut rep = Report::new("t", "");
+        rep.push("a", "x", summary(3));
+        assert_eq!(rep.mean_of("a", "x"), Some(Duration::from_millis(3)));
+        assert_eq!(rep.mean_of("a", "y"), None);
+    }
+}

@@ -1,0 +1,127 @@
+//! Summary statistics over benchmark samples.
+
+use std::time::Duration;
+
+/// Robust summary of a set of duration samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    /// Number of samples.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: Duration,
+    /// Median (50th percentile, linear interpolation).
+    pub median: Duration,
+    /// Sample standard deviation (Bessel-corrected).
+    pub stddev: Duration,
+    /// Fastest sample.
+    pub min: Duration,
+    /// Slowest sample.
+    pub max: Duration,
+}
+
+impl Summary {
+    /// Computes a summary; panics on an empty slice.
+    pub fn from_samples(samples: &[Duration]) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        let n = samples.len();
+        let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            secs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = secs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(median),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+        }
+    }
+
+    /// Relative standard deviation (stddev / mean), for noise gating.
+    pub fn rsd(&self) -> f64 {
+        let m = self.mean.as_secs_f64();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.stddev.as_secs_f64() / m
+        }
+    }
+}
+
+/// Human formatting for durations: picks ns/µs/ms/s.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn summary_of_constant_samples() {
+        let s = Summary::from_samples(&[ms(10), ms(10), ms(10)]);
+        assert_eq!(s.mean, ms(10));
+        assert_eq!(s.median, ms(10));
+        assert_eq!(s.stddev, Duration::ZERO);
+        assert_eq!(s.min, ms(10));
+        assert_eq!(s.max, ms(10));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::from_samples(&[ms(1), ms(2), ms(3), ms(4)]);
+        let us = |d: Duration| d.as_secs_f64() * 1e6;
+        assert!((us(s.mean) - 2500.0).abs() < 0.01, "mean={:?}", s.mean);
+        assert!((us(s.median) - 2500.0).abs() < 0.01, "median={:?}", s.median);
+        assert_eq!(s.min, ms(1));
+        assert_eq!(s.max, ms(4));
+        // var = ((1.5)^2+(0.5)^2+(0.5)^2+(1.5)^2)/3 ms^2 = 5/3 -> sd ~1.29ms
+        let sd_ms = s.stddev.as_secs_f64() * 1e3;
+        // Durations quantize to ns, so allow that much slack (1e-6 ms).
+        assert!((sd_ms - (5.0f64 / 3.0).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn median_odd() {
+        let s = Summary::from_samples(&[ms(5), ms(1), ms(9)]);
+        assert_eq!(s.median, ms(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_panics() {
+        Summary::from_samples(&[]);
+    }
+
+    #[test]
+    fn fmt_picks_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(fmt_duration(Duration::from_millis(2500)), "2.500 s");
+        assert!(fmt_duration(Duration::from_micros(12)).contains("µs"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal argument parser.
+
+use std::collections::{HashMap, HashSet};
+use std::str::FromStr;
+
+/// Argument-parsing errors.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ArgError {
+    /// A `--key` that expected a value hit the end of the argument list.
+    MissingValue(String),
+    /// A value failed to parse as the requested type.
+    BadValue {
+        /// Option name (without `--`).
+        key: String,
+        /// Raw value that failed to parse.
+        value: String,
+        /// Type name that was expected.
+        expected: &'static str,
+    },
+}
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingValue(k) => write!(f, "--{k} expects a value"),
+            ArgError::BadValue { key, value, expected } => {
+                write!(f, "--{key}={value} is not a valid {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed arguments: positionals plus `--key value` / `--key=value`
+/// options. Keys seen without a value become boolean flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: HashSet<String>,
+}
+
+/// Option keys that take values (everything else starting with `--` is
+/// treated as a boolean flag when no `=value` is attached).
+const VALUE_KEYS: &[&str] = &[
+    "threads", "executor", "n", "size", "depth", "layers", "width", "p", "seed", "work",
+    "schedule", "tile", "config", "samples", "warmup", "repeat", "artifacts", "out",
+];
+
+impl Args {
+    /// Parses from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, ArgError> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if VALUE_KEYS.contains(&key) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(key.to_string(), v);
+                        }
+                        None => return Err(ArgError::MissingValue(key.to_string())),
+                    }
+                } else {
+                    out.flags.insert(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parses the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Self, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw option value.
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+
+    /// Typed option with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> Result<T, ArgError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| ArgError::BadValue {
+                key: key.to_string(),
+                value: v.clone(),
+                expected: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Typed option, `None` when absent.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Result<Option<T>, ArgError> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ArgError::BadValue {
+                    key: key.to_string(),
+                    value: v.clone(),
+                    expected: std::any::type_name::<T>(),
+                }),
+        }
+    }
+
+    /// Merges defaults from a config map (CLI wins).
+    pub fn merge_defaults(&mut self, defaults: &HashMap<String, String>) {
+        for (k, v) in defaults {
+            self.options.entry(k.clone()).or_insert_with(|| v.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["bench", "fib", "--threads", "4", "--n=30", "--verbose"]);
+        assert_eq!(a.positional(0), Some("bench"));
+        assert_eq!(a.positional(1), Some("fib"));
+        assert_eq!(a.get::<usize>("threads", 1).unwrap(), 4);
+        assert_eq!(a.get::<u32>("n", 0).unwrap(), 30);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get::<usize>("threads", 7).unwrap(), 7);
+        assert_eq!(a.get_opt::<usize>("threads").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let a = parse(&["--threads", "lots"]);
+        match a.get::<usize>("threads", 1) {
+            Err(ArgError::BadValue { key, value, .. }) => {
+                assert_eq!(key, "threads");
+                assert_eq!(value, "lots");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_value_detected() {
+        let err = Args::parse(vec!["--threads".to_string()]).unwrap_err();
+        assert_eq!(err, ArgError::MissingValue("threads".to_string()));
+    }
+
+    #[test]
+    fn merge_defaults_cli_wins() {
+        let mut a = parse(&["--threads", "2"]);
+        let mut d = HashMap::new();
+        d.insert("threads".to_string(), "8".to_string());
+        d.insert("seed".to_string(), "42".to_string());
+        a.merge_defaults(&d);
+        assert_eq!(a.get::<usize>("threads", 0).unwrap(), 2);
+        assert_eq!(a.get::<u64>("seed", 0).unwrap(), 42);
+    }
+}

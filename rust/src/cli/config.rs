@@ -1,0 +1,88 @@
+//! `key = value` config files (a TOML subset: comments, blank lines,
+//! bare keys; no sections needed for a launcher this size).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed config file.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parses config text. Lines: `key = value`, `# comment`, blank.
+    /// Values may be quoted with `"`.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let mut val = v.trim();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = &val[1..val.len() - 1];
+            }
+            values.insert(key.to_string(), val.to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Loads and parses a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("reading {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// The underlying map (for [`crate::cli::Args::merge_defaults`]).
+    pub fn values(&self) -> &HashMap<String, String> {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let c = Config::parse(
+            "# pool settings\n\
+             threads = 4\n\
+             executor = \"scheduling\"\n\
+             \n\
+             seed=42\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("threads"), Some("4"));
+        assert_eq!(c.get("executor"), Some("scheduling"));
+        assert_eq!(c.get("seed"), Some("42"));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_lines_without_equals() {
+        assert!(Config::parse("threads 4").is_err());
+        assert!(Config::parse("= 4").is_err());
+    }
+
+    #[test]
+    fn quoted_values_unwrapped() {
+        let c = Config::parse("name = \"hello world\"").unwrap();
+        assert_eq!(c.get("name"), Some("hello world"));
+    }
+}

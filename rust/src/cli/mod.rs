@@ -1,0 +1,11 @@
+//! Command-line and config-file parsing for the launcher binary.
+//!
+//! Hand-rolled (the offline vendor set has no clap): `--key value`,
+//! `--key=value`, boolean `--flag`, positional args, plus an optional
+//! `key = value` config file that CLI flags override.
+
+mod args;
+mod config;
+
+pub use args::{ArgError, Args};
+pub use config::Config;

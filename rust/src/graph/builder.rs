@@ -1,0 +1,387 @@
+//! Task-graph construction: nodes, dependencies, validation.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::AtomicUsize;
+
+use crate::pool::ThreadPool;
+
+use super::executor::{run_graph, RunOptions};
+
+/// Handle to a node of a [`TaskGraph`], returned by [`TaskGraph::add`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub(crate) usize);
+
+/// Errors surfaced when validating or running a graph.
+#[derive(Debug)]
+pub enum GraphError {
+    /// The dependency relation contains a cycle; the offending strongly
+    /// connected component includes the listed node indices.
+    Cycle {
+        /// Indices of nodes left with nonzero in-degree by Kahn's algorithm.
+        stuck: Vec<usize>,
+    },
+    /// One or more tasks panicked during the run. The graph still ran
+    /// to completion (successors of a panicked node do run — counters
+    /// would deadlock otherwise); the first panic is reported here.
+    TaskPanicked {
+        /// Index of the first panicking node.
+        node: usize,
+        /// Name of the node, if it was given one.
+        name: Option<String>,
+        /// Panic payload rendered to a string when possible.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Cycle { stuck } => {
+                write!(f, "task graph contains a cycle involving nodes {stuck:?}")
+            }
+            GraphError::TaskPanicked { node, name, message } => match name {
+                Some(n) => write!(f, "task {node} ({n}) panicked: {message}"),
+                None => write!(f, "task {node} panicked: {message}"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// One task of the graph. The closure lives in an `UnsafeCell` because
+/// the execution protocol guarantees exclusive access (a node runs at
+/// most once per run, and all predecessor completions happen-before it
+/// via the `AcqRel` counter decrements), letting tasks be `FnMut` and
+/// mutate captured state exactly like the paper's `std::function<void()>`.
+pub(crate) struct Node {
+    pub(crate) func: UnsafeCell<Box<dyn FnMut() + Send>>,
+    pub(crate) successors: Vec<usize>,
+    pub(crate) num_predecessors: usize,
+    /// Uncompleted-predecessor count, reset before every run.
+    pub(crate) pending: AtomicUsize,
+    pub(crate) name: Option<String>,
+}
+
+// SAFETY: `func` is only touched by the one worker that executes the
+// node in a given run (see executor.rs for the protocol argument).
+unsafe impl Sync for Node {}
+
+/// A collection of tasks and dependencies between them (paper §4.2).
+///
+/// ```
+/// use scheduling::graph::TaskGraph;
+/// use scheduling::pool::ThreadPool;
+/// use std::sync::Arc;
+/// use std::sync::atomic::{AtomicI32, Ordering::Relaxed};
+///
+/// // (a + b) * (c + d), the paper's worked example. Tasks are
+/// // `'static`, so shared state lives in Arcs.
+/// let state: Arc<[AtomicI32]> = (0..7).map(|_| AtomicI32::new(0)).collect();
+/// let (a, b, c, d, sum_ab, sum_cd, product) = (0, 1, 2, 3, 4, 5, 6);
+/// let mut tasks = TaskGraph::new();
+/// let mk = |i: usize, v: i32, s: &Arc<[AtomicI32]>| {
+///     let s = s.clone();
+///     move || s[i].store(v, Relaxed)
+/// };
+/// let get_a = tasks.add(mk(a, 1, &state));
+/// let get_b = tasks.add(mk(b, 2, &state));
+/// let get_c = tasks.add(mk(c, 3, &state));
+/// let get_d = tasks.add(mk(d, 4, &state));
+/// let s = state.clone();
+/// let get_sum_ab = tasks.add(move || s[sum_ab].store(s[a].load(Relaxed) + s[b].load(Relaxed), Relaxed));
+/// let s = state.clone();
+/// let get_sum_cd = tasks.add(move || s[sum_cd].store(s[c].load(Relaxed) + s[d].load(Relaxed), Relaxed));
+/// let s = state.clone();
+/// let get_product = tasks.add(move || s[product].store(s[sum_ab].load(Relaxed) * s[sum_cd].load(Relaxed), Relaxed));
+/// tasks.succeed(get_sum_ab, &[get_a, get_b]);
+/// tasks.succeed(get_sum_cd, &[get_c, get_d]);
+/// tasks.succeed(get_product, &[get_sum_ab, get_sum_cd]);
+///
+/// let pool = ThreadPool::new(2);
+/// tasks.run(&pool).unwrap();
+/// assert_eq!(state[product].load(Relaxed), 21);
+/// ```
+#[derive(Default)]
+pub struct TaskGraph {
+    pub(crate) nodes: Vec<Node>,
+    /// Cached cycle-check result; `None` after any mutation.
+    validated: Option<Result<(), Vec<usize>>>,
+}
+
+impl TaskGraph {
+    /// Creates an empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Creates an empty graph with room for `n` tasks.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            nodes: Vec::with_capacity(n),
+            validated: None,
+        }
+    }
+
+    /// Adds a task — a closure taking no arguments and returning
+    /// nothing; use captures for inputs and outputs.
+    pub fn add<F: FnMut() + Send + 'static>(&mut self, f: F) -> NodeId {
+        self.add_boxed(Box::new(f), None)
+    }
+
+    /// Adds a named task (names show up in error messages and traces).
+    pub fn add_named<F: FnMut() + Send + 'static>(&mut self, name: impl Into<String>, f: F) -> NodeId {
+        self.add_boxed(Box::new(f), Some(name.into()))
+    }
+
+    fn add_boxed(&mut self, f: Box<dyn FnMut() + Send>, name: Option<String>) -> NodeId {
+        self.validated = None;
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            func: UnsafeCell::new(f),
+            successors: Vec::new(),
+            num_predecessors: 0,
+            pending: AtomicUsize::new(0),
+            name,
+        });
+        NodeId(id)
+    }
+
+    /// Declares that `task` runs after every task in `deps`
+    /// (the paper's `task.Succeed(&dep1, &dep2, ...)`).
+    ///
+    /// # Panics
+    /// If any id is out of bounds (ids from another graph) or if an
+    /// edge would be a self-loop.
+    pub fn succeed(&mut self, task: NodeId, deps: &[NodeId]) {
+        self.validated = None;
+        for &d in deps {
+            assert!(d.0 < self.nodes.len() && task.0 < self.nodes.len(), "NodeId out of range");
+            assert_ne!(d.0, task.0, "a task cannot depend on itself");
+            self.nodes[d.0].successors.push(task.0);
+            self.nodes[task.0].num_predecessors += 1;
+        }
+    }
+
+    /// Declares that `task` runs before every task in `succs`
+    /// (the dual of [`TaskGraph::succeed`]).
+    pub fn precede(&mut self, task: NodeId, succs: &[NodeId]) {
+        self.validated = None;
+        for &s in succs {
+            assert!(s.0 < self.nodes.len() && task.0 < self.nodes.len(), "NodeId out of range");
+            assert_ne!(s.0, task.0, "a task cannot depend on itself");
+            self.nodes[task.0].successors.push(s.0);
+            self.nodes[s.0].num_predecessors += 1;
+        }
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Number of dependency edges.
+    pub fn num_edges(&self) -> usize {
+        self.nodes.iter().map(|n| n.successors.len()).sum()
+    }
+
+    /// Name of a node, if set.
+    pub fn name(&self, id: NodeId) -> Option<&str> {
+        self.nodes[id.0].name.as_deref()
+    }
+
+    /// Successor ids of a node (for tests and tooling).
+    pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes[id.0].successors.iter().map(|&i| NodeId(i)).collect()
+    }
+
+    /// In-degree of a node.
+    pub fn num_predecessors(&self, id: NodeId) -> usize {
+        self.nodes[id.0].num_predecessors
+    }
+
+    /// Renders the dependency structure as Graphviz DOT (nodes show
+    /// names where given, indices otherwise) — for docs and debugging:
+    /// `scheduling graph-demo --dot` or `dot -Tsvg graph.dot`.
+    pub fn to_dot(&self) -> String {
+        let mut out = String::from("digraph taskgraph {\n  rankdir=LR;\n  node [shape=box];\n");
+        for (i, node) in self.nodes.iter().enumerate() {
+            let label = node.name.as_deref().unwrap_or("");
+            if label.is_empty() {
+                out.push_str(&format!("  n{i};\n"));
+            } else {
+                let escaped = label.replace('"', "\\\"");
+                out.push_str(&format!("  n{i} [label=\"{escaped}\"];\n"));
+            }
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &s in &node.successors {
+                out.push_str(&format!("  n{i} -> n{s};\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Validates acyclicity (Kahn's algorithm), caching the result
+    /// until the graph is next mutated.
+    pub fn validate(&mut self) -> Result<(), GraphError> {
+        if self.validated.is_none() {
+            self.validated = Some(self.kahn_check());
+        }
+        match self.validated.as_ref().unwrap() {
+            Ok(()) => Ok(()),
+            Err(stuck) => Err(GraphError::Cycle { stuck: stuck.clone() }),
+        }
+    }
+
+    fn kahn_check(&self) -> Result<(), Vec<usize>> {
+        let n = self.nodes.len();
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|x| x.num_predecessors).collect();
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &s in &self.nodes[i].successors {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if seen == n {
+            Ok(())
+        } else {
+            Err((0..n).filter(|&i| indeg[i] > 0).collect())
+        }
+    }
+
+    /// Runs the graph on `pool`, blocking until every task has
+    /// executed. The graph can be run again afterwards (counters are
+    /// reset on every run; `FnMut` closures keep their state).
+    ///
+    /// Must be called from a non-worker thread (it blocks).
+    pub fn run(&mut self, pool: &ThreadPool) -> Result<(), GraphError> {
+        self.run_with_options(pool, RunOptions::default())
+    }
+
+    /// [`TaskGraph::run`] with explicit [`RunOptions`] (e.g. disabling
+    /// inline continuation for the scheduling ablation).
+    pub fn run_with_options(&mut self, pool: &ThreadPool, options: RunOptions) -> Result<(), GraphError> {
+        self.validate()?;
+        run_graph(self, pool, options)
+    }
+}
+
+impl std::fmt::Debug for TaskGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TaskGraph")
+            .field("tasks", &self.len())
+            .field("edges", &self.num_edges())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_shape() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let b = g.add(|| {});
+        let c = g.add_named("sink", || {});
+        g.succeed(c, &[a, b]);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.num_predecessors(c), 2);
+        assert_eq!(g.successors(a), vec![c]);
+        assert_eq!(g.name(c), Some("sink"));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn precede_is_dual_of_succeed() {
+        let mut g1 = TaskGraph::new();
+        let a1 = g1.add(|| {});
+        let b1 = g1.add(|| {});
+        g1.succeed(b1, &[a1]);
+
+        let mut g2 = TaskGraph::new();
+        let a2 = g2.add(|| {});
+        let b2 = g2.add(|| {});
+        g2.precede(a2, &[b2]);
+
+        assert_eq!(g1.successors(a1), g2.successors(a2));
+        assert_eq!(g1.num_predecessors(b1), g2.num_predecessors(b2));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let b = g.add(|| {});
+        let c = g.add(|| {});
+        g.succeed(b, &[a]);
+        g.succeed(c, &[b]);
+        g.succeed(a, &[c]); // a -> b -> c -> a
+        match g.validate() {
+            Err(GraphError::Cycle { stuck }) => {
+                assert_eq!(stuck.len(), 3);
+            }
+            other => panic!("expected cycle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn diamond_is_acyclic() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let b = g.add(|| {});
+        let c = g.add(|| {});
+        let d = g.add(|| {});
+        g.succeed(b, &[a]);
+        g.succeed(c, &[a]);
+        g.succeed(d, &[b, c]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot depend on itself")]
+    fn self_loop_panics() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        g.succeed(a, &[a]);
+    }
+
+    #[test]
+    fn dot_export_contains_nodes_and_edges() {
+        let mut g = TaskGraph::new();
+        let a = g.add_named("fetch \"data\"", || {});
+        let b = g.add(|| {});
+        g.succeed(b, &[a]);
+        let dot = g.to_dot();
+        assert!(dot.starts_with("digraph taskgraph {"));
+        assert!(dot.contains("n0 [label=\"fetch \\\"data\\\"\"];"));
+        assert!(dot.contains("n1;"));
+        assert!(dot.contains("n0 -> n1;"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn validation_cache_invalidated_on_mutation() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let b = g.add(|| {});
+        g.succeed(b, &[a]);
+        assert!(g.validate().is_ok());
+        g.succeed(a, &[b]); // now cyclic
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Typed dataflow on top of [`TaskGraph`] — values flow along edges.
+//!
+//! The paper's tasks are `void()` closures communicating through
+//! captures (§4.2); this module is the "new features can be added
+//! easily" (§1) extension: each node *returns* a value, dependencies
+//! are declared by consuming other nodes' [`Output`] handles, and the
+//! dependency edges are derived automatically. The underlying execution
+//! is the unmodified §2.2 protocol.
+//!
+//! ```
+//! use scheduling::graph::Dataflow;
+//! use scheduling::pool::ThreadPool;
+//!
+//! let mut df = Dataflow::new();
+//! let a = df.node("a", || 1);
+//! let b = df.node("b", || 2);
+//! let c = df.node("c", || 3);
+//! let d = df.node("d", || 4);
+//! let ab = df.node2("a+b", &a, &b, |x, y| x + y);
+//! let cd = df.node2("c+d", &c, &d, |x, y| x + y);
+//! let product = df.node2("(a+b)*(c+d)", &ab, &cd, |x, y| x * y);
+//! let pool = ThreadPool::new(2);
+//! df.run(&pool).unwrap();
+//! assert_eq!(product.take().unwrap(), 21);
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use super::builder::{GraphError, NodeId, TaskGraph};
+use super::executor::RunOptions;
+use crate::pool::ThreadPool;
+
+/// Errors specific to dataflow graphs.
+#[derive(Debug)]
+pub enum DataflowError {
+    /// The output was read before the graph ran (or was already taken).
+    NotProduced,
+    /// The underlying graph failed.
+    Graph(GraphError),
+}
+
+impl std::fmt::Display for DataflowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataflowError::NotProduced => write!(f, "output not produced yet (run the graph first)"),
+            DataflowError::Graph(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DataflowError {}
+
+impl From<GraphError> for DataflowError {
+    fn from(e: GraphError) -> Self {
+        DataflowError::Graph(e)
+    }
+}
+
+struct Slot<T>(Mutex<Option<T>>);
+
+/// Handle to a node's typed result. Cloneable; also usable as an input
+/// to downstream nodes.
+pub struct Output<T> {
+    slot: Arc<Slot<T>>,
+    id: NodeId,
+}
+
+/// Alias emphasizing the consuming side.
+pub type Input<T> = Output<T>;
+
+impl<T> Clone for Output<T> {
+    fn clone(&self) -> Self {
+        Output {
+            slot: self.slot.clone(),
+            id: self.id,
+        }
+    }
+}
+
+impl<T> Output<T> {
+    /// The underlying graph node (for mixing with raw [`TaskGraph`]
+    /// dependencies via [`Dataflow::graph_mut`]).
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    /// Takes the produced value out of the slot.
+    pub fn take(&self) -> Result<T, DataflowError> {
+        self.slot.0.lock().unwrap().take().ok_or(DataflowError::NotProduced)
+    }
+
+    /// Clones the produced value, leaving it in place (for re-runs and
+    /// multiple readers).
+    pub fn get(&self) -> Result<T, DataflowError>
+    where
+        T: Clone,
+    {
+        self.slot.0.lock().unwrap().clone().ok_or(DataflowError::NotProduced)
+    }
+}
+
+/// Builder for typed dataflow graphs (see module docs).
+#[derive(Default)]
+pub struct Dataflow {
+    graph: TaskGraph,
+}
+
+impl Dataflow {
+    /// Creates an empty dataflow graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A source node: produces a value from nothing.
+    pub fn node<T, F>(&mut self, name: &str, mut f: F) -> Output<T>
+    where
+        T: Send + 'static,
+        F: FnMut() -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot(Mutex::new(None)));
+        let s = slot.clone();
+        let id = self.graph.add_named(name, move || {
+            *s.0.lock().unwrap() = Some(f());
+        });
+        Output { slot, id }
+    }
+
+    /// A unary node: consumes one upstream output (cloned from its
+    /// slot, so the upstream value stays available to other readers).
+    pub fn node1<A, T, F>(&mut self, name: &str, a: &Output<A>, mut f: F) -> Output<T>
+    where
+        A: Clone + Send + 'static,
+        T: Send + 'static,
+        F: FnMut(A) -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot(Mutex::new(None)));
+        let s = slot.clone();
+        let ain = a.clone();
+        let id = self.graph.add_named(name, move || {
+            let av = ain.slot.0.lock().unwrap().clone().expect("predecessor value missing");
+            *s.0.lock().unwrap() = Some(f(av));
+        });
+        self.graph.succeed(id, &[a.id]);
+        Output { slot, id }
+    }
+
+    /// A binary node: consumes two upstream outputs.
+    pub fn node2<A, B, T, F>(&mut self, name: &str, a: &Output<A>, b: &Output<B>, mut f: F) -> Output<T>
+    where
+        A: Clone + Send + 'static,
+        B: Clone + Send + 'static,
+        T: Send + 'static,
+        F: FnMut(A, B) -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot(Mutex::new(None)));
+        let s = slot.clone();
+        let (ain, bin) = (a.clone(), b.clone());
+        let id = self.graph.add_named(name, move || {
+            let av = ain.slot.0.lock().unwrap().clone().expect("predecessor value missing");
+            let bv = bin.slot.0.lock().unwrap().clone().expect("predecessor value missing");
+            *s.0.lock().unwrap() = Some(f(av, bv));
+        });
+        self.graph.succeed(id, &[a.id, b.id]);
+        Output { slot, id }
+    }
+
+    /// An n-ary reduction over homogeneous inputs.
+    pub fn collect<A, T, F>(&mut self, name: &str, inputs: &[Output<A>], mut f: F) -> Output<T>
+    where
+        A: Clone + Send + 'static,
+        T: Send + 'static,
+        F: FnMut(Vec<A>) -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot(Mutex::new(None)));
+        let s = slot.clone();
+        let ins: Vec<Output<A>> = inputs.to_vec();
+        let id = self.graph.add_named(name, move || {
+            let vals: Vec<A> = ins
+                .iter()
+                .map(|i| i.slot.0.lock().unwrap().clone().expect("predecessor value missing"))
+                .collect();
+            *s.0.lock().unwrap() = Some(f(vals));
+        });
+        let dep_ids: Vec<NodeId> = inputs.iter().map(|i| i.id).collect();
+        self.graph.succeed(id, &dep_ids);
+        Output { slot, id }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// True if there are no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.graph.is_empty()
+    }
+
+    /// Escape hatch to the underlying [`TaskGraph`] (e.g. to add
+    /// ordering-only edges).
+    pub fn graph_mut(&mut self) -> &mut TaskGraph {
+        &mut self.graph
+    }
+
+    /// Runs the dataflow on `pool`, blocking until complete.
+    pub fn run(&mut self, pool: &ThreadPool) -> Result<(), DataflowError> {
+        Ok(self.graph.run(pool)?)
+    }
+
+    /// [`Dataflow::run`] with explicit [`RunOptions`].
+    pub fn run_with_options(&mut self, pool: &ThreadPool, options: RunOptions) -> Result<(), DataflowError> {
+        Ok(self.graph.run_with_options(pool, options)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_pipeline() {
+        let mut df = Dataflow::new();
+        let a = df.node("a", || 2.0f64);
+        let b = df.node1("sqrt", &a, |x| x.sqrt());
+        let c = df.node1("square", &b, |x| x * x);
+        let pool = ThreadPool::new(2);
+        df.run(&pool).unwrap();
+        assert!((c.take().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn take_before_run_errors() {
+        let mut df = Dataflow::new();
+        let a = df.node("a", || 5);
+        assert!(matches!(a.take(), Err(DataflowError::NotProduced)));
+        let pool = ThreadPool::new(1);
+        df.run(&pool).unwrap();
+        assert_eq!(a.take().unwrap(), 5);
+        // Taken: gone now.
+        assert!(matches!(a.take(), Err(DataflowError::NotProduced)));
+    }
+
+    #[test]
+    fn collect_reduces_fanout() {
+        let mut df = Dataflow::new();
+        let parts: Vec<_> = (0..10).map(|i| df.node("part", move || i as u64)).collect();
+        let total = df.collect("sum", &parts, |vs| vs.iter().sum::<u64>());
+        let pool = ThreadPool::new(3);
+        df.run(&pool).unwrap();
+        assert_eq!(total.take().unwrap(), 45);
+    }
+
+    #[test]
+    fn rerun_produces_fresh_values() {
+        let mut df = Dataflow::new();
+        let mut counter = 0u32;
+        let a = df.node("tick", move || {
+            counter += 1;
+            counter
+        });
+        let doubled = df.node1("double", &a, |x| x * 2);
+        let pool = ThreadPool::new(2);
+        df.run(&pool).unwrap();
+        assert_eq!(doubled.get().unwrap(), 2);
+        df.run(&pool).unwrap();
+        assert_eq!(doubled.get().unwrap(), 4);
+    }
+
+    #[test]
+    fn get_allows_multiple_readers() {
+        let mut df = Dataflow::new();
+        let a = df.node("a", || String::from("shared"));
+        let up = df.node1("upper", &a, |s| s.to_uppercase());
+        let len = df.node1("len", &a, |s| s.len());
+        let pool = ThreadPool::new(2);
+        df.run(&pool).unwrap();
+        assert_eq!(up.get().unwrap(), "SHARED");
+        assert_eq!(len.get().unwrap(), 6);
+        assert_eq!(a.get().unwrap(), "shared");
+    }
+}

@@ -1,0 +1,452 @@
+//! Task-graph execution (paper §2.2).
+//!
+//! When the pool executes a graph node it first runs the wrapped
+//! closure, then for each successor decrements the uncompleted-
+//! predecessor counter. The **first** successor whose counter reaches
+//! zero is executed on the *same worker thread* (an inline
+//! continuation — no deque traffic, no wakeup); every *other* ready
+//! successor is submitted to the pool. A linear chain therefore runs
+//! entirely on one worker as a single pool job.
+//!
+//! # Memory-safety protocol
+//!
+//! [`run_graph`] blocks until `remaining == 0`, so the raw node-slice
+//! pointer inside [`RunState`] outlives every job of the run (the
+//! `&mut TaskGraph` borrow pins the nodes). Exclusive access to each
+//! node's `FnMut` closure holds because (a) a node is scheduled exactly
+//! once per run — only the worker that decrements its `pending` counter
+//! to zero schedules it, and `fetch_sub` picks a unique such worker —
+//! and (b) all predecessor effects happen-before the node via the
+//! `AcqRel` decrements.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::builder::{GraphError, Node, TaskGraph};
+use crate::pool::thread_pool::{Job, PoolInner};
+use crate::pool::ThreadPool;
+
+/// Options controlling one graph run.
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Execute the first ready successor inline on the same worker
+    /// (paper §2.2). Disabling this resubmits *every* ready successor
+    /// to the pool — the `ablations` bench quantifies the difference.
+    /// (Inverted flag so `Default` means the paper's behaviour.)
+    pub no_inline_continuation: bool,
+    /// Record per-node execution spans into this tracer
+    /// (see [`super::Tracer`]).
+    pub tracer: Option<Arc<super::Tracer>>,
+}
+
+impl RunOptions {
+    /// The paper's §2.2 behaviour (inline continuation on, no tracing).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compatibility constructor used by benches/tests.
+    pub fn inline(inline_continuation: bool) -> Self {
+        Self {
+            no_inline_continuation: !inline_continuation,
+            tracer: None,
+        }
+    }
+
+    /// Attaches a tracer.
+    pub fn with_tracer(mut self, tracer: Arc<super::Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+}
+
+/// Shared state of one in-flight graph run.
+pub(crate) struct RunState {
+    nodes: *const Node,
+    len: usize,
+    /// Nodes not yet finished; the run is complete at zero.
+    remaining: AtomicUsize,
+    /// First panic observed, if any: (node index, rendered message).
+    panic: Mutex<Option<(usize, String)>>,
+    done_mutex: Mutex<bool>,
+    done_cv: Condvar,
+    options: RunOptions,
+}
+
+// SAFETY: the node slice is pinned for the lifetime of the run by
+// run_graph's blocking contract; Node is Sync (see builder.rs).
+unsafe impl Send for RunState {}
+unsafe impl Sync for RunState {}
+
+impl RunState {
+    #[inline]
+    fn node(&self, i: usize) -> &Node {
+        debug_assert!(i < self.len);
+        // SAFETY: i < len and the slice outlives the run (see above).
+        unsafe { &*self.nodes.add(i) }
+    }
+}
+
+/// A scheduled node of an in-flight run — the payload of
+/// [`Job::Node`].
+pub(crate) struct NodeRun {
+    pub(crate) state: Arc<RunState>,
+    pub(crate) node: usize,
+}
+
+/// Executes `run.node`, then chains ready successors per §2.2.
+/// Called by the pool's worker loop for `Job::Node`.
+pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: NodeRun) {
+    let state = run.state;
+    let mut current = run.node;
+    loop {
+        let node = state.node(current);
+
+        // 1. Execute the wrapped function (paper: "it first executes
+        //    the wrapped function"), containing panics so counters
+        //    still advance and the run cannot deadlock.
+        let span = state.options.tracer.as_ref().map(|t| {
+            t.span(
+                worker_index,
+                match &node.name {
+                    Some(n) => n.clone(),
+                    None => format!("n{current}"),
+                },
+            )
+        });
+        // SAFETY: exclusive access per the module-level protocol.
+        let func = unsafe { &mut *node.func.get() };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(func)) {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+            let mut p = state.panic.lock().unwrap();
+            if p.is_none() {
+                *p = Some((current, msg));
+            }
+        }
+        drop(span); // record the span before scheduling successors
+
+        // 2. Decrement each successor's uncompleted-predecessor count.
+        //    First ready successor continues inline; the rest are
+        //    submitted to the same pool instance.
+        let mut inline_next: Option<usize> = None;
+        for &succ in &node.successors {
+            // AcqRel: the final decrement acquires every predecessor's
+            // release, ordering all predecessor effects before the
+            // successor's execution.
+            if state.node(succ).pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                if !state.options.no_inline_continuation && inline_next.is_none() {
+                    inline_next = Some(succ);
+                } else {
+                    pool.submit_job(Job::Node(NodeRun {
+                        state: state.clone(),
+                        node: succ,
+                    }));
+                }
+            }
+        }
+
+        // 3. Mark this node complete. After this point we must not
+        //    touch `node` again: if it was the last one, run_graph may
+        //    wake and invalidate the node slice.
+        if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = state.done_mutex.lock().unwrap();
+            *done = true;
+            drop(done);
+            state.done_cv.notify_all();
+        }
+
+        match inline_next {
+            Some(next) => {
+                pool.metrics()[worker_index].on_inline_continuation();
+                current = next;
+            }
+            None => break,
+        }
+    }
+}
+
+/// Runs `graph` on `pool`, blocking until all nodes have executed.
+pub(crate) fn run_graph(
+    graph: &mut TaskGraph,
+    pool: &ThreadPool,
+    options: RunOptions,
+) -> Result<(), GraphError> {
+    let n = graph.nodes.len();
+    if n == 0 {
+        return Ok(());
+    }
+    debug_assert!(
+        pool.current_worker().is_none(),
+        "TaskGraph::run called from a worker task of the same pool (would deadlock)"
+    );
+
+    // Reset per-run counters (the graph is reusable, paper §4.2 runs
+    // the same `tasks` collection repeatedly).
+    for node in &graph.nodes {
+        node.pending.store(node.num_predecessors, Ordering::Relaxed);
+    }
+
+    let state = Arc::new(RunState {
+        nodes: graph.nodes.as_ptr(),
+        len: n,
+        remaining: AtomicUsize::new(n),
+        panic: Mutex::new(None),
+        done_mutex: Mutex::new(false),
+        done_cv: Condvar::new(),
+        options,
+    });
+
+    // Submit every source (zero predecessors). Validation guarantees
+    // at least one exists for a non-empty acyclic graph.
+    for (i, node) in graph.nodes.iter().enumerate() {
+        if node.num_predecessors == 0 {
+            pool.inner().submit_job(Job::Node(NodeRun {
+                state: state.clone(),
+                node: i,
+            }));
+        }
+    }
+
+    // Block until the run drains. This pins `graph.nodes` for the
+    // whole run — the soundness linchpin of the raw pointer above.
+    let mut done = state.done_mutex.lock().unwrap();
+    while !*done {
+        done = state.done_cv.wait(done).unwrap();
+    }
+    drop(done);
+
+    let panic = state.panic.lock().unwrap().take();
+    match panic {
+        None => Ok(()),
+        Some((node, message)) => Err(GraphError::TaskPanicked {
+            node,
+            name: graph.nodes[node].name.clone(),
+            message,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::pool::ThreadPool;
+    use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering::Relaxed};
+
+    #[test]
+    fn paper_arithmetic_example() {
+        // (a + b) * (c + d) with the paper's dependency structure.
+        let a = Arc::new(AtomicI32::new(0));
+        let b = Arc::new(AtomicI32::new(0));
+        let c = Arc::new(AtomicI32::new(0));
+        let d = Arc::new(AtomicI32::new(0));
+        let sum_ab = Arc::new(AtomicI32::new(0));
+        let sum_cd = Arc::new(AtomicI32::new(0));
+        let product = Arc::new(AtomicI32::new(0));
+
+        let mut tasks = TaskGraph::new();
+        let get_a = {
+            let a = a.clone();
+            tasks.add(move || a.store(1, Relaxed))
+        };
+        let get_b = {
+            let b = b.clone();
+            tasks.add(move || b.store(2, Relaxed))
+        };
+        let get_c = {
+            let c = c.clone();
+            tasks.add(move || c.store(3, Relaxed))
+        };
+        let get_d = {
+            let d = d.clone();
+            tasks.add(move || d.store(4, Relaxed))
+        };
+        let get_sum_ab = {
+            let (a, b, s) = (a.clone(), b.clone(), sum_ab.clone());
+            tasks.add(move || s.store(a.load(Relaxed) + b.load(Relaxed), Relaxed))
+        };
+        let get_sum_cd = {
+            let (c, d, s) = (c.clone(), d.clone(), sum_cd.clone());
+            tasks.add(move || s.store(c.load(Relaxed) + d.load(Relaxed), Relaxed))
+        };
+        let get_product = {
+            let (x, y, p) = (sum_ab.clone(), sum_cd.clone(), product.clone());
+            tasks.add(move || p.store(x.load(Relaxed) * y.load(Relaxed), Relaxed))
+        };
+        tasks.succeed(get_sum_ab, &[get_a, get_b]);
+        tasks.succeed(get_sum_cd, &[get_c, get_d]);
+        tasks.succeed(get_product, &[get_sum_ab, get_sum_cd]);
+
+        let pool = ThreadPool::new(4);
+        tasks.run(&pool).unwrap();
+        assert_eq!(product.load(Relaxed), 21);
+    }
+
+    #[test]
+    fn each_node_runs_exactly_once() {
+        let n = 64;
+        let counts: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let mut g = TaskGraph::new();
+        let ids: Vec<_> = (0..n)
+            .map(|i| {
+                let counts = counts.clone();
+                g.add(move || {
+                    counts[i].fetch_add(1, Relaxed);
+                })
+            })
+            .collect();
+        // Layered dependencies: each node after the first 8 depends on
+        // two earlier nodes.
+        for i in 8..n {
+            g.succeed(ids[i], &[ids[i - 8], ids[i - 3]]);
+        }
+        let pool = ThreadPool::new(3);
+        g.run(&pool).unwrap();
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Relaxed), 1, "node {i}");
+        }
+    }
+
+    #[test]
+    fn rerun_reuses_graph_and_state() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let a = {
+            let c = counter.clone();
+            g.add(move || {
+                c.fetch_add(1, Relaxed);
+            })
+        };
+        let b = {
+            let c = counter.clone();
+            g.add(move || {
+                c.fetch_add(10, Relaxed);
+            })
+        };
+        g.succeed(b, &[a]);
+        let pool = ThreadPool::new(2);
+        for run in 1..=5 {
+            g.run(&pool).unwrap();
+            assert_eq!(counter.load(Relaxed), run * 11);
+        }
+    }
+
+    #[test]
+    fn chain_order_respected() {
+        // A strict chain must observe strictly increasing sequence.
+        let order = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let mut g = TaskGraph::new();
+        let mut prev: Option<crate::graph::NodeId> = None;
+        for i in 0..50 {
+            let order = order.clone();
+            let id = g.add(move || order.lock().unwrap().push(i));
+            if let Some(p) = prev {
+                g.succeed(id, &[p]);
+            }
+            prev = Some(id);
+        }
+        let pool = ThreadPool::new(4);
+        g.run(&pool).unwrap();
+        let seen = order.lock().unwrap().clone();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn inline_continuation_metric_counts_chain() {
+        let mut g = TaskGraph::new();
+        let mut prev: Option<crate::graph::NodeId> = None;
+        for _ in 0..100 {
+            let id = g.add(|| {});
+            if let Some(p) = prev {
+                g.succeed(id, &[p]);
+            }
+            prev = Some(id);
+        }
+        let pool = ThreadPool::new(1);
+        g.run(&pool).unwrap();
+        let inline = pool.metrics().total().inline_continuations;
+        assert_eq!(inline, 99, "a 100-node chain should continue inline 99 times");
+    }
+
+    #[test]
+    fn no_inline_option_still_correct() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let mut prev: Option<crate::graph::NodeId> = None;
+        for _ in 0..64 {
+            let c = counter.clone();
+            let id = g.add(move || {
+                c.fetch_add(1, Relaxed);
+            });
+            if let Some(p) = prev {
+                g.succeed(id, &[p]);
+            }
+            prev = Some(id);
+        }
+        let pool = ThreadPool::new(2);
+        g.run_with_options(&pool, RunOptions::inline(false)).unwrap();
+        assert_eq!(counter.load(Relaxed), 64);
+        assert_eq!(pool.metrics().total().inline_continuations, 0);
+    }
+
+    #[test]
+    fn panicking_node_reported_and_graph_completes() {
+        let after = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let bad = g.add_named("bad", || panic!("kaboom"));
+        let next = {
+            let after = after.clone();
+            g.add(move || {
+                after.fetch_add(1, Relaxed);
+            })
+        };
+        g.succeed(next, &[bad]);
+        let pool = ThreadPool::new(2);
+        match g.run(&pool) {
+            Err(GraphError::TaskPanicked { node, name, message }) => {
+                assert_eq!(node, 0);
+                assert_eq!(name.as_deref(), Some("bad"));
+                assert!(message.contains("kaboom"));
+            }
+            other => panic!("expected panic error, got {other:?}"),
+        }
+        // Successors of the panicked node still ran (documented policy).
+        assert_eq!(after.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn empty_graph_is_a_noop() {
+        let mut g = TaskGraph::new();
+        let pool = ThreadPool::new(1);
+        g.run(&pool).unwrap();
+    }
+
+    #[test]
+    fn wide_fanout_fanin() {
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let src = g.add(|| {});
+        let sink = {
+            let sum = sum.clone();
+            g.add(move || {
+                sum.fetch_add(1000, Relaxed);
+            })
+        };
+        for _ in 0..200 {
+            let sum = sum.clone();
+            let mid = g.add(move || {
+                sum.fetch_add(1, Relaxed);
+            });
+            g.succeed(mid, &[src]);
+            g.succeed(sink, &[mid]);
+        }
+        let pool = ThreadPool::new(4);
+        g.run(&pool).unwrap();
+        assert_eq!(sum.load(Relaxed), 1200);
+    }
+}

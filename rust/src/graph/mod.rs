@@ -1,0 +1,22 @@
+//! Task graphs (paper §2.2, §4.2).
+//!
+//! A task graph is a collection of tasks plus dependencies that define
+//! execution order. Each node is a thin wrapper over a closure storing
+//! its successor list and the number of uncompleted predecessors; when
+//! a node finishes, the worker decrements each successor's counter and
+//! executes the *first* successor that becomes ready **inline on the
+//! same worker thread**, submitting the rest to the pool — the paper's
+//! §2.2 continuation rule, which keeps chain-shaped graphs on one
+//! worker with zero queue traffic.
+
+mod builder;
+mod dataflow;
+mod executor;
+mod trace;
+
+pub use builder::{GraphError, NodeId, TaskGraph};
+pub use dataflow::{Dataflow, DataflowError, Input, Output};
+pub use executor::RunOptions;
+pub use trace::{SpanGuard, TraceEvent, Tracer};
+
+pub(crate) use executor::{execute_node, NodeRun};

@@ -1,0 +1,51 @@
+//! # scheduling
+//!
+//! A simple and fast Rust thread pool capable of running task graphs —
+//! a from-scratch reproduction of Puyda, *"A simple and fast C++ thread
+//! pool implementation capable of running task graphs"* (2024), extended
+//! with an AOT-compiled JAX/Pallas compute runtime (PJRT) so task-graph
+//! nodes can execute real tensor kernels with no Python on the request
+//! path.
+//!
+//! ## Layout
+//!
+//! * [`pool`] — the work-stealing thread pool (Chase–Lev deques,
+//!   thread-local worker registration, eventcount parking).
+//! * [`graph`] — task graphs: successor lists + atomic predecessor
+//!   counters, inline continuation of the first ready successor.
+//! * [`baseline`] — comparator executors (centralized mutex queue,
+//!   thread-per-task, Taskflow-like fence-based work stealer).
+//! * [`runtime`] — PJRT client + artifact registry for AOT-compiled
+//!   HLO produced by `python/compile/aot.py`.
+//! * [`workloads`] — benchmark workload generators (fibonacci, linear
+//!   chain, binary tree, graph traversal, wavefront, blocked matmul).
+//! * [`bench_harness`] — wall/CPU-time measurement and statistics.
+//! * [`cli`] — argument parsing and config for the launcher binary.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use scheduling::pool::ThreadPool;
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//! use std::sync::Arc;
+//!
+//! let pool = ThreadPool::new(2);
+//! let hits = Arc::new(AtomicUsize::new(0));
+//! for _ in 0..16 {
+//!     let hits = hits.clone();
+//!     pool.submit(move || { hits.fetch_add(1, Ordering::Relaxed); });
+//! }
+//! pool.wait_idle();
+//! assert_eq!(hits.load(Ordering::Relaxed), 16);
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod baseline;
+pub mod bench_harness;
+pub mod cli;
+pub mod graph;
+pub mod pool;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

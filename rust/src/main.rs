@@ -1,0 +1,255 @@
+//! `scheduling` launcher: run workloads, inspect artifacts, and smoke
+//! the full stack from one binary.
+//!
+//! ```text
+//! scheduling run fib        --n 25 --threads 4 --executor scheduling
+//! scheduling run chain      --size 65536 --threads 4
+//! scheduling run wavefront  --size 32 --threads 4 --work 100
+//! scheduling run matmul     --size 256 --tile 64 --schedule wavefront
+//! scheduling graph-demo     # the paper's (a+b)*(c+d) example
+//! scheduling artifacts      # list compiled XLA artifacts
+//! scheduling info           # testbed + pool configuration report
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use scheduling::baseline::{all_executors, executor_by_name};
+use scheduling::cli::{Args, Config};
+use scheduling::graph::Dataflow;
+use scheduling::pool::ThreadPool;
+use scheduling::runtime::{find_artifacts_dir, HostTensor, Registry, Runtime};
+use scheduling::util::{process_cpu_time, thread_count};
+use scheduling::workloads::matmul_graph::{BlockedMatmul, MatmulSchedule};
+use scheduling::workloads::{fib_reference, fib_task_count, run_fib, Dag};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(path) = args.raw("config").map(str::to_string) {
+        let config = Config::load(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        args.merge_defaults(config.values());
+    }
+    match args.positional(0) {
+        Some("run") => cmd_run(&args),
+        Some("graph-demo") => cmd_graph_demo(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("kernel-lat") => cmd_kernel_lat(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown command {other:?}; try `scheduling info`"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "scheduling — work-stealing thread pool + task graphs (Puyda 2024 reproduction)\n\
+         \n\
+         commands:\n\
+           run fib|chain|btree|dag|wavefront|matmul   run a workload\n\
+           graph-demo                                 paper §4.2 example\n\
+           artifacts                                  list AOT artifacts\n\
+           info                                       testbed report\n\
+         \n\
+         common flags: --threads N --executor scheduling|taskflow|mutex|spawn\n\
+         workload flags: --n --size --depth --work --tile --schedule --seed --config FILE"
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let workload = args.positional(1).context("run: missing workload name")?;
+    let threads = args.get("threads", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))?;
+    let executor_name = args.raw("executor").unwrap_or("scheduling").to_string();
+    let work: u32 = args.get("work", 0)?;
+
+    let wall_start = Instant::now();
+    let cpu_start = process_cpu_time();
+    match workload {
+        "fib" => {
+            let n: u32 = args.get("n", 25)?;
+            let ex = executor_by_name(&executor_name, threads)
+                .with_context(|| format!("unknown executor {executor_name:?}"))?;
+            let got = run_fib(&ex, n);
+            let expected = fib_reference(n);
+            anyhow::ensure!(got == expected, "fib mismatch: {got} != {expected}");
+            println!("fib({n}) = {got} via {} ({} tasks)", ex.name(), fib_task_count(n));
+        }
+        "chain" | "btree" | "dag" | "wavefront" => {
+            let dag = build_dag(workload, args)?;
+            let ex = executor_by_name(&executor_name, threads)
+                .with_context(|| format!("unknown executor {executor_name:?}"))?;
+            let executed = if executor_name == "scheduling" {
+                // Native path: the §2.2 graph executor.
+                let pool = ThreadPool::new(threads);
+                let (mut g, counter) = dag.to_task_graph(work);
+                let mut options = scheduling::graph::RunOptions::new();
+                let tracer = if args.flag("trace") {
+                    let t = Arc::new(scheduling::graph::Tracer::new());
+                    options = options.with_tracer(t.clone());
+                    Some(t)
+                } else {
+                    None
+                };
+                g.run_with_options(&pool, options).map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("{}", pool.metrics());
+                if let Some(t) = tracer {
+                    let out = args.raw("out").unwrap_or("trace.json").to_string();
+                    std::fs::write(&out, t.to_chrome_trace())?;
+                    println!("{}", t.ascii_gantt(72));
+                    println!("chrome trace written to {out} (open in chrome://tracing)");
+                }
+                counter.load(std::sync::atomic::Ordering::Relaxed)
+            } else {
+                dag.run_countdown(&ex, work)
+            };
+            anyhow::ensure!(executed == dag.len(), "executed {executed} of {} nodes", dag.len());
+            println!(
+                "{} [{} nodes, {} edges] on {} ({} threads): all nodes executed",
+                dag.kind,
+                dag.len(),
+                dag.num_edges(),
+                executor_name,
+                threads
+            );
+        }
+        "matmul" => {
+            let size: usize = args.get("size", 256)?;
+            let tile: usize = args.get("tile", 64)?;
+            let schedule = match args.raw("schedule").unwrap_or("independent") {
+                "wavefront" => MatmulSchedule::Wavefront,
+                _ => MatmulSchedule::Independent,
+            };
+            let (c, expected) = run_matmul(size, tile, threads, schedule)?;
+            let diff = c.max_abs_diff(&expected);
+            anyhow::ensure!(diff < 1e-3, "matmul verification failed: max diff {diff}");
+            println!("matmul {size}x{size} tile={tile} verified (max diff {diff:.2e})");
+        }
+        other => bail!("unknown workload {other:?}"),
+    }
+    println!(
+        "wall {:.3}s  cpu {:.3}s  threads(process) {}",
+        wall_start.elapsed().as_secs_f64(),
+        process_cpu_time().saturating_sub(cpu_start).as_secs_f64(),
+        thread_count()
+    );
+    Ok(())
+}
+
+fn build_dag(kind: &str, args: &Args) -> Result<Dag> {
+    Ok(match kind {
+        "chain" => Dag::linear_chain(args.get("size", 65536)?),
+        "btree" => Dag::binary_tree(args.get("depth", 16)?),
+        "dag" => Dag::layered_random(
+            args.get("layers", 64)?,
+            args.get("width", 64)?,
+            args.get("p", 0.15f64)?,
+            args.get("seed", 42)?,
+        ),
+        "wavefront" => Dag::wavefront(args.get("size", 32)?),
+        _ => unreachable!(),
+    })
+}
+
+fn run_matmul(size: usize, tile: usize, threads: usize, schedule: MatmulSchedule) -> Result<(HostTensor, HostTensor)> {
+    let runtime = Arc::new(Runtime::cpu()?);
+    let registry = Registry::open_default(runtime)?;
+    let a = HostTensor::random(&[size, size], 1);
+    let b = HostTensor::random(&[size, size], 2);
+    let mm = BlockedMatmul::new(&registry, &a, &b, tile)?;
+    let pool = ThreadPool::new(threads);
+    let c = mm.run(&pool, schedule)?;
+    Ok((c, a.matmul_ref(&b)))
+}
+
+fn cmd_graph_demo(args: &Args) -> Result<()> {
+    // The paper's §4.2 worked example, via the typed dataflow layer.
+    let threads = args.get("threads", 2)?;
+    let pool = ThreadPool::new(threads);
+    let mut df = Dataflow::new();
+    let a = df.node("get_a", || 1);
+    let b = df.node("get_b", || 2);
+    let c = df.node("get_c", || 3);
+    let d = df.node("get_d", || 4);
+    let ab = df.node2("a+b", &a, &b, |x, y| x + y);
+    let cd = df.node2("c+d", &c, &d, |x, y| x + y);
+    let product = df.node2("(a+b)*(c+d)", &ab, &cd, |x, y| x * y);
+    df.run(&pool).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("(a+b)*(c+d) = {}", product.take().map_err(|e| anyhow::anyhow!("{e}"))?);
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = find_artifacts_dir().context("no artifacts found — run `make artifacts`")?;
+    println!("artifacts at {}", dir.display());
+    let runtime = Arc::new(Runtime::cpu()?);
+    let registry = Registry::open(runtime, &dir)?;
+    for name in registry.names() {
+        let e = registry.entry(name).unwrap();
+        let ins: Vec<String> = e.inputs.iter().map(|s| s.render()).collect();
+        let outs: Vec<String> = e.outputs.iter().map(|s| s.render()).collect();
+        println!("  {name}: ({}) -> ({})  [{}]", ins.join(", "), outs.join(", "), e.file);
+    }
+    Ok(())
+}
+
+/// Per-call latency of every registered executable (perf-pass tool:
+/// isolates PJRT dispatch + literal conversion from pool overhead).
+fn cmd_kernel_lat(args: &Args) -> Result<()> {
+    let repeat: usize = args.get("repeat", 50)?;
+    let runtime = Arc::new(Runtime::cpu()?);
+    let registry = Registry::open_default(runtime)?;
+    println!("{:<20} {:>12} {:>12} {:>12}", "kernel", "mean", "min", "max");
+    for name in registry.names() {
+        let entry = registry.entry(name).unwrap().clone();
+        let exe = registry.get(name)?;
+        let inputs: Vec<HostTensor> = entry
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| HostTensor::random(&s.dims, i as u64 + 1))
+            .collect();
+        exe.run(&inputs)?; // warm
+        let mut samples = Vec::with_capacity(repeat);
+        for _ in 0..repeat {
+            let t0 = Instant::now();
+            exe.run(&inputs)?;
+            samples.push(t0.elapsed());
+        }
+        let mean: std::time::Duration =
+            samples.iter().sum::<std::time::Duration>() / samples.len() as u32;
+        println!(
+            "{:<20} {:>12} {:>12} {:>12}",
+            name,
+            format!("{:.2?}", mean),
+            format!("{:.2?}", samples.iter().min().unwrap()),
+            format!("{:.2?}", samples.iter().max().unwrap())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("scheduling v{}", env!("CARGO_PKG_VERSION"));
+    println!("hardware threads: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    println!("process threads:  {}", thread_count());
+    let threads = args.get("threads", 2)?;
+    println!("\nexecutors at --threads {threads}:");
+    for ex in all_executors(threads) {
+        println!("  {} ({} workers)", ex.name(), ex.num_threads());
+    }
+    match find_artifacts_dir() {
+        Some(d) => println!("\nartifacts: {}", d.display()),
+        None => println!("\nartifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,512 @@
+//! Chase–Lev work-stealing deque — the fence-free variant (paper §2.1).
+//!
+//! The owning worker pushes and pops at the *bottom*; thieves steal at
+//! the *top*. This file implements the variant the paper ultimately
+//! adopts: **no `atomic_thread_fence`** — every ordering constraint is
+//! expressed on the atomic operation itself (the style of Google
+//! Filament's `WorkStealingDequeue`, which the paper credits for being
+//! clean under ThreadSanitizer). The fence-based C11 formulation of
+//! Lê et al. lives in [`super::fence_deque`] as an ablation comparator.
+//!
+//! Differences from Filament's fixed-capacity deque:
+//! * the buffer grows geometrically on overflow (like Chase–Lev's
+//!   original dynamic circular array and crossbeam-deque); retired
+//!   buffers are kept alive until the deque is dropped so a racing
+//!   thief can always safely read through a stale buffer pointer;
+//! * `steal` distinguishes `Empty` from `Retry` (lost CAS race) so the
+//!   pool's steal loop can make an informed back-off decision.
+//!
+//! # Safety model
+//!
+//! * `top` and `bottom` are `AtomicI64` on separate cache lines
+//!   ([`CachePadded`]): thieves only CAS `top`; the owner mostly touches
+//!   `bottom`, so steals do not invalidate the owner's line on push/pop.
+//! * Slots hold `MaybeUninit<T>`-style raw storage. A thief may read a
+//!   slot that the owner concurrently overwrites (the classic benign
+//!   Chase–Lev race); the read value is only *used* if the subsequent
+//!   `top` CAS succeeds, which proves the slot was not yet reclaimed.
+//! * An element is logically removed exactly once: either the owner's
+//!   `pop` (bottom side, with a CAS against `top` for the last element)
+//!   or a thief's successful `steal` CAS. Dropped-but-not-consumed
+//!   elements are destroyed when the deque is dropped.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{AtomicI64, AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::CachePadded;
+
+/// Result of a steal attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Steal<T> {
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a race (another thief or the owner took the element);
+    /// retrying immediately may succeed.
+    Retry,
+    /// Stole an element.
+    Success(T),
+}
+
+impl<T> Steal<T> {
+    /// Converts to `Option`, mapping both `Empty` and `Retry` to `None`.
+    pub fn success(self) -> Option<T> {
+        match self {
+            Steal::Success(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// True if the deque was observed empty.
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Steal::Empty)
+    }
+}
+
+/// A growable circular buffer of raw slots.
+struct Buffer<T> {
+    ptr: *mut MaybeUninit<T>,
+    cap: usize, // power of two
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        let mut slots = Vec::<MaybeUninit<T>>::with_capacity(cap);
+        // SAFETY: capacity was just reserved; the slots stay logically
+        // uninitialized (MaybeUninit) so setting len is sound.
+        unsafe { slots.set_len(cap) };
+        let boxed = slots.into_boxed_slice();
+        let ptr = Box::into_raw(boxed) as *mut MaybeUninit<T>;
+        Box::into_raw(Box::new(Buffer { ptr, cap }))
+    }
+
+    /// # Safety
+    /// `buf` must have been produced by [`Buffer::alloc`] and not freed.
+    unsafe fn dealloc(buf: *mut Buffer<T>) {
+        let b = Box::from_raw(buf);
+        drop(Vec::from_raw_parts(b.ptr, 0, b.cap)); // slots themselves are not dropped
+    }
+
+    #[inline]
+    fn slot(&self, index: i64) -> *mut MaybeUninit<T> {
+        // cap is a power of two; index is monotone, wrap with a mask.
+        unsafe { self.ptr.add(index as usize & (self.cap - 1)) }
+    }
+
+    /// # Safety: slot must hold an initialized value that this call
+    /// uniquely consumes (or whose consumption is validated by a later
+    /// successful CAS that proves ownership).
+    #[inline]
+    unsafe fn read(&self, index: i64) -> MaybeUninit<T> {
+        ptr::read(self.slot(index))
+    }
+
+    /// # Safety: owner-only; `index` must be outside the live range of
+    /// any thief-validated read (guaranteed by the Chase–Lev protocol).
+    #[inline]
+    unsafe fn write(&self, index: i64, value: T) {
+        ptr::write(self.slot(index), MaybeUninit::new(value));
+    }
+}
+
+struct Inner<T> {
+    /// Next index to steal from. Thieves CAS this upward.
+    top: CachePadded<AtomicI64>,
+    /// Next index to push at. Owner-only store.
+    bottom: CachePadded<AtomicI64>,
+    /// Current buffer. Owner swaps on grow; thieves read with Acquire.
+    buffer: AtomicPtr<Buffer<T>>,
+    /// Buffers retired by `grow`, freed when the deque drops. Keeping
+    /// them alive makes stale-pointer reads by racing thieves safe
+    /// without an epoch/hazard-pointer scheme — bounded by log2(maxlen)
+    /// buffers totalling < 2x the peak buffer size.
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Exclusive access: drain remaining elements, then free buffers.
+        let top = self.top.load(Ordering::Relaxed);
+        let bottom = self.bottom.load(Ordering::Relaxed);
+        let buf = self.buffer.load(Ordering::Relaxed);
+        unsafe {
+            let mut i = top;
+            while i < bottom {
+                drop((*buf).read(i).assume_init());
+                i += 1;
+            }
+            Buffer::dealloc(buf);
+            for &old in self.retired.lock().unwrap().iter() {
+                Buffer::dealloc(old);
+            }
+        }
+    }
+}
+
+/// Owner handle: `push` and `pop`. Not `Sync`/`Clone` — exactly one
+/// thread may own the bottom end, which is what makes the paper's
+/// thread-local-registration trick necessary in the pool.
+pub struct Worker<T> {
+    inner: Arc<Inner<T>>,
+    /// Cached bottom to avoid an atomic load on push; only the owner
+    /// mutates bottom so the cache is always exact.
+    bottom_cache: Cell<i64>,
+    _not_sync: PhantomData<*mut ()>,
+}
+
+unsafe impl<T: Send> Send for Worker<T> {}
+
+/// Thief handle: `steal`. Cheap to clone and share.
+pub struct Stealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Stealer<T> {
+    fn clone(&self) -> Self {
+        Stealer {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Creates a deque with the given initial capacity (rounded up to a
+/// power of two, minimum 2), returning the owner and a thief handle.
+pub fn deque<T: Send>(min_capacity: usize) -> (Worker<T>, Stealer<T>) {
+    let cap = min_capacity.next_power_of_two().max(2);
+    let inner = Arc::new(Inner {
+        top: CachePadded::new(AtomicI64::new(0)),
+        bottom: CachePadded::new(AtomicI64::new(0)),
+        buffer: AtomicPtr::new(Buffer::<T>::alloc(cap)),
+        retired: Mutex::new(Vec::new()),
+    });
+    (
+        Worker {
+            inner: inner.clone(),
+            bottom_cache: Cell::new(0),
+            _not_sync: PhantomData,
+        },
+        Stealer { inner },
+    )
+}
+
+impl<T: Send> Worker<T> {
+    /// Pushes an element at the bottom. Owner-only. Grows on overflow.
+    pub fn push(&self, value: T) {
+        let b = self.bottom_cache.get();
+        let t = self.inner.top.load(Ordering::Acquire);
+        let mut buf = self.inner.buffer.load(Ordering::Relaxed);
+
+        // SAFETY: owner-only access to bottom; len computed from our own
+        // cached bottom and an Acquire top is a lower bound on free space.
+        unsafe {
+            if b - t >= (*buf).cap as i64 {
+                buf = self.grow(t, b, buf);
+            }
+            (*buf).write(b, value);
+        }
+        // Release: the slot write must be visible before the new bottom
+        // (pairs with the thief's Acquire-or-stronger bottom load).
+        // Filament stores seq_cst here, but the push side needs no
+        // store-load barrier — only pop does, and its SeqCst fetch_sub
+        // provides it (crossbeam uses Release here too). Measured: a
+        // SeqCst store is an XCHG on x86 and cost ~15% on the owner
+        // path (EXPERIMENTS.md §Perf iteration 2).
+        self.inner.bottom.store(b + 1, Ordering::Release);
+        self.bottom_cache.set(b + 1);
+    }
+
+    /// Pops an element from the bottom. Owner-only.
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom_cache.get();
+        let t_approx = self.inner.top.load(Ordering::Relaxed);
+        if t_approx >= b {
+            // Fast path: certainly empty (top only moves up).
+            return None;
+        }
+
+        // Reserve the bottom element: publish bottom = b - 1 and *then*
+        // read top. fetch_sub is a read-modify-write with SeqCst, which
+        // gives the store-load barrier between our bottom store and the
+        // top load that the fence-based variant gets from
+        // atomic_thread_fence(seq_cst) — this is the fence-free trick.
+        let b = self.inner.bottom.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.bottom_cache.set(b);
+        let buf = self.inner.buffer.load(Ordering::Relaxed);
+        let t = self.inner.top.load(Ordering::SeqCst);
+
+        if t < b {
+            // More than one element; no thief can take the bottom one.
+            // SAFETY: indices t..=b are initialized; we uniquely consume b.
+            return Some(unsafe { (*buf).read(b).assume_init() });
+        }
+
+        let result = if t == b {
+            // Exactly one element: race the thieves with a CAS on top.
+            // SAFETY: validated by the CAS below before being used.
+            let value = unsafe { (*buf).read(b) };
+            if self
+                .inner
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                // SAFETY: CAS success proves we own index b.
+                Some(unsafe { value.assume_init() })
+            } else {
+                // A thief won; the value was moved out by the thief's
+                // read — ours is a phantom copy we must forget, which
+                // MaybeUninit does by simply not calling assume_init.
+                None
+            }
+        } else {
+            // t > b: deque was empty and a thief moved top past us.
+            None
+        };
+
+        // Restore bottom to its pre-pop value (b + 1). Combined with the
+        // CAS above this re-establishes the canonical empty state
+        // bottom == top whether we won (top = b + 1) or lost the race.
+        self.inner.bottom.store(b + 1, Ordering::SeqCst);
+        self.bottom_cache.set(b + 1);
+        result
+    }
+
+    /// Number of elements, as seen by the owner (exact between its own
+    /// push/pop calls, approximate under concurrent steals).
+    pub fn len(&self) -> usize {
+        let b = self.bottom_cache.get();
+        let t = self.inner.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// True if empty from the owner's perspective.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Returns a new thief handle.
+    pub fn stealer(&self) -> Stealer<T> {
+        Stealer {
+            inner: self.inner.clone(),
+        }
+    }
+
+    /// Doubles the buffer, copying live elements `t..b`. Owner-only.
+    ///
+    /// # Safety
+    /// `old` must be the current buffer; `t..b` must be the live range.
+    unsafe fn grow(&self, t: i64, b: i64, old: *mut Buffer<T>) -> *mut Buffer<T> {
+        let new = Buffer::<T>::alloc(((*old).cap * 2).max(2));
+        let mut i = t;
+        while i < b {
+            ptr::copy_nonoverlapping((*old).slot(i), (*new).slot(i), 1);
+            i += 1;
+        }
+        // Publish the new buffer before any subsequent bottom bump.
+        self.inner.buffer.store(new, Ordering::Release);
+        // Old buffer stays alive for racing thieves; freed on drop.
+        self.inner.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Send> Stealer<T> {
+    /// Attempts to steal one element from the top.
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.inner.top.load(Ordering::SeqCst);
+        let b = self.inner.bottom.load(Ordering::SeqCst);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Acquire pairs with the Release store in `grow`, so the buffer
+        // we read contains the elements published up to `b`.
+        let buf = self.inner.buffer.load(Ordering::Acquire);
+        // SAFETY: speculative read; only used if the CAS validates it.
+        let value = unsafe { (*buf).read(t) };
+        if self
+            .inner
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            // SAFETY: CAS success proves index t belonged to us.
+            Steal::Success(unsafe { value.assume_init() })
+        } else {
+            // Lost to the owner or another thief; value is a phantom
+            // copy and must not be dropped.
+            Steal::Retry
+        }
+    }
+
+    /// Approximate length (may be stale immediately).
+    pub fn len(&self) -> usize {
+        let t = self.inner.top.load(Ordering::Relaxed);
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Approximate emptiness check used by the pool before parking.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> std::fmt::Debug for Worker<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Worker").field("len", &(self.bottom_cache.get())).finish()
+    }
+}
+
+impl<T> std::fmt::Debug for Stealer<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Stealer").finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn lifo_for_owner() {
+        let (w, _s) = deque::<i32>(4);
+        w.push(1);
+        w.push(2);
+        w.push(3);
+        assert_eq!(w.pop(), Some(3));
+        assert_eq!(w.pop(), Some(2));
+        assert_eq!(w.pop(), Some(1));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let (w, s) = deque::<i32>(4);
+        w.push(1);
+        w.push(2);
+        w.push(3);
+        assert_eq!(s.steal().success(), Some(1));
+        assert_eq!(s.steal().success(), Some(2));
+        assert_eq!(w.pop(), Some(3));
+        assert!(s.steal().is_empty());
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let (w, s) = deque::<usize>(2);
+        for i in 0..1000 {
+            w.push(i);
+        }
+        assert_eq!(w.len(), 1000);
+        assert_eq!(s.steal().success(), Some(0));
+        for i in (1..1000).rev() {
+            assert_eq!(w.pop(), Some(i));
+        }
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_steal() {
+        let (w, s) = deque::<usize>(4);
+        for round in 0..50 {
+            for i in 0..10 {
+                w.push(round * 10 + i);
+            }
+            let mut got = 0;
+            while got < 5 {
+                if s.steal().success().is_some() {
+                    got += 1;
+                }
+            }
+            for _ in 0..5 {
+                assert!(w.pop().is_some());
+            }
+            assert!(w.is_empty());
+        }
+    }
+
+    #[test]
+    fn drop_releases_remaining_elements() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        {
+            let (w, _s) = deque::<D>(2);
+            for _ in 0..10 {
+                w.push(D);
+            }
+            w.pop().unwrap();
+        }
+        assert_eq!(DROPS.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn concurrent_owner_vs_thieves_each_item_once() {
+        const ITEMS: usize = 20_000;
+        const THIEVES: usize = 3;
+        let (w, s) = deque::<usize>(8);
+        let seen = Arc::new((0..ITEMS).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let handles: Vec<_> = (0..THIEVES)
+            .map(|_| {
+                let s = s.clone();
+                let seen = seen.clone();
+                let done = done.clone();
+                std::thread::spawn(move || {
+                    let mut count = 0usize;
+                    loop {
+                        match s.steal() {
+                            Steal::Success(v) => {
+                                seen[v].fetch_add(1, Ordering::Relaxed);
+                                count += 1;
+                            }
+                            Steal::Empty => {
+                                if done.load(Ordering::Acquire) {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                            Steal::Retry => {}
+                        }
+                    }
+                    count
+                })
+            })
+            .collect();
+
+        let mut popped = 0usize;
+        for i in 0..ITEMS {
+            w.push(i);
+            if i % 3 == 0 {
+                if let Some(v) = w.pop() {
+                    seen[v].fetch_add(1, Ordering::Relaxed);
+                    popped += 1;
+                }
+            }
+        }
+        while let Some(v) = w.pop() {
+            seen[v].fetch_add(1, Ordering::Relaxed);
+            popped += 1;
+        }
+        done.store(true, Ordering::Release);
+        let stolen: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+        assert_eq!(popped + stolen, ITEMS);
+        for (i, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i} seen wrong number of times");
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Chase–Lev deque, fence-based C11 formulation (Lê–Pop–Cohen–Zappa
+//! Nardelli, PPoPP '13) — the variant the paper *rejects* (§2.1).
+//!
+//! The paper observes that implementations using
+//! `atomic_thread_fence` (the original C11 reference code, and
+//! Taskflow's deque) trip ThreadSanitizer ("atomic_thread_fence is not
+//! supported with -fsanitize=thread") and may produce false positives,
+//! which is why the adopted deque ([`super::deque`]) expresses every
+//! ordering on the atomic op itself. We keep this faithful port of the
+//! fence formulation as (a) an ablation comparator for
+//! `benches/ablations.rs` — same algorithm, different memory-order
+//! style — and (b) the deque inside the Taskflow-proxy baseline
+//! ([`crate::baseline::taskflow_like`]), mirroring what Taskflow runs.
+//!
+//! The port maps the paper's cited C11 lines one-to-one:
+//! * `push`: relaxed loads, **release fence** before publishing bottom
+//!   (the exact line the paper quotes from Taskflow), relaxed store.
+//! * `pop`: relaxed bottom store then **seq_cst fence** (the store-load
+//!   barrier), relaxed top load.
+//! * `steal`: acquire top, **seq_cst fence**, acquire bottom, seq_cst
+//!   CAS on top.
+//!
+//! Under Rust's memory model (same as C++11), `fence(Release)` followed
+//! by a relaxed store synchronizes with an acquire load that reads it,
+//! so this is correct — just fence-styled. Miri/TSan-style tooling is
+//! expected to be unhappy with it, which is the paper's point.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{fence, AtomicI64, AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::CachePadded;
+pub use super::deque::Steal;
+
+struct Buffer<T> {
+    ptr: *mut MaybeUninit<T>,
+    cap: usize,
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        let mut slots = Vec::<MaybeUninit<T>>::with_capacity(cap);
+        // SAFETY: reserved above; slots stay uninitialized.
+        unsafe { slots.set_len(cap) };
+        let ptr = Box::into_raw(slots.into_boxed_slice()) as *mut MaybeUninit<T>;
+        Box::into_raw(Box::new(Buffer { ptr, cap }))
+    }
+
+    /// # Safety: `buf` from `alloc`, not yet freed.
+    unsafe fn dealloc(buf: *mut Buffer<T>) {
+        let b = Box::from_raw(buf);
+        drop(Vec::from_raw_parts(b.ptr, 0, b.cap));
+    }
+
+    #[inline]
+    fn slot(&self, index: i64) -> *mut MaybeUninit<T> {
+        unsafe { self.ptr.add(index as usize & (self.cap - 1)) }
+    }
+}
+
+struct Inner<T> {
+    top: CachePadded<AtomicI64>,
+    bottom: CachePadded<AtomicI64>,
+    buffer: AtomicPtr<Buffer<T>>,
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        let top = self.top.load(Ordering::Relaxed);
+        let bottom = self.bottom.load(Ordering::Relaxed);
+        let buf = self.buffer.load(Ordering::Relaxed);
+        unsafe {
+            let mut i = top;
+            while i < bottom {
+                drop(ptr::read((*buf).slot(i)).assume_init());
+                i += 1;
+            }
+            Buffer::dealloc(buf);
+            for &old in self.retired.lock().unwrap().iter() {
+                Buffer::dealloc(old);
+            }
+        }
+    }
+}
+
+/// Owner handle (push/pop at the bottom).
+pub struct FenceWorker<T> {
+    inner: Arc<Inner<T>>,
+    bottom_cache: Cell<i64>,
+    _not_sync: PhantomData<*mut ()>,
+}
+
+unsafe impl<T: Send> Send for FenceWorker<T> {}
+
+/// Thief handle (steal at the top).
+pub struct FenceStealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for FenceStealer<T> {
+    fn clone(&self) -> Self {
+        FenceStealer {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Creates a fence-based deque, returning owner and thief handles.
+pub fn fence_deque<T: Send>(min_capacity: usize) -> (FenceWorker<T>, FenceStealer<T>) {
+    let cap = min_capacity.next_power_of_two().max(2);
+    let inner = Arc::new(Inner {
+        top: CachePadded::new(AtomicI64::new(0)),
+        bottom: CachePadded::new(AtomicI64::new(0)),
+        buffer: AtomicPtr::new(Buffer::<T>::alloc(cap)),
+        retired: Mutex::new(Vec::new()),
+    });
+    (
+        FenceWorker {
+            inner: inner.clone(),
+            bottom_cache: Cell::new(0),
+            _not_sync: PhantomData,
+        },
+        FenceStealer { inner },
+    )
+}
+
+impl<T: Send> FenceWorker<T> {
+    /// Pushes at the bottom (owner-only), Lê et al. Fig. 1 `push`.
+    pub fn push(&self, value: T) {
+        let b = self.bottom_cache.get();
+        let t = self.inner.top.load(Ordering::Acquire);
+        let mut buf = self.inner.buffer.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*buf).cap as i64 {
+                buf = self.grow(t, b, buf);
+            }
+            ptr::write((*buf).slot(b), MaybeUninit::new(value));
+        }
+        // The exact construction the paper quotes from Taskflow:
+        //   atomic_thread_fence(release);
+        //   bottom.store(b + 1, relaxed);
+        fence(Ordering::Release);
+        self.inner.bottom.store(b + 1, Ordering::Relaxed);
+        self.bottom_cache.set(b + 1);
+    }
+
+    /// Pops from the bottom (owner-only), Lê et al. Fig. 1 `take`.
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom_cache.get() - 1;
+        let buf = self.inner.buffer.load(Ordering::Relaxed);
+        self.inner.bottom.store(b, Ordering::Relaxed);
+        // Store-load barrier between publishing bottom and reading top.
+        fence(Ordering::SeqCst);
+        let t = self.inner.top.load(Ordering::Relaxed);
+
+        let result = if t <= b {
+            // SAFETY: t..=b initialized; sole-element case validated by CAS.
+            let value = unsafe { ptr::read((*buf).slot(b)) };
+            if t == b {
+                let won = self
+                    .inner
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.inner.bottom.store(b + 1, Ordering::Relaxed);
+                self.bottom_cache.set(b + 1);
+                // SAFETY: CAS success proves unique ownership of slot b.
+                return if won { Some(unsafe { value.assume_init() }) } else { None };
+            }
+            // SAFETY: more than one element: slot b is exclusively ours.
+            Some(unsafe { value.assume_init() })
+        } else {
+            self.inner.bottom.store(b + 1, Ordering::Relaxed);
+            self.bottom_cache.set(b + 1);
+            None
+        };
+        if result.is_some() {
+            self.bottom_cache.set(b);
+        }
+        result
+    }
+
+    /// Owner-side length.
+    pub fn len(&self) -> usize {
+        let b = self.bottom_cache.get();
+        let t = self.inner.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Owner-side emptiness.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Returns a new thief handle.
+    pub fn stealer(&self) -> FenceStealer<T> {
+        FenceStealer {
+            inner: self.inner.clone(),
+        }
+    }
+
+    /// # Safety: owner-only; `old` is the current buffer, `t..b` live.
+    unsafe fn grow(&self, t: i64, b: i64, old: *mut Buffer<T>) -> *mut Buffer<T> {
+        let new = Buffer::<T>::alloc(((*old).cap * 2).max(2));
+        let mut i = t;
+        while i < b {
+            ptr::copy_nonoverlapping((*old).slot(i), (*new).slot(i), 1);
+            i += 1;
+        }
+        self.inner.buffer.store(new, Ordering::Release);
+        self.inner.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Send> FenceStealer<T> {
+    /// Steals from the top, Lê et al. Fig. 1 `steal`.
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.inner.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.inner.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let buf = self.inner.buffer.load(Ordering::Acquire);
+        // SAFETY: speculative; validated by the CAS before use.
+        let value = unsafe { ptr::read((*buf).slot(t)) };
+        if self
+            .inner
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            // SAFETY: CAS success proves index t belonged to us.
+            Steal::Success(unsafe { value.assume_init() })
+        } else {
+            Steal::Retry
+        }
+    }
+
+    /// Approximate length.
+    pub fn len(&self) -> usize {
+        let t = self.inner.top.load(Ordering::Relaxed);
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Approximate emptiness.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn lifo_owner_fifo_thief() {
+        let (w, s) = fence_deque::<i32>(4);
+        for i in 0..6 {
+            w.push(i);
+        }
+        assert_eq!(s.steal().success(), Some(0));
+        assert_eq!(w.pop(), Some(5));
+        assert_eq!(s.steal().success(), Some(1));
+        assert_eq!(w.pop(), Some(4));
+        assert_eq!(w.pop(), Some(3));
+        assert_eq!(w.pop(), Some(2));
+        assert_eq!(w.pop(), None);
+        assert!(s.steal().is_empty());
+    }
+
+    #[test]
+    fn grow_preserves_order() {
+        let (w, s) = fence_deque::<usize>(2);
+        for i in 0..129 {
+            w.push(i);
+        }
+        for i in 0..129 {
+            assert_eq!(s.steal().success(), Some(i));
+        }
+        assert!(s.steal().is_empty());
+    }
+
+    #[test]
+    fn concurrent_no_loss_no_dup() {
+        const ITEMS: usize = 10_000;
+        let (w, s) = fence_deque::<usize>(8);
+        let seen = Arc::new((0..ITEMS).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let thief = {
+            let (s, seen, done) = (s.clone(), seen.clone(), done.clone());
+            std::thread::spawn(move || {
+                let mut n = 0;
+                loop {
+                    match s.steal() {
+                        Steal::Success(v) => {
+                            seen[v].fetch_add(1, Ordering::Relaxed);
+                            n += 1;
+                        }
+                        Steal::Empty if done.load(Ordering::Acquire) => break,
+                        _ => std::hint::spin_loop(),
+                    }
+                }
+                n
+            })
+        };
+        let mut popped = 0;
+        for i in 0..ITEMS {
+            w.push(i);
+            if i % 2 == 0 {
+                if let Some(v) = w.pop() {
+                    seen[v].fetch_add(1, Ordering::Relaxed);
+                    popped += 1;
+                }
+            }
+        }
+        while let Some(v) = w.pop() {
+            seen[v].fetch_add(1, Ordering::Relaxed);
+            popped += 1;
+        }
+        done.store(true, Ordering::Release);
+        let stolen = thief.join().unwrap();
+        assert_eq!(popped + stolen, ITEMS);
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,189 @@
+//! Typed task results: `submit_with_result` returns a [`TaskHandle`]
+//! that can be joined for the task's return value.
+//!
+//! The paper's API is fire-and-forget (`void()` tasks, outputs through
+//! captures, §4.1); this is the obvious quality-of-life extension —
+//! a miniature `std::thread::JoinHandle` backed by the pool:
+//!
+//! ```
+//! use scheduling::pool::ThreadPool;
+//!
+//! let pool = ThreadPool::new(2);
+//! let h = pool.submit_with_result(|| 6 * 7);
+//! assert_eq!(h.join().unwrap(), 42);
+//! ```
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::thread_pool::ThreadPool;
+
+/// Result slot states.
+enum Slot<T> {
+    Pending,
+    Ready(T),
+    Panicked(String),
+    Taken,
+}
+
+struct Shared<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+/// Error returned by [`TaskHandle::join`] when the task panicked.
+#[derive(Debug, PartialEq, Eq)]
+pub struct JoinError {
+    /// Rendered panic message.
+    pub message: String,
+}
+
+impl std::fmt::Display for JoinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task panicked: {}", self.message)
+    }
+}
+
+impl std::error::Error for JoinError {}
+
+/// Handle to a task's eventual result. See module docs.
+#[must_use = "join() the handle or the result is lost"]
+pub struct TaskHandle<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Blocks until the task finishes; returns its value, or the panic
+    /// message if it panicked.
+    ///
+    /// Must not be called from a worker of the same pool (it blocks;
+    /// with one worker it would deadlock).
+    pub fn join(self) -> Result<T, JoinError> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Ready(v) => return Ok(v),
+                Slot::Panicked(message) => return Err(JoinError { message }),
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    slot = self.shared.cv.wait(slot).unwrap();
+                }
+                Slot::Taken => unreachable!("join consumes the handle"),
+            }
+        }
+    }
+
+    /// Non-blocking poll: `Some(result)` once finished.
+    pub fn try_join(self) -> Result<Result<T, JoinError>, Self> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        match std::mem::replace(&mut *slot, Slot::Taken) {
+            Slot::Ready(v) => Ok(Ok(v)),
+            Slot::Panicked(message) => Ok(Err(JoinError { message })),
+            Slot::Pending => {
+                *slot = Slot::Pending;
+                drop(slot);
+                Err(self)
+            }
+            Slot::Taken => unreachable!(),
+        }
+    }
+
+    /// True once the task has finished (without consuming the handle).
+    pub fn is_finished(&self) -> bool {
+        !matches!(*self.shared.slot.lock().unwrap(), Slot::Pending)
+    }
+}
+
+impl ThreadPool {
+    /// Submits a value-returning task; the result is retrieved through
+    /// the returned [`TaskHandle`]. Panics inside the task are captured
+    /// and surfaced as [`JoinError`] (they do not count toward
+    /// [`ThreadPool::panic_count`] — the handle owns the outcome).
+    pub fn submit_with_result<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot::Pending),
+            cv: Condvar::new(),
+        });
+        let s2 = shared.clone();
+        self.submit(move || {
+            let outcome = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                Ok(v) => Slot::Ready(v),
+                Err(payload) => Slot::Panicked(
+                    payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "<non-string panic payload>".to_string()),
+                ),
+            };
+            *s2.slot.lock().unwrap() = outcome;
+            s2.cv.notify_all();
+        });
+        TaskHandle { shared }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn join_returns_value() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit_with_result(|| "hello".to_string());
+        assert_eq!(h.join().unwrap(), "hello");
+    }
+
+    #[test]
+    fn join_surfaces_panic_message() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit_with_result(|| -> u32 { panic!("typed boom") });
+        let err = h.join().unwrap_err();
+        assert!(err.message.contains("typed boom"));
+        // Handle-owned panics are not pool-level panics.
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 0);
+    }
+
+    #[test]
+    fn try_join_pending_then_ready() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit_with_result(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            7u32
+        });
+        // Either still pending (expected) or already done on a fast box.
+        match h.try_join() {
+            Err(h) => {
+                pool.wait_idle();
+                assert!(h.is_finished());
+                match h.try_join() {
+                    Ok(v) => assert_eq!(v.unwrap(), 7),
+                    Err(_) => panic!("task finished but try_join still pending"),
+                }
+            }
+            Ok(v) => assert_eq!(v.unwrap(), 7),
+        }
+    }
+
+    #[test]
+    fn many_handles_fan_in() {
+        let pool = ThreadPool::new(3);
+        let handles: Vec<_> = (0..64u64).map(|i| pool.submit_with_result(move || i * i)).collect();
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, (0..64u64).map(|i| i * i).sum());
+    }
+
+    #[test]
+    fn is_finished_without_consuming() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit_with_result(|| 1);
+        pool.wait_idle();
+        assert!(h.is_finished());
+        assert_eq!(h.join().unwrap(), 1);
+    }
+}

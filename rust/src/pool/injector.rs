@@ -1,0 +1,391 @@
+//! Global injection queue for external submissions.
+//!
+//! The Chase–Lev deque's bottom end is owner-only, so threads that are
+//! *not* workers of the pool (e.g. `main` submitting the root task, or
+//! an I/O thread feeding the pool) cannot push to a worker deque. The
+//! paper's implementation routes such submissions through a shared
+//! queue; workers treat it as one more steal victim.
+//!
+//! Two implementations behind one API:
+//! * [`MutexInjector`] — `Mutex<VecDeque>`; dead simple, and since the
+//!   injector is off the hot path in all paper benchmarks (a single
+//!   root submission, after which all spawning happens inside workers),
+//!   this is the default.
+//! * [`SegQueue`] — a lock-free Michael–Scott-style segmented queue
+//!   (64-slot segments, per-slot ready flags). Used by the
+//!   `injector` ablation in `benches/ablations.rs` to show the choice
+//!   does not matter for graph workloads (and does for injector-heavy
+//!   ones).
+
+use std::collections::VecDeque;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Common interface for injection queues.
+pub trait Injector<T>: Send + Sync {
+    /// Enqueues a value (multi-producer).
+    fn push(&self, value: T);
+    /// Dequeues a value (multi-consumer).
+    fn pop(&self) -> Option<T>;
+    /// Approximate emptiness (used before parking; may be stale).
+    fn is_empty(&self) -> bool;
+    /// Approximate length.
+    fn len(&self) -> usize;
+}
+
+/// Mutex-protected FIFO injector (default).
+#[derive(Default)]
+pub struct MutexInjector<T> {
+    queue: Mutex<VecDeque<T>>,
+    /// Fast-path emptiness flag so workers polling an empty injector
+    /// don't take the lock at all.
+    maybe_nonempty: AtomicBool,
+}
+
+impl<T> MutexInjector<T> {
+    /// Creates an empty injector.
+    pub fn new() -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            maybe_nonempty: AtomicBool::new(false),
+        }
+    }
+}
+
+impl<T: Send> Injector<T> for MutexInjector<T> {
+    fn push(&self, value: T) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(value);
+        self.maybe_nonempty.store(true, Ordering::Release);
+    }
+
+    fn pop(&self) -> Option<T> {
+        if !self.maybe_nonempty.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut q = self.queue.lock().unwrap();
+        let v = q.pop_front();
+        if q.is_empty() {
+            self.maybe_nonempty.store(false, Ordering::Release);
+        }
+        v
+    }
+
+    fn is_empty(&self) -> bool {
+        !self.maybe_nonempty.load(Ordering::Acquire)
+    }
+
+    fn len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+const SEG_SHIFT: usize = 6;
+const SEG_CAP: usize = 1 << SEG_SHIFT; // 64 slots per segment
+
+struct Slot<T> {
+    value: MaybeUninit<T>,
+    ready: AtomicBool,
+}
+
+struct Segment<T> {
+    /// Ticket index of `slots[0]` — immutable after allocation, so a
+    /// cached segment pointer is self-describing (no separate racy
+    /// base counter).
+    base: usize,
+    slots: Box<[Slot<T>]>,
+    next: AtomicPtr<Segment<T>>,
+}
+
+impl<T> Segment<T> {
+    fn alloc(base: usize) -> *mut Segment<T> {
+        let slots: Box<[Slot<T>]> = (0..SEG_CAP)
+            .map(|_| Slot {
+                value: MaybeUninit::uninit(),
+                ready: AtomicBool::new(false),
+            })
+            .collect();
+        Box::into_raw(Box::new(Segment {
+            base,
+            slots,
+            next: AtomicPtr::new(ptr::null_mut()),
+        }))
+    }
+}
+
+/// Lock-free segmented MPMC FIFO queue.
+///
+/// `head`/`tail` are global ticket counters; a ticket maps to
+/// `(segment_index, slot)`. Producers claim a ticket with `fetch_add`,
+/// walk/extend the segment list, write the value and set `ready`.
+/// Consumers claim a ticket below `tail` with CAS and spin briefly on
+/// `ready` (a producer that claimed the slot is about to fill it).
+/// Segments are retired when fully consumed; retirement is deferred to
+/// `Drop` (bounded: queue lives as long as the pool).
+pub struct SegQueue<T> {
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    /// Cached segment containing (roughly) the head ticket; may lag,
+    /// never freed before `Drop`, so walking forward from it is safe.
+    head_seg: AtomicPtr<Segment<T>>,
+    /// Cached segment containing (roughly) the tail ticket.
+    tail_seg: AtomicPtr<Segment<T>>,
+    /// First segment ever allocated (for Drop-time walk).
+    first_seg: AtomicPtr<Segment<T>>,
+    reclaim_lock: Mutex<()>,
+}
+
+unsafe impl<T: Send> Send for SegQueue<T> {}
+unsafe impl<T: Send> Sync for SegQueue<T> {}
+
+impl<T> SegQueue<T> {
+    /// Creates an empty queue with one segment.
+    pub fn new() -> Self {
+        let seg = Segment::<T>::alloc(0);
+        Self {
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            head_seg: AtomicPtr::new(seg),
+            tail_seg: AtomicPtr::new(seg),
+            first_seg: AtomicPtr::new(seg),
+            reclaim_lock: Mutex::new(()),
+        }
+    }
+
+    /// Walks (and extends) the segment chain from `seg` to the segment
+    /// containing `ticket`.
+    ///
+    /// # Safety: `seg` must be a live segment with `(*seg).base <= ticket`.
+    unsafe fn seg_for(&self, mut seg: *mut Segment<T>, ticket: usize) -> *mut Segment<T> {
+        debug_assert!((*seg).base <= ticket);
+        while ticket >= (*seg).base + SEG_CAP {
+            let next = (*seg).next.load(Ordering::Acquire);
+            let next = if next.is_null() {
+                let fresh = Segment::<T>::alloc((*seg).base + SEG_CAP);
+                match (*seg).next.compare_exchange(
+                    ptr::null_mut(),
+                    fresh,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => fresh,
+                    Err(existing) => {
+                        // Someone else linked first; free ours.
+                        drop(Box::from_raw(fresh));
+                        existing
+                    }
+                }
+            } else {
+                next
+            };
+            seg = next;
+        }
+        seg
+    }
+}
+
+impl<T> Default for SegQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send> Injector<T> for SegQueue<T> {
+    fn push(&self, value: T) {
+        let ticket = self.tail.fetch_add(1, Ordering::AcqRel);
+        let mut cached = self.tail_seg.load(Ordering::Acquire);
+        // The cache may lag (another producer extended the chain before
+        // updating it) or even overshoot our ticket (a faster producer
+        // advanced it past us) — if it overshot, restart the walk from
+        // the first segment, which is never freed before Drop.
+        if unsafe { (*cached).base } > ticket {
+            cached = self.first_seg.load(Ordering::Acquire);
+        }
+        let seg = unsafe { self.seg_for(cached, ticket) };
+        if seg != cached {
+            self.tail_seg.store(seg, Ordering::Release); // best-effort
+        }
+        unsafe {
+            let slot = &(*seg).slots[ticket - (*seg).base];
+            ptr::write(slot.value.as_ptr() as *mut T, value);
+            slot.ready.store(true, Ordering::Release);
+        }
+    }
+
+    fn pop(&self) -> Option<T> {
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let tail = self.tail.load(Ordering::Acquire);
+            if head >= tail {
+                return None;
+            }
+            if self
+                .head
+                .compare_exchange_weak(head, head + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            let mut cached = self.head_seg.load(Ordering::Acquire);
+            if unsafe { (*cached).base } > head {
+                // A faster consumer advanced the cache past our ticket.
+                cached = self.first_seg.load(Ordering::Acquire);
+            }
+            let seg = unsafe { self.seg_for(cached, head) };
+            if seg != cached {
+                self.head_seg.store(seg, Ordering::Release); // best-effort
+            }
+            unsafe {
+                let slot = &(*seg).slots[head - (*seg).base];
+                // The producer owns this ticket and is about to set
+                // ready; spin briefly (bounded by one producer's write).
+                while !slot.ready.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                slot.ready.store(false, Ordering::Relaxed);
+                return Some(ptr::read(slot.value.as_ptr()));
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        head >= tail
+    }
+
+    fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        tail.saturating_sub(head)
+    }
+}
+
+impl<T> Drop for SegQueue<T> {
+    fn drop(&mut self) {
+        let _g = self.reclaim_lock.lock().unwrap();
+        // Drain remaining ready values, then free the whole chain.
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        let mut seg = self.first_seg.load(Ordering::Relaxed);
+        let mut base = 0usize;
+        unsafe {
+            while !seg.is_null() {
+                for i in 0..SEG_CAP {
+                    let ticket = base + i;
+                    if ticket >= head && ticket < tail {
+                        let slot = &(*seg).slots[i];
+                        if slot.ready.load(Ordering::Relaxed) {
+                            drop(ptr::read(slot.value.as_ptr()));
+                        }
+                    }
+                }
+                let next = (*seg).next.load(Ordering::Relaxed);
+                drop(Box::from_raw(seg));
+                seg = next;
+                base += SEG_CAP;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn fifo_smoke(q: &dyn Injector<usize>) {
+        assert!(q.is_empty());
+        for i in 0..200 {
+            q.push(i);
+        }
+        assert_eq!(q.len(), 200);
+        for i in 0..200 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn mutex_injector_fifo() {
+        fifo_smoke(&MutexInjector::new());
+    }
+
+    #[test]
+    fn seg_queue_fifo_across_segments() {
+        fifo_smoke(&SegQueue::new());
+    }
+
+    fn mpmc_stress(q: Arc<dyn Injector<usize>>) {
+        const PRODUCERS: usize = 2;
+        const CONSUMERS: usize = 2;
+        const PER: usize = 5_000;
+        let seen = Arc::new(
+            (0..PRODUCERS * PER)
+                .map(|_| std::sync::atomic::AtomicUsize::new(0))
+                .collect::<Vec<_>>(),
+        );
+        let consumed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i);
+                }
+            }));
+        }
+        for _ in 0..CONSUMERS {
+            let q = q.clone();
+            let seen = seen.clone();
+            let consumed = consumed.clone();
+            handles.push(std::thread::spawn(move || {
+                while consumed.load(Ordering::Acquire) < PRODUCERS * PER {
+                    if let Some(v) = q.pop() {
+                        seen[v].fetch_add(1, Ordering::Relaxed);
+                        consumed.fetch_add(1, Ordering::AcqRel);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn mutex_injector_mpmc() {
+        mpmc_stress(Arc::new(MutexInjector::new()));
+    }
+
+    #[test]
+    fn seg_queue_mpmc() {
+        mpmc_stress(Arc::new(SegQueue::new()));
+    }
+
+    #[test]
+    fn seg_queue_drop_releases_values() {
+        static DROPS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        {
+            let q = SegQueue::new();
+            for _ in 0..100 {
+                q.push(D);
+            }
+            drop(q.pop());
+        }
+        assert_eq!(DROPS.load(Ordering::Relaxed), 100);
+    }
+}

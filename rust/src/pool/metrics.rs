@@ -1,0 +1,197 @@
+//! Per-worker and pool-level scheduler metrics.
+//!
+//! Counters are relaxed atomics on cache-padded per-worker blocks —
+//! incrementing them costs one uncontended RMW and never synchronizes
+//! workers with each other, so leaving them enabled in release builds
+//! is fine (the `fib_wall` bench quantifies the cost as sub-1%).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::CachePadded;
+
+/// Counters owned by one worker thread.
+#[derive(Debug, Default)]
+pub struct WorkerMetrics {
+    /// Tasks pushed to this worker's own deque.
+    pub pushes: AtomicU64,
+    /// Tasks popped from this worker's own deque.
+    pub pops: AtomicU64,
+    /// Tasks stolen *by* this worker from someone else.
+    pub steals: AtomicU64,
+    /// Steal attempts that found the victim empty or lost the race.
+    pub steal_failures: AtomicU64,
+    /// Tasks taken from the global injector.
+    pub injector_pops: AtomicU64,
+    /// Times this worker went to sleep on the eventcount.
+    pub parks: AtomicU64,
+    /// Graph continuations executed inline (paper §2.2: the first ready
+    /// successor runs on the same worker without re-queueing).
+    pub inline_continuations: AtomicU64,
+}
+
+macro_rules! bump {
+    ($($name:ident => $field:ident),* $(,)?) => {
+        $(
+            #[doc = concat!("Increments `", stringify!($field), "` (relaxed).")]
+            #[inline]
+            pub fn $name(&self) {
+                self.$field.fetch_add(1, Ordering::Relaxed);
+            }
+        )*
+    };
+}
+
+impl WorkerMetrics {
+    bump! {
+        on_push => pushes,
+        on_pop => pops,
+        on_steal => steals,
+        on_steal_failure => steal_failures,
+        on_injector_pop => injector_pops,
+        on_park => parks,
+        on_inline_continuation => inline_continuations,
+    }
+}
+
+/// A point-in-time snapshot of one worker's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerSnapshot {
+    /// Tasks pushed to the worker's own deque.
+    pub pushes: u64,
+    /// Tasks popped from the worker's own deque.
+    pub pops: u64,
+    /// Tasks stolen by this worker.
+    pub steals: u64,
+    /// Steal attempts that failed (empty victim or lost race).
+    pub steal_failures: u64,
+    /// Tasks taken from the global injector.
+    pub injector_pops: u64,
+    /// Times the worker parked on the eventcount.
+    pub parks: u64,
+    /// Graph continuations executed inline (paper §2.2).
+    pub inline_continuations: u64,
+}
+
+impl WorkerSnapshot {
+    /// Jobs executed by this worker. Every executed job was acquired
+    /// by exactly one of pop/steal/injector-pop, so this is derived
+    /// rather than counted — one fewer RMW on the execute path
+    /// (EXPERIMENTS.md §Perf iteration 3).
+    pub fn executed(&self) -> u64 {
+        self.pops + self.steals + self.injector_pops
+    }
+}
+
+impl WorkerMetrics {
+    /// Takes a relaxed snapshot.
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            pushes: self.pushes.load(Ordering::Relaxed),
+            pops: self.pops.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            steal_failures: self.steal_failures.load(Ordering::Relaxed),
+            injector_pops: self.injector_pops.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            inline_continuations: self.inline_continuations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Aggregated snapshot across all workers of a pool.
+#[derive(Debug, Clone, Default)]
+pub struct PoolSnapshot {
+    /// Per-worker snapshots, indexed by worker id.
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+impl PoolSnapshot {
+    /// Sum over workers.
+    pub fn total(&self) -> WorkerSnapshot {
+        let mut t = WorkerSnapshot::default();
+        for w in &self.workers {
+            t.pushes += w.pushes;
+            t.pops += w.pops;
+            t.steals += w.steals;
+            t.steal_failures += w.steal_failures;
+            t.injector_pops += w.injector_pops;
+            t.parks += w.parks;
+            t.inline_continuations += w.inline_continuations;
+        }
+        t
+    }
+
+    /// Fraction of executed tasks that arrived by stealing — the
+    /// load-balancing signal the Chase–Lev design optimizes.
+    pub fn steal_ratio(&self) -> f64 {
+        let t = self.total();
+        if t.executed() == 0 {
+            0.0
+        } else {
+            t.steals as f64 / t.executed() as f64
+        }
+    }
+}
+
+impl std::fmt::Display for PoolSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = self.total();
+        writeln!(
+            f,
+            "pool: executed={} pushes={} pops={} steals={} steal_fail={} injector={} parks={} inline={}",
+            t.executed(), t.pushes, t.pops, t.steals, t.steal_failures, t.injector_pops, t.parks,
+            t.inline_continuations
+        )?;
+        for (i, w) in self.workers.iter().enumerate() {
+            writeln!(
+                f,
+                "  w{i}: executed={} pops={} steals={} parks={} inline={}",
+                w.executed(), w.pops, w.steals, w.parks, w.inline_continuations
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The padded per-worker metrics block as stored by the pool.
+pub type PaddedMetrics = CachePadded<WorkerMetrics>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_bumps() {
+        let m = WorkerMetrics::default();
+        m.on_push();
+        m.on_push();
+        m.on_pop();
+        m.on_steal();
+        let s = m.snapshot();
+        assert_eq!(s.pushes, 2);
+        assert_eq!(s.pops, 1);
+        assert_eq!(s.steals, 1);
+        assert_eq!(s.executed(), 2); // pop + steal
+    }
+
+    #[test]
+    fn pool_total_and_ratio() {
+        let a = WorkerSnapshot {
+            pops: 6,
+            steals: 2,
+            ..Default::default()
+        };
+        let b = WorkerSnapshot {
+            steals: 3,
+            injector_pops: 2,
+            ..Default::default()
+        };
+        let p = PoolSnapshot { workers: vec![a, b] };
+        assert_eq!(p.total().executed(), 13);
+        assert!((p.steal_ratio() - 5.0 / 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_pool_ratio_is_zero() {
+        assert_eq!(PoolSnapshot::default().steal_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! The work-stealing thread pool — the paper's core contribution (§2).
+//!
+//! * [`deque`] — Chase–Lev deque, fence-free memory orders (adopted).
+//! * [`fence_deque`] — Chase–Lev deque, Lê et al. fence style (ablation).
+//! * [`injector`] — global submission queue for non-worker threads.
+//! * [`event_count`] — sleep/wake protocol for idle workers.
+//! * [`thread_pool`] — [`ThreadPool`]: per-worker deques + thread-local
+//!   worker registration + steal loop.
+//! * [`metrics`] — relaxed per-worker counters.
+
+pub mod deque;
+pub mod event_count;
+pub mod fence_deque;
+pub mod injector;
+pub mod handle;
+pub mod metrics;
+pub mod scope;
+pub mod thread_pool;
+
+pub use deque::{deque, Steal, Stealer, Worker};
+pub use event_count::EventCount;
+pub use fence_deque::{fence_deque, FenceStealer, FenceWorker};
+pub use injector::{Injector, MutexInjector, SegQueue};
+pub use handle::{JoinError, TaskHandle};
+pub use metrics::{PoolSnapshot, WorkerMetrics, WorkerSnapshot};
+pub use scope::Scope;
+pub use thread_pool::{InjectorKind, PoolConfig, ThreadPool};

@@ -1,0 +1,220 @@
+//! Scoped tasks: submit borrowing tasks, block until they finish.
+//!
+//! The paper's C++ tasks capture locals by reference and the user is
+//! on their own to keep them alive; in Rust that pattern needs a
+//! scope (same shape as `std::thread::scope`): tasks submitted through
+//! a [`Scope`] may borrow from the enclosing stack frame, and
+//! [`ThreadPool::scope`] does not return until every scoped task has
+//! completed, making those borrows sound.
+//!
+//! ```
+//! use scheduling::pool::ThreadPool;
+//!
+//! let pool = ThreadPool::new(4);
+//! let mut parts = vec![0u64; 8];
+//! let input: Vec<u64> = (0..8_000).collect();
+//! pool.scope(|s| {
+//!     for (i, chunk) in parts.iter_mut().zip(input.chunks(1000)) {
+//!         s.submit(move || *i = chunk.iter().sum());
+//!     }
+//! });
+//! assert_eq!(parts.iter().sum::<u64>(), (0..8_000).sum());
+//! ```
+
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::thread_pool::ThreadPool;
+
+struct ScopeState {
+    /// Scoped tasks submitted but not finished.
+    active: AtomicUsize,
+    done_mutex: Mutex<()>,
+    done_cv: Condvar,
+    /// First panic payload from a scoped task, rethrown by `scope`.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Handle for submitting borrowing tasks; see module docs.
+///
+/// Lifetimes mirror `std::thread::Scope`: `'scope` is the scope of the
+/// spawned tasks (invariant), `'env` the environment they may borrow
+/// from; the `'env: 'scope` bound is what lets the HRTB in
+/// [`ThreadPool::scope`] instantiate `'scope` below the borrowed data.
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'env ThreadPool,
+    state: Arc<ScopeState>,
+    scope_marker: PhantomData<&'scope mut &'scope ()>,
+    env_marker: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope> Scope<'scope, '_> {
+    /// Submits a task that may borrow anything outliving `'scope`.
+    pub fn submit<F>(&'scope self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.active.fetch_add(1, Ordering::SeqCst);
+        let state = self.state.clone();
+        // SAFETY: the closure (and everything it borrows, bounded by
+        // 'scope) outlives its execution because `scope` blocks until
+        // `active` reaches zero before returning — the same argument
+        // as std::thread::scope. The transmute only erases 'scope.
+        let boxed: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        let boxed: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(boxed) };
+        self.pool.submit(move || {
+            if let Err(payload) = std::panic::catch_unwind(AssertUnwindSafe(boxed)) {
+                let mut p = state.panic.lock().unwrap();
+                if p.is_none() {
+                    *p = Some(payload);
+                }
+            }
+            if state.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                drop(state.done_mutex.lock().unwrap());
+                state.done_cv.notify_all();
+            }
+        });
+    }
+}
+
+impl ThreadPool {
+    /// Runs `f` with a [`Scope`]; blocks until every task submitted
+    /// through the scope (including tasks submitted by those tasks)
+    /// has finished. If any scoped task panicked, the first panic is
+    /// resumed on the caller after all tasks drain — mirroring
+    /// `std::thread::scope`.
+    ///
+    /// Must be called from a non-worker thread (it blocks).
+    pub fn scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    {
+        debug_assert!(
+            self.current_worker().is_none(),
+            "ThreadPool::scope called from a worker task of the same pool (would deadlock)"
+        );
+        let state = Arc::new(ScopeState {
+            active: AtomicUsize::new(0),
+            done_mutex: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let scope = Scope {
+            pool: self,
+            state: state.clone(),
+            scope_marker: PhantomData,
+            env_marker: PhantomData,
+        };
+        // Run the scope body; even if it panics we must wait for
+        // already-submitted tasks before unwinding (their borrows die
+        // with this frame).
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+
+        let mut guard = state.done_mutex.lock().unwrap();
+        while state.active.load(Ordering::SeqCst) != 0 {
+            guard = state.done_cv.wait(guard).unwrap();
+        }
+        drop(guard);
+
+        if let Some(payload) = state.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+        match result {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borrows_local_slices() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..10_000).collect();
+        let mut partials = [0u64; 10];
+        pool.scope(|s| {
+            for (out, chunk) in partials.iter_mut().zip(data.chunks(1000)) {
+                s.submit(move || {
+                    *out = chunk.iter().sum();
+                });
+            }
+        });
+        assert_eq!(partials.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let pool = ThreadPool::new(1);
+        let n = pool.scope(|s| {
+            s.submit(|| {});
+            42
+        });
+        assert_eq!(n, 42);
+    }
+
+    #[test]
+    fn nested_scoped_submission() {
+        // A scoped task submits more scoped tasks; all must finish
+        // before scope returns. (Scope is Sync: share it by reference.)
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..10 {
+                let counter = &counter;
+                s.submit(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_panic_propagates_after_drain() {
+        let pool = ThreadPool::new(2);
+        let finished = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.submit(|| panic!("scoped boom"));
+                for _ in 0..20 {
+                    let finished = &finished;
+                    s.submit(move || {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                        finished.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }));
+        assert!(result.is_err(), "scope should rethrow the task panic");
+        // All sibling tasks drained before the rethrow.
+        assert_eq!(finished.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_pool() {
+        let pool = ThreadPool::new(2);
+        for round in 1..=5 {
+            let hits = AtomicUsize::new(0);
+            pool.scope(|s| {
+                for _ in 0..round {
+                    let hits = &hits;
+                    s.submit(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), round);
+        }
+    }
+
+    #[test]
+    fn empty_scope_is_fine() {
+        let pool = ThreadPool::new(1);
+        pool.scope(|_s| {});
+    }
+}

@@ -1,0 +1,603 @@
+//! The work-stealing thread pool (paper §2.1, §4.1).
+//!
+//! Architecture, mirroring the paper:
+//!
+//! * one Chase–Lev deque per worker ([`super::deque`], the fence-free
+//!   variant);
+//! * a global injector for submissions from non-worker threads;
+//! * **thread-local worker registration**: instead of a map from thread
+//!   id to queue index (the "typical approach" the paper calls out), a
+//!   `thread_local!` slot identifies the current worker and its deque,
+//!   so `submit` from inside a task pushes straight to the local deque
+//!   with no lookup;
+//! * an eventcount so idle workers sleep instead of spinning (this is
+//!   what keeps Fig. 2's CPU-time curve close to wall-time × threads).
+//!
+//! Workers run: pop own deque → steal (injector + random-start sweep
+//! over victims) → park. On shutdown the pool drains remaining work
+//! before joining.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::deque::{deque, Steal, Stealer, Worker};
+use super::event_count::EventCount;
+use super::injector::{Injector, MutexInjector, SegQueue};
+use super::metrics::{PaddedMetrics, PoolSnapshot, WorkerMetrics};
+use crate::graph::NodeRun;
+use crate::util::XorShift64Star;
+
+/// A unit of work owned by the pool.
+pub(crate) enum Job {
+    /// A plain async task (paper §4.1).
+    Closure(Box<dyn FnOnce() + Send + 'static>),
+    /// A task-graph node (paper §2.2); executed via
+    /// [`crate::graph::execute_node`], which may chain successors
+    /// inline on this worker.
+    Node(NodeRun),
+}
+
+/// Which injector implementation backs external submissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InjectorKind {
+    /// `Mutex<VecDeque>` — default; injector is off the hot path.
+    #[default]
+    Mutex,
+    /// Lock-free segmented queue — for injector-heavy workloads.
+    LockFree,
+}
+
+/// Pool construction parameters.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker thread count. Defaults to
+    /// `std::thread::available_parallelism()`.
+    pub num_threads: usize,
+    /// How many full find-task sweeps a worker performs before parking.
+    /// Higher values trade CPU time (Fig. 2) for wakeup latency.
+    pub spin_rounds: u32,
+    /// Injector implementation.
+    pub injector: InjectorKind,
+    /// Name prefix for worker threads (shows up in profilers).
+    pub thread_name: String,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            num_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            spin_rounds: 2,
+            injector: InjectorKind::default(),
+            thread_name: "scheduling-worker".to_string(),
+        }
+    }
+}
+
+/// Thread-local identity of a worker: which pool it belongs to and a
+/// pointer to its own deque. This is the paper's "thread-local variable
+/// instead of a thread-id → queue-index map" (§2.1).
+#[derive(Clone, Copy)]
+struct LocalWorker {
+    pool: *const PoolInner,
+    queue: *const Worker<Job>,
+    index: usize,
+}
+
+thread_local! {
+    static LOCAL: Cell<Option<LocalWorker>> = const { Cell::new(None) };
+}
+
+/// Clears the TLS registration even if the worker loop unwinds.
+struct LocalGuard;
+
+impl Drop for LocalGuard {
+    fn drop(&mut self) {
+        LOCAL.with(|l| l.set(None));
+    }
+}
+
+pub(crate) struct PoolInner {
+    injector: Box<dyn Injector<Job>>,
+    stealers: Vec<Stealer<Job>>,
+    metrics: Vec<PaddedMetrics>,
+    ec: EventCount,
+    /// Jobs submitted but not yet finished executing.
+    pending: AtomicUsize,
+    /// Tasks whose closure panicked (panics are contained per-job).
+    panics: AtomicU64,
+    shutdown: AtomicBool,
+    idle_mutex: Mutex<()>,
+    idle_cv: Condvar,
+    spin_rounds: u32,
+}
+
+/// The work-stealing thread pool (see module docs).
+///
+/// Dropping the pool drains already-submitted work, then joins the
+/// workers. Use [`ThreadPool::wait_idle`] to block until all submitted
+/// work (including work spawned by work) has finished.
+pub struct ThreadPool {
+    inner: Arc<PoolInner>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Creates a pool with `num_threads` workers (0 is clamped to 1).
+    pub fn new(num_threads: usize) -> Self {
+        Self::with_config(PoolConfig {
+            num_threads,
+            ..PoolConfig::default()
+        })
+    }
+
+    /// Creates a pool with `available_parallelism()` workers, like the
+    /// paper's default constructor.
+    pub fn with_default_threads() -> Self {
+        Self::with_config(PoolConfig::default())
+    }
+
+    /// Creates a pool from a full [`PoolConfig`].
+    pub fn with_config(config: PoolConfig) -> Self {
+        let n = config.num_threads.max(1);
+        let mut owners = Vec::with_capacity(n);
+        let mut stealers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (w, s) = deque::<Job>(256);
+            owners.push(w);
+            stealers.push(s);
+        }
+        let injector: Box<dyn Injector<Job>> = match config.injector {
+            InjectorKind::Mutex => Box::new(MutexInjector::new()),
+            InjectorKind::LockFree => Box::new(SegQueue::new()),
+        };
+        let inner = Arc::new(PoolInner {
+            injector,
+            stealers,
+            metrics: (0..n).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
+            ec: EventCount::new(),
+            pending: AtomicUsize::new(0),
+            panics: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            idle_mutex: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            spin_rounds: config.spin_rounds,
+        });
+        let threads = owners
+            .into_iter()
+            .enumerate()
+            .map(|(index, queue)| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("{}-{index}", config.thread_name))
+                    .spawn(move || worker_loop(inner, index, queue))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        ThreadPool { inner, threads }
+    }
+
+    /// Submits a task — a function taking no arguments and returning
+    /// nothing (paper §4.1); use captures for inputs/outputs. If called
+    /// from a worker of *this* pool, pushes to that worker's own deque
+    /// (no lock, no map lookup); otherwise goes through the injector.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inner.submit_job(Job::Closure(Box::new(f)));
+    }
+
+    /// Blocks until every submitted job (and every job those jobs
+    /// submitted, transitively) has finished.
+    ///
+    /// Must be called from a non-worker thread; calling it from inside
+    /// a task of this pool would deadlock and panics in debug builds.
+    pub fn wait_idle(&self) {
+        debug_assert!(
+            !self.inner.on_worker_thread(),
+            "wait_idle called from a worker task of the same pool"
+        );
+        let mut guard = self.inner.idle_mutex.lock().unwrap();
+        while self.inner.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.inner.idle_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn num_threads(&self) -> usize {
+        self.inner.stealers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::SeqCst)
+    }
+
+    /// Number of tasks that panicked (panics are contained per-task and
+    /// counted rather than tearing down the worker).
+    pub fn panic_count(&self) -> u64 {
+        self.inner.panics.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of scheduler metrics across workers.
+    pub fn metrics(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            workers: self.inner.metrics.iter().map(|m| m.snapshot()).collect(),
+        }
+    }
+
+    /// Worker index of the current thread if it belongs to this pool.
+    pub fn current_worker(&self) -> Option<usize> {
+        LOCAL.with(|l| match l.get() {
+            Some(lw) if lw.pool == Arc::as_ptr(&self.inner) => Some(lw.index),
+            _ => None,
+        })
+    }
+
+    pub(crate) fn inner(&self) -> &Arc<PoolInner> {
+        &self.inner
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.ec.notify_all();
+        for t in self.threads.drain(..) {
+            // A worker that parked between the store and the notify is
+            // still woken: prepare_wait/notify ordering is SeqCst (see
+            // event_count.rs docs), and workers re-check `shutdown`
+            // after every wakeup.
+            let _ = t.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("num_threads", &self.num_threads())
+            .field("pending", &self.pending())
+            .finish()
+    }
+}
+
+impl PoolInner {
+    /// Per-worker metrics blocks (for the graph executor's inline-
+    /// continuation counter).
+    pub(crate) fn metrics(&self) -> &[PaddedMetrics] {
+        &self.metrics
+    }
+
+    /// True if the current thread is a worker of this pool.
+    fn on_worker_thread(&self) -> bool {
+        LOCAL.with(|l| matches!(l.get(), Some(lw) if std::ptr::eq(lw.pool, self)))
+    }
+
+    /// Schedules a job: local deque if on a worker of this pool,
+    /// injector otherwise. Wakes one sleeper.
+    pub(crate) fn submit_job(&self, job: Job) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        let leftover = LOCAL.with(|l| match l.get() {
+            Some(lw) if std::ptr::eq(lw.pool, self) => {
+                // SAFETY: `queue` points at the Worker owned by this
+                // thread's worker_loop frame, which outlives any task
+                // it executes; we are that task.
+                unsafe { (*lw.queue).push(job) };
+                self.metrics[lw.index].on_push();
+                None
+            }
+            _ => Some(job),
+        });
+        if let Some(job) = leftover {
+            self.injector.push(job);
+        }
+        self.ec.notify_one();
+    }
+
+    /// Called after a job finishes; wakes `wait_idle` on the last one.
+    fn finish_job(&self) {
+        if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Lock/unlock pairs with the check-then-wait in wait_idle.
+            drop(self.idle_mutex.lock().unwrap());
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// One attempt to find work: own deque, then injector, then a
+    /// random-start sweep over the other workers' deques.
+    /// Returns `(job, saw_retry)`.
+    fn find_task(
+        &self,
+        index: usize,
+        local: &Worker<Job>,
+        rng: &mut XorShift64Star,
+    ) -> (Option<Job>, bool) {
+        let m = &self.metrics[index];
+        if let Some(job) = local.pop() {
+            m.on_pop();
+            return (Some(job), false);
+        }
+        if let Some(job) = self.injector.pop() {
+            m.on_injector_pop();
+            return (Some(job), false);
+        }
+        let n = self.stealers.len();
+        let mut saw_retry = false;
+        if n > 1 {
+            let start = rng.next_below(n);
+            for k in 0..n {
+                let victim = (start + k) % n;
+                if victim == index {
+                    continue;
+                }
+                match self.stealers[victim].steal() {
+                    Steal::Success(job) => {
+                        m.on_steal();
+                        return (Some(job), saw_retry);
+                    }
+                    Steal::Retry => {
+                        m.on_steal_failure();
+                        saw_retry = true;
+                    }
+                    Steal::Empty => {}
+                }
+            }
+        }
+        (None, saw_retry)
+    }
+
+    /// True if any work might be available (used to re-check before
+    /// parking; conservative — may say true spuriously).
+    fn any_work(&self) -> bool {
+        !self.injector.is_empty() || self.stealers.iter().any(|s| !s.is_empty())
+    }
+
+    /// Executes one job, containing panics. (Executed counts are
+    /// derived from pop/steal/injector counters — see metrics.rs.)
+    pub(crate) fn run_job(self: &Arc<Self>, index: usize, job: Job) {
+        match job {
+            Job::Closure(f) => {
+                if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Job::Node(run) => crate::graph::execute_node(self, index, run),
+        }
+        self.finish_job();
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<Job>) {
+    LOCAL.with(|l| {
+        l.set(Some(LocalWorker {
+            pool: Arc::as_ptr(&inner),
+            queue: &queue as *const Worker<Job>,
+            index,
+        }))
+    });
+    let _guard = LocalGuard;
+    let mut rng = XorShift64Star::from_entropy();
+
+    'outer: loop {
+        // Work until dry, spinning through `spin_rounds` extra sweeps.
+        let mut spins = 0;
+        loop {
+            let (job, saw_retry) = inner.find_task(index, &queue, &mut rng);
+            match job {
+                Some(job) => {
+                    inner.run_job(index, job);
+                    spins = 0;
+                }
+                None if saw_retry => {
+                    // Someone is mid-operation on a victim deque;
+                    // back off a touch and retry without parking.
+                    std::hint::spin_loop();
+                }
+                None => {
+                    spins += 1;
+                    if spins > inner.spin_rounds {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+
+        // Park protocol: register as sleeper, re-check, sleep.
+        let token = inner.ec.prepare_wait();
+        if inner.shutdown.load(Ordering::SeqCst) {
+            inner.ec.cancel_wait(token);
+            // Drain remaining work before exiting so drop() does not
+            // strand submitted tasks.
+            while let (Some(job), _) = inner.find_task(index, &queue, &mut rng) {
+                inner.run_job(index, job);
+            }
+            break 'outer;
+        }
+        if inner.any_work() {
+            inner.ec.cancel_wait(token);
+            continue;
+        }
+        inner.metrics[index].on_park();
+        inner.ec.commit_wait(token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_submitted_tasks() {
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let count = count.clone();
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.num_threads(), 1);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = hit.clone();
+        pool.submit(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tasks_submitting_tasks() {
+        // Recursive fan-out: each task spawns children; wait_idle must
+        // cover transitively spawned work.
+        let pool = Arc::new(ThreadPool::new(3));
+        let count = Arc::new(AtomicUsize::new(0));
+        fn spawn(pool: &Arc<ThreadPool>, count: &Arc<AtomicUsize>, depth: usize) {
+            count.fetch_add(1, Ordering::Relaxed);
+            if depth == 0 {
+                return;
+            }
+            for _ in 0..2 {
+                let (p, c) = (pool.clone(), count.clone());
+                pool.submit(move || spawn(&p, &c, depth - 1));
+            }
+        }
+        spawn(&pool, &count, 0); // count the root call manually
+        let (p, c) = (pool.clone(), count.clone());
+        pool.submit(move || spawn(&p, &c, 9));
+        pool.wait_idle();
+        // Root manual call (1) + full binary tree of depth 9 (2^10 - 1).
+        assert_eq!(count.load(Ordering::Relaxed), 1 + (1 << 10) - 1);
+    }
+
+    #[test]
+    fn worker_submit_uses_local_queue() {
+        let pool = ThreadPool::new(1);
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let p = pushed.clone();
+        pool.submit(move || {
+            p.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        // Now submit from inside a task and check the metrics counted a
+        // local push.
+        let inner_done = Arc::new(AtomicUsize::new(0));
+        let d = inner_done.clone();
+        struct PoolPtr(*const ThreadPool);
+        unsafe impl Send for PoolPtr {}
+        let pp = PoolPtr(&pool as *const ThreadPool);
+        pool.submit(move || {
+            // Capture the whole wrapper (edition-2021 closures would
+            // otherwise capture only the raw-pointer field).
+            let pp = pp;
+            // SAFETY: `pool` outlives this task; wait_idle below joins it.
+            let pool = unsafe { &*pp.0 };
+            let d2 = d.clone();
+            pool.submit(move || {
+                d2.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        pool.wait_idle();
+        assert_eq!(inner_done.load(Ordering::Relaxed), 1);
+        assert!(pool.metrics().total().pushes >= 1, "inner submit should hit the local deque");
+    }
+
+    #[test]
+    fn panicking_task_is_contained() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let o = ok.clone();
+        pool.submit(move || {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 1);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_drains_submitted_work() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..50 {
+                let count = count.clone();
+                pool.submit(move || {
+                    std::thread::sleep(Duration::from_micros(100));
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // Drop without wait_idle.
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn wait_idle_on_idle_pool_returns_immediately() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn current_worker_identity() {
+        let pool = Arc::new(ThreadPool::new(2));
+        assert_eq!(pool.current_worker(), None);
+        let p = pool.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit(move || {
+            tx.send(p.current_worker()).unwrap();
+        });
+        let idx = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(matches!(idx, Some(i) if i < 2));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn lock_free_injector_config() {
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 2,
+            injector: InjectorKind::LockFree,
+            ..PoolConfig::default()
+        });
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..500 {
+            let count = count.clone();
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn many_waves_of_work_with_parking_between() {
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for wave in 0..20 {
+            for _ in 0..10 {
+                let count = count.clone();
+                pool.submit(move || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), (wave + 1) * 10);
+            // Let workers park so the next wave exercises wakeup.
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}

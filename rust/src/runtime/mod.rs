@@ -1,0 +1,47 @@
+//! PJRT runtime: loads AOT-compiled HLO (produced by
+//! `python/compile/aot.py`) and executes it from the Rust request path.
+//!
+//! Python runs exactly once, at build time (`make artifacts`); this
+//! module is the only consumer of its output. The interchange format is
+//! **HLO text** (not a serialized `HloModuleProto`): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids and round-trips
+//! cleanly (see `/opt/xla-example/README.md` and DESIGN.md).
+//!
+//! * [`tensor`] — host-side `f32` tensors and reference math.
+//! * [`client`] — PJRT CPU client wrapper + compiled [`Executable`].
+//! * [`registry`] — loads `artifacts/manifest.tsv`, compiles every
+//!   kernel once, and hands out shared executables by name.
+
+pub mod client;
+pub mod registry;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use registry::{ArtifactEntry, Registry};
+pub use tensor::HostTensor;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locates the artifacts directory: `$SCHEDULING_ARTIFACTS` if set,
+/// else walks up from the current directory looking for
+/// `artifacts/manifest.tsv` (so tests work from the target dir too).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("SCHEDULING_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.tsv").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join(DEFAULT_ARTIFACTS_DIR);
+        if candidate.join("manifest.tsv").exists() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

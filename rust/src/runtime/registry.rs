@@ -1,0 +1,215 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py`
+//! plus an executable cache.
+//!
+//! Manifest format (`artifacts/manifest.tsv`, tab-separated, one row
+//! per compiled computation — deliberately trivial to parse with no
+//! JSON dependency):
+//!
+//! ```text
+//! name <TAB> file <TAB> inputs <TAB> outputs
+//! matmul_tile_64 <TAB> matmul_tile_64.hlo.txt <TAB> f32[64,64];f32[64,64] <TAB> f32[64,64]
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{Executable, Runtime};
+
+/// Shape spec for one argument: dtype (always f32 today) and dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Element type name as written by aot.py (e.g. "f32").
+    pub dtype: String,
+    /// Dimension sizes.
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    fn parse(s: &str) -> Result<Self> {
+        // "f32[64,64]" or "f32[]" (scalar)
+        let open = s.find('[').with_context(|| format!("bad arg spec {s:?}"))?;
+        let close = s.rfind(']').with_context(|| format!("bad arg spec {s:?}"))?;
+        let dtype = s[..open].to_string();
+        let inner = &s[open + 1..close];
+        let dims = if inner.is_empty() {
+            vec![]
+        } else {
+            inner
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+                .collect::<Result<_>>()?
+        };
+        if dtype.is_empty() {
+            bail!("missing dtype in arg spec {s:?}");
+        }
+        Ok(Self { dtype, dims })
+    }
+
+    /// Renders back to `f32[64,64]` form.
+    pub fn render(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Registry key (e.g. "matmul_tile_64").
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input argument specs, in call order.
+    pub inputs: Vec<ArgSpec>,
+    /// Output specs.
+    pub outputs: Vec<ArgSpec>,
+}
+
+fn parse_specs(field: &str) -> Result<Vec<ArgSpec>> {
+    if field.trim().is_empty() {
+        return Ok(vec![]);
+    }
+    field.split(';').map(|s| ArgSpec::parse(s.trim())).collect()
+}
+
+/// Parses the manifest text (exposed for unit tests).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            bail!("manifest line {}: expected 4 tab-separated columns, got {}", lineno + 1, cols.len());
+        }
+        entries.push(ArtifactEntry {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            inputs: parse_specs(cols[2]).with_context(|| format!("line {}", lineno + 1))?,
+            outputs: parse_specs(cols[3]).with_context(|| format!("line {}", lineno + 1))?,
+        });
+    }
+    Ok(entries)
+}
+
+/// Loads the manifest, compiles on first use, caches executables.
+pub struct Registry {
+    runtime: Arc<Runtime>,
+    dir: PathBuf,
+    entries: HashMap<String, ArtifactEntry>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    /// Opens the registry at `dir` (must contain `manifest.tsv`).
+    pub fn open(runtime: Arc<Runtime>, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let entries = parse_manifest(&text)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        Ok(Self {
+            runtime,
+            dir,
+            entries,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Opens the registry at the auto-discovered artifacts dir.
+    pub fn open_default(runtime: Arc<Runtime>) -> Result<Self> {
+        let dir = super::find_artifacts_dir()
+            .context("artifacts directory not found — run `make artifacts` first")?;
+        Self::open(runtime, dir)
+    }
+
+    /// Names of all registered computations, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Metadata for one entry.
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    /// Returns the compiled executable for `name`, compiling and
+    /// caching it on first use. Thread-safe; the brief double-compile
+    /// window under a race is benign (last one wins the cache slot).
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .entries
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}; known: {:?}", self.names()))?;
+        let exe = Arc::new(
+            self.runtime
+                .load_hlo_text(self.dir.join(&entry.file), name.to_string())?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compiles everything (startup-time warm).
+    pub fn warm_all(&self) -> Result<()> {
+        for name in self.names() {
+            self.get(name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_spec_roundtrip() {
+        let s = ArgSpec::parse("f32[64,128]").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.dims, vec![64, 128]);
+        assert_eq!(s.render(), "f32[64,128]");
+        let scalar = ArgSpec::parse("f32[]").unwrap();
+        assert!(scalar.dims.is_empty());
+        assert_eq!(scalar.render(), "f32[]");
+    }
+
+    #[test]
+    fn arg_spec_rejects_garbage() {
+        assert!(ArgSpec::parse("f32").is_err());
+        assert!(ArgSpec::parse("[1,2]").is_err());
+        assert!(ArgSpec::parse("f32[a]").is_err());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let text = "# comment\n\
+                    matmul\tmatmul.hlo.txt\tf32[8,8];f32[8,8]\tf32[8,8]\n\
+                    \n\
+                    scale\tscale.hlo.txt\tf32[4]\tf32[4];f32[]\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "matmul");
+        assert_eq!(entries[0].inputs.len(), 2);
+        assert_eq!(entries[1].outputs.len(), 2);
+        assert_eq!(entries[1].outputs[1].dims.len(), 0);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_columns() {
+        assert!(parse_manifest("just_a_name\n").is_err());
+        assert!(parse_manifest("a\tb\tc\n").is_err());
+    }
+}

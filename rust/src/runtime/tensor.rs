@@ -1,0 +1,207 @@
+//! Host-side tensors: the boundary type between the coordinator and
+//! the PJRT executables, plus reference math for end-to-end checks.
+
+use crate::util::Pcg32;
+
+/// A dense row-major `f32` tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    /// Dimension sizes, outermost first.
+    pub shape: Vec<usize>,
+    /// Row-major data; `len == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// A tensor filled with zeros.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// A tensor filled with `value`.
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![value; shape.iter().product()],
+        }
+    }
+
+    /// Builds from a function of the flat index.
+    pub fn from_fn(shape: &[usize], f: impl Fn(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(f).collect(),
+        }
+    }
+
+    /// Deterministic uniform values in `[-1, 1)` from a seed.
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect(),
+        }
+    }
+
+    /// Wraps existing data (checks the element count).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length does not match shape {shape:?}"
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True for zero-element tensors.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Element at a 2-D index (panics unless rank 2).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Reference matmul `self @ rhs` (rank-2 only) — the oracle for the
+    /// PJRT matmul kernels.
+    pub fn matmul_ref(&self, rhs: &HostTensor) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "inner dims mismatch");
+        let mut out = HostTensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.data[i * n + j] += a * rhs.data[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise sum (shapes must match).
+    pub fn add_ref(&self, rhs: &HostTensor) -> HostTensor {
+        assert_eq!(self.shape, rhs.shape);
+        HostTensor::from_vec(
+            &self.shape,
+            self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    /// Largest absolute elementwise difference.
+    pub fn max_abs_diff(&self, rhs: &HostTensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// True if all elements are within `atol + rtol * |expected|`.
+    pub fn allclose(&self, expected: &HostTensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != expected.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&expected.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Sum of all elements (for cheap end-to-end checksums).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+}
+
+impl std::fmt::Display for HostTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HostTensor{:?} (sum={:.4})", self.shape, self.sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let z = HostTensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        let f = HostTensor::full(&[2], 3.5);
+        assert_eq!(f.data, vec![3.5, 3.5]);
+        let g = HostTensor::from_fn(&[3], |i| i as f32);
+        assert_eq!(g.data, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = HostTensor::random(&[10, 10], 5);
+        let b = HostTensor::random(&[10, 10], 5);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        assert_ne!(a, HostTensor::random(&[10, 10], 6));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match shape")]
+    fn from_vec_checks_len() {
+        HostTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = HostTensor::random(&[4, 4], 1);
+        let eye = HostTensor::from_fn(&[4, 4], |i| if i / 4 == i % 4 { 1.0 } else { 0.0 });
+        assert!(a.matmul_ref(&eye).allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_ref(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+        assert_eq!(c.at2(1, 0), 7.0);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = HostTensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = HostTensor::from_vec(&[2], vec![1.0 + 1e-7, 2.0 - 1e-7]);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        assert!(a.max_abs_diff(&b) < 1e-6);
+        let c = HostTensor::from_vec(&[2], vec![1.1, 2.0]);
+        assert!(!c.allclose(&a, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn add_ref_works() {
+        let a = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        assert_eq!(a.add_ref(&b).data, vec![11.0, 22.0, 33.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! Everything here is implemented from scratch against `std` only (the
+//! build is fully offline): a fast PRNG for victim selection and workload
+//! generation, a cache-line-padded wrapper to prevent false sharing on
+//! hot atomics, and process-CPU-time measurement for the Fig. 2
+//! reproduction.
+
+mod cache_padded;
+mod cpu_time;
+mod rng;
+
+pub use cache_padded::CachePadded;
+pub use cpu_time::{process_cpu_time, thread_count, ProcStat};
+pub use rng::{Pcg32, XorShift64Star};

@@ -1,0 +1,208 @@
+//! Small fast PRNGs.
+//!
+//! Used for steal-victim randomization in the pool hot path (xorshift —
+//! one xor-shift chain, no multiplication on the wakeup path) and for
+//! reproducible workload generation in `workloads::graph_traversal`
+//! (PCG32 — better statistical quality, streamable).
+
+/// `xorshift64*` — 64-bit state, passes BigCrush except binary-rank.
+///
+/// Good enough for picking steal victims; the quality requirement there
+/// is only "don't always hammer the same queue".
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    /// Creates a generator from a nonzero seed (0 is mapped to a fixed
+    /// odd constant).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Seeds from the address of a stack local plus a counter — cheap
+    /// per-thread seeding without global state.
+    pub fn from_entropy() -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static CTR: AtomicU64 = AtomicU64::new(0x243F_6A88_85A3_08D3);
+        let x = CTR.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+        let local = 0u8;
+        Self::new(x ^ (&local as *const u8 as u64))
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform-ish value in `0..n` (n > 0) via the widening-multiply
+    /// trick (Lemire); bias is negligible for victim selection.
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (((self.next_u64() >> 32) * n as u64) >> 32) as usize
+    }
+}
+
+/// PCG32 (XSH-RR 64/32) — the reference "small fast good" generator.
+///
+/// Deterministic across platforms; used wherever a workload must be
+/// reproducible from a seed recorded in EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6_364_136_223_846_793_005;
+
+    /// Creates a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Creates a generator from a seed with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Unbiased uniform value in `0..n` (n > 0), rejection-sampled.
+    pub fn next_below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % n;
+            }
+        }
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_nonzero_and_varied() {
+        let mut r = XorShift64Star::new(1);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn xorshift_zero_seed_ok() {
+        let mut r = XorShift64Star::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = XorShift64Star::new(42);
+        for n in 1..=17usize {
+            for _ in 0..100 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn pcg_reference_vector() {
+        // First outputs of PCG32 with seed=42, stream=54 from the PCG
+        // reference implementation (pcg32_random_r demo).
+        let mut r = Pcg32::new(42, 54);
+        let expected: [u32; 6] = [
+            0xa15c_02b7, 0x7b47_f409, 0xba1d_3330, 0x83d2_f293, 0xbfa4_784b, 0xcbed_606e,
+        ];
+        for e in expected {
+            assert_eq!(r.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn pcg_deterministic_per_seed() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_next_below_unbiased_range() {
+        let mut r = Pcg32::seeded(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.next_below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pcg_f64_in_unit_interval() {
+        let mut r = Pcg32::seeded(9);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

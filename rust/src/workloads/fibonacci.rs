@@ -1,0 +1,95 @@
+//! Recursive Fibonacci without memoization — the paper's §3 benchmark.
+//!
+//! "A simple recursive function to calculate Fibonacci numbers without
+//! memoization, taken from Taskflow examples, can be used to evaluate
+//! performance when running a large number of tasks." Every call
+//! `fib(n)` with `n >= 2` spawns two child tasks; leaves (`n < 2`)
+//! contribute their value to an atomic accumulator, whose final value
+//! is `fib(n)` (each unit of the result arrives via exactly one leaf).
+//! The workload is pure scheduling overhead: ~`2·fib(n)` tasks that do
+//! no work, which is precisely what Fig. 1 (wall) and Fig. 2 (CPU)
+//! measure.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::baseline::Executor;
+
+/// Plain single-threaded recursive fib — the correctness oracle.
+pub fn fib_reference(n: u32) -> u64 {
+    if n < 2 {
+        n as u64
+    } else {
+        fib_reference(n - 1) + fib_reference(n - 2)
+    }
+}
+
+/// Number of tasks `run_fib(n)` spawns: the call-tree size
+/// `T(n) = T(n-1) + T(n-2) + 1`, i.e. `2·fib(n+1) - 1`.
+pub fn fib_task_count(n: u32) -> u64 {
+    2 * fib_reference(n + 1) - 1
+}
+
+fn spawn_fib(ex: Arc<dyn Executor>, n: u32, acc: Arc<AtomicU64>) {
+    if n < 2 {
+        acc.fetch_add(n as u64, Ordering::Relaxed);
+        return;
+    }
+    let (ex1, acc1) = (ex.clone(), acc.clone());
+    let ex1c = ex1.clone();
+    ex.submit_boxed(Box::new(move || spawn_fib(ex1c, n - 1, acc1)));
+    let ex2c = ex.clone();
+    ex.submit_boxed(Box::new(move || spawn_fib(ex2c, n - 2, acc)));
+}
+
+/// Computes `fib(n)` on `ex` by spawning the full recursive call tree
+/// as tasks, then waiting for quiescence. Returns the computed value
+/// (callers assert it equals [`fib_reference`]).
+pub fn run_fib(ex: &Arc<dyn Executor>, n: u32) -> u64 {
+    let acc = Arc::new(AtomicU64::new(0));
+    let (ex0, acc0) = (ex.clone(), acc.clone());
+    let ex0c = ex0.clone();
+    ex0.submit_boxed(Box::new(move || spawn_fib(ex0c, n, acc0)));
+    ex.wait_idle();
+    acc.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::all_executors;
+
+    #[test]
+    fn reference_values() {
+        let expected = [0u64, 1, 1, 2, 3, 5, 8, 13, 21, 34, 55];
+        for (n, &e) in expected.iter().enumerate() {
+            assert_eq!(fib_reference(n as u32), e);
+        }
+        assert_eq!(fib_reference(20), 6765);
+    }
+
+    #[test]
+    fn task_count_formula() {
+        // T(0)=1, T(1)=1, T(2)=3, T(3)=5, T(4)=9
+        assert_eq!(fib_task_count(0), 1);
+        assert_eq!(fib_task_count(1), 1);
+        assert_eq!(fib_task_count(2), 3);
+        assert_eq!(fib_task_count(3), 5);
+        assert_eq!(fib_task_count(4), 9);
+    }
+
+    #[test]
+    fn pool_computes_fib_correctly() {
+        let ex: Arc<dyn Executor> = Arc::new(crate::pool::ThreadPool::new(2));
+        for n in [0u32, 1, 5, 12, 16] {
+            assert_eq!(run_fib(&ex, n), fib_reference(n), "fib({n})");
+        }
+    }
+
+    #[test]
+    fn all_executors_agree_on_fib_10() {
+        for ex in all_executors(2) {
+            assert_eq!(run_fib(&ex, 10), 55, "{}", ex.name());
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Benchmark workload generators (paper §3 + the GitHub benchmark set).
+//!
+//! * [`fibonacci`] — recursive fib without memoization, the paper's
+//!   headline benchmark for "a large number of tasks".
+//! * [`dag`] — dependency-graph workloads: linear chain, binary tree,
+//!   layered random DAG (graph traversal), and 2-D wavefront, with both
+//!   a [`crate::graph::TaskGraph`] construction and a generic
+//!   countdown-closure runner usable on any [`crate::baseline::Executor`].
+//! * [`matmul_graph`] — blocked matrix multiplication as a task graph
+//!   whose node bodies execute AOT-compiled XLA executables through
+//!   [`crate::runtime`] (the three-layer composition).
+
+pub mod dag;
+pub mod fibonacci;
+pub mod matmul_graph;
+pub mod pipeline;
+
+pub use dag::Dag;
+pub use pipeline::Pipeline;
+pub use fibonacci::{fib_reference, fib_task_count, run_fib};

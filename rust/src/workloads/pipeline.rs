@@ -1,0 +1,247 @@
+//! Pipeline-parallel transformer-FFN inference as a task graph — the
+//! second end-to-end three-layer workload (GPipe-style schedule on the
+//! paper's executor).
+//!
+//! `stages` identical pre-LN FFN blocks process `microbatches`
+//! micro-batches. Node `(s, m)` runs stage `s` on micro-batch `m` and
+//! depends on `(s-1, m)` (data) and `(s, m-1)` (stage occupancy — each
+//! stage's weights are used in micro-batch order, the classic pipeline
+//! constraint). The dependency structure is exactly a wavefront, so
+//! steady-state parallelism = min(stages, microbatches); every node
+//! body executes the `transformer_ffn_64` AOT executable through PJRT.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::graph::{RunOptions, TaskGraph, Tracer};
+use crate::pool::ThreadPool;
+use crate::runtime::{HostTensor, Registry};
+
+/// Per-stage FFN parameters.
+struct StageWeights {
+    gamma: HostTensor,
+    beta: HostTensor,
+    w1: HostTensor,
+    b1: HostTensor,
+    w2: HostTensor,
+    b2: HostTensor,
+}
+
+impl StageWeights {
+    fn random(seed: u64, d: usize, hidden: usize) -> Self {
+        Self {
+            gamma: HostTensor::full(&[d], 1.0),
+            beta: HostTensor::zeros(&[d]),
+            w1: HostTensor::random(&[d, hidden], seed),
+            b1: HostTensor::random(&[hidden], seed + 1),
+            w2: HostTensor::random(&[hidden, d], seed + 2),
+            b2: HostTensor::random(&[d], seed + 3),
+        }
+    }
+}
+
+/// Pipeline-parallel FFN inference runner (see module docs).
+pub struct Pipeline {
+    exe: Arc<crate::runtime::Executable>,
+    stages: Vec<StageWeights>,
+    batch: usize,
+    d: usize,
+}
+
+impl Pipeline {
+    /// Model dimensions of the `transformer_ffn_64` artifact.
+    pub const BATCH: usize = 32;
+    /// Feature dimension.
+    pub const D: usize = 64;
+    /// Hidden dimension.
+    pub const HIDDEN: usize = 128;
+
+    /// Builds a pipeline with `num_stages` random FFN stages.
+    pub fn new(registry: &Registry, num_stages: usize) -> Result<Self> {
+        let exe = registry
+            .get("transformer_ffn_64")
+            .context("transformer_ffn_64 artifact missing")?;
+        Ok(Self {
+            exe,
+            stages: (0..num_stages)
+                .map(|s| StageWeights::random(1000 + 10 * s as u64, Self::D, Self::HIDDEN))
+                .collect(),
+            batch: Self::BATCH,
+            d: Self::D,
+        })
+    }
+
+    /// Stage count.
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Host-only reference for a full micro-batch pass.
+    pub fn forward_host(&self, x: &HostTensor) -> HostTensor {
+        self.stages.iter().fold(x.clone(), |acc, w| stage_host(w, &acc))
+    }
+
+    /// Runs `microbatches` micro-batches through the pipeline on
+    /// `pool`; returns the per-micro-batch outputs. Each graph node
+    /// executes the FFN executable; `tracer` (optional) records the
+    /// pipeline schedule for inspection.
+    pub fn run(
+        &self,
+        pool: &ThreadPool,
+        microbatches: usize,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Result<Vec<HostTensor>> {
+        let s_count = self.stages.len();
+        // activations[m] holds micro-batch m's current tensor.
+        let activations: Arc<Vec<Mutex<HostTensor>>> = Arc::new(
+            (0..microbatches)
+                .map(|m| Mutex::new(HostTensor::random(&[self.batch, self.d], 7 + m as u64)))
+                .collect(),
+        );
+        let inputs: Vec<HostTensor> =
+            (0..microbatches).map(|m| activations[m].lock().unwrap().clone()).collect();
+        let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let mut g = TaskGraph::with_capacity(s_count * microbatches);
+        let mut ids = vec![vec![None; microbatches]; s_count];
+        for s in 0..s_count {
+            // Stage weights cloned once per stage, shared by its nodes.
+            let w = &self.stages[s];
+            let weights = Arc::new((
+                w.gamma.clone(),
+                w.beta.clone(),
+                w.w1.clone(),
+                w.b1.clone(),
+                w.w2.clone(),
+                w.b2.clone(),
+            ));
+            for m in 0..microbatches {
+                let (exe, acts, errs, weights) =
+                    (self.exe.clone(), activations.clone(), errors.clone(), weights.clone());
+                let id = g.add_named(format!("s{s}m{m}"), move || {
+                    let x = acts[m].lock().unwrap().clone();
+                    match exe.run1(&[
+                        x,
+                        weights.0.clone(),
+                        weights.1.clone(),
+                        weights.2.clone(),
+                        weights.3.clone(),
+                        weights.4.clone(),
+                        weights.5.clone(),
+                    ]) {
+                        Ok(y) => *acts[m].lock().unwrap() = y,
+                        Err(e) => errs.lock().unwrap().push(format!("({s},{m}): {e:#}")),
+                    }
+                });
+                ids[s][m] = Some(id);
+            }
+        }
+        for s in 0..s_count {
+            for m in 0..microbatches {
+                let me = ids[s][m].unwrap();
+                if s > 0 {
+                    g.succeed(me, &[ids[s - 1][m].unwrap()]);
+                }
+                if m > 0 {
+                    g.succeed(me, &[ids[s][m - 1].unwrap()]);
+                }
+            }
+        }
+        let mut options = RunOptions::new();
+        if let Some(t) = tracer {
+            options = options.with_tracer(t);
+        }
+        g.run_with_options(pool, options).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let errs = errors.lock().unwrap();
+        anyhow::ensure!(errs.is_empty(), "stage failures: {errs:?}");
+        drop(errs);
+
+        // Verify micro-batch 0 against the host oracle.
+        let got = activations[0].lock().unwrap().clone();
+        let expected = self.forward_host(&inputs[0]);
+        anyhow::ensure!(
+            got.allclose(&expected, 2e-2, 2e-2),
+            "pipeline output mismatch: max diff {}",
+            got.max_abs_diff(&expected)
+        );
+
+        Ok((0..microbatches).map(|m| activations[m].lock().unwrap().clone()).collect())
+    }
+}
+
+/// One FFN stage on the host: `x + mlp2(layernorm(x))` — the
+/// verification oracle for the `transformer_ffn_64` executable.
+fn stage_host(w: &StageWeights, x: &HostTensor) -> HostTensor {
+    let d = w.gamma.data.len();
+    let ln = HostTensor::from_fn(&x.shape.clone(), |idx| {
+        let row = idx / d;
+        let mut mu = 0.0f32;
+        for j in 0..d {
+            mu += x.data[row * d + j];
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for j in 0..d {
+            let t = x.data[row * d + j] - mu;
+            var += t * t;
+        }
+        var /= d as f32;
+        let norm = (x.data[idx] - mu) / (var + 1e-5).sqrt();
+        norm * w.gamma.data[idx % d] + w.beta.data[idx % d]
+    });
+    let gelu = |t: &HostTensor, b: &HostTensor| {
+        let cols = b.data.len();
+        HostTensor::from_fn(&t.shape.clone(), |idx| {
+            let z = t.data[idx] + b.data[idx % cols];
+            let inner = 0.797_884_6_f32 * (z + 0.044715 * z * z * z);
+            0.5 * z * (1.0 + inner.tanh())
+        })
+    };
+    let h = gelu(&ln.matmul_ref(&w.w1), &w.b1);
+    let h = gelu(&h.matmul_ref(&w.w2), &w.b2);
+    x.add_ref(&h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_oracle_zero_weights_is_identity() {
+        // Zero weights -> gelu(0) = 0 -> every stage is the residual.
+        let w = StageWeights {
+            gamma: HostTensor::full(&[4], 1.0),
+            beta: HostTensor::zeros(&[4]),
+            w1: HostTensor::zeros(&[4, 8]),
+            b1: HostTensor::zeros(&[8]),
+            w2: HostTensor::zeros(&[8, 4]),
+            b2: HostTensor::zeros(&[4]),
+        };
+        let x = HostTensor::random(&[2, 4], 1);
+        let y = stage_host(&w, &x);
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn host_oracle_layernorm_statistics() {
+        // Nonzero weights: check the layernorm part by making the MLP
+        // identity-ish impossible, instead verify output differs and
+        // is finite.
+        let w = StageWeights::random(5, 8, 16);
+        let x = HostTensor::random(&[4, 8], 2);
+        let y = stage_host(&w, &x);
+        assert_eq!(y.shape, x.shape);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        assert!(y.max_abs_diff(&x) > 1e-3, "stage should transform the input");
+    }
+
+    #[test]
+    fn stage_weights_deterministic() {
+        let a = StageWeights::random(9, 8, 16);
+        let b = StageWeights::random(9, 8, 16);
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.b2, b.b2);
+    }
+}

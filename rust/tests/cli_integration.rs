@@ -1,0 +1,118 @@
+//! Binary-level integration tests: run the `scheduling` launcher the
+//! way a user would and check its output contract.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_scheduling"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = run(&[]);
+    assert!(ok);
+    assert!(text.contains("commands:"));
+    assert!(text.contains("graph-demo"));
+}
+
+#[test]
+fn info_reports_executors() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("scheduling ("));
+    assert!(text.contains("taskflow-like"));
+    assert!(text.contains("mutex-pool"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn run_fib_verifies_result() {
+    let (ok, text) = run(&["run", "fib", "--n", "15", "--threads", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fib(15) = 610"), "{text}");
+}
+
+#[test]
+fn run_fib_on_each_executor() {
+    for ex in ["scheduling", "taskflow", "mutex", "spawn"] {
+        let (ok, text) = run(&["run", "fib", "--n", "10", "--executor", ex, "--threads", "2"]);
+        assert!(ok, "{ex}: {text}");
+        assert!(text.contains("fib(10) = 55"), "{ex}: {text}");
+    }
+}
+
+#[test]
+fn run_wavefront_graph_with_trace() {
+    let trace_path = std::env::temp_dir().join("scheduling_cli_trace_test.json");
+    let trace_str = trace_path.to_str().unwrap();
+    let (ok, text) = run(&[
+        "run", "wavefront", "--size", "8", "--threads", "2", "--trace", "--out", trace_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("all nodes executed"), "{text}");
+    assert!(text.contains("chrome trace written"), "{text}");
+    let json = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(json.trim_start().starts_with('['));
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), 64);
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+#[test]
+fn run_chain_on_countdown_executor() {
+    let (ok, text) = run(&["run", "chain", "--size", "500", "--executor", "taskflow", "--threads", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("all nodes executed"), "{text}");
+}
+
+#[test]
+fn graph_demo_computes_21() {
+    let (ok, text) = run(&["graph-demo"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("(a+b)*(c+d) = 21"));
+}
+
+#[test]
+fn bad_flag_value_reports_error() {
+    let (ok, text) = run(&["run", "fib", "--n", "many"]);
+    assert!(!ok);
+    assert!(text.contains("error"), "{text}");
+}
+
+#[test]
+fn config_file_provides_defaults() {
+    let cfg = std::env::temp_dir().join("scheduling_cli_cfg_test.conf");
+    std::fs::write(&cfg, "n = 12\nthreads = 2\n").unwrap();
+    let (ok, text) = run(&["run", "fib", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fib(12) = 144"), "{text}");
+    let _ = std::fs::remove_file(&cfg);
+}
+
+#[test]
+fn artifacts_listing_when_built() {
+    // Only meaningful when artifacts exist; the command itself must
+    // not crash either way.
+    let (ok, text) = run(&["artifacts"]);
+    if ok {
+        assert!(text.contains("matmul_tile_64"), "{text}");
+        assert!(text.contains("f32[64,64]"), "{text}");
+    } else {
+        assert!(text.contains("artifacts"), "{text}");
+    }
+}

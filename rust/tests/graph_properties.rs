@@ -1,0 +1,311 @@
+//! Property-based tests over randomly generated task graphs.
+//!
+//! No proptest crate in the offline vendor set, so the harness is
+//! explicit: a seeded PCG32 generates many random DAGs and for each
+//! run the executor must uphold the §2.2 invariants:
+//!
+//! 1. **exactly-once** — every node runs exactly one time per run;
+//! 2. **topological order** — every node observes all its
+//!    predecessors' effects (checked via per-node completion stamps);
+//! 3. **rerun soundness** — counters reset correctly, FnMut state
+//!    persists;
+//! 4. **schedule equivalence** — inline continuation on/off produce
+//!    identical results;
+//! 5. **panic robustness** — randomly panicking nodes never deadlock
+//!    the run and are reported.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use scheduling::graph::{GraphError, RunOptions, TaskGraph};
+use scheduling::pool::ThreadPool;
+use scheduling::util::Pcg32;
+use scheduling::workloads::Dag;
+
+/// Random DAG: nodes 0..n, edges only i -> j with i < j (acyclic by
+/// construction), edge probability `p` within a window of `w`.
+fn random_dag(rng: &mut Pcg32, n: usize, w: usize, p: f64) -> Vec<Vec<usize>> {
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..(i + 1 + w).min(n) {
+            if rng.next_f64() < p {
+                adj[i].push(j);
+            }
+        }
+    }
+    adj
+}
+
+fn build_graph(
+    adj: &[Vec<usize>],
+) -> (TaskGraph, Arc<Vec<AtomicUsize>>, Arc<Vec<AtomicUsize>>, Arc<AtomicUsize>) {
+    let n = adj.len();
+    let runs: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+    let stamps: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+    let clock = Arc::new(AtomicUsize::new(1));
+    let mut g = TaskGraph::with_capacity(n);
+    let ids: Vec<_> = (0..n)
+        .map(|i| {
+            let (runs, stamps, clock) = (runs.clone(), stamps.clone(), clock.clone());
+            g.add(move || {
+                runs[i].fetch_add(1, Ordering::SeqCst);
+                stamps[i].store(clock.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+            })
+        })
+        .collect();
+    for (i, succs) in adj.iter().enumerate() {
+        for &s in succs {
+            g.precede(ids[i], &[ids[s]]);
+        }
+    }
+    (g, runs, stamps, clock)
+}
+
+#[test]
+fn random_dags_exactly_once_and_topo_ordered() {
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0xDA6);
+    for case in 0..25 {
+        let n = 20 + rng.next_below(150) as usize;
+        let w = 1 + rng.next_below(12) as usize;
+        let p = 0.05 + rng.next_f64() * 0.5;
+        let adj = random_dag(&mut rng, n, w, p);
+        let (mut g, runs, stamps, _clock) = build_graph(&adj);
+        g.run(&pool).unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        for i in 0..n {
+            assert_eq!(runs[i].load(Ordering::SeqCst), 1, "case {case}: node {i} run count");
+        }
+        for (i, succs) in adj.iter().enumerate() {
+            let ti = stamps[i].load(Ordering::SeqCst);
+            for &s in succs {
+                let ts = stamps[s].load(Ordering::SeqCst);
+                assert!(ti < ts, "case {case}: edge {i}->{s} violated ({ti} >= {ts})");
+            }
+        }
+    }
+}
+
+#[test]
+fn random_dags_rerun_many_times() {
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg32::seeded(77);
+    let adj = random_dag(&mut rng, 120, 6, 0.3);
+    let (mut g, runs, _stamps, _clock) = build_graph(&adj);
+    for rep in 1..=10 {
+        g.run(&pool).unwrap();
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.load(Ordering::SeqCst), rep, "node {i} after {rep} runs");
+        }
+    }
+}
+
+#[test]
+fn inline_and_resubmit_schedules_agree() {
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(99);
+    for _ in 0..10 {
+        let n = 30 + rng.next_below(100) as usize;
+        let adj = random_dag(&mut rng, n, 8, 0.25);
+        for inline in [true, false] {
+            let (mut g, runs, stamps, _clock) = build_graph(&adj);
+            g.run_with_options(&pool, RunOptions::inline(inline)).unwrap();
+            for i in 0..n {
+                assert_eq!(runs[i].load(Ordering::SeqCst), 1, "inline={inline} node {i}");
+            }
+            for (i, succs) in adj.iter().enumerate() {
+                for &s in succs {
+                    assert!(
+                        stamps[i].load(Ordering::SeqCst) < stamps[s].load(Ordering::SeqCst),
+                        "inline={inline} edge {i}->{s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_panics_never_deadlock() {
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg32::seeded(1234);
+    for case in 0..10 {
+        let n = 40 + rng.next_below(60) as usize;
+        let adj = random_dag(&mut rng, n, 5, 0.3);
+        let panic_node = rng.next_below(n as u32) as usize;
+        let executed: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let mut g = TaskGraph::with_capacity(n);
+        let ids: Vec<_> = (0..n)
+            .map(|i| {
+                let executed = executed.clone();
+                g.add(move || {
+                    executed[i].fetch_add(1, Ordering::SeqCst);
+                    if i == panic_node {
+                        panic!("injected failure in node {i}");
+                    }
+                })
+            })
+            .collect();
+        for (i, succs) in adj.iter().enumerate() {
+            for &s in succs {
+                g.precede(ids[i], &[ids[s]]);
+            }
+        }
+        match g.run(&pool) {
+            Err(GraphError::TaskPanicked { node, message, .. }) => {
+                assert_eq!(node, panic_node, "case {case}");
+                assert!(message.contains("injected failure"));
+            }
+            other => panic!("case {case}: expected TaskPanicked, got {other:?}"),
+        }
+        // Every node still ran exactly once (documented policy:
+        // successors of a panicked node run so counters stay sound).
+        for i in 0..n {
+            assert_eq!(executed[i].load(Ordering::SeqCst), 1, "case {case} node {i}");
+        }
+        // The pool must remain usable.
+        let ok = Arc::new(AtomicUsize::new(0));
+        let o = ok.clone();
+        pool.submit(move || {
+            o.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}
+
+#[test]
+fn dag_workload_generators_run_exactly_once_on_every_shape() {
+    let pool = ThreadPool::new(2);
+    for dag in [
+        Dag::linear_chain(300),
+        Dag::binary_tree(8),
+        Dag::layered_random(8, 10, 0.4, 5),
+        Dag::wavefront(10),
+    ] {
+        let (mut g, counter) = dag.to_task_graph(0);
+        g.run(&pool).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), dag.len(), "{}", dag.kind);
+        // Re-run the same materialized graph.
+        g.run(&pool).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 2 * dag.len(), "{} rerun", dag.kind);
+    }
+}
+
+#[test]
+fn dataflow_diamond_under_many_seeds() {
+    use scheduling::graph::Dataflow;
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg32::seeded(31415);
+    for _ in 0..20 {
+        let x0 = rng.next_below(1000) as i64;
+        let mut df = Dataflow::new();
+        let src = df.node("src", move || x0);
+        let l = df.node1("l", &src, |x| x * 2);
+        let r = df.node1("r", &src, |x| x + 10);
+        let join = df.node2("join", &l, &r, |a, b| a + b);
+        df.run(&pool).unwrap();
+        assert_eq!(join.take().unwrap(), x0 * 2 + x0 + 10);
+    }
+}
+
+#[test]
+fn deep_chain_does_not_overflow_stack() {
+    // Inline continuation is iterative (a loop, not recursion), so a
+    // 100k-node chain must not blow the worker stack.
+    let pool = ThreadPool::new(1);
+    let dag = Dag::linear_chain(100_000);
+    let (mut g, counter) = dag.to_task_graph(0);
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 100_000);
+}
+
+#[test]
+fn graph_results_deterministic_under_scheduling_noise() {
+    // A reduction over a random DAG must produce the same value no
+    // matter how tasks interleave. Each node adds a node-specific
+    // value to an accumulator observed by its successors via stamps.
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(2718);
+    let adj = random_dag(&mut rng, 200, 10, 0.2);
+    let expected: u64 = (0..200u64).map(|i| i * i).sum();
+    for _ in 0..5 {
+        let acc = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let ids: Vec<_> = (0..200)
+            .map(|i| {
+                let acc = acc.clone();
+                g.add(move || {
+                    acc.fetch_add((i * i) as usize, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        for (i, succs) in adj.iter().enumerate() {
+            for &s in succs {
+                g.precede(ids[i], &[ids[s]]);
+            }
+        }
+        g.run(&pool).unwrap();
+        assert_eq!(acc.load(Ordering::SeqCst) as u64, expected);
+    }
+}
+
+#[test]
+fn empty_and_singleton_graphs() {
+    let pool = ThreadPool::new(2);
+    let mut g = TaskGraph::new();
+    g.run(&pool).unwrap();
+
+    let hit = Arc::new(AtomicUsize::new(0));
+    let h = hit.clone();
+    let mut g = TaskGraph::new();
+    g.add(move || {
+        h.fetch_add(1, Ordering::SeqCst);
+    });
+    g.run(&pool).unwrap();
+    assert_eq!(hit.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn wide_independent_layer_all_sources() {
+    // A graph with no edges: every node is a source; exercises bulk
+    // injector submission + stealing.
+    let pool = ThreadPool::new(4);
+    let n = 5000;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let mut g = TaskGraph::with_capacity(n);
+    for _ in 0..n {
+        let c = counter.clone();
+        g.add(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), n);
+}
+
+#[test]
+fn mutex_protected_state_needs_no_atomics() {
+    // FnMut closures may mutate captured state through a Mutex — the
+    // graph edges give the happens-before; this checks the executor
+    // doesn't require Sync state hacks from users.
+    let pool = ThreadPool::new(2);
+    let log: Arc<Mutex<String>> = Arc::new(Mutex::new(String::new()));
+    let mut g = TaskGraph::new();
+    let first = {
+        let log = log.clone();
+        g.add(move || log.lock().unwrap().push('a'))
+    };
+    let second = {
+        let log = log.clone();
+        g.add(move || log.lock().unwrap().push('b'))
+    };
+    let third = {
+        let log = log.clone();
+        g.add(move || log.lock().unwrap().push('c'))
+    };
+    g.succeed(second, &[first]);
+    g.succeed(third, &[second]);
+    g.run(&pool).unwrap();
+    assert_eq!(&*log.lock().unwrap(), "abc");
+}
