@@ -11,13 +11,20 @@
 //! 3. **Inline continuation** (§2.2): first-ready-successor-inline vs
 //!    resubmit-everything, on chain and wavefront graphs.
 //! 4. **Spin rounds before parking**: wakeup latency vs CPU trade.
+//! 5. **Hot-path optimizations (PR 1)**: the three independently
+//!    toggleable scheduler optimizations — inline task storage
+//!    (`PoolConfig::inline_tasks`), batched stealing
+//!    (`PoolConfig::steal_batch`), and batched/throttled wakeups
+//!    (`PoolConfig::batched_wakeups`) — each switched off against the
+//!    all-on baseline, on a fan-out (binary tree), a chain, and a
+//!    submission-storm workload.
 //!
-//! Knobs: `BENCH_FAST=1`.
+//! Knobs: `BENCH_FAST=1`, `THREADS`.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::graph::RunOptions;
 use scheduling::pool::injector::{Injector, MutexInjector, SegQueue};
 use scheduling::pool::{deque, fence_deque, PoolConfig, Steal, ThreadPool};
@@ -29,6 +36,89 @@ fn main() {
     injector_ablation(&opts);
     inline_ablation(&opts);
     spin_ablation(&opts);
+    hot_path_ablation(&opts);
+}
+
+/// ABL-5: each PR-1 hot-path optimization toggled off individually
+/// (and all off together) against the default all-on configuration.
+fn hot_path_ablation(opts: &BenchOptions) {
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let mut report = Report::new(
+        "ABL-5 hot-path optimizations (PR 1)",
+        format!(
+            "inline task storage / batched stealing / batched wakeups, each toggled \
+             independently; {threads} threads"
+        ),
+    );
+
+    let variants: [(&str, PoolConfig); 5] = [
+        ("all-on", PoolConfig::default()),
+        ("no-inline-tasks", PoolConfig { inline_tasks: false, ..PoolConfig::default() }),
+        ("no-steal-batch", PoolConfig { steal_batch: false, ..PoolConfig::default() }),
+        ("no-batched-wake", PoolConfig { batched_wakeups: false, ..PoolConfig::default() }),
+        // NOTE: "all-off" disables the three *toggleable* optimizations
+        // (task inlining, batched stealing, batched wakeups). It is not
+        // a full seed reproduction: the sharded pending counters and
+        // throttled idle wakeups are structural and always on.
+        (
+            "all-off",
+            PoolConfig {
+                inline_tasks: false,
+                steal_batch: false,
+                batched_wakeups: false,
+                ..PoolConfig::default()
+            },
+        ),
+    ];
+
+    for (label, config) in variants {
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: threads,
+            ..config.clone()
+        });
+
+        // Fan-out graph: exercises steal batching + wake batching.
+        let (mut g, _c) = Dag::binary_tree(13).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("btree(d=13)", label, summary);
+
+        // Chain: inline-continuation heavy, isolates task-cell cost.
+        let (mut g, _c) = Dag::linear_chain(16_384).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("chain(16384)", label, summary);
+
+        // Submission storm: plain closures through submit(), the
+        // RawTask allocation path with recursive respawning.
+        let summary = bench_wall(opts, || {
+            let count = Arc::new(AtomicUsize::new(0));
+            for _ in 0..2_000 {
+                let c = count.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), 2_000);
+        });
+        report.push("submit(2000)", label, summary);
+        eprintln!("  hot-path variant {label} done");
+    }
+
+    report.print();
+    record_json("ablations_hot_path", "wall", threads, &report);
+
+    for param in ["btree(d=13)", "chain(16384)", "submit(2000)"] {
+        if let Some(r) = report.speedup(param, "all-on", "all-off") {
+            println!(
+                "SHAPE hot-path-wins@{param}: {r:.2}x {}",
+                if r >= 1.0 { "PASS" } else { "CHECK" }
+            );
+        }
+    }
 }
 
 fn deque_ablation(opts: &BenchOptions) {
@@ -98,6 +188,7 @@ fn deque_ablation(opts: &BenchOptions) {
     report.push("steal under churn", "fence-based", summary);
 
     report.print();
+    record_json("ablations_deque", "wall", 2, &report);
     if let Some(r) = report.speedup("owner push+pop", "fence-free", "fence-based") {
         println!("SHAPE fence-free-parity-owner: {r:.2}x {}", if (0.5..=2.0).contains(&r) { "PASS" } else { "CHECK" });
     }
@@ -146,6 +237,7 @@ fn injector_ablation(opts: &BenchOptions) {
     report.push("mpmc storm", "lockfree-segqueue", summary);
 
     report.print();
+    record_json("ablations_injector", "wall", 4, &report);
 }
 
 fn inline_ablation(opts: &BenchOptions) {
@@ -169,6 +261,7 @@ fn inline_ablation(opts: &BenchOptions) {
         eprintln!("  {param} done");
     }
     report.print();
+    record_json("ablations_inline", "wall", 2, &report);
     if let Some(r) = report.speedup("chain(16384)", "inline", "resubmit-all") {
         println!("SHAPE inline-wins-on-chain: {r:.2}x {}", if r > 1.0 { "PASS" } else { "FAIL" });
     }
@@ -193,4 +286,5 @@ fn spin_ablation(opts: &BenchOptions) {
         report.push(format!("spin={spin}"), "scheduling", summary);
     }
     report.print();
+    record_json("ablations_spin", "wall", 2, &report);
 }

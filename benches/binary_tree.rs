@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
-use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::Dag;
 
@@ -57,6 +57,7 @@ fn main() {
     }
 
     report.print();
+    record_json("binary_tree", "wall", threads, &report);
 
     let last = format!("btree(d={})", depths[depths.len() - 1]);
     if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
-use scheduling::bench_harness::{bench_cpu, BenchOptions, Report};
+use scheduling::bench_harness::{bench_cpu, record_json, BenchOptions, Report};
 use scheduling::workloads::{fib_reference, run_fib};
 
 fn env_list(key: &str, default: &[u32]) -> Vec<u32> {
@@ -52,6 +52,7 @@ fn main() {
     }
 
     report.print();
+    record_json("fib_cpu", "cpu", threads, &report);
 
     let last = format!("fib({})", ns[ns.len() - 1]);
     if let Some(r) = report.speedup(&last, "scheduling", "mutex-pool") {

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
-use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::workloads::{fib_reference, fib_task_count, run_fib};
 
 fn env_list(key: &str, default: &[u32]) -> Vec<u32> {
@@ -57,6 +57,7 @@ fn main() {
     }
 
     report.print();
+    record_json("fib_wall", "wall", threads, &report);
 
     // Paper-shape checks (informational, printed for EXPERIMENTS.md).
     let last = format!("fib({})", ns[ns.len() - 1]);

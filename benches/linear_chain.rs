@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
-use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::Dag;
 
@@ -58,6 +58,7 @@ fn main() {
     }
 
     report.print();
+    record_json("linear_chain", "wall", threads, &report);
 
     let last = format!("chain({})", sizes[sizes.len() - 1]);
     if let Some(r) = report.speedup(&last, "scheduling", "scheduling+countdown") {

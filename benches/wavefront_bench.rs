@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
-use scheduling::bench_harness::{bench_wall, BenchOptions, Report};
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::Dag;
 
@@ -62,6 +62,7 @@ fn main() {
     }
 
     report.print();
+    record_json("wavefront_bench", "wall", threads, &report);
 
     let last0 = format!("wf({0}x{0},w=0)", sizes[sizes.len() - 1]);
     if let Some(r) = report.speedup(&last0, "scheduling", "mutex-pool") {

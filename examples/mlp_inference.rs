@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use scheduling::pool::ThreadPool;
 use scheduling::runtime::{find_artifacts_dir, HostTensor, Registry, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> scheduling::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let requests: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(200);
     let threads: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(2);
@@ -76,8 +76,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut lat = latencies.lock().unwrap().clone();
     lat.sort_unstable();
-    anyhow::ensure!(errors.load(Ordering::Relaxed) == 0, "request errors");
-    anyhow::ensure!(lat.len() == requests, "lost requests");
+    scheduling::ensure!(errors.load(Ordering::Relaxed) == 0, "request errors");
+    scheduling::ensure!(lat.len() == requests, "lost requests");
     let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
     println!(
         "throughput: {:.1} req/s ({} requests in {:.2?})",

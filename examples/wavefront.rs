@@ -24,7 +24,7 @@ use scheduling::workloads::matmul_graph::{BlockedMatmul, MatmulSchedule};
 
 const TILE: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> scheduling::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let tiles: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(3);
     let sweeps: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(30);
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
                 });
             }
         }
-        g.run(&pool).map_err(|e| anyhow::anyhow!("{e}"))?;
+        g.run(&pool).map_err(|e| scheduling::anyhow!("{e}"))?;
 
         last_residual = 0.0f32;
         for i in 0..tiles {
@@ -122,7 +122,7 @@ fn main() -> anyhow::Result<()> {
         "relaxation done in {took:.2?} ({} kernel executions, residual {last_residual:.5})",
         jacobi.executions()
     );
-    anyhow::ensure!(last_residual < 1.0, "residual did not decay");
+    scheduling::ensure!(last_residual < 1.0, "residual did not decay");
     println!("pool metrics after relaxation:\n{}", pool.metrics());
 
     // Second kernel family on the same pool: blocked matmul.
@@ -133,7 +133,7 @@ fn main() -> anyhow::Result<()> {
     let c = mm.run(&pool, MatmulSchedule::Wavefront)?;
     let expected = a.matmul_ref(&b);
     let diff = c.max_abs_diff(&expected);
-    anyhow::ensure!(diff < 1e-3, "matmul verification failed: {diff}");
+    scheduling::ensure!(diff < 1e-3, "matmul verification failed: {diff}");
     println!("blocked matmul 128x128/32 verified in {:.2?} (max diff {diff:.2e})", start.elapsed());
 
     println!("wavefront OK");

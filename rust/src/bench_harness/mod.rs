@@ -12,5 +12,5 @@ mod report;
 mod stats;
 
 pub use measure::{bench_cpu, bench_wall, BenchOptions, Measurement};
-pub use report::{csv_report, markdown_table, Report, Row};
+pub use report::{csv_report, markdown_table, record_json, record_json_to, Report, Row, BENCH_JSON_DEFAULT};
 pub use stats::Summary;

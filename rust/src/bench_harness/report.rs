@@ -1,5 +1,7 @@
 //! Benchmark report assembly: aligned tables for the terminal, CSV for
-//! plotting, and paper-shape assertions recorded in EXPERIMENTS.md.
+//! plotting, paper-shape assertions recorded in EXPERIMENTS.md, and a
+//! machine-readable JSON ledger ([`record_json`]) so successive PRs can
+//! diff perf against a committed baseline.
 
 use std::time::Duration;
 
@@ -145,6 +147,104 @@ pub fn csv_report(report: &Report) -> String {
     out
 }
 
+/// Default path of the perf-trajectory ledger, relative to the bench
+/// process working directory (`cargo bench` runs at the package root).
+pub const BENCH_JSON_DEFAULT: &str = "BENCH_pr1.json";
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Renders one ledger entry as a single JSON-object line.
+fn json_entry(bench: &str, metric: &str, threads: usize, report_title: &str, row: &Row) -> String {
+    format!(
+        "{{\"bench\":\"{}\",\"title\":\"{}\",\"param\":\"{}\",\"series\":\"{}\",\"metric\":\"{}\",\
+         \"threads\":{},\"samples\":{},\"median_ns\":{},\"mean_ns\":{},\"stddev_ns\":{},\
+         \"min_ns\":{},\"max_ns\":{}}}",
+        json_escape(bench),
+        json_escape(report_title),
+        json_escape(&row.param),
+        json_escape(&row.series),
+        json_escape(metric),
+        threads,
+        row.summary.n,
+        row.summary.median.as_nanos(),
+        row.summary.mean.as_nanos(),
+        row.summary.stddev.as_nanos(),
+        row.summary.min.as_nanos(),
+        row.summary.max.as_nanos(),
+    )
+}
+
+/// Appends `report` to the machine-readable benchmark ledger
+/// (`BENCH_pr1.json` at the package root by default; override the path
+/// with `BENCH_JSON=path`, disable with `BENCH_JSON=0`).
+///
+/// The ledger is one JSON object with an `entries` array of one-line
+/// objects — per (bench, param, series): median/mean wall or CPU time
+/// in nanoseconds, sample count, and thread count. Entries are merged
+/// by (bench, report title): re-running a bench replaces its previous
+/// rows and leaves every other bench's rows in place, so one `cargo
+/// bench` sweep accumulates the full trajectory snapshot for the PR.
+/// `metric` is `"wall"` or `"cpu"` depending on how the report's rows
+/// were measured.
+pub fn record_json(bench: &str, metric: &str, threads: usize, report: &Report) {
+    let path = match std::env::var("BENCH_JSON") {
+        Err(_) => BENCH_JSON_DEFAULT.to_string(),
+        Ok(v) if v.is_empty() || v == "0" => return,
+        Ok(v) => v,
+    };
+    record_json_to(&path, bench, metric, threads, report);
+}
+
+/// [`record_json`] with an explicit ledger path (no environment read) —
+/// for callers managing their own output location, and for tests,
+/// which must not mutate process-global environment under the parallel
+/// test harness.
+pub fn record_json_to(path: &str, bench: &str, metric: &str, threads: usize, report: &Report) {
+    // Keep entries from other benches/reports; replace our own.
+    let drop_key = format!(
+        "\"bench\":\"{}\",\"title\":\"{}\"",
+        json_escape(bench),
+        json_escape(&report.title)
+    );
+    let mut entries: Vec<String> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(path) {
+        for line in existing.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if line.starts_with("{\"bench\":") && !line.contains(&drop_key) {
+                entries.push(line.to_string());
+            }
+        }
+    }
+    for row in &report.rows {
+        entries.push(json_entry(bench, metric, threads, &report.title, row));
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("\"schema\": \"scheduling-bench-v1\",\n");
+    out.push_str(
+        "\"note\": \"per-bench medians from the in-crate harness; re-running a bench replaces its own entries\",\n",
+    );
+    out.push_str("\"entries\": [\n");
+    out.push_str(&entries.join(",\n"));
+    out.push_str("\n]\n}\n");
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("warning: could not write bench ledger {path}: {e}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +282,56 @@ mod tests {
         let s = rep.speedup("p", "fast", "slow").unwrap();
         assert!((s - 4.0).abs() < 1e-9);
         assert!(rep.speedup("p", "fast", "missing").is_none());
+    }
+
+    #[test]
+    fn json_entry_shape_and_escaping() {
+        let row = Row {
+            param: "chain(8192)".to_string(),
+            series: "with \"quotes\"".to_string(),
+            summary: summary(2),
+        };
+        let line = json_entry("linear_chain", "wall", 2, "GH-LC", &row);
+        assert!(line.starts_with("{\"bench\":\"linear_chain\""));
+        assert!(line.contains("\"median_ns\":2000000"));
+        assert!(line.contains("\"threads\":2"));
+        assert!(line.contains("with \\\"quotes\\\""));
+        assert!(line.ends_with('}'));
+    }
+
+    #[test]
+    fn record_json_merges_per_bench() {
+        // Uses the explicit-path variant: mutating BENCH_JSON via
+        // set_var would race other tests' getenv calls under the
+        // parallel test harness.
+        let dir = std::env::temp_dir().join(format!("bench_ledger_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ledger.json");
+        let path = path.to_str().unwrap();
+
+        let mut a = Report::new("T-A", "");
+        a.push("p1", "s1", summary(1));
+        record_json_to(path, "bench_a", "wall", 2, &a);
+
+        let mut b = Report::new("T-B", "");
+        b.push("p2", "s2", summary(3));
+        record_json_to(path, "bench_b", "cpu", 4, &b);
+
+        // Re-record bench_a with a new value: replaces, not duplicates.
+        let mut a2 = Report::new("T-A", "");
+        a2.push("p1", "s1", summary(7));
+        record_json_to(path, "bench_a", "wall", 2, &a2);
+
+        let text = std::fs::read_to_string(path).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        assert_eq!(text.matches("\"bench\":\"bench_a\"").count(), 1, "{text}");
+        assert_eq!(text.matches("\"bench\":\"bench_b\"").count(), 1, "{text}");
+        assert!(text.contains("\"median_ns\":7000000"), "{text}");
+        assert!(!text.contains("\"median_ns\":1000000"), "{text}");
+        assert!(text.contains("\"metric\":\"cpu\""));
+        assert!(text.trim_start().starts_with('{'));
+        assert!(text.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -24,7 +24,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::builder::{GraphError, Node, TaskGraph};
-use crate::pool::thread_pool::{Job, PoolInner};
+use crate::pool::task::RawTask;
+use crate::pool::thread_pool::PoolInner;
 use crate::pool::ThreadPool;
 
 /// Options controlling one graph run.
@@ -88,15 +89,21 @@ impl RunState {
     }
 }
 
-/// A scheduled node of an in-flight run — the payload of
-/// [`Job::Node`].
+/// A scheduled node of an in-flight run — the payload of a node
+/// `RawTask` (two words: it always stores inline, never allocates).
 pub(crate) struct NodeRun {
     pub(crate) state: Arc<RunState>,
     pub(crate) node: usize,
 }
 
+/// Ready successors collected per executed node before being published
+/// as one submission burst. Wider fan-outs spill to direct submission;
+/// 32 covers every workload in the bench suite except the synthetic
+/// wide-fanout tests, which exercise the spill path on purpose.
+const READY_BURST: usize = 32;
+
 /// Executes `run.node`, then chains ready successors per §2.2.
-/// Called by the pool's worker loop for `Job::Node`.
+/// Called from the node-task vtable (`pool::task`) on a worker.
 pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: NodeRun) {
     let state = run.state;
     let mut current = run.node;
@@ -132,8 +139,14 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
 
         // 2. Decrement each successor's uncompleted-predecessor count.
         //    First ready successor continues inline; the rest are
-        //    submitted to the same pool instance.
+        //    collected and submitted to the pool as ONE burst (a single
+        //    pending-counter bump and a single wake for a fan-out of N,
+        //    instead of N of each) — unless batched wakeups are
+        //    disabled, in which case submit_job_batch degrades to the
+        //    seed's per-successor submission for the ablation bench.
         let mut inline_next: Option<usize> = None;
+        let mut ready = [0usize; READY_BURST];
+        let mut nready = 0usize;
         for &succ in &node.successors {
             // AcqRel: the final decrement acquires every predecessor's
             // release, ordering all predecessor effects before the
@@ -141,13 +154,26 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
             if state.node(succ).pending.fetch_sub(1, Ordering::AcqRel) == 1 {
                 if !state.options.no_inline_continuation && inline_next.is_none() {
                     inline_next = Some(succ);
+                } else if nready < READY_BURST {
+                    ready[nready] = succ;
+                    nready += 1;
                 } else {
-                    pool.submit_job(Job::Node(NodeRun {
+                    // Fan-out wider than the burst buffer (rare):
+                    // overflow is submitted directly.
+                    pool.submit_job(RawTask::node(NodeRun {
                         state: state.clone(),
                         node: succ,
                     }));
                 }
             }
+        }
+        if nready > 0 {
+            pool.submit_job_batch(ready[..nready].iter().map(|&node| {
+                RawTask::node(NodeRun {
+                    state: state.clone(),
+                    node,
+                })
+            }));
         }
 
         // 3. Mark this node complete. After this point we must not
@@ -201,16 +227,23 @@ pub(crate) fn run_graph(
         options,
     });
 
-    // Submit every source (zero predecessors). Validation guarantees
-    // at least one exists for a non-empty acyclic graph.
-    for (i, node) in graph.nodes.iter().enumerate() {
-        if node.num_predecessors == 0 {
-            pool.inner().submit_job(Job::Node(NodeRun {
-                state: state.clone(),
-                node: i,
-            }));
-        }
-    }
+    // Submit every source (zero predecessors) as one burst — a graph
+    // with S independent sources wakes the pool once, not S times.
+    // Validation guarantees at least one source exists for a non-empty
+    // acyclic graph.
+    let sources: Vec<usize> = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, node)| node.num_predecessors == 0)
+        .map(|(i, _)| i)
+        .collect();
+    pool.inner().submit_job_batch(sources.iter().map(|&node| {
+        RawTask::node(NodeRun {
+            state: state.clone(),
+            node,
+        })
+    }));
 
     // Block until the run drains. This pins `graph.nodes` for the
     // whole run — the soundness linchpin of the raw pointer above.

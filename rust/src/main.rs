@@ -14,8 +14,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
 use scheduling::baseline::{all_executors, executor_by_name};
+use scheduling::util::error::{Context, Result};
+use scheduling::{anyhow, bail, ensure};
 use scheduling::cli::{Args, Config};
 use scheduling::graph::Dataflow;
 use scheduling::pool::ThreadPool;
@@ -32,9 +33,9 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let mut args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut args = Args::from_env().map_err(|e| anyhow!("{e}"))?;
     if let Some(path) = args.raw("config").map(str::to_string) {
-        let config = Config::load(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let config = Config::load(&path).map_err(|e| anyhow!("{e}"))?;
         args.merge_defaults(config.values());
     }
     match args.positional(0) {
@@ -81,7 +82,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .with_context(|| format!("unknown executor {executor_name:?}"))?;
             let got = run_fib(&ex, n);
             let expected = fib_reference(n);
-            anyhow::ensure!(got == expected, "fib mismatch: {got} != {expected}");
+            ensure!(got == expected, "fib mismatch: {got} != {expected}");
             println!("fib({n}) = {got} via {} ({} tasks)", ex.name(), fib_task_count(n));
         }
         "chain" | "btree" | "dag" | "wavefront" => {
@@ -100,7 +101,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 } else {
                     None
                 };
-                g.run_with_options(&pool, options).map_err(|e| anyhow::anyhow!("{e}"))?;
+                g.run_with_options(&pool, options).map_err(|e| anyhow!("{e}"))?;
                 println!("{}", pool.metrics());
                 if let Some(t) = tracer {
                     let out = args.raw("out").unwrap_or("trace.json").to_string();
@@ -112,7 +113,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 dag.run_countdown(&ex, work)
             };
-            anyhow::ensure!(executed == dag.len(), "executed {executed} of {} nodes", dag.len());
+            ensure!(executed == dag.len(), "executed {executed} of {} nodes", dag.len());
             println!(
                 "{} [{} nodes, {} edges] on {} ({} threads): all nodes executed",
                 dag.kind,
@@ -131,7 +132,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             };
             let (c, expected) = run_matmul(size, tile, threads, schedule)?;
             let diff = c.max_abs_diff(&expected);
-            anyhow::ensure!(diff < 1e-3, "matmul verification failed: max diff {diff}");
+            ensure!(diff < 1e-3, "matmul verification failed: max diff {diff}");
             println!("matmul {size}x{size} tile={tile} verified (max diff {diff:.2e})");
         }
         other => bail!("unknown workload {other:?}"),
@@ -183,8 +184,8 @@ fn cmd_graph_demo(args: &Args) -> Result<()> {
     let ab = df.node2("a+b", &a, &b, |x, y| x + y);
     let cd = df.node2("c+d", &c, &d, |x, y| x + y);
     let product = df.node2("(a+b)*(c+d)", &ab, &cd, |x, y| x * y);
-    df.run(&pool).map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("(a+b)*(c+d) = {}", product.take().map_err(|e| anyhow::anyhow!("{e}"))?);
+    df.run(&pool).map_err(|e| anyhow!("{e}"))?;
+    println!("(a+b)*(c+d) = {}", product.take().map_err(|e| anyhow!("{e}"))?);
     Ok(())
 }
 

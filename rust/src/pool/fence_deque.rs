@@ -245,6 +245,45 @@ impl<T: Send> FenceStealer<T> {
         }
     }
 
+    /// Steals up to half of the victim's elements (bounded by
+    /// [`super::deque::MAX_STEAL_BATCH`]), returning the first for
+    /// immediate execution and pushing the rest onto `dest` — the
+    /// fence-styled twin of [`super::deque::Stealer::steal_batch_and_pop`];
+    /// see that method for why this is a loop of single-element CAS
+    /// steals rather than one multi-slot top-CAS.
+    pub fn steal_batch_and_pop(&self, dest: &FenceWorker<T>) -> Steal<T> {
+        self.steal_batch_and_pop_counted(dest).0
+    }
+
+    /// [`FenceStealer::steal_batch_and_pop`] returning the extra count.
+    pub fn steal_batch_and_pop_counted(&self, dest: &FenceWorker<T>) -> (Steal<T>, usize) {
+        let t = self.inner.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.inner.bottom.load(Ordering::Acquire);
+        let available = b - t;
+        if available <= 0 {
+            return (Steal::Empty, 0);
+        }
+        let first = match self.steal() {
+            Steal::Success(v) => v,
+            other => return (other, 0),
+        };
+        let want = ((available as usize + 1) / 2)
+            .min(super::deque::MAX_STEAL_BATCH)
+            .saturating_sub(1);
+        let mut extra = 0usize;
+        while extra < want {
+            match self.steal() {
+                Steal::Success(v) => {
+                    dest.push(v);
+                    extra += 1;
+                }
+                _ => break,
+            }
+        }
+        (Steal::Success(first), extra)
+    }
+
     /// Approximate length.
     pub fn len(&self) -> usize {
         let t = self.inner.top.load(Ordering::Relaxed);
@@ -289,6 +328,20 @@ mod tests {
             assert_eq!(s.steal().success(), Some(i));
         }
         assert!(s.steal().is_empty());
+    }
+
+    #[test]
+    fn steal_batch_matches_fencefree_semantics() {
+        let (victim, thief) = fence_deque::<usize>(16);
+        let (mine, _s) = fence_deque::<usize>(16);
+        for i in 0..10 {
+            victim.push(i);
+        }
+        let (got, extra) = thief.steal_batch_and_pop_counted(&mine);
+        assert_eq!(got.success(), Some(0));
+        assert_eq!(extra, 4);
+        assert_eq!(mine.len(), 4);
+        assert_eq!(victim.len(), 5);
     }
 
     #[test]

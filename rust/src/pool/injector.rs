@@ -27,6 +27,15 @@ use std::sync::Mutex;
 pub trait Injector<T>: Send + Sync {
     /// Enqueues a value (multi-producer).
     fn push(&self, value: T);
+    /// Enqueues a burst of values. The default loops over [`Injector::push`];
+    /// implementations with per-push synchronization cost (a lock) override
+    /// it to pay that cost once per burst — the pool's batched-submission
+    /// path (`submit_job_batch`) is the caller.
+    fn push_batch(&self, values: &mut dyn Iterator<Item = T>) {
+        for v in values {
+            self.push(v);
+        }
+    }
     /// Dequeues a value (multi-consumer).
     fn pop(&self) -> Option<T>;
     /// Approximate emptiness (used before parking; may be stale).
@@ -59,6 +68,16 @@ impl<T: Send> Injector<T> for MutexInjector<T> {
         let mut q = self.queue.lock().unwrap();
         q.push_back(value);
         self.maybe_nonempty.store(true, Ordering::Release);
+    }
+
+    fn push_batch(&self, values: &mut dyn Iterator<Item = T>) {
+        // One lock acquisition for the whole burst.
+        let mut q = self.queue.lock().unwrap();
+        let before = q.len();
+        q.extend(values);
+        if q.len() > before {
+            self.maybe_nonempty.store(true, Ordering::Release);
+        }
     }
 
     fn pop(&self) -> Option<T> {
@@ -312,6 +331,24 @@ mod tests {
     #[test]
     fn mutex_injector_fifo() {
         fifo_smoke(&MutexInjector::new());
+    }
+
+    #[test]
+    fn push_batch_preserves_fifo_on_both_impls() {
+        let queues: [Box<dyn Injector<usize>>; 2] =
+            [Box::new(MutexInjector::new()), Box::new(SegQueue::new())];
+        for q in &queues {
+            q.push(0);
+            q.push_batch(&mut (1..100usize));
+            assert_eq!(q.len(), 100);
+            for i in 0..100 {
+                assert_eq!(q.pop(), Some(i));
+            }
+            assert!(q.is_empty());
+            // An empty batch is a no-op.
+            q.push_batch(&mut std::iter::empty());
+            assert!(q.is_empty());
+        }
     }
 
     #[test]

@@ -16,10 +16,19 @@ pub struct WorkerMetrics {
     pub pushes: AtomicU64,
     /// Tasks popped from this worker's own deque.
     pub pops: AtomicU64,
-    /// Tasks stolen *by* this worker from someone else.
+    /// Tasks stolen *by* this worker from someone else. A batched
+    /// steal counts once here (the task it returned for execution);
+    /// the extra tasks it moved are tracked by `steal_batch_tasks` and
+    /// show up as `pops` when they eventually execute.
     pub steals: AtomicU64,
     /// Steal attempts that found the victim empty or lost the race.
     pub steal_failures: AtomicU64,
+    /// Batched steals that moved at least one extra task into this
+    /// worker's deque (see `Stealer::steal_batch_and_pop`).
+    pub steal_batches: AtomicU64,
+    /// Total extra tasks moved by batched steals (batch sizes sum;
+    /// average batch size = `steal_batch_tasks / steal_batches + 1`).
+    pub steal_batch_tasks: AtomicU64,
     /// Tasks taken from the global injector.
     pub injector_pops: AtomicU64,
     /// Times this worker went to sleep on the eventcount.
@@ -51,6 +60,21 @@ impl WorkerMetrics {
         on_park => parks,
         on_inline_continuation => inline_continuations,
     }
+
+    /// Records a batched steal that moved `extra` additional tasks
+    /// into this worker's deque (relaxed).
+    #[inline]
+    pub fn on_steal_batch(&self, extra: u64) {
+        self.steal_batches.fetch_add(1, Ordering::Relaxed);
+        self.steal_batch_tasks.fetch_add(extra, Ordering::Relaxed);
+    }
+
+    /// Increments `pushes` by `n` (relaxed) — used when a burst of
+    /// tasks enters the local deque through one batched operation.
+    #[inline]
+    pub fn on_push_n(&self, n: u64) {
+        self.pushes.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 /// A point-in-time snapshot of one worker's counters.
@@ -60,10 +84,14 @@ pub struct WorkerSnapshot {
     pub pushes: u64,
     /// Tasks popped from the worker's own deque.
     pub pops: u64,
-    /// Tasks stolen by this worker.
+    /// Tasks stolen by this worker (batched steals count once).
     pub steals: u64,
     /// Steal attempts that failed (empty victim or lost race).
     pub steal_failures: u64,
+    /// Batched steals that moved extra tasks (see `WorkerMetrics`).
+    pub steal_batches: u64,
+    /// Total extra tasks moved by batched steals.
+    pub steal_batch_tasks: u64,
     /// Tasks taken from the global injector.
     pub injector_pops: u64,
     /// Times the worker parked on the eventcount.
@@ -90,6 +118,8 @@ impl WorkerMetrics {
             pops: self.pops.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
             steal_failures: self.steal_failures.load(Ordering::Relaxed),
+            steal_batches: self.steal_batches.load(Ordering::Relaxed),
+            steal_batch_tasks: self.steal_batch_tasks.load(Ordering::Relaxed),
             injector_pops: self.injector_pops.load(Ordering::Relaxed),
             parks: self.parks.load(Ordering::Relaxed),
             inline_continuations: self.inline_continuations.load(Ordering::Relaxed),
@@ -113,6 +143,8 @@ impl PoolSnapshot {
             t.pops += w.pops;
             t.steals += w.steals;
             t.steal_failures += w.steal_failures;
+            t.steal_batches += w.steal_batches;
+            t.steal_batch_tasks += w.steal_batch_tasks;
             t.injector_pops += w.injector_pops;
             t.parks += w.parks;
             t.inline_continuations += w.inline_continuations;
@@ -137,9 +169,10 @@ impl std::fmt::Display for PoolSnapshot {
         let t = self.total();
         writeln!(
             f,
-            "pool: executed={} pushes={} pops={} steals={} steal_fail={} injector={} parks={} inline={}",
-            t.executed(), t.pushes, t.pops, t.steals, t.steal_failures, t.injector_pops, t.parks,
-            t.inline_continuations
+            "pool: executed={} pushes={} pops={} steals={} steal_fail={} steal_batches={} \
+             batch_tasks={} injector={} parks={} inline={}",
+            t.executed(), t.pushes, t.pops, t.steals, t.steal_failures, t.steal_batches,
+            t.steal_batch_tasks, t.injector_pops, t.parks, t.inline_continuations
         )?;
         for (i, w) in self.workers.iter().enumerate() {
             writeln!(
@@ -166,10 +199,14 @@ mod tests {
         m.on_push();
         m.on_pop();
         m.on_steal();
+        m.on_steal_batch(3);
+        m.on_push_n(3);
         let s = m.snapshot();
-        assert_eq!(s.pushes, 2);
+        assert_eq!(s.pushes, 5);
         assert_eq!(s.pops, 1);
         assert_eq!(s.steals, 1);
+        assert_eq!(s.steal_batches, 1);
+        assert_eq!(s.steal_batch_tasks, 3);
         assert_eq!(s.executed(), 2); // pop + steal
     }
 

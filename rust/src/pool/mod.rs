@@ -1,12 +1,30 @@
 //! The work-stealing thread pool — the paper's core contribution (§2).
 //!
-//! * [`deque`] — Chase–Lev deque, fence-free memory orders (adopted).
-//! * [`fence_deque`] — Chase–Lev deque, Lê et al. fence style (ablation).
-//! * [`injector`] — global submission queue for non-worker threads.
+//! * [`deque`] — Chase–Lev deque, fence-free memory orders (adopted),
+//!   with single-task `steal` and half-the-run `steal_batch_and_pop`.
+//! * [`fence_deque`] — Chase–Lev deque, Lê et al. fence style
+//!   (ablation comparator), same steal API.
+//! * [`injector`] — global submission queue for non-worker threads,
+//!   with a batched `push_batch` for fan-out bursts.
 //! * [`event_count`] — sleep/wake protocol for idle workers.
+//! * `task` (crate-private) — `RawTask`: the allocation-free task
+//!   cell. Closures up to 3 words (and all task-graph nodes) are
+//!   stored inline; larger captures spill to a single box.
 //! * [`thread_pool`] — [`ThreadPool`]: per-worker deques + thread-local
-//!   worker registration + steal loop.
-//! * [`metrics`] — relaxed per-worker counters.
+//!   worker registration + steal loop + sharded pending counters.
+//! * [`metrics`] — relaxed per-worker counters, including batch-steal
+//!   sizes.
+//!
+//! # Scheduling hot path
+//!
+//! A submitted task travels: [`ThreadPool::submit`] → `RawTask` cell
+//! (no allocation for ≤3-word captures) → owner deque push (one
+//! Release store) → pop / batched steal → vtable call. The bookkeeping
+//! around it is sharded per worker ([`thread_pool`] module docs):
+//! submit and completion each touch one cache-padded single-writer
+//! counter cell, and wakeups are throttled to an O(1) load unless a
+//! worker is actually parked. `benches/ablations.rs` toggles each of
+//! these optimizations independently via [`PoolConfig`].
 
 pub mod deque;
 pub mod event_count;
@@ -15,9 +33,10 @@ pub mod injector;
 pub mod handle;
 pub mod metrics;
 pub mod scope;
+pub(crate) mod task;
 pub mod thread_pool;
 
-pub use deque::{deque, Steal, Stealer, Worker};
+pub use deque::{deque, Steal, Stealer, Worker, MAX_STEAL_BATCH};
 pub use event_count::EventCount;
 pub use fence_deque::{fence_deque, FenceStealer, FenceWorker};
 pub use injector::{Injector, MutexInjector, SegQueue};

@@ -1,0 +1,308 @@
+//! Allocation-free task representation: [`RawTask`].
+//!
+//! The seed implementation stored every submitted closure as
+//! `Box<dyn FnOnce()>` — one heap allocation + one virtual call per
+//! task, paid on the hottest path in the system. For the paper's
+//! workloads (fib, chain, tree: millions of tiny tasks whose captures
+//! are one or two `Arc`s) the allocator dwarfs the actual work.
+//!
+//! [`RawTask`] is a small-closure-optimized task cell, the same trick
+//! `std::task::RawWaker` and Tokio's task cells use:
+//!
+//! * closures whose captures fit in **3 words** (24 bytes on 64-bit)
+//!   and align to at most a word are stored **inline** — zero heap
+//!   traffic from submit to execute;
+//! * larger closures fall back to a single `Box` whose pointer is
+//!   stored inline (exactly the seed's cost, no worse);
+//! * task-graph nodes ([`NodeRun`]: one `Arc` pointer + one index) fit
+//!   inline by construction — a compile-time assertion guards this.
+//!
+//! Dispatch is a two-entry vtable (`call`, `drop`) monomorphized per
+//! closure type; `call` receives the pool and worker index so graph
+//! nodes can chain successors and closure panics can be counted
+//! without re-boxing any context.
+
+use std::marker::PhantomData;
+use std::mem::{self, ManuallyDrop, MaybeUninit};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::ptr;
+use std::sync::Arc;
+
+use super::thread_pool::PoolInner;
+use crate::graph::NodeRun;
+
+/// Payload words available for inline storage.
+const WORDS: usize = 3;
+
+/// Raw payload storage: 3 machine words, word-aligned.
+struct TaskData {
+    words: MaybeUninit<[usize; WORDS]>,
+}
+
+impl TaskData {
+    #[inline]
+    fn uninit() -> Self {
+        TaskData {
+            words: MaybeUninit::uninit(),
+        }
+    }
+
+    /// # Safety
+    /// `T` must satisfy [`fits_inline`]; the slot must be vacant.
+    #[inline]
+    unsafe fn write<T>(&mut self, value: T) {
+        ptr::write(self.words.as_mut_ptr() as *mut T, value);
+    }
+
+    /// # Safety
+    /// The slot must hold an initialized `T` written by [`TaskData::write`];
+    /// this call consumes it.
+    #[inline]
+    unsafe fn take<T>(&mut self) -> T {
+        ptr::read(self.words.as_ptr() as *const T)
+    }
+}
+
+/// How a [`RawTask`] stores its payload (exposed for tests/metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TaskKind {
+    /// Closure stored inline in the task cell (no heap allocation).
+    Inline,
+    /// Closure spilled to a `Box`; the cell holds the pointer.
+    Boxed,
+    /// Task-graph node (`Arc<RunState>` + node index), stored inline.
+    Node,
+}
+
+struct VTable {
+    /// Consumes the payload and runs the task. Closure panics are
+    /// caught here and counted on the pool; graph nodes contain their
+    /// own panics (see `graph::execute_node`).
+    call: unsafe fn(&mut TaskData, &Arc<PoolInner>, usize),
+    /// Consumes the payload without running it (pool teardown paths).
+    drop: unsafe fn(&mut TaskData),
+    kind: TaskKind,
+}
+
+/// True when `F` can be stored inline in the 3-word payload.
+const fn fits_inline<F>() -> bool {
+    mem::size_of::<F>() <= mem::size_of::<[usize; WORDS]>()
+        && mem::align_of::<F>() <= mem::align_of::<[usize; WORDS]>()
+}
+
+// A NodeRun must always fit inline (Arc pointer + usize index).
+const _: () = assert!(
+    mem::size_of::<NodeRun>() <= mem::size_of::<[usize; WORDS]>()
+        && mem::align_of::<NodeRun>() <= mem::align_of::<[usize; WORDS]>()
+);
+
+unsafe fn call_inline<F: FnOnce()>(data: &mut TaskData, pool: &Arc<PoolInner>, _worker: usize) {
+    let f = data.take::<F>();
+    if catch_unwind(AssertUnwindSafe(f)).is_err() {
+        pool.note_panic();
+    }
+}
+
+unsafe fn drop_inline<F>(data: &mut TaskData) {
+    drop(data.take::<F>());
+}
+
+unsafe fn call_boxed<F: FnOnce()>(data: &mut TaskData, pool: &Arc<PoolInner>, _worker: usize) {
+    let f = data.take::<Box<F>>();
+    if catch_unwind(AssertUnwindSafe(*f)).is_err() {
+        pool.note_panic();
+    }
+}
+
+unsafe fn drop_boxed<F>(data: &mut TaskData) {
+    drop(data.take::<Box<F>>());
+}
+
+unsafe fn call_node(data: &mut TaskData, pool: &Arc<PoolInner>, worker: usize) {
+    let run = data.take::<NodeRun>();
+    crate::graph::execute_node(pool, worker, run);
+}
+
+unsafe fn drop_node(data: &mut TaskData) {
+    drop(data.take::<NodeRun>());
+}
+
+/// Per-closure-type vtable holder; `&VTableFor::<F>::INLINE` is
+/// promoted to `'static` (fn pointers only, no Drop, no interior
+/// mutability). Never instantiated — only its associated consts are
+/// used.
+struct VTableFor<F>(#[allow(dead_code)] PhantomData<F>);
+
+impl<F: FnOnce() + Send + 'static> VTableFor<F> {
+    const INLINE: VTable = VTable {
+        call: call_inline::<F>,
+        drop: drop_inline::<F>,
+        kind: TaskKind::Inline,
+    };
+    const BOXED: VTable = VTable {
+        call: call_boxed::<F>,
+        drop: drop_boxed::<F>,
+        kind: TaskKind::Boxed,
+    };
+}
+
+static NODE_VTABLE: VTable = VTable {
+    call: call_node,
+    drop: drop_node,
+    kind: TaskKind::Node,
+};
+
+/// A unit of work owned by the pool: an inline-storage closure, a
+/// boxed closure, or a task-graph node. See the module docs.
+pub(crate) struct RawTask {
+    data: TaskData,
+    vtable: &'static VTable,
+}
+
+// SAFETY: every payload variant is `Send` by construction — closures
+// are constrained `F: Send`, `NodeRun` is `Send` (`RunState` is
+// `Send + Sync`) — and the cell is just raw storage for it.
+unsafe impl Send for RawTask {}
+
+impl RawTask {
+    /// Wraps a closure, storing it inline when it fits and boxing it
+    /// otherwise.
+    #[inline]
+    pub(crate) fn closure<F: FnOnce() + Send + 'static>(f: F) -> Self {
+        if fits_inline::<F>() {
+            let mut data = TaskData::uninit();
+            // SAFETY: fits_inline::<F>() holds; the slot is vacant.
+            unsafe { data.write(f) };
+            RawTask {
+                data,
+                vtable: &VTableFor::<F>::INLINE,
+            }
+        } else {
+            Self::boxed_closure(f)
+        }
+    }
+
+    /// Wraps a closure behind a `Box` unconditionally — the seed's
+    /// representation, kept as the `inline_tasks = false` ablation arm.
+    #[inline]
+    pub(crate) fn boxed_closure<F: FnOnce() + Send + 'static>(f: F) -> Self {
+        let boxed: Box<F> = Box::new(f);
+        let mut data = TaskData::uninit();
+        // SAFETY: Box<F> is one word; the slot is vacant.
+        unsafe { data.write(boxed) };
+        RawTask {
+            data,
+            vtable: &VTableFor::<F>::BOXED,
+        }
+    }
+
+    /// Wraps a task-graph node (never allocates; see the const assert).
+    #[inline]
+    pub(crate) fn node(run: NodeRun) -> Self {
+        let mut data = TaskData::uninit();
+        // SAFETY: NodeRun fits inline (compile-time assertion above).
+        unsafe { data.write(run) };
+        RawTask {
+            data,
+            vtable: &NODE_VTABLE,
+        }
+    }
+
+    /// Storage class, for tests and diagnostics.
+    #[allow(dead_code)]
+    pub(crate) fn kind(&self) -> TaskKind {
+        self.vtable.kind
+    }
+
+    /// Executes the task, consuming it. `pool`/`worker` give graph
+    /// nodes their scheduling context and closure panics a counter.
+    #[inline]
+    pub(crate) fn run(self, pool: &Arc<PoolInner>, worker: usize) {
+        let mut this = ManuallyDrop::new(self);
+        // SAFETY: the payload is initialized (constructors guarantee
+        // it) and consumed exactly once — ManuallyDrop suppresses the
+        // Drop impl that would otherwise consume it again.
+        unsafe { (this.vtable.call)(&mut this.data, pool, worker) }
+    }
+}
+
+impl Drop for RawTask {
+    fn drop(&mut self) {
+        // SAFETY: `run` never lets Drop observe a consumed payload
+        // (ManuallyDrop), so the payload here is still initialized.
+        unsafe { (self.vtable.drop)(&mut self.data) }
+    }
+}
+
+impl std::fmt::Debug for RawTask {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RawTask").field("kind", &self.vtable.kind).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn small_captures_stay_inline() {
+        let a = Arc::new(AtomicUsize::new(0));
+        let t = RawTask::closure(move || {
+            a.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(t.kind(), TaskKind::Inline);
+
+        // Two Arcs + a usize = 3 words: still inline.
+        let (a, b) = (Arc::new(0u64), Arc::new(1u64));
+        let x = 7usize;
+        let t = RawTask::closure(move || {
+            let _ = (&a, &b, x);
+        });
+        assert_eq!(t.kind(), TaskKind::Inline);
+    }
+
+    #[test]
+    fn large_captures_spill_to_box() {
+        let big = [0u64; 16];
+        let t = RawTask::closure(move || {
+            let _ = big;
+        });
+        assert_eq!(t.kind(), TaskKind::Boxed);
+    }
+
+    #[test]
+    fn forced_boxing_always_boxes() {
+        let t = RawTask::boxed_closure(|| {});
+        assert_eq!(t.kind(), TaskKind::Boxed);
+    }
+
+    #[test]
+    fn dropping_unran_task_releases_captures() {
+        let payload = Arc::new(());
+        assert_eq!(Arc::strong_count(&payload), 1);
+        let p = payload.clone();
+        let t = RawTask::closure(move || {
+            let _ = &p;
+        });
+        assert_eq!(Arc::strong_count(&payload), 2);
+        drop(t);
+        assert_eq!(Arc::strong_count(&payload), 1);
+
+        // Same through the boxed path.
+        let p = payload.clone();
+        let big = [0u8; 64];
+        let t = RawTask::closure(move || {
+            let _ = (&p, &big);
+        });
+        assert_eq!(t.kind(), TaskKind::Boxed);
+        drop(t);
+        assert_eq!(Arc::strong_count(&payload), 1);
+    }
+
+    #[test]
+    fn zero_sized_closures_are_inline() {
+        let t = RawTask::closure(|| {});
+        assert_eq!(t.kind(), TaskKind::Inline);
+    }
+}

@@ -16,29 +16,46 @@
 //! Workers run: pop own deque → steal (injector + random-start sweep
 //! over victims) → park. On shutdown the pool drains remaining work
 //! before joining.
+//!
+//! # Hot-path design (PR 1)
+//!
+//! Three optimizations, each independently toggleable via
+//! [`PoolConfig`] for the `ablations` bench:
+//!
+//! 1. **Inline task storage** ([`PoolConfig::inline_tasks`]) — tasks
+//!    are [`RawTask`] cells: closures up to 3 words live inline, no
+//!    heap allocation from submit to execute (see [`super::task`]).
+//! 2. **Batched stealing** ([`PoolConfig::steal_batch`]) — a thief
+//!    that finds a loaded victim takes up to half its run in one
+//!    visit ([`Stealer::steal_batch_and_pop`]), then works locally
+//!    instead of re-entering the steal sweep per task.
+//! 3. **Throttled, batched wakeups** ([`PoolConfig::batched_wakeups`])
+//!    — a burst of N ready tasks (graph fan-out, source submission)
+//!    is published with one shared-counter bump and one wake instead
+//!    of N of each; per-submit notifies remain O(1) loads when no
+//!    worker is parked.
+//!
+//! The seed's single SeqCst `pending` counter — one contended RMW on
+//! every submit *and* every completion — is replaced by per-worker
+//! cache-padded `(submitted, completed)` cells (single-writer each)
+//! plus one external-submitter cell. [`ThreadPool::wait_idle`] detects
+//! quiescence with a two-pass scan (all `completed`, then all
+//! `submitted`; equal sums ⇒ idle): any job whose completion the
+//! first pass counted had its submission counted by the second, so
+//! the test cannot report idle while work is in flight.
 
 use std::cell::Cell;
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::deque::{deque, Steal, Stealer, Worker};
 use super::event_count::EventCount;
 use super::injector::{Injector, MutexInjector, SegQueue};
 use super::metrics::{PaddedMetrics, PoolSnapshot, WorkerMetrics};
-use crate::graph::NodeRun;
-use crate::util::XorShift64Star;
-
-/// A unit of work owned by the pool.
-pub(crate) enum Job {
-    /// A plain async task (paper §4.1).
-    Closure(Box<dyn FnOnce() + Send + 'static>),
-    /// A task-graph node (paper §2.2); executed via
-    /// [`crate::graph::execute_node`], which may chain successors
-    /// inline on this worker.
-    Node(NodeRun),
-}
+use super::task::RawTask;
+use crate::util::{CachePadded, XorShift64Star};
 
 /// Which injector implementation backs external submissions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -63,6 +80,17 @@ pub struct PoolConfig {
     pub injector: InjectorKind,
     /// Name prefix for worker threads (shows up in profilers).
     pub thread_name: String,
+    /// Store small closures inline in the task cell instead of boxing
+    /// every task (hot-path optimization 1; `false` reproduces the
+    /// seed's `Box<dyn FnOnce>`-per-task behaviour for ablations).
+    pub inline_tasks: bool,
+    /// Steal up to half of a victim's run per visit instead of one
+    /// task at a time (hot-path optimization 2).
+    pub steal_batch: bool,
+    /// Publish bursts of ready tasks with a single counter bump and a
+    /// single wake instead of per-task submission (hot-path
+    /// optimization 3; applies to graph fan-out and source submission).
+    pub batched_wakeups: bool,
 }
 
 impl Default for PoolConfig {
@@ -72,6 +100,9 @@ impl Default for PoolConfig {
             spin_rounds: 2,
             injector: InjectorKind::default(),
             thread_name: "scheduling-worker".to_string(),
+            inline_tasks: true,
+            steal_batch: true,
+            batched_wakeups: true,
         }
     }
 }
@@ -82,7 +113,7 @@ impl Default for PoolConfig {
 #[derive(Clone, Copy)]
 struct LocalWorker {
     pool: *const PoolInner,
-    queue: *const Worker<Job>,
+    queue: *const Worker<RawTask>,
     index: usize,
 }
 
@@ -99,19 +130,39 @@ impl Drop for LocalGuard {
     }
 }
 
+/// One shard of the distributed pending-work counter. Monotone
+/// counters (never decremented) are what make the two-pass quiescence
+/// scan sound — see the module docs.
+///
+/// Writer discipline: cell `i < n` is written only by worker `i`
+/// (submissions it makes, completions it executes), so the hot path
+/// never contends on a shared line; cell `n` takes submissions from
+/// non-worker threads (off the hot path) and is never `completed`.
+#[derive(Default)]
+struct PendingCell {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+}
+
 pub(crate) struct PoolInner {
-    injector: Box<dyn Injector<Job>>,
-    stealers: Vec<Stealer<Job>>,
+    injector: Box<dyn Injector<RawTask>>,
+    stealers: Vec<Stealer<RawTask>>,
     metrics: Vec<PaddedMetrics>,
     ec: EventCount,
-    /// Jobs submitted but not yet finished executing.
-    pending: AtomicUsize,
+    /// `num_threads + 1` cells; see [`PendingCell`].
+    counters: Vec<CachePadded<PendingCell>>,
     /// Tasks whose closure panicked (panics are contained per-job).
     panics: AtomicU64,
     shutdown: AtomicBool,
+    /// Threads currently blocked in `wait_idle` (gates the completion-
+    /// side wakeup check so the common case pays one load).
+    idle_waiters: AtomicUsize,
     idle_mutex: Mutex<()>,
     idle_cv: Condvar,
     spin_rounds: u32,
+    inline_tasks: bool,
+    steal_batch: bool,
+    batched_wakeups: bool,
 }
 
 /// The work-stealing thread pool (see module docs).
@@ -145,11 +196,11 @@ impl ThreadPool {
         let mut owners = Vec::with_capacity(n);
         let mut stealers = Vec::with_capacity(n);
         for _ in 0..n {
-            let (w, s) = deque::<Job>(256);
+            let (w, s) = deque::<RawTask>(256);
             owners.push(w);
             stealers.push(s);
         }
-        let injector: Box<dyn Injector<Job>> = match config.injector {
+        let injector: Box<dyn Injector<RawTask>> = match config.injector {
             InjectorKind::Mutex => Box::new(MutexInjector::new()),
             InjectorKind::LockFree => Box::new(SegQueue::new()),
         };
@@ -158,12 +209,16 @@ impl ThreadPool {
             stealers,
             metrics: (0..n).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
             ec: EventCount::new(),
-            pending: AtomicUsize::new(0),
+            counters: (0..n + 1).map(|_| CachePadded::new(PendingCell::default())).collect(),
             panics: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            idle_waiters: AtomicUsize::new(0),
             idle_mutex: Mutex::new(()),
             idle_cv: Condvar::new(),
             spin_rounds: config.spin_rounds,
+            inline_tasks: config.inline_tasks,
+            steal_batch: config.steal_batch,
+            batched_wakeups: config.batched_wakeups,
         });
         let threads = owners
             .into_iter()
@@ -183,8 +238,15 @@ impl ThreadPool {
     /// nothing (paper §4.1); use captures for inputs/outputs. If called
     /// from a worker of *this* pool, pushes to that worker's own deque
     /// (no lock, no map lookup); otherwise goes through the injector.
+    /// Closures capturing up to 3 words are stored without any heap
+    /// allocation (see [`super::task`]).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.inner.submit_job(Job::Closure(Box::new(f)));
+        let job = if self.inner.inline_tasks {
+            RawTask::closure(f)
+        } else {
+            RawTask::boxed_closure(f)
+        };
+        self.inner.submit_job(job);
     }
 
     /// Blocks until every submitted job (and every job those jobs
@@ -197,10 +259,24 @@ impl ThreadPool {
             !self.inner.on_worker_thread(),
             "wait_idle called from a worker task of the same pool"
         );
-        let mut guard = self.inner.idle_mutex.lock().unwrap();
-        while self.inner.pending.load(Ordering::SeqCst) != 0 {
-            guard = self.inner.idle_cv.wait(guard).unwrap();
+        let inner = &*self.inner;
+        if inner.quiescent() {
+            return;
         }
+        inner.idle_waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = inner.idle_mutex.lock().unwrap();
+        while !inner.quiescent() {
+            // Completions nudge the condvar at quiescence edges, but
+            // that edge check is heuristic (a stale injector emptiness
+            // flag can suppress it), so never sleep unboundedly on it.
+            let (g, _) = inner
+                .idle_cv
+                .wait_timeout(guard, Duration::from_millis(1))
+                .unwrap();
+            guard = g;
+        }
+        drop(guard);
+        inner.idle_waiters.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Number of worker threads.
@@ -208,13 +284,27 @@ impl ThreadPool {
         self.inner.stealers.len()
     }
 
-    /// Jobs submitted but not yet finished.
+    /// Estimate of jobs submitted but not yet finished.
+    ///
+    /// Relaxed-read semantics (like [`ThreadPool::panic_count`]): the
+    /// value is a snapshot of sharded counters taken without
+    /// synchronization, exact only while the pool is externally
+    /// quiescent. Use [`ThreadPool::wait_idle`] to synchronize.
     pub fn pending(&self) -> usize {
-        self.inner.pending.load(Ordering::SeqCst)
+        let mut completed = 0u64;
+        for c in &self.inner.counters {
+            completed += c.completed.load(Ordering::Relaxed);
+        }
+        let mut submitted = 0u64;
+        for c in &self.inner.counters {
+            submitted += c.submitted.load(Ordering::Relaxed);
+        }
+        submitted.saturating_sub(completed) as usize
     }
 
     /// Number of tasks that panicked (panics are contained per-task and
-    /// counted rather than tearing down the worker).
+    /// counted rather than tearing down the worker). Relaxed-read
+    /// semantics, consistent with [`ThreadPool::pending`].
     pub fn panic_count(&self) -> u64 {
         self.inner.panics.load(Ordering::Relaxed)
     }
@@ -269,50 +359,135 @@ impl PoolInner {
         &self.metrics
     }
 
+    /// Counts a contained closure panic (called from the task vtable).
+    pub(crate) fn note_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// True if the current thread is a worker of this pool.
     fn on_worker_thread(&self) -> bool {
         LOCAL.with(|l| matches!(l.get(), Some(lw) if std::ptr::eq(lw.pool, self)))
     }
 
+    /// Index of the counter cell for non-worker submitters.
+    #[inline]
+    fn external_cell(&self) -> usize {
+        self.counters.len() - 1
+    }
+
     /// Schedules a job: local deque if on a worker of this pool,
-    /// injector otherwise. Wakes one sleeper.
-    pub(crate) fn submit_job(&self, job: Job) {
-        self.pending.fetch_add(1, Ordering::SeqCst);
-        let leftover = LOCAL.with(|l| match l.get() {
+    /// injector otherwise. The submitted-counter bump precedes the
+    /// push so a job can never be findable (and completable) before
+    /// it is counted — the quiescence scan depends on that order.
+    pub(crate) fn submit_job(&self, job: RawTask) {
+        LOCAL.with(|l| match l.get() {
             Some(lw) if std::ptr::eq(lw.pool, self) => {
+                self.counters[lw.index].submitted.fetch_add(1, Ordering::Release);
                 // SAFETY: `queue` points at the Worker owned by this
                 // thread's worker_loop frame, which outlives any task
                 // it executes; we are that task.
                 unsafe { (*lw.queue).push(job) };
                 self.metrics[lw.index].on_push();
-                None
             }
-            _ => Some(job),
+            _ => {
+                self.counters[self.external_cell()].submitted.fetch_add(1, Ordering::Release);
+                self.injector.push(job);
+            }
         });
-        if let Some(job) = leftover {
-            self.injector.push(job);
-        }
+        // O(1) load (no lock, no syscall) when nobody is parked.
         self.ec.notify_one();
     }
 
-    /// Called after a job finishes; wakes `wait_idle` on the last one.
-    fn finish_job(&self) {
-        if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+    /// Schedules a burst of jobs with one counter bump, one deque/
+    /// injector push sequence, and one wake — the fan-out fast path
+    /// (graph successors, source submission). Falls back to per-job
+    /// [`PoolInner::submit_job`] when `batched_wakeups` is disabled.
+    pub(crate) fn submit_job_batch<I>(&self, jobs: I)
+    where
+        I: ExactSizeIterator<Item = RawTask>,
+    {
+        if !self.batched_wakeups {
+            for job in jobs {
+                self.submit_job(job);
+            }
+            return;
+        }
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        LOCAL.with(|l| match l.get() {
+            Some(lw) if std::ptr::eq(lw.pool, self) => {
+                // Count before publishing (see submit_job).
+                self.counters[lw.index].submitted.fetch_add(n as u64, Ordering::Release);
+                for job in jobs {
+                    // SAFETY: as in submit_job.
+                    unsafe { (*lw.queue).push(job) };
+                }
+                self.metrics[lw.index].on_push_n(n as u64);
+            }
+            _ => {
+                self.counters[self.external_cell()].submitted.fetch_add(n as u64, Ordering::Release);
+                let mut jobs = jobs;
+                self.injector.push_batch(&mut jobs);
+            }
+        });
+        if n == 1 {
+            self.ec.notify_one();
+        } else {
+            // One epoch bump + one broadcast instead of n wakes;
+            // excess sleepers re-check their work sources and re-park.
+            self.ec.notify_all();
+        }
+    }
+
+    /// Called on the executing worker after a job finishes.
+    fn finish_job(&self, index: usize) {
+        self.counters[index].completed.fetch_add(1, Ordering::Release);
+        // Cold path: only when a thread is blocked in wait_idle AND
+        // this worker sees no remaining work nearby does it pay the
+        // mutex for a precise wakeup. The waiter re-checks with the
+        // authoritative two-pass scan (1 ms timeout backstop covers
+        // the stale-emptiness-flag corner).
+        if self.idle_waiters.load(Ordering::Acquire) != 0
+            && self.stealers[index].is_empty()
+            && self.injector.is_empty()
+        {
             // Lock/unlock pairs with the check-then-wait in wait_idle.
             drop(self.idle_mutex.lock().unwrap());
             self.idle_cv.notify_all();
         }
     }
 
+    /// Two-pass quiescence test: sum all `completed`, then all
+    /// `submitted`; equality means every job counted as submitted has
+    /// also completed. Any completion the first pass observed had its
+    /// submission observed by the second (submit-inc happens-before
+    /// completion-inc happens-before our acquiring read), so the test
+    /// never reports idle while transitively-spawned work is in
+    /// flight. See the module docs for the full argument.
+    fn quiescent(&self) -> bool {
+        let mut completed = 0u64;
+        for c in &self.counters {
+            completed += c.completed.load(Ordering::Acquire);
+        }
+        let mut submitted = 0u64;
+        for c in &self.counters {
+            submitted += c.submitted.load(Ordering::Acquire);
+        }
+        submitted == completed
+    }
+
     /// One attempt to find work: own deque, then injector, then a
-    /// random-start sweep over the other workers' deques.
+    /// random-start sweep over the other workers' deques (taking up to
+    /// half a victim's run per visit when batched stealing is on).
     /// Returns `(job, saw_retry)`.
     fn find_task(
         &self,
         index: usize,
-        local: &Worker<Job>,
+        local: &Worker<RawTask>,
         rng: &mut XorShift64Star,
-    ) -> (Option<Job>, bool) {
+    ) -> (Option<RawTask>, bool) {
         let m = &self.metrics[index];
         if let Some(job) = local.pop() {
             m.on_pop();
@@ -331,7 +506,20 @@ impl PoolInner {
                 if victim == index {
                     continue;
                 }
-                match self.stealers[victim].steal() {
+                let result = if self.steal_batch {
+                    let (result, extra) = self.stealers[victim].steal_batch_and_pop_counted(local);
+                    if extra > 0 {
+                        m.on_steal_batch(extra as u64);
+                        // The moved tasks enter the local deque and are
+                        // counted as pushes; their eventual pops keep
+                        // executed() covering every task exactly once.
+                        m.on_push_n(extra as u64);
+                    }
+                    result
+                } else {
+                    self.stealers[victim].steal()
+                };
+                match result {
                     Steal::Success(job) => {
                         m.on_steal();
                         return (Some(job), saw_retry);
@@ -353,26 +541,21 @@ impl PoolInner {
         !self.injector.is_empty() || self.stealers.iter().any(|s| !s.is_empty())
     }
 
-    /// Executes one job, containing panics. (Executed counts are
+    /// Executes one job. Closure panics are contained inside the task
+    /// vtable (counted via [`PoolInner::note_panic`]); graph nodes
+    /// contain panics in `graph::execute_node`. (Executed counts are
     /// derived from pop/steal/injector counters — see metrics.rs.)
-    pub(crate) fn run_job(self: &Arc<Self>, index: usize, job: Job) {
-        match job {
-            Job::Closure(f) => {
-                if catch_unwind(AssertUnwindSafe(f)).is_err() {
-                    self.panics.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            Job::Node(run) => crate::graph::execute_node(self, index, run),
-        }
-        self.finish_job();
+    pub(crate) fn run_job(self: &Arc<Self>, index: usize, job: RawTask) {
+        job.run(self, index);
+        self.finish_job(index);
     }
 }
 
-fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<Job>) {
+fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
     LOCAL.with(|l| {
         l.set(Some(LocalWorker {
             pool: Arc::as_ptr(&inner),
-            queue: &queue as *const Worker<Job>,
+            queue: &queue as *const Worker<RawTask>,
             index,
         }))
     });
@@ -528,6 +711,19 @@ mod tests {
     }
 
     #[test]
+    fn boxed_panicking_task_is_contained() {
+        // The spill path must contain panics identically.
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 1,
+            inline_tasks: false,
+            ..PoolConfig::default()
+        });
+        pool.submit(|| panic!("boxed boom"));
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
     fn drop_drains_submitted_work() {
         let count = Arc::new(AtomicUsize::new(0));
         {
@@ -549,6 +745,22 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
         pool.wait_idle();
+    }
+
+    #[test]
+    fn pending_estimate_settles_to_zero() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.pending(), 0);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(count.load(Ordering::Relaxed), 64);
     }
 
     #[test]
@@ -599,5 +811,58 @@ mod tests {
             // Let workers park so the next wave exercises wakeup.
             std::thread::sleep(Duration::from_millis(2));
         }
+    }
+
+    #[test]
+    fn every_optimization_toggle_is_correct() {
+        // The three hot-path optimizations must be behaviour-preserving
+        // individually and in the all-off configuration.
+        let variants: [(&str, PoolConfig); 5] = [
+            ("all-on", PoolConfig::default()),
+            ("boxed-tasks", PoolConfig { inline_tasks: false, ..PoolConfig::default() }),
+            ("single-steal", PoolConfig { steal_batch: false, ..PoolConfig::default() }),
+            ("per-task-wake", PoolConfig { batched_wakeups: false, ..PoolConfig::default() }),
+            (
+                "all-off",
+                PoolConfig {
+                    inline_tasks: false,
+                    steal_batch: false,
+                    batched_wakeups: false,
+                    ..PoolConfig::default()
+                },
+            ),
+        ];
+        for (name, config) in variants {
+            let pool = ThreadPool::with_config(PoolConfig { num_threads: 3, ..config });
+            let count = Arc::new(AtomicUsize::new(0));
+            for _ in 0..1000 {
+                let c = count.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), 1000, "{name}");
+        }
+    }
+
+    #[test]
+    fn batch_submit_from_external_thread() {
+        // submit_job_batch through the injector path: counters, wake,
+        // and delivery must all line up.
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<RawTask> = (0..100)
+            .map(|_| {
+                let c = count.clone();
+                RawTask::closure(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        pool.inner().submit_job_batch(jobs.into_iter());
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.pending(), 0);
     }
 }

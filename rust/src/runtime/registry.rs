@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::client::{Executable, Runtime};
 
@@ -43,7 +43,7 @@ impl ArgSpec {
                 .collect::<Result<_>>()?
         };
         if dtype.is_empty() {
-            bail!("missing dtype in arg spec {s:?}");
+            crate::bail!("missing dtype in arg spec {s:?}");
         }
         Ok(Self { dtype, dims })
     }
@@ -85,7 +85,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactEntry>> {
         }
         let cols: Vec<&str> = line.split('\t').collect();
         if cols.len() != 4 {
-            bail!("manifest line {}: expected 4 tab-separated columns, got {}", lineno + 1, cols.len());
+            crate::bail!("manifest line {}: expected 4 tab-separated columns, got {}", lineno + 1, cols.len());
         }
         entries.push(ArtifactEntry {
             name: cols[0].to_string(),

@@ -1,0 +1,203 @@
+//! Minimal `anyhow`-style error handling, implemented from scratch so
+//! the crate stays std-only (the build is fully offline and the real
+//! `anyhow` crate is not in the vendor set).
+//!
+//! The API mirrors the subset of `anyhow` the crate uses:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain;
+//! * [`Result`] — `Result<T, Error>` alias;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`;
+//! * [`crate::anyhow!`], [`crate::bail!`], [`crate::ensure!`] macros.
+//!
+//! `Display` prints the outermost context; the alternate form (`{:#}`)
+//! prints the whole chain separated by `: `, matching `anyhow`'s
+//! rendering closely enough for log output and tests.
+
+use std::fmt;
+
+/// An error with a chain of context messages, outermost first.
+pub struct Error {
+    /// `chain[0]` is the most recently attached context; the last
+    /// element is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Creates an error from any displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wraps this error with an outer context message.
+    pub fn context(mut self, message: impl fmt::Display) -> Self {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The root cause message (innermost of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors anyhow: any std error converts into `Error` (and `Error`
+// itself deliberately does NOT implement `std::error::Error`, which is
+// what makes this blanket impl coherent).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attaches a context message, turning the failure into [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Constructs an [`Error`] from a format string or displayable value
+/// (the in-crate stand-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Returns early with an [`Error`] built like [`crate::anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Returns early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(format!("{}", inner().unwrap_err()).contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: u32) -> Result<u32> {
+            crate::ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(fails(5).unwrap(), 5);
+        assert_eq!(format!("{}", fails(12).unwrap_err()), "n too big: 12");
+        assert_eq!(format!("{}", fails(3).unwrap_err()), "three is right out");
+        let e = crate::anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("root"));
+    }
+}

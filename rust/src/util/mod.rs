@@ -3,13 +3,16 @@
 //! Everything here is implemented from scratch against `std` only (the
 //! build is fully offline): a fast PRNG for victim selection and workload
 //! generation, a cache-line-padded wrapper to prevent false sharing on
-//! hot atomics, and process-CPU-time measurement for the Fig. 2
-//! reproduction.
+//! hot atomics, process-CPU-time measurement for the Fig. 2
+//! reproduction, and an `anyhow`-style [`error`] module for the
+//! runtime/CLI layers.
 
 mod cache_padded;
 mod cpu_time;
+pub mod error;
 mod rng;
 
 pub use cache_padded::CachePadded;
 pub use cpu_time::{process_cpu_time, thread_count, ProcStat};
+pub use error::{Context, Error};
 pub use rng::{Pcg32, XorShift64Star};

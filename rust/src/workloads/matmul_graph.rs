@@ -13,7 +13,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::graph::TaskGraph;
 use crate::pool::ThreadPool;
@@ -78,7 +78,7 @@ impl BlockedMatmul {
         assert_eq!(a.shape, b.shape, "square blocked matmul only");
         assert_eq!(a.shape[0], a.shape[1]);
         let t = a.shape[0] / tile;
-        anyhow::ensure!(t >= 1 && a.shape[0].is_multiple_of(tile), "matrix not divisible into {tile}-tiles");
+        crate::ensure!(t >= 1 && a.shape[0] % tile == 0, "matrix not divisible into {tile}-tiles");
         let exe = registry
             .get(&format!("matmul_tile_{tile}"))
             .context("matmul tile kernel not in registry")?;
@@ -141,10 +141,10 @@ impl BlockedMatmul {
                 }
             }
         }
-        g.run(pool).map_err(|e| anyhow::anyhow!("graph run failed: {e}"))?;
+        g.run(pool).map_err(|e| crate::anyhow!("graph run failed: {e}"))?;
 
         let errs = errors.lock().unwrap();
-        anyhow::ensure!(errs.is_empty(), "kernel failures: {errs:?}");
+        crate::ensure!(errs.is_empty(), "kernel failures: {errs:?}");
         drop(errs);
 
         let tiles: Vec<Vec<HostTensor>> = (0..t)

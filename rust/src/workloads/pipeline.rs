@@ -12,7 +12,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::graph::{RunOptions, TaskGraph, Tracer};
 use crate::pool::ThreadPool;
@@ -152,16 +152,16 @@ impl Pipeline {
         if let Some(t) = tracer {
             options = options.with_tracer(t);
         }
-        g.run_with_options(pool, options).map_err(|e| anyhow::anyhow!("{e}"))?;
+        g.run_with_options(pool, options).map_err(|e| crate::anyhow!("{e}"))?;
 
         let errs = errors.lock().unwrap();
-        anyhow::ensure!(errs.is_empty(), "stage failures: {errs:?}");
+        crate::ensure!(errs.is_empty(), "stage failures: {errs:?}");
         drop(errs);
 
         // Verify micro-batch 0 against the host oracle.
         let got = activations[0].lock().unwrap().clone();
         let expected = self.forward_host(&inputs[0]);
-        anyhow::ensure!(
+        crate::ensure!(
             got.allclose(&expected, 2e-2, 2e-2),
             "pipeline output mismatch: max diff {}",
             got.max_abs_diff(&expected)
