@@ -18,6 +18,10 @@
 //!    (`PoolConfig::batched_wakeups`) — each switched off against the
 //!    all-on baseline, on a fan-out (binary tree), a chain, and a
 //!    submission-storm workload.
+//! 6. **Graph re-run modes (PR 2)**: the CSR topology arena, run-state
+//!    reuse, and caller-assisted execution toggles (`RunOptions`) live
+//!    in `benches/graph_rerun.rs` (report "ABL-6"), next to the
+//!    re-run latency workload they optimize.
 //!
 //! Knobs: `BENCH_FAST=1`, `THREADS`.
 

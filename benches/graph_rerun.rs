@@ -1,0 +1,114 @@
+//! GR — graph re-run latency (PR 2): a small sealed 64-node
+//! diamond-chain graph re-executed 10k times per sample.
+//!
+//! This is the workload the PR 2 tentpole optimizes: the paper's §4.2
+//! benchmarks run the same `tasks` collection repeatedly, so the
+//! steady-state cost of `run()` on an already-built graph — not graph
+//! construction — is what a task-graph runtime should be judged on.
+//! After sealing, a re-run is: one linear counter sweep + one source
+//! burst + caller-assisted draining, with zero heap allocations
+//! (asserted by `rust/tests/graph_alloc.rs`).
+//!
+//! Two reports land in the ledger (`BENCH_pr2.json`):
+//!
+//! * **GR graph re-run latency** — the default configuration on the
+//!   diamond chain and on a 1024-node linear chain, tracked from this
+//!   PR forward.
+//! * **ABL-6 re-run mode toggles** — the new ablation axis: each of
+//!   the three PR 2 pieces (CSR topology arena, run-state reuse,
+//!   caller assist) switched off independently, plus all off together.
+//!
+//! Knobs: `RERUNS` (default 10000), `THREADS` (default 2),
+//! `BENCH_FAST=1` (also drops RERUNS to 1000).
+
+use std::sync::atomic::Ordering;
+
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
+use scheduling::graph::RunOptions;
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let reruns: usize = std::env::var("RERUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 1_000 } else { 10_000 });
+    let pool = ThreadPool::new(threads);
+
+    // ---- GR: default-configuration re-run latency ------------------
+    let mut report = Report::new(
+        "GR graph re-run latency",
+        format!(
+            "sealed graph re-executed {reruns}x per sample; {threads} threads; \
+             all PR 2 optimizations on; divide medians by {reruns} for per-run cost"
+        ),
+    );
+
+    let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+    g.run(&pool).unwrap(); // warm: sizes queues, builds run state
+    let summary = bench_wall(&opts, || {
+        for _ in 0..reruns {
+            g.run(&pool).unwrap();
+        }
+    });
+    assert!(counter.load(Ordering::Relaxed) >= 64 * reruns);
+    report.push(format!("diamond64 x{reruns}"), "scheduling", summary);
+
+    let chain_reruns = (reruns / 10).max(1);
+    let (mut g, counter) = Dag::linear_chain(1024).to_task_graph(0);
+    g.run(&pool).unwrap();
+    let summary = bench_wall(&opts, || {
+        for _ in 0..chain_reruns {
+            g.run(&pool).unwrap();
+        }
+    });
+    assert!(counter.load(Ordering::Relaxed) >= 1024 * chain_reruns);
+    report.push(format!("chain1024 x{chain_reruns}"), "scheduling", summary);
+
+    report.print();
+    record_json("graph_rerun", "wall", threads, &report);
+
+    // ---- ABL-6: the three PR 2 pieces toggled independently --------
+    let mut report = Report::new(
+        "ABL-6 re-run mode toggles (PR 2)",
+        format!(
+            "diamond64 re-executed {reruns}x per sample; {threads} threads; CSR topology \
+             arena / run-state reuse / caller assist each disabled against all-on"
+        ),
+    );
+    let variants: [(&str, RunOptions); 5] = [
+        ("all-on", RunOptions::new()),
+        ("no-csr-topology", RunOptions::new().topology_cache(false)),
+        ("no-state-reuse", RunOptions::new().state_reuse(false)),
+        ("no-caller-assist", RunOptions::new().caller_assist(false)),
+        (
+            "all-off",
+            RunOptions::new().topology_cache(false).state_reuse(false).caller_assist(false),
+        ),
+    ];
+    let (mut g, _counter) = Dag::diamond_chain(16).to_task_graph(0);
+    for (label, options) in variants {
+        g.run_with_options(&pool, options.clone()).unwrap(); // warm per mode
+        let summary = bench_wall(&opts, || {
+            for _ in 0..reruns {
+                g.run_with_options(&pool, options.clone()).unwrap();
+            }
+        });
+        report.push(format!("diamond64 x{reruns}"), label, summary);
+        eprintln!("  rerun-mode variant {label} done");
+    }
+    report.print();
+    record_json("graph_rerun_modes", "wall", threads, &report);
+
+    let param = format!("diamond64 x{reruns}");
+    for (baseline, shape) in
+        [("all-off", "rerun-opts-win"), ("no-caller-assist", "caller-assist-wins")]
+    {
+        if let Some(r) = report.speedup(&param, "all-on", baseline) {
+            println!("SHAPE {shape}@{param}: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
+        }
+    }
+}

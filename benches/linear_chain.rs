@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use scheduling::baseline::{executor_by_name, Executor};
 use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
+use scheduling::graph::RunOptions;
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::Dag;
 
@@ -30,13 +31,19 @@ fn main() {
 
     let mut report = Report::new(
         "GH-LC linear chain",
-        format!("strict chain of empty tasks; {threads} threads; 'scheduling' = §2.2 graph executor (inline continuations), others = countdown resubmission"),
+        format!(
+            "strict chain of empty tasks; {threads} threads; 'scheduling' = §2.2 graph executor \
+             (inline continuations; PR 2 caller assist means the bench thread also executes \
+             nodes), 'scheduling-noassist' = same executor with the caller condvar-blocked \
+             (THREADS-fair vs the countdown baselines), others = countdown resubmission"
+        ),
     );
 
     for &n in &sizes {
         let dag = Dag::linear_chain(n);
 
-        // Our pool, native graph executor.
+        // Our pool, native graph executor (default modes: sealed CSR
+        // topology, reused run state, caller assist).
         let pool = ThreadPool::new(threads);
         let (mut g, counter) = dag.to_task_graph(0);
         let summary = bench_wall(&opts, || {
@@ -44,6 +51,15 @@ fn main() {
         });
         assert!(counter.load(std::sync::atomic::Ordering::Relaxed) >= n);
         report.push(format!("chain({n})"), "scheduling", summary);
+
+        // Caller-assist off: isolates the PR 2 waiting-mode change so
+        // the comparison against the (caller-blocked) countdown
+        // baselines below stays apples-to-apples.
+        let (mut g, _c) = dag.to_task_graph(0);
+        let summary = bench_wall(&opts, || {
+            g.run_with_options(&pool, RunOptions::new().caller_assist(false)).unwrap();
+        });
+        report.push(format!("chain({n})"), "scheduling-noassist", summary);
 
         // Countdown closures on the comparators (and on our pool, to
         // separate "inline continuation" from "pool quality").

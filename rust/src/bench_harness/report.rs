@@ -149,7 +149,9 @@ pub fn csv_report(report: &Report) -> String {
 
 /// Default path of the perf-trajectory ledger, relative to the bench
 /// process working directory (`cargo bench` runs at the package root).
-pub const BENCH_JSON_DEFAULT: &str = "BENCH_pr1.json";
+/// One ledger per PR: `BENCH_pr1.json` holds the PR 1 baseline; this
+/// PR's runs accumulate in `BENCH_pr2.json` so the two can be diffed.
+pub const BENCH_JSON_DEFAULT: &str = "BENCH_pr2.json";
 
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -188,7 +190,7 @@ fn json_entry(bench: &str, metric: &str, threads: usize, report_title: &str, row
 }
 
 /// Appends `report` to the machine-readable benchmark ledger
-/// (`BENCH_pr1.json` at the package root by default; override the path
+/// (`BENCH_pr2.json` at the package root by default; override the path
 /// with `BENCH_JSON=path`, disable with `BENCH_JSON=0`).
 ///
 /// The ledger is one JSON object with an `entries` array of one-line

@@ -1,11 +1,21 @@
-//! Task-graph construction: nodes, dependencies, validation.
+//! Task-graph construction: nodes, dependencies, validation, and the
+//! sealed CSR topology arena (PR 2).
+//!
+//! A graph is *built* as per-node adjacency `Vec`s (cheap to mutate)
+//! and *run* from a [`Topology`]: one flattened successor arena in CSR
+//! form plus a dense, cache-line-aligned array of pending counters.
+//! The topology is derived lazily on first run (or eagerly via
+//! [`TaskGraph::seal`]) and invalidated by any mutation, exactly like
+//! the cached cycle-check result.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::pool::ThreadPool;
+use crate::util::CachePadded;
 
-use super::executor::{run_graph, RunOptions};
+use super::executor::{run_graph, RunOptions, RunState};
 
 /// Handle to a node of a [`TaskGraph`], returned by [`TaskGraph::add`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -31,6 +41,14 @@ pub enum GraphError {
         /// Panic payload rendered to a string when possible.
         message: String,
     },
+    /// [`TaskGraph::run`] was called from inside a task of the pool it
+    /// targets — whether that task was picked up by a worker thread or
+    /// by a caller-assist helper. The run would need that very
+    /// executor to make progress (and, without caller assistance,
+    /// would block it outright), so this is rejected in **all** build
+    /// profiles rather than deadlocking silently in release. Run
+    /// graphs from external threads, or target a different pool.
+    RunFromWorker,
 }
 
 impl std::fmt::Display for GraphError {
@@ -43,6 +61,11 @@ impl std::fmt::Display for GraphError {
                 Some(n) => write!(f, "task {node} ({n}) panicked: {message}"),
                 None => write!(f, "task {node} panicked: {message}"),
             },
+            GraphError::RunFromWorker => write!(
+                f,
+                "TaskGraph::run called from a worker task of the target pool \
+                 (would deadlock); run the graph from an external thread"
+            ),
         }
     }
 }
@@ -66,6 +89,102 @@ pub(crate) struct Node {
 // SAFETY: `func` is only touched by the one worker that executes the
 // node in a given run (see executor.rs for the protocol argument).
 unsafe impl Sync for Node {}
+
+/// Pending counters per 128-byte [`CachePadded`] block (4-byte
+/// counters). The counter array is the only graph memory the executor
+/// writes on the hot path; giving it whole cache lines of its own
+/// means decrements never false-share with the cold node fields
+/// (closures, names, successor `Vec` headers).
+const PENDING_PER_LINE: usize = 32;
+
+/// The sealed, run-ready form of a graph's dependency structure
+/// (PR 2 tentpole): a CSR successor arena plus dense pending counters.
+///
+/// * `offsets`/`succ_arena` — all per-node `successors: Vec<usize>`
+///   flattened into one contiguous `u32` array; the executor walks
+///   `succ_arena[offsets[i]..offsets[i+1]]` instead of chasing a
+///   heap-scattered `Vec` per node.
+/// * `pending` — the per-run uncompleted-predecessor counters in one
+///   dense, cache-line-aligned allocation, so resetting them is a
+///   single linear sweep and decrementing them touches no cold data.
+/// * `sources` — indices of zero-predecessor nodes, precomputed so a
+///   re-run submits its source burst without building a fresh `Vec`.
+///
+/// Built on first run or by [`TaskGraph::seal`]; dropped by any
+/// mutation (`add*`, `succeed`, `precede`).
+pub(crate) struct Topology {
+    /// CSR row offsets; length `n + 1`.
+    offsets: Vec<u32>,
+    /// Flattened successor lists.
+    succ_arena: Vec<u32>,
+    /// In-degree of each node — the reset image for `pending`.
+    init_pending: Vec<u32>,
+    /// Dense per-node counters, grouped [`PENDING_PER_LINE`] to a
+    /// padded line (see the const's docs).
+    pending: Vec<CachePadded<[AtomicU32; PENDING_PER_LINE]>>,
+    /// Nodes with zero predecessors, as submitted on every run.
+    pub(crate) sources: Vec<u32>,
+}
+
+impl Topology {
+    pub(crate) fn build(nodes: &[Node]) -> Self {
+        let n = nodes.len();
+        let edges: usize = nodes.iter().map(|x| x.successors.len()).sum();
+        assert!(
+            n < u32::MAX as usize && edges < u32::MAX as usize,
+            "graph too large for the u32 CSR topology arena"
+        );
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        let mut total = 0u32;
+        for node in nodes {
+            total += node.successors.len() as u32;
+            offsets.push(total);
+        }
+        let mut succ_arena = Vec::with_capacity(edges);
+        for node in nodes {
+            succ_arena.extend(node.successors.iter().map(|&s| s as u32));
+        }
+        let lines = n.div_ceil(PENDING_PER_LINE);
+        Self {
+            offsets,
+            succ_arena,
+            init_pending: nodes.iter().map(|x| x.num_predecessors as u32).collect(),
+            pending: (0..lines)
+                .map(|_| CachePadded::new(std::array::from_fn(|_| AtomicU32::new(0))))
+                .collect(),
+            sources: (0..n).filter(|&i| nodes[i].num_predecessors == 0).map(|i| i as u32).collect(),
+        }
+    }
+
+    /// Successors of node `i` as a slice of the arena.
+    #[inline]
+    pub(crate) fn successors(&self, i: usize) -> &[u32] {
+        &self.succ_arena[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Uncompleted-predecessor counter of node `i`.
+    #[inline]
+    pub(crate) fn pending(&self, i: usize) -> &AtomicU32 {
+        &(*self.pending[i / PENDING_PER_LINE])[i % PENDING_PER_LINE]
+    }
+
+    /// Re-arms every counter for a new run: one linear sweep over the
+    /// dense array. Relaxed is enough — the happens-before edge to the
+    /// workers that will decrement these is the task submission that
+    /// follows the reset.
+    pub(crate) fn reset_pending(&self) {
+        for (i, &init) in self.init_pending.iter().enumerate() {
+            self.pending(i).store(init, Ordering::Relaxed);
+        }
+    }
+
+    /// Node count this topology was built for.
+    #[allow(dead_code)]
+    pub(crate) fn node_count(&self) -> usize {
+        self.init_pending.len()
+    }
+}
 
 /// A collection of tasks and dependencies between them (paper §4.2).
 ///
@@ -107,6 +226,13 @@ pub struct TaskGraph {
     pub(crate) nodes: Vec<Node>,
     /// Cached cycle-check result; `None` after any mutation.
     validated: Option<Result<(), Vec<usize>>>,
+    /// Sealed CSR topology; `None` until first run / [`TaskGraph::seal`]
+    /// and after any mutation.
+    pub(crate) topology: Option<Topology>,
+    /// Run state reused across runs of a sealed graph, so a re-run
+    /// performs zero heap allocations (see executor.rs). Dropped on
+    /// mutation together with the topology.
+    pub(crate) run_state: Option<Arc<RunState>>,
 }
 
 impl TaskGraph {
@@ -119,8 +245,16 @@ impl TaskGraph {
     pub fn with_capacity(n: usize) -> Self {
         Self {
             nodes: Vec::with_capacity(n),
-            validated: None,
+            ..Self::default()
         }
+    }
+
+    /// Drops every derived structure (validation result, CSR topology,
+    /// reusable run state) — called on any mutation.
+    fn invalidate_caches(&mut self) {
+        self.validated = None;
+        self.topology = None;
+        self.run_state = None;
     }
 
     /// Adds a task — a closure taking no arguments and returning
@@ -135,7 +269,7 @@ impl TaskGraph {
     }
 
     fn add_boxed(&mut self, f: Box<dyn FnMut() + Send>, name: Option<String>) -> NodeId {
-        self.validated = None;
+        self.invalidate_caches();
         let id = self.nodes.len();
         self.nodes.push(Node {
             func: UnsafeCell::new(f),
@@ -154,7 +288,7 @@ impl TaskGraph {
     /// If any id is out of bounds (ids from another graph) or if an
     /// edge would be a self-loop.
     pub fn succeed(&mut self, task: NodeId, deps: &[NodeId]) {
-        self.validated = None;
+        self.invalidate_caches();
         for &d in deps {
             assert!(d.0 < self.nodes.len() && task.0 < self.nodes.len(), "NodeId out of range");
             assert_ne!(d.0, task.0, "a task cannot depend on itself");
@@ -166,7 +300,7 @@ impl TaskGraph {
     /// Declares that `task` runs before every task in `succs`
     /// (the dual of [`TaskGraph::succeed`]).
     pub fn precede(&mut self, task: NodeId, succs: &[NodeId]) {
-        self.validated = None;
+        self.invalidate_caches();
         for &s in succs {
             assert!(s.0 < self.nodes.len() && task.0 < self.nodes.len(), "NodeId out of range");
             assert_ne!(s.0, task.0, "a task cannot depend on itself");
@@ -228,6 +362,31 @@ impl TaskGraph {
         out
     }
 
+    /// Validates the graph and freezes its dependency structure into
+    /// the CSR topology arena (flattened successor lists + dense
+    /// pending counters + precomputed source list).
+    ///
+    /// Sealing is what makes repeated runs cheap: a sealed graph's
+    /// second and later [`TaskGraph::run`] calls perform **zero heap
+    /// allocations** and reset state with one linear counter sweep.
+    /// Running an unsealed graph seals it implicitly on the first run;
+    /// call this eagerly to move the (one-time, O(nodes + edges)) cost
+    /// out of the measured path. Any mutation (`add*`, `succeed`,
+    /// `precede`) un-seals the graph; the next run re-seals it.
+    pub fn seal(&mut self) -> Result<(), GraphError> {
+        self.validate()?;
+        if self.topology.is_none() {
+            self.topology = Some(Topology::build(&self.nodes));
+        }
+        Ok(())
+    }
+
+    /// True if the CSR topology is currently built (i.e. the graph has
+    /// been sealed and not mutated since).
+    pub fn is_sealed(&self) -> bool {
+        self.topology.is_some()
+    }
+
     /// Validates acyclicity (Kahn's algorithm), caching the result
     /// until the graph is next mutated.
     pub fn validate(&mut self) -> Result<(), GraphError> {
@@ -261,11 +420,17 @@ impl TaskGraph {
         }
     }
 
-    /// Runs the graph on `pool`, blocking until every task has
+    /// Runs the graph on `pool`, returning once every task has
     /// executed. The graph can be run again afterwards (counters are
-    /// reset on every run; `FnMut` closures keep their state).
+    /// reset on every run; `FnMut` closures keep their state), and
+    /// repeated runs of a sealed graph are allocation-free — see
+    /// [`TaskGraph::seal`].
     ///
-    /// Must be called from a non-worker thread (it blocks).
+    /// By default the calling thread **assists** the run: it executes
+    /// ready tasks from the pool's queues itself and parks only when
+    /// there is nothing to take (disable with
+    /// [`RunOptions::no_caller_assist`]). Calling this from a worker
+    /// task of the same pool returns [`GraphError::RunFromWorker`].
     pub fn run(&mut self, pool: &ThreadPool) -> Result<(), GraphError> {
         self.run_with_options(pool, RunOptions::default())
     }
@@ -372,6 +537,62 @@ mod tests {
         assert!(dot.contains("n1;"));
         assert!(dot.contains("n0 -> n1;"));
         assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn seal_builds_csr_and_mutation_unseals() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let b = g.add(|| {});
+        let c = g.add(|| {});
+        g.succeed(c, &[a, b]);
+        assert!(!g.is_sealed());
+        g.seal().unwrap();
+        assert!(g.is_sealed());
+        {
+            let t = g.topology.as_ref().unwrap();
+            assert_eq!(t.node_count(), 3);
+            assert_eq!(t.successors(0), &[2]);
+            assert_eq!(t.successors(1), &[2]);
+            assert_eq!(t.successors(2), &[] as &[u32]);
+            assert_eq!(t.sources, vec![0, 1]);
+            t.reset_pending();
+            assert_eq!(t.pending(0).load(Ordering::Relaxed), 0);
+            assert_eq!(t.pending(2).load(Ordering::Relaxed), 2);
+        }
+        // Every mutation kind drops the topology.
+        g.add(|| {});
+        assert!(!g.is_sealed());
+        g.seal().unwrap();
+        g.succeed(NodeId(3), &[c]);
+        assert!(!g.is_sealed());
+        g.seal().unwrap();
+        g.precede(a, &[NodeId(3)]);
+        assert!(!g.is_sealed());
+        // Sealing a cyclic graph fails and leaves it unsealed.
+        g.succeed(a, &[c]); // adds c -> a, closing the a -> c -> a cycle
+        assert!(g.seal().is_err());
+        assert!(!g.is_sealed());
+    }
+
+    #[test]
+    fn topology_pending_counters_span_many_lines() {
+        // More nodes than one padded line holds, so indexing crosses
+        // line boundaries.
+        let mut g = TaskGraph::new();
+        let ids: Vec<_> = (0..100).map(|_| g.add(|| {})).collect();
+        for w in ids.windows(2) {
+            g.succeed(w[1], &[w[0]]);
+        }
+        g.seal().unwrap();
+        let t = g.topology.as_ref().unwrap();
+        t.reset_pending();
+        assert_eq!(t.pending(0).load(Ordering::Relaxed), 0);
+        for i in 1..100 {
+            assert_eq!(t.pending(i).load(Ordering::Relaxed), 1, "node {i}");
+            assert_eq!(t.successors(i - 1), &[i as u32]);
+        }
+        assert_eq!(t.sources, vec![0]);
     }
 
     #[test]

@@ -1,34 +1,80 @@
-//! Task-graph execution (paper §2.2).
+//! Task-graph execution (paper §2.2), optimized for repeated runs
+//! (PR 2).
 //!
 //! When the pool executes a graph node it first runs the wrapped
 //! closure, then for each successor decrements the uncompleted-
 //! predecessor counter. The **first** successor whose counter reaches
 //! zero is executed on the *same worker thread* (an inline
 //! continuation — no deque traffic, no wakeup); every *other* ready
-//! successor is submitted to the pool. A linear chain therefore runs
-//! entirely on one worker as a single pool job.
+//! successor is collected into a burst buffer and published to the
+//! pool as one batch (flushing and refilling the buffer for fan-outs
+//! wider than [`READY_BURST`]). A linear chain therefore runs entirely
+//! on one worker as a single pool job.
+//!
+//! # Re-run hot path (PR 2)
+//!
+//! The paper's §4.2 benchmarks re-run the same `tasks` collection over
+//! and over; three independently toggleable optimizations make that
+//! re-run path allocation-free and context-switch-free:
+//!
+//! 1. **CSR topology arena** ([`RunOptions::no_topology_cache`] to
+//!    disable) — successor lists are flattened into one contiguous
+//!    arena and pending counters into a dense cache-line-aligned array
+//!    (see `builder::Topology`), built on first run or by
+//!    [`TaskGraph::seal`] and reset with one linear sweep.
+//! 2. **Reusable run state** ([`RunOptions::no_state_reuse`]) — the
+//!    `Arc<RunState>` holding the run's remaining/panic/done machinery
+//!    lives in a `TaskGraph`-owned slot and is re-armed in place, so a
+//!    sealed graph's second and later `run()` calls allocate nothing
+//!    (asserted by the counting-allocator test in
+//!    `rust/tests/graph_alloc.rs`).
+//! 3. **Caller-assisted execution** ([`RunOptions::no_caller_assist`])
+//!    — instead of blocking on a condvar while workers do all the
+//!    work, the thread inside `run()` registers as an ephemeral helper
+//!    that executes ready tasks itself (injector first, then stealing)
+//!    and parks on the pool's eventcount only when there is genuinely
+//!    nothing to take. This removes one context switch per run and
+//!    makes single-threaded-pool graph runs latency-competitive with a
+//!    direct loop. Note the helper takes whatever the queues hold, so
+//!    unrelated pool tasks may execute on the calling thread.
 //!
 //! # Memory-safety protocol
 //!
-//! [`run_graph`] blocks until `remaining == 0`, so the raw node-slice
-//! pointer inside [`RunState`] outlives every job of the run (the
-//! `&mut TaskGraph` borrow pins the nodes). Exclusive access to each
-//! node's `FnMut` closure holds because (a) a node is scheduled exactly
-//! once per run — only the worker that decrements its `pending` counter
-//! to zero schedules it, and `fetch_sub` picks a unique such worker —
-//! and (b) all predecessor effects happen-before the node via the
-//! `AcqRel` decrements.
+//! [`run_graph`] returns only once `remaining == 0`, so the raw
+//! node-slice and topology pointers inside [`RunState`]'s header
+//! outlive every job of the run (the `&mut TaskGraph` borrow pins
+//! both). Exclusive access to each node's `FnMut` closure holds
+//! because (a) a node is scheduled exactly once per run — only the
+//! worker that decrements its `pending` counter to zero schedules it,
+//! and `fetch_sub` picks a unique such worker — and (b) all
+//! predecessor effects happen-before the node via the `AcqRel`
+//! decrements.
+//!
+//! Reusing the `RunState` across runs is sound because the mutable
+//! header is rewritten only between runs, when no task of any run can
+//! read it: every header read a task performs is sequenced before that
+//! task's final `remaining` decrement, the caller's wakeup acquires
+//! the last decrement, and the next run's header write is sequenced
+//! after the wakeup — so all reads of run *k* happen-before the write
+//! for run *k + 1*. Stale `Arc<RunState>` clones held briefly by
+//! workers after the final decrement only drop their refcount; they
+//! never touch the header again.
 
+use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use super::builder::{GraphError, Node, TaskGraph};
+use super::builder::{GraphError, Node, TaskGraph, Topology};
 use crate::pool::task::RawTask;
 use crate::pool::thread_pool::PoolInner;
 use crate::pool::ThreadPool;
 
-/// Options controlling one graph run.
+/// Options controlling one graph run. The default is every
+/// optimization ON (the paper's §2.2 behaviour plus the PR 2 re-run
+/// optimizations); each `no_*` flag disables one independently for the
+/// `graph_rerun`/`ablations` benches.
 #[derive(Debug, Clone, Default)]
 pub struct RunOptions {
     /// Execute the first ready successor inline on the same worker
@@ -36,13 +82,25 @@ pub struct RunOptions {
     /// to the pool — the `ablations` bench quantifies the difference.
     /// (Inverted flag so `Default` means the paper's behaviour.)
     pub no_inline_continuation: bool,
+    /// Disable the CSR topology arena: walk the builder's per-node
+    /// successor `Vec`s and per-node `pending` counters instead (the
+    /// seed's layout, kept as the ablation arm).
+    pub no_topology_cache: bool,
+    /// Allocate a fresh `RunState` (and, with the topology cache also
+    /// off, a fresh source list) on every run instead of reusing the
+    /// graph-owned slot — the seed's per-run allocation behaviour.
+    pub no_state_reuse: bool,
+    /// Block the calling thread on a condvar until workers finish the
+    /// run, instead of letting it execute ready tasks itself.
+    pub no_caller_assist: bool,
     /// Record per-node execution spans into this tracer
     /// (see [`super::Tracer`]).
     pub tracer: Option<Arc<super::Tracer>>,
 }
 
 impl RunOptions {
-    /// The paper's §2.2 behaviour (inline continuation on, no tracing).
+    /// The default behaviour: inline continuations, CSR topology,
+    /// state reuse, and caller assistance all on; no tracing.
     pub fn new() -> Self {
         Self::default()
     }
@@ -51,8 +109,26 @@ impl RunOptions {
     pub fn inline(inline_continuation: bool) -> Self {
         Self {
             no_inline_continuation: !inline_continuation,
-            tracer: None,
+            ..Self::default()
         }
+    }
+
+    /// Toggles the CSR topology arena (PR 2 piece 1).
+    pub fn topology_cache(mut self, on: bool) -> Self {
+        self.no_topology_cache = !on;
+        self
+    }
+
+    /// Toggles run-state reuse (PR 2 piece 2).
+    pub fn state_reuse(mut self, on: bool) -> Self {
+        self.no_state_reuse = !on;
+        self
+    }
+
+    /// Toggles caller-assisted execution (PR 2 piece 3).
+    pub fn caller_assist(mut self, on: bool) -> Self {
+        self.no_caller_assist = !on;
+        self
     }
 
     /// Attaches a tracer.
@@ -62,30 +138,71 @@ impl RunOptions {
     }
 }
 
-/// Shared state of one in-flight graph run.
-pub(crate) struct RunState {
+/// The per-run view of the graph: raw pointers into the
+/// `&mut TaskGraph` pinned by [`run_graph`], plus this run's options.
+/// Rewritten at the start of every run (see the module-level protocol
+/// argument for why that is race-free).
+pub(crate) struct RunHeader {
     nodes: *const Node,
     len: usize,
+    /// Null ⇒ the topology cache is disabled for this run; walk the
+    /// builder's per-node `Vec`s instead.
+    topo: *const Topology,
+    options: RunOptions,
+}
+
+impl RunHeader {
+    #[inline]
+    fn node(&self, i: usize) -> &Node {
+        debug_assert!(i < self.len);
+        // SAFETY: i < len and the node slice outlives the run (module
+        // docs).
+        unsafe { &*self.nodes.add(i) }
+    }
+}
+
+/// Shared state of one in-flight graph run, reusable across runs.
+pub(crate) struct RunState {
+    /// See [`RunHeader`]. Written only by `run_graph` between runs;
+    /// read only by tasks of the current run.
+    header: UnsafeCell<RunHeader>,
     /// Nodes not yet finished; the run is complete at zero.
     remaining: AtomicUsize,
+    /// SeqCst completion flag — the caller-assist wait condition. The
+    /// SeqCst store before `notify_all` and the SeqCst load after
+    /// `prepare_wait` slot into the eventcount's total order, so a
+    /// helper that registers after the final notify still observes
+    /// `true` on its re-check (same argument as `event_count.rs`).
+    done: AtomicBool,
     /// First panic observed, if any: (node index, rendered message).
     panic: Mutex<Option<(usize, String)>>,
     done_mutex: Mutex<bool>,
     done_cv: Condvar,
-    options: RunOptions,
 }
 
-// SAFETY: the node slice is pinned for the lifetime of the run by
-// run_graph's blocking contract; Node is Sync (see builder.rs).
+// SAFETY: the pointed-to node slice and topology are pinned for the
+// lifetime of the run by run_graph's blocking contract; Node is Sync
+// (see builder.rs) and Topology's shared surface is atomics + shared
+// slices. Header mutation is confined to the quiescent window between
+// runs (module docs).
 unsafe impl Send for RunState {}
 unsafe impl Sync for RunState {}
 
 impl RunState {
-    #[inline]
-    fn node(&self, i: usize) -> &Node {
-        debug_assert!(i < self.len);
-        // SAFETY: i < len and the slice outlives the run (see above).
-        unsafe { &*self.nodes.add(i) }
+    pub(crate) fn new() -> Self {
+        RunState {
+            header: UnsafeCell::new(RunHeader {
+                nodes: ptr::null(),
+                len: 0,
+                topo: ptr::null(),
+                options: RunOptions::default(),
+            }),
+            remaining: AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            done_mutex: Mutex::new(false),
+            done_cv: Condvar::new(),
+        }
     }
 }
 
@@ -97,23 +214,33 @@ pub(crate) struct NodeRun {
 }
 
 /// Ready successors collected per executed node before being published
-/// as one submission burst. Wider fan-outs spill to direct submission;
-/// 32 covers every workload in the bench suite except the synthetic
-/// wide-fanout tests, which exercise the spill path on purpose.
+/// as one submission burst. Fan-outs wider than the buffer flush it as
+/// a full batch and keep filling, so arbitrarily wide fan-outs stay at
+/// one counter bump + one wake per `READY_BURST` successors.
 const READY_BURST: usize = 32;
 
 /// Executes `run.node`, then chains ready successors per §2.2.
-/// Called from the node-task vtable (`pool::task`) on a worker.
+/// Called from the node-task vtable (`pool::task`) on a worker, or on
+/// a caller-assist helper thread (`worker_index` is then the pool's
+/// helper metrics lane).
 pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: NodeRun) {
     let state = run.state;
+    // SAFETY: the header is immutable for the whole run this task
+    // belongs to (see the module-level protocol argument).
+    let header = unsafe { &*state.header.get() };
+    // SAFETY: non-null topo points at the graph-owned Topology, pinned
+    // like the node slice until the run completes.
+    let topo: Option<&Topology> = unsafe { header.topo.as_ref() };
+    let no_inline = header.options.no_inline_continuation;
+    let caller_assist = !header.options.no_caller_assist;
     let mut current = run.node;
     loop {
-        let node = state.node(current);
+        let node = header.node(current);
 
         // 1. Execute the wrapped function (paper: "it first executes
         //    the wrapped function"), containing panics so counters
         //    still advance and the run cannot deadlock.
-        let span = state.options.tracer.as_ref().map(|t| {
+        let span = header.options.tracer.as_ref().map(|t| {
             t.span(
                 worker_index,
                 match &node.name {
@@ -139,31 +266,54 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
 
         // 2. Decrement each successor's uncompleted-predecessor count.
         //    First ready successor continues inline; the rest are
-        //    collected and submitted to the pool as ONE burst (a single
-        //    pending-counter bump and a single wake for a fan-out of N,
-        //    instead of N of each) — unless batched wakeups are
-        //    disabled, in which case submit_job_batch degrades to the
-        //    seed's per-successor submission for the ablation bench.
+        //    buffered and submitted as bursts (a single pending-counter
+        //    bump and a single wake per burst instead of per task) —
+        //    unless batched wakeups are disabled in the PoolConfig, in
+        //    which case submit_job_batch degrades to the seed's
+        //    per-successor submission for the ablation bench.
         let mut inline_next: Option<usize> = None;
         let mut ready = [0usize; READY_BURST];
         let mut nready = 0usize;
-        for &succ in &node.successors {
-            // AcqRel: the final decrement acquires every predecessor's
-            // release, ordering all predecessor effects before the
-            // successor's execution.
-            if state.node(succ).pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                if !state.options.no_inline_continuation && inline_next.is_none() {
+        {
+            let mut on_ready = |succ: usize| {
+                if !no_inline && inline_next.is_none() {
                     inline_next = Some(succ);
-                } else if nready < READY_BURST {
-                    ready[nready] = succ;
-                    nready += 1;
-                } else {
-                    // Fan-out wider than the burst buffer (rare):
-                    // overflow is submitted directly.
-                    pool.submit_job(RawTask::node(NodeRun {
-                        state: state.clone(),
-                        node: succ,
+                    return;
+                }
+                if nready == READY_BURST {
+                    // Buffer full (fan-out wider than READY_BURST):
+                    // flush the whole burst as one batch and refill, so
+                    // wide fan-outs keep the one-bump/one-wake batching
+                    // instead of degrading to per-successor submission.
+                    pool.submit_job_batch(ready.iter().map(|&node| {
+                        RawTask::node(NodeRun {
+                            state: state.clone(),
+                            node,
+                        })
                     }));
+                    nready = 0;
+                }
+                ready[nready] = succ;
+                nready += 1;
+            };
+            // AcqRel on the decrements: the final decrement acquires
+            // every predecessor's release, ordering all predecessor
+            // effects before the successor's execution.
+            match topo {
+                Some(t) => {
+                    for &succ in t.successors(current) {
+                        let succ = succ as usize;
+                        if t.pending(succ).fetch_sub(1, Ordering::AcqRel) == 1 {
+                            on_ready(succ);
+                        }
+                    }
+                }
+                None => {
+                    for &succ in &node.successors {
+                        if header.node(succ).pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            on_ready(succ);
+                        }
+                    }
                 }
             }
         }
@@ -177,13 +327,21 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
         }
 
         // 3. Mark this node complete. After this point we must not
-        //    touch `node` again: if it was the last one, run_graph may
-        //    wake and invalidate the node slice.
+        //    touch `node`, `header`, or `topo` again: if this was the
+        //    last node, run_graph may wake, invalidate the pointers,
+        //    and even start the next run (rewriting the header).
         if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let mut done = state.done_mutex.lock().unwrap();
-            *done = true;
-            drop(done);
-            state.done_cv.notify_all();
+            state.done.store(true, Ordering::SeqCst);
+            if caller_assist {
+                // The caller waits on the pool's eventcount; wake it
+                // (workers that wake spuriously just re-park).
+                pool.notify_all_workers();
+            } else {
+                let mut done = state.done_mutex.lock().unwrap();
+                *done = true;
+                drop(done);
+                state.done_cv.notify_all();
+            }
         }
 
         match inline_next {
@@ -196,7 +354,7 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     }
 }
 
-/// Runs `graph` on `pool`, blocking until all nodes have executed.
+/// Runs `graph` on `pool`, returning once all nodes have executed.
 pub(crate) fn run_graph(
     graph: &mut TaskGraph,
     pool: &ThreadPool,
@@ -206,52 +364,108 @@ pub(crate) fn run_graph(
     if n == 0 {
         return Ok(());
     }
-    debug_assert!(
-        pool.current_worker().is_none(),
-        "TaskGraph::run called from a worker task of the same pool (would deadlock)"
-    );
-
-    // Reset per-run counters (the graph is reusable, paper §4.2 runs
-    // the same `tasks` collection repeatedly).
-    for node in &graph.nodes {
-        node.pending.store(node.num_predecessors, Ordering::Relaxed);
+    if pool.current_worker().is_some() || pool.inner().on_assisting_thread() {
+        // A worker blocking (or helping) on its own pool's run can
+        // deadlock the pool; reject in every build profile. The
+        // assisting-thread check keeps the answer deterministic: a
+        // pool task that calls `run` on its own pool errors whether a
+        // worker or a caller-assist helper happened to pick it up.
+        return Err(GraphError::RunFromWorker);
     }
 
-    let state = Arc::new(RunState {
-        nodes: graph.nodes.as_ptr(),
-        len: n,
-        remaining: AtomicUsize::new(n),
-        panic: Mutex::new(None),
-        done_mutex: Mutex::new(false),
-        done_cv: Condvar::new(),
-        options,
-    });
+    let use_topo = !options.no_topology_cache;
+    let caller_assist = !options.no_caller_assist;
 
-    // Submit every source (zero predecessors) as one burst — a graph
-    // with S independent sources wakes the pool once, not S times.
-    // Validation guarantees at least one source exists for a non-empty
-    // acyclic graph.
-    let sources: Vec<usize> = graph
-        .nodes
-        .iter()
-        .enumerate()
-        .filter(|(_, node)| node.num_predecessors == 0)
-        .map(|(i, _)| i)
-        .collect();
-    pool.inner().submit_job_batch(sources.iter().map(|&node| {
-        RawTask::node(NodeRun {
-            state: state.clone(),
-            node,
-        })
-    }));
-
-    // Block until the run drains. This pins `graph.nodes` for the
-    // whole run — the soundness linchpin of the raw pointer above.
-    let mut done = state.done_mutex.lock().unwrap();
-    while !*done {
-        done = state.done_cv.wait(done).unwrap();
+    // (1) Topology: build the CSR arena if this run uses it and the
+    //     graph is not already sealed.
+    if use_topo && graph.topology.is_none() {
+        graph.topology = Some(Topology::build(&graph.nodes));
     }
-    drop(done);
+
+    // (2) Reset per-run pending counters (the graph is reusable, paper
+    //     §4.2 runs the same `tasks` collection repeatedly): one linear
+    //     sweep over the dense array, or the per-node fallback.
+    if use_topo {
+        graph.topology.as_ref().unwrap().reset_pending();
+    } else {
+        for node in &graph.nodes {
+            node.pending.store(node.num_predecessors, Ordering::Relaxed);
+        }
+    }
+
+    // (3) Run state: re-arm the graph-owned slot (zero allocations on
+    //     re-run), or allocate fresh for the ablation arm.
+    let state = if options.no_state_reuse {
+        Arc::new(RunState::new())
+    } else {
+        graph.run_state.get_or_insert_with(|| Arc::new(RunState::new())).clone()
+    };
+    let topo_ptr: *const Topology = match (use_topo, graph.topology.as_ref()) {
+        (true, Some(t)) => t as *const Topology,
+        _ => ptr::null(),
+    };
+    // SAFETY: no task of a previous run can still read the header (its
+    // reads happened-before the final `remaining` decrement we already
+    // observed when that run's wait returned — module docs), and tasks
+    // of this run are only created below, after the write.
+    unsafe {
+        *state.header.get() = RunHeader {
+            nodes: graph.nodes.as_ptr(),
+            len: n,
+            topo: topo_ptr,
+            options,
+        };
+    }
+    state.done.store(false, Ordering::SeqCst);
+    if !caller_assist {
+        *state.done_mutex.lock().unwrap() = false;
+    }
+    // The submission below publishes this store to workers.
+    state.remaining.store(n, Ordering::Relaxed);
+
+    // (4) Submit every source (zero predecessors) as one burst — a
+    //     graph with S independent sources wakes the pool once, not S
+    //     times. Validation guarantees at least one source exists for a
+    //     non-empty acyclic graph. The sealed path reuses the
+    //     precomputed source list; the fallback builds it fresh.
+    if use_topo {
+        let topo = graph.topology.as_ref().unwrap();
+        pool.inner().submit_job_batch(topo.sources.iter().map(|&node| {
+            RawTask::node(NodeRun {
+                state: state.clone(),
+                node: node as usize,
+            })
+        }));
+    } else {
+        let sources: Vec<usize> = graph
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, node)| node.num_predecessors == 0)
+            .map(|(i, _)| i)
+            .collect();
+        pool.inner().submit_job_batch(sources.iter().map(|&node| {
+            RawTask::node(NodeRun {
+                state: state.clone(),
+                node,
+            })
+        }));
+    }
+
+    // (5) Wait for the run to drain. Either way this pins
+    //     `graph.nodes` (and the topology) for the whole run — the
+    //     soundness linchpin of the raw pointers above.
+    if caller_assist {
+        // Help instead of sleeping: execute ready tasks on this thread
+        // until the run completes (see PoolInner::assist_until).
+        pool.inner().assist_until(|| state.done.load(Ordering::SeqCst));
+    } else {
+        let mut done = state.done_mutex.lock().unwrap();
+        while !*done {
+            done = state.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+    }
 
     let panic = state.panic.lock().unwrap().take();
     match panic {
@@ -367,6 +581,9 @@ mod tests {
             g.run(&pool).unwrap();
             assert_eq!(counter.load(Relaxed), run * 11);
         }
+        // The run state and topology were created once and reused.
+        assert!(g.is_sealed());
+        assert!(g.run_state.is_some());
     }
 
     #[test]
@@ -428,6 +645,104 @@ mod tests {
     }
 
     #[test]
+    fn every_toggle_combination_is_correct() {
+        // The three PR 2 re-run optimizations (topology cache, state
+        // reuse, caller assist) plus inline continuation must be
+        // behaviour-preserving in every combination.
+        let pool = ThreadPool::new(2);
+        for mask in 0..16u32 {
+            let options = RunOptions {
+                no_inline_continuation: mask & 1 != 0,
+                no_topology_cache: mask & 2 != 0,
+                no_state_reuse: mask & 4 != 0,
+                no_caller_assist: mask & 8 != 0,
+                tracer: None,
+            };
+            let counter = Arc::new(AtomicUsize::new(0));
+            let mut g = TaskGraph::new();
+            // Chain of diamonds: a -> (b, c) -> d -> ...
+            let mut tail: Option<crate::graph::NodeId> = None;
+            for _ in 0..8 {
+                let mk = |add: usize, c: &Arc<AtomicUsize>| {
+                    let c = c.clone();
+                    move || {
+                        c.fetch_add(add, Relaxed);
+                    }
+                };
+                let a = g.add(mk(1, &counter));
+                let b = g.add(mk(1, &counter));
+                let c = g.add(mk(1, &counter));
+                let d = g.add(mk(1, &counter));
+                g.succeed(b, &[a]);
+                g.succeed(c, &[a]);
+                g.succeed(d, &[b, c]);
+                if let Some(t) = tail {
+                    g.succeed(a, &[t]);
+                }
+                tail = Some(d);
+            }
+            for rep in 1..=3 {
+                g.run_with_options(&pool, options.clone()).unwrap();
+                assert_eq!(counter.load(Relaxed), rep * 32, "mask={mask:#06b} rep={rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_from_worker_errors_in_all_profiles() {
+        let pool = Arc::new(ThreadPool::new(1));
+        let p = pool.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit(move || {
+            let mut g = TaskGraph::new();
+            g.add(|| {});
+            tx.send(matches!(g.run(&p), Err(GraphError::RunFromWorker))).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            "run from a worker task must return GraphError::RunFromWorker"
+        );
+        pool.wait_idle();
+        // The pool (and graph runs from outside) remain usable.
+        let mut g = TaskGraph::new();
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = hit.clone();
+        g.add(move || {
+            h.fetch_add(1, Relaxed);
+        });
+        g.run(&pool).unwrap();
+        assert_eq!(hit.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_run_from_a_node_errors_on_worker_and_helper_alike() {
+        // A graph node that tries to run another graph on the SAME
+        // pool must get RunFromWorker deterministically — no matter
+        // whether a worker thread or the caller-assist helper happened
+        // to execute it.
+        let pool = Arc::new(ThreadPool::new(1));
+        let p = pool.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut outer = TaskGraph::new();
+        outer.add(move || {
+            let mut inner = TaskGraph::new();
+            inner.add(|| {});
+            tx.send(matches!(inner.run(&p), Err(GraphError::RunFromWorker))).unwrap();
+        });
+        for rep in 0..8 {
+            outer.run(&pool).unwrap();
+            assert!(
+                rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+                "nested run must error (rep {rep})"
+            );
+        }
+        // From a plain external thread the same pool still accepts runs.
+        let mut g = TaskGraph::new();
+        g.add(|| {});
+        g.run(&pool).unwrap();
+    }
+
+    #[test]
     fn panicking_node_reported_and_graph_completes() {
         let after = Arc::new(AtomicUsize::new(0));
         let mut g = TaskGraph::new();
@@ -450,6 +765,12 @@ mod tests {
         }
         // Successors of the panicked node still ran (documented policy).
         assert_eq!(after.load(Relaxed), 1);
+        // A rerun of the same (reused) state reports the fresh panic,
+        // not a stale one.
+        match g.run(&pool) {
+            Err(GraphError::TaskPanicked { node, .. }) => assert_eq!(node, 0),
+            other => panic!("expected panic error on rerun, got {other:?}"),
+        }
     }
 
     #[test]
@@ -481,5 +802,80 @@ mod tests {
         let pool = ThreadPool::new(4);
         g.run(&pool).unwrap();
         assert_eq!(sum.load(Relaxed), 1200);
+    }
+
+    #[test]
+    fn fanout_past_ready_burst_flushes_in_batches() {
+        // Fan-out far wider than READY_BURST, with inline continuation
+        // disabled so every ready successor goes through the burst
+        // buffer — exercising the flush-and-refill overflow path on
+        // both topology modes, across reruns.
+        for no_topology_cache in [false, true] {
+            let options = RunOptions {
+                no_inline_continuation: true,
+                no_topology_cache,
+                ..RunOptions::default()
+            };
+            let width = 4 * READY_BURST + 7;
+            let sum = Arc::new(AtomicUsize::new(0));
+            let mut g = TaskGraph::new();
+            let src = g.add(|| {});
+            let sink = {
+                let sum = sum.clone();
+                g.add(move || {
+                    sum.fetch_add(1_000_000, Relaxed);
+                })
+            };
+            for _ in 0..width {
+                let sum = sum.clone();
+                let mid = g.add(move || {
+                    sum.fetch_add(1, Relaxed);
+                });
+                g.succeed(mid, &[src]);
+                g.succeed(sink, &[mid]);
+            }
+            let pool = ThreadPool::new(3);
+            for rep in 1..=3 {
+                g.run_with_options(&pool, options.clone()).unwrap();
+                assert_eq!(
+                    sum.load(Relaxed),
+                    rep * (1_000_000 + width),
+                    "csr-off={no_topology_cache} rep={rep}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sealed_graph_survives_mutation_and_rerun() {
+        // Mutating a sealed graph invalidates the CSR cache; the next
+        // run rebuilds it and the new structure is honoured.
+        let log = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+        let mut g = TaskGraph::new();
+        let a = {
+            let log = log.clone();
+            g.add(move || log.lock().unwrap().push("a"))
+        };
+        let b = {
+            let log = log.clone();
+            g.add(move || log.lock().unwrap().push("b"))
+        };
+        g.succeed(b, &[a]);
+        g.seal().unwrap();
+        let pool = ThreadPool::new(2);
+        g.run(&pool).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b"]);
+
+        // Mutate: append c after b; the old topology must not be used.
+        log.lock().unwrap().clear();
+        let c = {
+            let log = log.clone();
+            g.add(move || log.lock().unwrap().push("c"))
+        };
+        g.succeed(c, &[b]);
+        assert!(!g.is_sealed());
+        g.run(&pool).unwrap();
+        assert!(g.is_sealed());
+        assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c"]);
     }
 }

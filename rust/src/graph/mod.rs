@@ -8,6 +8,15 @@
 //! same worker thread**, submitting the rest to the pool — the paper's
 //! §2.2 continuation rule, which keeps chain-shaped graphs on one
 //! worker with zero queue traffic.
+//!
+//! Repeated runs are the fast path (PR 2): sealing a graph
+//! ([`TaskGraph::seal`], or implicitly on first run) flattens the
+//! dependency structure into a CSR successor arena with dense
+//! cache-line-aligned pending counters, the run's bookkeeping lives in
+//! a graph-owned reusable slot, and the calling thread assists the run
+//! instead of sleeping — so a sealed graph's second and later `run()`
+//! calls perform **zero heap allocations** and no handoff context
+//! switch. Each piece is independently toggleable via [`RunOptions`].
 
 mod builder;
 mod dataflow;

@@ -25,6 +25,13 @@
 //! counter cell, and wakeups are throttled to an O(1) load unless a
 //! worker is actually parked. `benches/ablations.rs` toggles each of
 //! these optimizations independently via [`PoolConfig`].
+//!
+//! Besides the workers, external threads can temporarily execute pool
+//! tasks as **helpers**: a caller-assisted graph run
+//! (`graph::RunOptions`, PR 2) drains the injector and steals from
+//! workers on the calling thread instead of sleeping, with its metrics
+//! on a shared extra lane (the last entry of
+//! [`ThreadPool::metrics`]'s snapshot).
 
 pub mod deque;
 pub mod event_count;

@@ -92,8 +92,8 @@ impl ThreadPool {
         F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
     {
         debug_assert!(
-            self.current_worker().is_none(),
-            "ThreadPool::scope called from a worker task of the same pool (would deadlock)"
+            self.current_worker().is_none() && !self.inner().on_assisting_thread(),
+            "ThreadPool::scope called from inside a task of the same pool (would deadlock)"
         );
         let state = Arc::new(ScopeState {
             active: AtomicUsize::new(0),

@@ -18,9 +18,11 @@
 //!   inline by construction — a compile-time assertion guards this.
 //!
 //! Dispatch is a two-entry vtable (`call`, `drop`) monomorphized per
-//! closure type; `call` receives the pool and worker index so graph
-//! nodes can chain successors and closure panics can be counted
-//! without re-boxing any context.
+//! closure type; `call` receives the pool and the executing lane index
+//! (a worker index, or the pool's shared helper lane when a
+//! caller-assist thread runs the task — see `thread_pool::assist_until`)
+//! so graph nodes can chain successors and closure panics can be
+//! counted without re-boxing any context.
 
 use std::marker::PhantomData;
 use std::mem::{self, ManuallyDrop, MaybeUninit};

@@ -119,6 +119,12 @@ struct LocalWorker {
 
 thread_local! {
     static LOCAL: Cell<Option<LocalWorker>> = const { Cell::new(None) };
+    /// Pool this thread is currently *assisting* (a caller-assist
+    /// graph run executing tasks on the submitting thread); null when
+    /// not assisting. Lets the graph executor reject nested
+    /// `TaskGraph::run` calls on the same pool deterministically — the
+    /// same task must error whether a worker or a helper picked it up.
+    static ASSISTING: Cell<*const ()> = const { Cell::new(std::ptr::null()) };
 }
 
 /// Clears the TLS registration even if the worker loop unwinds.
@@ -130,6 +136,30 @@ impl Drop for LocalGuard {
     }
 }
 
+/// Marks the current thread as assisting `pool` for the guard's
+/// lifetime, restoring the previous value on drop (assist scopes for
+/// different pools can nest: a helper-executed task may legitimately
+/// run a graph on a *different* pool).
+struct AssistGuard {
+    prev: *const (),
+}
+
+impl AssistGuard {
+    fn enter(pool: &PoolInner) -> Self {
+        let ptr = pool as *const PoolInner as *const ();
+        AssistGuard {
+            prev: ASSISTING.with(|a| a.replace(ptr)),
+        }
+    }
+}
+
+impl Drop for AssistGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        ASSISTING.with(|a| a.set(prev));
+    }
+}
+
 /// One shard of the distributed pending-work counter. Monotone
 /// counters (never decremented) are what make the two-pass quiescence
 /// scan sound — see the module docs.
@@ -137,7 +167,8 @@ impl Drop for LocalGuard {
 /// Writer discipline: cell `i < n` is written only by worker `i`
 /// (submissions it makes, completions it executes), so the hot path
 /// never contends on a shared line; cell `n` takes submissions from
-/// non-worker threads (off the hot path) and is never `completed`.
+/// non-worker threads and completions from caller-assist helper
+/// threads (`run_helper_job`) — both off the worker hot path.
 #[derive(Default)]
 struct PendingCell {
     submitted: AtomicU64,
@@ -207,7 +238,10 @@ impl ThreadPool {
         let inner = Arc::new(PoolInner {
             injector,
             stealers,
-            metrics: (0..n).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
+            // `n + 1` blocks: one per worker plus the shared helper
+            // lane used by caller-assist threads (graph runs executing
+            // tasks on the submitting thread) — see helper_lane().
+            metrics: (0..n + 1).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
             ec: EventCount::new(),
             counters: (0..n + 1).map(|_| CachePadded::new(PendingCell::default())).collect(),
             panics: AtomicU64::new(0),
@@ -252,12 +286,15 @@ impl ThreadPool {
     /// Blocks until every submitted job (and every job those jobs
     /// submitted, transitively) has finished.
     ///
-    /// Must be called from a non-worker thread; calling it from inside
-    /// a task of this pool would deadlock and panics in debug builds.
+    /// Must be called from outside the pool's tasks; calling it from
+    /// inside a task of this pool — whether that task is executing on
+    /// a worker thread or on a caller-assist helper — would deadlock
+    /// (the calling task's own completion is never counted while it
+    /// blocks) and panics in debug builds.
     pub fn wait_idle(&self) {
         debug_assert!(
-            !self.inner.on_worker_thread(),
-            "wait_idle called from a worker task of the same pool"
+            !self.inner.on_worker_thread() && !self.inner.on_assisting_thread(),
+            "wait_idle called from inside a task of the same pool"
         );
         let inner = &*self.inner;
         if inner.quiescent() {
@@ -309,7 +346,10 @@ impl ThreadPool {
         self.inner.panics.load(Ordering::Relaxed)
     }
 
-    /// Snapshot of scheduler metrics across workers.
+    /// Snapshot of scheduler metrics across workers. The last entry is
+    /// the shared **helper lane**: work executed by caller-assist
+    /// threads (graph runs helping from the submitting thread) rather
+    /// than by a pool worker.
     pub fn metrics(&self) -> PoolSnapshot {
         PoolSnapshot {
             workers: self.inner.metrics.iter().map(|m| m.snapshot()).collect(),
@@ -539,6 +579,111 @@ impl PoolInner {
     /// parking; conservative — may say true spuriously).
     fn any_work(&self) -> bool {
         !self.injector.is_empty() || self.stealers.iter().any(|s| !s.is_empty())
+    }
+
+    /// Metrics index of the shared helper lane (caller-assist threads).
+    #[inline]
+    pub(crate) fn helper_lane(&self) -> usize {
+        self.stealers.len()
+    }
+
+    /// True if the current thread is inside an [`PoolInner::assist_until`]
+    /// scope for *this* pool — i.e. a task picked up by a caller-assist
+    /// helper is executing. Used (together with worker-thread detection)
+    /// to reject nested graph runs on the same pool.
+    pub(crate) fn on_assisting_thread(&self) -> bool {
+        ASSISTING.with(|a| std::ptr::eq(a.get(), self as *const PoolInner as *const ()))
+    }
+
+    /// Wakes every parked worker *and* any caller-assist thread parked
+    /// on the eventcount (the graph executor's run-complete signal).
+    pub(crate) fn notify_all_workers(&self) {
+        self.ec.notify_all();
+    }
+
+    /// One find-task attempt for a caller-assist helper: injector
+    /// first (graph sources and helper-submitted successors land
+    /// there), then a random-start single-task steal sweep. Helpers
+    /// own no deque, so no batched stealing. Returns `(job, saw_retry)`.
+    fn helper_find_task(&self, rng: &mut XorShift64Star) -> (Option<RawTask>, bool) {
+        let m = &self.metrics[self.helper_lane()];
+        if let Some(job) = self.injector.pop() {
+            m.on_injector_pop();
+            return (Some(job), false);
+        }
+        let n = self.stealers.len();
+        let start = rng.next_below(n);
+        let mut saw_retry = false;
+        for k in 0..n {
+            match self.stealers[(start + k) % n].steal() {
+                Steal::Success(job) => {
+                    m.on_steal();
+                    return (Some(job), saw_retry);
+                }
+                Steal::Retry => {
+                    m.on_steal_failure();
+                    saw_retry = true;
+                }
+                Steal::Empty => {}
+            }
+        }
+        (None, saw_retry)
+    }
+
+    /// Executes one job on a helper (non-worker) thread: metrics go to
+    /// the shared helper lane and the completion to the external
+    /// counter cell, keeping the two-pass quiescence scan balanced.
+    fn run_helper_job(self: &Arc<Self>, job: RawTask) {
+        job.run(self, self.helper_lane());
+        self.counters[self.external_cell()].completed.fetch_add(1, Ordering::Release);
+        // Mirror finish_job's wait_idle nudge (helpers have no own
+        // deque to check).
+        if self.idle_waiters.load(Ordering::Acquire) != 0 && self.injector.is_empty() {
+            drop(self.idle_mutex.lock().unwrap());
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// Caller-assisted execution (graph executor, PR 2): runs pool
+    /// tasks on the **calling** thread until `done()` reports true,
+    /// parking on the eventcount only when there is genuinely nothing
+    /// to take. The caller must not be a worker of this pool.
+    ///
+    /// `done` must become true through pool task execution (the graph
+    /// run's final decrement) and be followed by
+    /// [`PoolInner::notify_all_workers`]; the SeqCst store/load pair
+    /// plus the eventcount's prepare/re-check protocol then guarantee
+    /// a parked helper observes it. A 1 ms timeout backstop (same as
+    /// `wait_idle`) makes liveness independent of that reasoning.
+    ///
+    /// Note: helpers execute whatever the queues hold, so tasks
+    /// unrelated to the caller's graph run may execute on this thread.
+    pub(crate) fn assist_until(self: &Arc<Self>, done: impl Fn() -> bool) {
+        debug_assert!(!self.on_worker_thread(), "assist_until on a worker thread");
+        let _assisting = AssistGuard::enter(self);
+        let mut rng = XorShift64Star::from_entropy();
+        loop {
+            if done() {
+                return;
+            }
+            let (job, saw_retry) = self.helper_find_task(&mut rng);
+            if let Some(job) = job {
+                self.run_helper_job(job);
+                continue;
+            }
+            if saw_retry {
+                // A victim deque is mid-operation; back off a touch and
+                // retry without parking.
+                std::hint::spin_loop();
+                continue;
+            }
+            let token = self.ec.prepare_wait();
+            if done() || self.any_work() {
+                self.ec.cancel_wait(token);
+                continue;
+            }
+            self.ec.commit_wait_timeout(token, Duration::from_millis(1));
+        }
     }
 
     /// Executes one job. Closure panics are contained inside the task
@@ -844,6 +989,34 @@ mod tests {
             pool.wait_idle();
             assert_eq!(count.load(Ordering::Relaxed), 1000, "{name}");
         }
+    }
+
+    #[test]
+    fn metrics_include_shared_helper_lane() {
+        // n worker lanes + 1 helper lane for caller-assist threads.
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.metrics().workers.len(), 3);
+        assert_eq!(pool.inner().helper_lane(), 2);
+    }
+
+    #[test]
+    fn assist_until_executes_queued_work_on_calling_thread() {
+        // Pool with zero spinning and a task queued while we assist:
+        // the helper must be able to drain it (possibly racing the
+        // workers) and return as soon as `done` flips.
+        let pool = ThreadPool::new(1);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let c = count.clone();
+        pool.inner().assist_until(move || c.load(Ordering::Relaxed) >= 64);
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
     }
 
     #[test]

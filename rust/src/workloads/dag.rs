@@ -108,6 +108,29 @@ impl Dag {
         }
     }
 
+    /// A chain of `k` diamonds: `a -> (b, c) -> d -> a' -> ...`
+    /// (4k nodes) — mixes fan-out, fan-in, and inline-continuation
+    /// hops in a tiny graph. This is the `graph_rerun` microbench
+    /// workload (PR 2) and the zero-allocation test's shape.
+    pub fn diamond_chain(diamonds: usize) -> Self {
+        let n = diamonds * 4;
+        let mut adj = vec![Vec::new(); n];
+        for d in 0..diamonds {
+            let a = 4 * d;
+            adj[a].push(a + 1);
+            adj[a].push(a + 2);
+            adj[a + 1].push(a + 3);
+            adj[a + 2].push(a + 3);
+            if d + 1 < diamonds {
+                adj[a + 3].push(a + 4);
+            }
+        }
+        Self {
+            adj,
+            kind: format!("diamonds({diamonds})"),
+        }
+    }
+
     /// 2-D wavefront: a `g × g` grid where cell `(i, j)` depends on
     /// `(i-1, j)` and `(i, j-1)` — the classic dynamic-programming
     /// dependency pattern (Smith–Waterman, Cholesky tiles, ...).
@@ -178,6 +201,11 @@ impl Dag {
                 g.precede(ids[i], &succ_ids);
             }
         }
+        // Seal eagerly: benches re-run these graphs, and sealing moves
+        // the one-time CSR topology build out of the measured path. (A
+        // cyclic Dag — not producible by our generators — just stays
+        // unsealed; `run()` re-validates and reports the cycle.)
+        let _ = g.seal();
         (g, counter)
     }
 
@@ -260,6 +288,24 @@ mod tests {
         let deg = d.in_degrees();
         assert_eq!(deg[0], 0);
         assert!(deg[1..].iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn diamond_chain_shape() {
+        let d = Dag::diamond_chain(16);
+        assert_eq!(d.len(), 64);
+        // Per diamond: 4 internal edges; 15 chaining edges.
+        assert_eq!(d.num_edges(), 16 * 4 + 15);
+        let deg = d.in_degrees();
+        assert_eq!(deg[0], 0); // the only source
+        assert_eq!(deg[3], 2); // fan-in node
+        assert_eq!(deg[4], 1); // next diamond's head
+        let (mut g, counter) = d.to_task_graph(0);
+        assert!(g.is_sealed(), "to_task_graph seals eagerly");
+        let pool = ThreadPool::new(2);
+        g.run(&pool).unwrap();
+        g.run(&pool).unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 128);
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Zero-allocation re-run guarantee (PR 2 acceptance criterion).
+//!
+//! A sealed graph's second and subsequent `run()` calls must perform
+//! **zero heap allocations**: the CSR topology, the source list, and
+//! the `RunState` are all built on (or before) the first run and
+//! reused; node tasks are `RawTask`s that store inline; and queue
+//! capacity (injector `VecDeque`, worker deques) is retained from the
+//! warmup runs.
+//!
+//! The test binary installs a counting global allocator, so this file
+//! contains exactly ONE test: the libtest harness would otherwise run
+//! neighbouring tests on other threads concurrently and pollute the
+//! process-wide counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use scheduling::graph::RunOptions;
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+/// Counts every allocation (alloc / alloc_zeroed / realloc) made by
+/// the process; frees are not interesting here.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+#[test]
+fn sealed_rerun_makes_zero_heap_allocations() {
+    let pool = ThreadPool::new(2);
+    // 64-node diamond chain — the `graph_rerun` microbench workload.
+    // `to_task_graph` seals the graph eagerly.
+    let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+    assert!(g.is_sealed());
+
+    // Both wait modes must be allocation-free on the steady state;
+    // measure each after its own warmup (first runs may size queue
+    // capacity, lazily init locks, etc.).
+    let variants = [
+        ("caller-assist", RunOptions::new()),
+        ("condvar-wait", RunOptions::new().caller_assist(false)),
+    ];
+    let mut expected = 0usize;
+    for (label, options) in variants {
+        for _ in 0..5 {
+            g.run_with_options(&pool, options.clone()).unwrap();
+            expected += 64;
+        }
+        // Quiesce so stray worker activity from the warmup cannot leak
+        // into the measured window.
+        pool.wait_idle();
+
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            g.run_with_options(&pool, options.clone()).unwrap();
+            expected += 64;
+        }
+        let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            allocs, 0,
+            "{label}: sealed re-runs must not allocate (saw {allocs} allocations in 10 runs)"
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), expected, "{label}: node executions");
+    }
+
+    // Sanity: the machinery is actually counting.
+    let before = ALLOCS.load(Ordering::SeqCst);
+    drop(std::hint::black_box(Box::new([0u8; 64])));
+    assert!(ALLOCS.load(Ordering::SeqCst) > before, "allocator counter is wired up");
+}

@@ -126,6 +126,130 @@ fn inline_and_resubmit_schedules_agree() {
 }
 
 #[test]
+fn rerun_mode_toggles_agree_on_random_dags() {
+    // The PR 2 re-run optimizations (CSR topology cache, run-state
+    // reuse, caller assist) must be pure scheduling changes: every
+    // combination yields exactly-once execution in topological order,
+    // run after run.
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0x5EA1);
+    for case in 0..6 {
+        let n = 30 + rng.next_below(100) as usize;
+        let adj = random_dag(&mut rng, n, 8, 0.25);
+        for mask in 0..8u32 {
+            let options = RunOptions {
+                no_topology_cache: mask & 1 != 0,
+                no_state_reuse: mask & 2 != 0,
+                no_caller_assist: mask & 4 != 0,
+                ..RunOptions::default()
+            };
+            let (mut g, runs, stamps, _clock) = build_graph(&adj);
+            for rep in 1..=3 {
+                g.run_with_options(&pool, options.clone()).unwrap();
+                for i in 0..n {
+                    assert_eq!(
+                        runs[i].load(Ordering::SeqCst),
+                        rep,
+                        "case {case} mask {mask:#05b} node {i} after {rep} runs"
+                    );
+                }
+                for (i, succs) in adj.iter().enumerate() {
+                    for &s in succs {
+                        assert!(
+                            stamps[i].load(Ordering::SeqCst) < stamps[s].load(Ordering::SeqCst),
+                            "case {case} mask {mask:#05b} edge {i}->{s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sealed_topology_cache_invalidated_by_mutation() {
+    // Mutating a sealed graph (add + succeed) must drop the CSR cache:
+    // the next run has to honour the new nodes and the new edges, not
+    // the frozen ones.
+    let pool = ThreadPool::new(2);
+    let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mk = |i: usize, log: &Arc<Mutex<Vec<usize>>>| {
+        let log = log.clone();
+        move || log.lock().unwrap().push(i)
+    };
+    let mut g = TaskGraph::new();
+    let n0 = g.add(mk(0, &log));
+    let n1 = g.add(mk(1, &log));
+    let n2 = g.add(mk(2, &log));
+    g.succeed(n1, &[n0]);
+    g.succeed(n2, &[n1]);
+    g.seal().unwrap();
+    assert!(g.is_sealed());
+    g.run(&pool).unwrap();
+    assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+
+    // `add` un-seals: a brand-new node must run on the next run.
+    let n3 = g.add(mk(3, &log));
+    assert!(!g.is_sealed());
+    // `succeed` on the re-sealed graph also un-seals it again.
+    g.seal().unwrap();
+    g.succeed(n3, &[n2]);
+    assert!(!g.is_sealed());
+
+    for rep in 2..=4 {
+        log.lock().unwrap().clear();
+        g.run(&pool).unwrap();
+        assert!(g.is_sealed(), "run re-seals");
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3], "rep {rep}");
+    }
+}
+
+#[test]
+fn concurrent_runs_of_different_graphs_from_external_threads() {
+    // One pool, several external threads, each repeatedly running its
+    // OWN graph (with caller assist on by default, so helpers may even
+    // execute each other's nodes). Every graph must stay exactly-once
+    // and topologically ordered per run.
+    let pool = Arc::new(ThreadPool::new(3));
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let adj = random_dag(&mut rng, 60 + t * 10, 6, 0.3);
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let n = adj.len();
+                let (mut g, runs, stamps, _clock) = build_graph(&adj);
+                for rep in 1..=8 {
+                    g.run(&pool).unwrap();
+                    for i in 0..n {
+                        assert_eq!(runs[i].load(Ordering::SeqCst), rep, "thread {t} node {i}");
+                    }
+                    for (i, succs) in adj.iter().enumerate() {
+                        for &s in succs {
+                            assert!(
+                                stamps[i].load(Ordering::SeqCst) < stamps[s].load(Ordering::SeqCst),
+                                "thread {t} edge {i}->{s} rep {rep}"
+                            );
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // The pool survives and is still usable.
+    let ok = Arc::new(AtomicUsize::new(0));
+    let o = ok.clone();
+    pool.submit(move || {
+        o.fetch_add(1, Ordering::SeqCst);
+    });
+    pool.wait_idle();
+    assert_eq!(ok.load(Ordering::SeqCst), 1);
+}
+
+#[test]
 fn random_panics_never_deadlock() {
     let pool = ThreadPool::new(2);
     let mut rng = Pcg32::seeded(1234);
