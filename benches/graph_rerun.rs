@@ -9,14 +9,20 @@
 //! burst + caller-assisted draining, with zero heap allocations
 //! (asserted by `rust/tests/graph_alloc.rs`).
 //!
-//! Two reports land in the ledger (`BENCH_pr2.json`):
+//! Three reports land in the ledger (`BENCH_pr3.json`):
 //!
 //! * **GR graph re-run latency** — the default configuration on the
-//!   diamond chain and on a 1024-node linear chain, tracked from this
-//!   PR forward.
-//! * **ABL-6 re-run mode toggles** — the new ablation axis: each of
-//!   the three PR 2 pieces (CSR topology arena, run-state reuse,
+//!   diamond chain and on a 1024-node linear chain, tracked from PR 2
+//!   forward.
+//! * **ABL-6 re-run mode toggles** — the PR 2 ablation axis: each of
+//!   the three re-run pieces (CSR topology arena, run-state reuse,
 //!   caller assist) switched off independently, plus all off together.
+//! * **GR-async in-flight pipelining (PR 3)** — the same sealed
+//!   diamond-chain workload driven through `run_async` handles: one
+//!   graph launched-then-waited (handle overhead vs the blocking
+//!   path), and N ∈ {2, 8} graphs kept in flight from the one bench
+//!   thread (`workloads::MultiRun`), where pipelining across graphs is
+//!   the point of the async API.
 //!
 //! Knobs: `RERUNS` (default 10000), `THREADS` (default 2),
 //! `BENCH_FAST=1` (also drops RERUNS to 1000).
@@ -26,7 +32,7 @@ use std::sync::atomic::Ordering;
 use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
 use scheduling::graph::RunOptions;
 use scheduling::pool::ThreadPool;
-use scheduling::workloads::Dag;
+use scheduling::workloads::{Dag, MultiRun};
 
 fn main() {
     let opts = BenchOptions::from_env();
@@ -56,6 +62,10 @@ fn main() {
     });
     assert!(counter.load(Ordering::Relaxed) >= 64 * reruns);
     report.push(format!("diamond64 x{reruns}"), "scheduling", summary);
+    // Reused below as the GR-async "sync-1" baseline — same workload,
+    // same configuration, so re-measuring it would only double the
+    // bench time and let run-to-run noise split two identical numbers.
+    let diamond_sync = summary;
 
     let chain_reruns = (reruns / 10).max(1);
     let (mut g, counter) = Dag::linear_chain(1024).to_task_graph(0);
@@ -108,6 +118,94 @@ fn main() {
         [("all-off", "rerun-opts-win"), ("no-caller-assist", "caller-assist-wins")]
     {
         if let Some(r) = report.speedup(&param, "all-on", baseline) {
+            println!("SHAPE {shape}@{param}: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
+        }
+    }
+
+    // ---- GR-async: handles, one graph and N graphs in flight --------
+    // Per-variant totals are normalized to the same number of NODE
+    // executions (64 * reruns), so medians are directly comparable:
+    // sync-1 re-runs one graph `reruns` times, async-N runs N graphs
+    // `reruns / N` rounds.
+    // Align the per-sample total to a multiple of 8 so every variant
+    // (1, 2, or 8 graphs in flight) executes exactly the same number
+    // of node executions; the default RERUNS values already are, so
+    // this only kicks in for a hand-picked RERUNS.
+    let async_reruns = (reruns / 8).max(1) * 8;
+    let mut report = Report::new(
+        "GR-async in-flight pipelining (PR 3)",
+        format!(
+            "64-node sealed diamond chains, {} node executions per sample, {threads} \
+             threads; sync-1 = blocking assisted run loop (bench thread helps: \
+             THREADS+1 executing threads — see the README fairness note), \
+             sync-1-noassist = condvar-blocked run loop (THREADS threads, the \
+             thread-fair baseline for the async rows), async-1 = run_async+wait \
+             per run, async-N = N handles in flight per round (MultiRun); handle \
+             waiters never assist",
+            64 * async_reruns
+        ),
+    );
+    let param = format!("diamond64x{async_reruns}-total");
+    if async_reruns == reruns {
+        // Same workload and configuration as the GR diamond series —
+        // reuse that measurement instead of paying for it twice.
+        report.push(param.clone(), "sync-1", diamond_sync);
+    } else {
+        let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+        g.run(&pool).unwrap();
+        let summary = bench_wall(&opts, || {
+            for _ in 0..async_reruns {
+                g.run(&pool).unwrap();
+            }
+        });
+        assert!(counter.load(Ordering::Relaxed) >= 64 * async_reruns);
+        report.push(param.clone(), "sync-1", summary);
+    }
+
+    // Thread-fair sync baseline: the caller blocks without executing
+    // nodes, exactly like an async handle waiter.
+    let noassist = RunOptions::new().caller_assist(false);
+    let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+    g.run_with_options(&pool, noassist.clone()).unwrap();
+    let summary = bench_wall(&opts, || {
+        for _ in 0..async_reruns {
+            g.run_with_options(&pool, noassist.clone()).unwrap();
+        }
+    });
+    assert!(counter.load(Ordering::Relaxed) >= 64 * async_reruns);
+    report.push(param.clone(), "sync-1-noassist", summary);
+
+    let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+    g.run_async(&pool).unwrap().wait().unwrap();
+    let summary = bench_wall(&opts, || {
+        for _ in 0..async_reruns {
+            g.run_async(&pool).unwrap().wait().unwrap();
+        }
+    });
+    assert!(counter.load(Ordering::Relaxed) >= 64 * async_reruns);
+    report.push(param.clone(), "async-1", summary);
+
+    for in_flight in [2usize, 8] {
+        let rounds = async_reruns / in_flight; // exact: async_reruns is a multiple of 8
+        let mut mr = MultiRun::new(in_flight, 16, 0);
+        mr.run_round(&pool).unwrap(); // warm per fleet
+        let summary = bench_wall(&opts, || {
+            mr.run_rounds(&pool, rounds).unwrap();
+        });
+        assert!(mr.verify_exactly_once(), "async-{in_flight}: exactly-once violated");
+        report.push(param.clone(), format!("async-{in_flight}"), summary);
+        eprintln!("  async variant async-{in_flight} done");
+    }
+    report.print();
+    record_json("graph_rerun_async", "wall", threads, &report);
+
+    // Both comparisons are thread-fair: every series here except
+    // sync-1 runs with non-executing waiters.
+    for (series, baseline, shape) in [
+        ("async-8", "async-1", "async-pipelining"),
+        ("async-1", "sync-1-noassist", "async-handle-overhead"),
+    ] {
+        if let Some(r) = report.speedup(&param, series, baseline) {
             println!("SHAPE {shape}@{param}: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
         }
     }

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use crate::pool::ThreadPool;
 use crate::util::CachePadded;
 
-use super::executor::{run_graph, RunOptions, RunState};
+use super::executor::{run_graph, run_graph_async, RunHandle, RunOptions, RunState};
 
 /// Handle to a node of a [`TaskGraph`], returned by [`TaskGraph::add`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -227,8 +227,13 @@ pub struct TaskGraph {
     /// Cached cycle-check result; `None` after any mutation.
     validated: Option<Result<(), Vec<usize>>>,
     /// Sealed CSR topology; `None` until first run / [`TaskGraph::seal`]
-    /// and after any mutation.
-    pub(crate) topology: Option<Topology>,
+    /// and after any mutation. Boxed so its address is stable under
+    /// moves of the `TaskGraph` itself: an in-flight run's header
+    /// points at it, and a forgotten [`RunHandle`] releases the graph
+    /// borrow early — a move runs no code, so only heap-pinned run
+    /// structures (this box, the `nodes` buffer) are sound to point
+    /// into (see executor.rs's protocol docs).
+    pub(crate) topology: Option<Box<Topology>>,
     /// Run state reused across runs of a sealed graph, so a re-run
     /// performs zero heap allocations (see executor.rs). Dropped on
     /// mutation together with the topology.
@@ -251,7 +256,16 @@ impl TaskGraph {
 
     /// Drops every derived structure (validation result, CSR topology,
     /// reusable run state) — called on any mutation.
+    ///
+    /// If a forgotten [`RunHandle`] (`mem::forget` skips its blocking
+    /// `Drop`) left a run of this graph in flight, freeing the
+    /// topology or node closures under running tasks would be
+    /// use-after-free — so this first waits for that run to complete.
+    /// In the normal handle lifecycle the check is two atomic loads.
     fn invalidate_caches(&mut self) {
+        if let Some(state) = &self.run_state {
+            state.wait_quiesce();
+        }
         self.validated = None;
         self.topology = None;
         self.run_state = None;
@@ -376,7 +390,7 @@ impl TaskGraph {
     pub fn seal(&mut self) -> Result<(), GraphError> {
         self.validate()?;
         if self.topology.is_none() {
-            self.topology = Some(Topology::build(&self.nodes));
+            self.topology = Some(Box::new(Topology::build(&self.nodes)));
         }
         Ok(())
     }
@@ -440,6 +454,72 @@ impl TaskGraph {
     pub fn run_with_options(&mut self, pool: &ThreadPool, options: RunOptions) -> Result<(), GraphError> {
         self.validate()?;
         run_graph(self, pool, options)
+    }
+
+    /// Launches the graph on `pool` **without blocking**, returning a
+    /// [`RunHandle`] that pins the graph borrow for the lifetime of
+    /// the run (PR 3). One external thread can keep many graphs in
+    /// flight by holding one handle per graph:
+    ///
+    /// ```
+    /// use scheduling::graph::TaskGraph;
+    /// use scheduling::pool::ThreadPool;
+    /// use std::sync::Arc;
+    /// use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let hits = Arc::new(AtomicUsize::new(0));
+    /// let mut graphs: Vec<TaskGraph> = (0..4)
+    ///     .map(|_| {
+    ///         let mut g = TaskGraph::new();
+    ///         let h = hits.clone();
+    ///         g.add(move || { h.fetch_add(1, Relaxed); });
+    ///         g
+    ///     })
+    ///     .collect();
+    /// // All four runs are in flight at once; waiting drains them.
+    /// let handles: Vec<_> =
+    ///     graphs.iter_mut().map(|g| g.run_async(&pool).unwrap()).collect();
+    /// for h in handles {
+    ///     h.wait().unwrap();
+    /// }
+    /// assert_eq!(hits.load(Relaxed), 4);
+    /// ```
+    ///
+    /// Completion is observed through the handle (`is_done`,
+    /// `try_wait`, `wait`, or `.await`); dropping the handle blocks
+    /// until the run is quiescent. Sealed graphs re-launched through a
+    /// handle stay zero-allocation exactly like blocking re-runs.
+    /// Like [`TaskGraph::run`], calling this from inside a task of the
+    /// same pool returns [`GraphError::RunFromWorker`].
+    pub fn run_async(&mut self, pool: &ThreadPool) -> Result<RunHandle<'_>, GraphError> {
+        self.run_async_with_options(pool, RunOptions::default())
+    }
+
+    /// [`TaskGraph::run_async`] with explicit [`RunOptions`].
+    /// `no_state_reuse` and `no_caller_assist` are ignored for async
+    /// runs (the handle always uses the graph-owned state slot, and
+    /// handle waiters park instead of assisting — see [`RunOptions`]).
+    pub fn run_async_with_options(
+        &mut self,
+        pool: &ThreadPool,
+        options: RunOptions,
+    ) -> Result<RunHandle<'_>, GraphError> {
+        self.validate()?;
+        run_graph_async(self, pool, options)
+    }
+}
+
+impl Drop for TaskGraph {
+    /// Waits for any still-in-flight run before the nodes and topology
+    /// are freed. Reachable only through `mem::forget` of a
+    /// [`RunHandle`] (a live handle borrows the graph, and both
+    /// blocking runs and handle `Drop` return only at quiescence); in
+    /// every normal lifecycle this is two atomic loads.
+    fn drop(&mut self) {
+        if let Some(state) = &self.run_state {
+            state.wait_quiesce();
+        }
     }
 }
 

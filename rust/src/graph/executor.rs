@@ -1,5 +1,5 @@
 //! Task-graph execution (paper §2.2), optimized for repeated runs
-//! (PR 2).
+//! (PR 2) and extended with non-blocking run handles (PR 3).
 //!
 //! When the pool executes a graph node it first runs the wrapped
 //! closure, then for each successor decrements the uncompleted-
@@ -23,11 +23,12 @@
 //!    (see `builder::Topology`), built on first run or by
 //!    [`TaskGraph::seal`] and reset with one linear sweep.
 //! 2. **Reusable run state** ([`RunOptions::no_state_reuse`]) — the
-//!    `Arc<RunState>` holding the run's remaining/panic/done machinery
-//!    lives in a `TaskGraph`-owned slot and is re-armed in place, so a
-//!    sealed graph's second and later `run()` calls allocate nothing
-//!    (asserted by the counting-allocator test in
-//!    `rust/tests/graph_alloc.rs`).
+//!    `Arc<RunState>` holding the run's remaining/panic/completion
+//!    machinery lives in a `TaskGraph`-owned slot and is re-armed in
+//!    place, so a sealed graph's second and later `run()` calls
+//!    allocate nothing (asserted by the counting-allocator test in
+//!    `rust/tests/graph_alloc.rs` — for the blocking, caller-assist
+//!    and async-handle paths alike).
 //! 3. **Caller-assisted execution** ([`RunOptions::no_caller_assist`])
 //!    — instead of blocking on a condvar while workers do all the
 //!    work, the thread inside `run()` registers as an ephemeral helper
@@ -38,33 +39,100 @@
 //!    direct loop. Note the helper takes whatever the queues hold, so
 //!    unrelated pool tasks may execute on the calling thread.
 //!
+//! # Async run handles (PR 3)
+//!
+//! [`TaskGraph::run_async`] splits `run()` into its two halves — launch
+//! and completion-wait — and hands the second half back to the caller
+//! as a [`RunHandle`]: the sources are submitted exactly as for a
+//! blocking run, but instead of parking, `run_async` returns
+//! immediately. One external thread can therefore keep many graphs in
+//! flight (one handle per graph; see `workloads::MultiRun`), poll them
+//! (`is_done`/`try_wait`), block on one (`wait`), or `.await` them
+//! ([`RunHandle`] implements [`Future`] via a waker slot on the
+//! done-path). Handle waiters park on a **dedicated run eventcount**
+//! (`PoolInner::wait_run`) so they never swallow the work-arrival
+//! wakeups meant for workers.
+//!
+//! Async runs always use the graph-owned reusable `RunState` slot
+//! (`no_state_reuse` is ignored) and never assist (`no_caller_assist`
+//! is ignored) — the handle, not the blocked caller, is the run's
+//! anchor.
+//!
 //! # Memory-safety protocol
 //!
-//! [`run_graph`] returns only once `remaining == 0`, so the raw
-//! node-slice and topology pointers inside [`RunState`]'s header
-//! outlive every job of the run (the `&mut TaskGraph` borrow pins
-//! both). Exclusive access to each node's `FnMut` closure holds
-//! because (a) a node is scheduled exactly once per run — only the
-//! worker that decrements its `pending` counter to zero schedules it,
-//! and `fetch_sub` picks a unique such worker — and (b) all
-//! predecessor effects happen-before the node via the `AcqRel`
-//! decrements.
+//! The raw node-slice and topology pointers inside [`RunState`]'s
+//! header must outlive every job of a run. What pins them depends on
+//! the wait mode:
+//!
+//! * **blocking runs** — [`run_graph`] returns only once the run has
+//!   completed, so the `&mut TaskGraph` borrow pins both for the whole
+//!   run;
+//! * **async runs** — the [`RunHandle`] holds the `&mut TaskGraph`
+//!   borrow, and its `Drop` blocks until the run is quiescent, so the
+//!   borrow cannot end (and the CSR arena cannot be freed or rebuilt)
+//!   under running tasks;
+//! * **forgotten handles** — `mem::forget(handle)` skips the blocking
+//!   `Drop` and releases the borrow early. Every operation that could
+//!   invalidate run-pinned memory afterwards (mutation via
+//!   `invalidate_caches`, a new launch re-arming the header, and
+//!   `TaskGraph`'s own `Drop`) first waits for
+//!   `completed >= generation` on the slot state, so even a leaked
+//!   handle cannot lead to a rewrite or free under running tasks.
+//!   (Async runs are restricted to the graph-owned slot precisely so
+//!   this backstop sees every possibly-in-flight run.) A plain *move*
+//!   of the graph runs no code at all, so the header may only point
+//!   into run structures whose addresses survive moves of the
+//!   `TaskGraph` value: the node slice lives in `Vec`-owned heap
+//!   memory and the topology is boxed for exactly this reason.
+//!
+//! Exclusive access to each node's `FnMut` closure holds because (a) a
+//! node is scheduled exactly once per run — only the worker that
+//! decrements its `pending` counter to zero schedules it, and
+//! `fetch_sub` picks a unique such worker — and (b) all predecessor
+//! effects happen-before the node via the `AcqRel` decrements.
 //!
 //! Reusing the `RunState` across runs is sound because the mutable
 //! header is rewritten only between runs, when no task of any run can
-//! read it: every header read a task performs is sequenced before that
-//! task's final `remaining` decrement, the caller's wakeup acquires
-//! the last decrement, and the next run's header write is sequenced
-//! after the wakeup — so all reads of run *k* happen-before the write
-//! for run *k + 1*. Stale `Arc<RunState>` clones held briefly by
-//! workers after the final decrement only drop their refcount; they
-//! never touch the header again.
+//! read it. Completion is recorded by a **monotone generation pair**
+//! rather than a resettable flag: launch *k* stores
+//! `generation = k` before submitting sources, the final decrement of
+//! run *k* stores `completed = k` (SeqCst), and every waiter — assist
+//! helper, handle waiter, `Future` poll, condvar sleeper, or the
+//! forget backstop — waits for `completed >= k`. Every header read a
+//! task performs is sequenced before that task's final `remaining`
+//! decrement, the waiter acquires the `completed` store, and run
+//! *k + 1*'s header write is sequenced after the wait returns — so all
+//! reads of run *k* happen-before the write for run *k + 1*. Because
+//! `completed` never goes backwards there is no "reset the done flag"
+//! window, and a stale handle from run *k* (which checks
+//! `completed >= k`) can never observe run *k + 1*'s completion as its
+//! own, nor can a fresh handle for run *k + 1* (checking
+//! `completed >= k + 1`) be satisfied by run *k*'s record. Stale
+//! `Arc<RunState>` clones held briefly by workers after the final
+//! decrement only drop their refcount; they never touch the header
+//! again.
+//!
+//! The completion side fans out to every waiter kind the run may have:
+//! the pool's worker eventcount (assist mode), the dedicated run
+//! eventcount (handle waiters), the registered [`Waker`] (async
+//! `.await`), and the state's condvar (`no_caller_assist` waiters and
+//! the forget backstop). Each unused channel costs one load. The
+//! waker handshake is a store-buffering pair: `poll` publishes the
+//! waker and *then* re-checks `completed` (both SeqCst); the completer
+//! stores `completed` and *then* checks the waker flag (both SeqCst) —
+//! at least one side must observe the other, so a wakeup cannot be
+//! lost. Both protocols (header-rewrite quiescence and the
+//! completion/waker handshake) are model-checked under loom in
+//! `rust/tests/loom_model.rs`.
 
 use std::cell::UnsafeCell;
+use std::future::Future;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::pin::Pin;
 use std::ptr;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::task::{Context, Poll, Waker};
 
 use super::builder::{GraphError, Node, TaskGraph, Topology};
 use crate::pool::task::RawTask;
@@ -89,9 +157,14 @@ pub struct RunOptions {
     /// Allocate a fresh `RunState` (and, with the topology cache also
     /// off, a fresh source list) on every run instead of reusing the
     /// graph-owned slot — the seed's per-run allocation behaviour.
+    /// Ignored by [`TaskGraph::run_async`]: async runs always use the
+    /// reusable slot (the handle's generation check and the
+    /// forgotten-handle backstop both key off it).
     pub no_state_reuse: bool,
     /// Block the calling thread on a condvar until workers finish the
-    /// run, instead of letting it execute ready tasks itself.
+    /// run, instead of letting it execute ready tasks itself. Ignored
+    /// by [`TaskGraph::run_async`]: handle waiters park on the run
+    /// eventcount and never assist.
     pub no_caller_assist: bool,
     /// Record per-node execution spans into this tracer
     /// (see [`super::Tracer`]).
@@ -139,9 +212,10 @@ impl RunOptions {
 }
 
 /// The per-run view of the graph: raw pointers into the
-/// `&mut TaskGraph` pinned by [`run_graph`], plus this run's options.
-/// Rewritten at the start of every run (see the module-level protocol
-/// argument for why that is race-free).
+/// `&mut TaskGraph` pinned by the run's anchor (blocked caller or
+/// [`RunHandle`]), plus this run's options. Rewritten at the start of
+/// every run (see the module-level protocol argument for why that is
+/// race-free).
 pub(crate) struct RunHeader {
     nodes: *const Node,
     len: usize,
@@ -161,30 +235,65 @@ impl RunHeader {
     }
 }
 
+/// Which waiter kind a run's completion must wake (stored in
+/// [`RunState::wake_mode`], written only in the quiescent launch
+/// window). The waker slot and the condvar are checked
+/// unconditionally — they are flag-gated loads — so these modes only
+/// select the *eventcount* to poke.
+const WAKE_EC: u8 = 0; // sync caller-assist run: the workers' eventcount
+const WAKE_RUN_EC: u8 = 1; // async handle: the dedicated run eventcount
+const WAKE_CONDVAR: u8 = 2; // sync condvar run: no eventcount at all
+
 /// Shared state of one in-flight graph run, reusable across runs.
 pub(crate) struct RunState {
-    /// See [`RunHeader`]. Written only by `run_graph` between runs;
-    /// read only by tasks of the current run.
+    /// See [`RunHeader`]. Written only between runs (the quiescent
+    /// launch window); read only by tasks of the current run.
     header: UnsafeCell<RunHeader>,
     /// Nodes not yet finished; the run is complete at zero.
     remaining: AtomicUsize,
-    /// SeqCst completion flag — the caller-assist wait condition. The
-    /// SeqCst store before `notify_all` and the SeqCst load after
-    /// `prepare_wait` slot into the eventcount's total order, so a
-    /// helper that registers after the final notify still observes
-    /// `true` on its re-check (same argument as `event_count.rs`).
-    done: AtomicBool,
+    /// Generation of the run the header currently describes. Written
+    /// only in the quiescent launch window; monotonically increasing.
+    generation: AtomicU64,
+    /// Highest generation that has fully completed (monotone; SeqCst —
+    /// the completion flag every waiter keys off). `completed >= g`
+    /// means run `g` is done; because it never goes backwards there is
+    /// no reset window and stale/fresh handles cannot confuse runs
+    /// (module docs).
+    completed: AtomicU64,
+    /// Which eventcount (if any) completion must poke; see the
+    /// `WAKE_*` constants.
+    wake_mode: AtomicU8,
     /// First panic observed, if any: (node index, rendered message).
+    /// Cleared at launch so an unharvested panic from a dropped handle
+    /// cannot leak into the next run's result.
     panic: Mutex<Option<(usize, String)>>,
-    done_mutex: Mutex<bool>,
+    /// Threads blocked in [`RunState::wait_sync`] (condvar-mode waiters
+    /// and the forgotten-handle quiesce backstop); gates the
+    /// completion-side condvar notify to one load when unused.
+    sync_waiters: AtomicUsize,
+    done_mutex: Mutex<()>,
     done_cv: Condvar,
+    /// Waker registered by [`RunHandle`]'s `Future` impl, if any.
+    waker: Mutex<Option<Waker>>,
+    /// Publication flag for `waker` — the SeqCst half of the
+    /// store-buffering handshake with the completion path (module
+    /// docs).
+    has_waker: AtomicBool,
+    /// The pool the current run targets (written in the quiescent
+    /// launch window). Only the forgotten-handle backstop reads it:
+    /// [`RunState::wait_quiesce`] must drain pool tasks instead of
+    /// parking when called from a thread that is itself executing a
+    /// task of that pool (see `PoolInner::wait_run`), and a condvar
+    /// park there would deadlock a single-worker pool.
+    pool: Mutex<Weak<PoolInner>>,
 }
 
 // SAFETY: the pointed-to node slice and topology are pinned for the
-// lifetime of the run by run_graph's blocking contract; Node is Sync
-// (see builder.rs) and Topology's shared surface is atomics + shared
+// lifetime of the run by the run anchor (blocked caller, live handle,
+// or the quiesce backstop — module docs); Node is Sync (see
+// builder.rs) and Topology's shared surface is atomics + shared
 // slices. Header mutation is confined to the quiescent window between
-// runs (module docs).
+// runs.
 unsafe impl Send for RunState {}
 unsafe impl Sync for RunState {}
 
@@ -198,11 +307,128 @@ impl RunState {
                 options: RunOptions::default(),
             }),
             remaining: AtomicUsize::new(0),
-            done: AtomicBool::new(false),
+            generation: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            wake_mode: AtomicU8::new(WAKE_EC),
             panic: Mutex::new(None),
-            done_mutex: Mutex::new(false),
+            sync_waiters: AtomicUsize::new(0),
+            done_mutex: Mutex::new(()),
             done_cv: Condvar::new(),
+            waker: Mutex::new(None),
+            has_waker: AtomicBool::new(false),
+            pool: Mutex::new(Weak::new()),
         }
+    }
+
+    /// True once run `gen` has fully completed.
+    #[inline]
+    fn is_complete(&self, gen: u64) -> bool {
+        self.completed.load(Ordering::SeqCst) >= gen
+    }
+
+    /// Completion path: records run `generation` as done and wakes
+    /// every waiter kind this run may have. Called exactly once per
+    /// run, by the task that decrements `remaining` to zero; after the
+    /// `completed` store the header/nodes/topology must not be touched
+    /// (the launcher may already be re-arming them).
+    fn finish(&self, pool: &Arc<PoolInner>) {
+        // `generation` is stable for the whole run; reading it here
+        // (before the store below releases the run) is race-free.
+        let gen = self.generation.load(Ordering::SeqCst);
+        self.completed.store(gen, Ordering::SeqCst);
+        match self.wake_mode.load(Ordering::Relaxed) {
+            // Assist helpers park on the workers' eventcount; workers
+            // that wake spuriously just re-park.
+            WAKE_EC => pool.notify_all_workers(),
+            // Handle waiters park on the dedicated run eventcount so
+            // they never swallow work-arrival wakeups (thread_pool.rs).
+            WAKE_RUN_EC => pool.notify_run_waiters(),
+            _ => {}
+        }
+        // Async waker: SeqCst load pairs with register_waker's SeqCst
+        // store — the store-buffering handshake in the module docs.
+        // The flag is updated only while holding the slot lock (here
+        // and in register/clear), so flag and slot can never disagree:
+        // without that, a take here racing a re-registration could
+        // leave a live Waker stranded behind a false flag.
+        if self.has_waker.load(Ordering::SeqCst) {
+            let waker = {
+                let mut slot = self.waker.lock().unwrap();
+                self.has_waker.store(false, Ordering::SeqCst);
+                slot.take()
+            };
+            if let Some(waker) = waker {
+                waker.wake();
+            }
+        }
+        // Condvar waiters (no_caller_assist mode, forget backstop).
+        // If our load sees 0, any later-registering waiter's SeqCst
+        // increment orders after our `completed` store, so its
+        // predicate check observes completion without the notify.
+        if self.sync_waiters.load(Ordering::SeqCst) != 0 {
+            // Lock/unlock serializes with a waiter between its
+            // predicate check and cv.wait.
+            drop(self.done_mutex.lock().unwrap());
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Blocks on the state's condvar until run `gen` completes.
+    fn wait_sync(&self, gen: u64) {
+        self.sync_waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.done_mutex.lock().unwrap();
+        while !self.is_complete(gen) {
+            guard = self.done_cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        self.sync_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Blocks until the most recently launched run (if any) has
+    /// completed — the forgotten-handle backstop (module docs). In the
+    /// normal lifecycle the run is already quiescent and this is two
+    /// loads.
+    ///
+    /// Goes through `PoolInner::wait_run` so that, on a thread already
+    /// executing a task of the run's own pool, the wait *drains* pool
+    /// tasks instead of parking (a condvar park there would wedge a
+    /// single-worker pool forever — the orphan run's nodes could never
+    /// execute). An in-flight run can only be orphaned by
+    /// `mem::forget` of an async handle, and async runs always record
+    /// their pool here at launch; if the pool is already gone its drop
+    /// drained every task, so the run is complete and the condvar
+    /// fallback returns immediately.
+    pub(crate) fn wait_quiesce(&self) {
+        let gen = self.generation.load(Ordering::SeqCst);
+        if self.is_complete(gen) {
+            return;
+        }
+        let pool = self.pool.lock().unwrap().upgrade();
+        match pool {
+            Some(pool) => pool.wait_run(|| self.is_complete(gen)),
+            None => self.wait_sync(gen),
+        }
+    }
+
+    /// Publishes `waker` for the completion path. The SeqCst flag
+    /// store must precede the caller's completion re-check (Future
+    /// impl) for the handshake to be lossless; it happens under the
+    /// slot lock so flag and slot stay consistent (see `finish`).
+    fn register_waker(&self, waker: &Waker) {
+        let mut slot = self.waker.lock().unwrap();
+        *slot = Some(waker.clone());
+        self.has_waker.store(true, Ordering::SeqCst);
+    }
+
+    /// Drops any registered waker (handle harvested or dropped) so a
+    /// later run's completion does not wake a dead task spuriously —
+    /// and so the Waker's executor resources are released promptly.
+    /// Cold path (once per handle), so it takes the lock
+    /// unconditionally rather than trusting the flag.
+    fn clear_waker(&self) {
+        let mut slot = self.waker.lock().unwrap();
+        slot.take();
+        self.has_waker.store(false, Ordering::SeqCst);
     }
 }
 
@@ -232,7 +458,6 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     // like the node slice until the run completes.
     let topo: Option<&Topology> = unsafe { header.topo.as_ref() };
     let no_inline = header.options.no_inline_continuation;
-    let caller_assist = !header.options.no_caller_assist;
     let mut current = run.node;
     loop {
         let node = header.node(current);
@@ -328,20 +553,12 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
 
         // 3. Mark this node complete. After this point we must not
         //    touch `node`, `header`, or `topo` again: if this was the
-        //    last node, run_graph may wake, invalidate the pointers,
-        //    and even start the next run (rewriting the header).
+        //    last node, the run anchor may wake, invalidate the
+        //    pointers, and even start the next run (rewriting the
+        //    header). `finish` fans the completion out to every waiter
+        //    kind this run may have.
         if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            state.done.store(true, Ordering::SeqCst);
-            if caller_assist {
-                // The caller waits on the pool's eventcount; wake it
-                // (workers that wake spuriously just re-park).
-                pool.notify_all_workers();
-            } else {
-                let mut done = state.done_mutex.lock().unwrap();
-                *done = true;
-                drop(done);
-                state.done_cv.notify_all();
-            }
+            state.finish(pool);
         }
 
         match inline_next {
@@ -354,32 +571,40 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     }
 }
 
-/// Runs `graph` on `pool`, returning once all nodes have executed.
-pub(crate) fn run_graph(
+/// The launch half shared by [`run_graph`] and [`run_graph_async`]:
+/// guards, quiesce backstop, topology + counter re-arm, header
+/// rewrite, and the source-burst submission. Returns the armed state
+/// and this run's generation. The caller owns the completion half.
+fn launch_run(
     graph: &mut TaskGraph,
     pool: &ThreadPool,
     options: RunOptions,
-) -> Result<(), GraphError> {
+    wake_mode: u8,
+) -> Result<(Arc<RunState>, u64), GraphError> {
     let n = graph.nodes.len();
-    if n == 0 {
-        return Ok(());
-    }
-    if pool.current_worker().is_some() || pool.inner().on_assisting_thread() {
-        // A worker blocking (or helping) on its own pool's run can
-        // deadlock the pool; reject in every build profile. The
-        // assisting-thread check keeps the answer deterministic: a
-        // pool task that calls `run` on its own pool errors whether a
-        // worker or a caller-assist helper happened to pick it up.
-        return Err(GraphError::RunFromWorker);
+    debug_assert!(n > 0, "empty graphs are handled by the callers");
+    debug_assert!(
+        pool.current_worker().is_none() && !pool.inner().on_assisting_thread(),
+        "reject_run_from_worker must run before launch_run"
+    );
+
+    // Forgotten-handle backstop: `mem::forget` on a RunHandle skips
+    // its blocking Drop and releases the graph borrow with the run
+    // still in flight. Re-arming counters or the header under running
+    // tasks would be UB, so wait for quiescence first (two loads in
+    // the normal lifecycle — see the module docs).
+    if let Some(state) = &graph.run_state {
+        state.wait_quiesce();
     }
 
     let use_topo = !options.no_topology_cache;
-    let caller_assist = !options.no_caller_assist;
 
     // (1) Topology: build the CSR arena if this run uses it and the
-    //     graph is not already sealed.
+    //     graph is not already sealed. Boxed: the header points at it,
+    //     and the box keeps that address stable even if the TaskGraph
+    //     value itself is moved (reachable via a forgotten handle).
     if use_topo && graph.topology.is_none() {
-        graph.topology = Some(Topology::build(&graph.nodes));
+        graph.topology = Some(Box::new(Topology::build(&graph.nodes)));
     }
 
     // (2) Reset per-run pending counters (the graph is reusable, paper
@@ -394,20 +619,26 @@ pub(crate) fn run_graph(
     }
 
     // (3) Run state: re-arm the graph-owned slot (zero allocations on
-    //     re-run), or allocate fresh for the ablation arm.
-    let state = if options.no_state_reuse {
+    //     re-run), or allocate fresh for the ablation arm. Async runs
+    //     always use the slot: the generation check and the forget
+    //     backstop both key off it.
+    let state = if options.no_state_reuse && wake_mode != WAKE_RUN_EC {
         Arc::new(RunState::new())
     } else {
         graph.run_state.get_or_insert_with(|| Arc::new(RunState::new())).clone()
     };
+    // Drop any panic a dropped-without-wait handle left unharvested.
+    state.panic.lock().unwrap().take();
+    let generation = state.generation.load(Ordering::SeqCst) + 1;
     let topo_ptr: *const Topology = match (use_topo, graph.topology.as_ref()) {
-        (true, Some(t)) => t as *const Topology,
+        (true, Some(t)) => t.as_ref() as *const Topology,
         _ => ptr::null(),
     };
-    // SAFETY: no task of a previous run can still read the header (its
-    // reads happened-before the final `remaining` decrement we already
-    // observed when that run's wait returned — module docs), and tasks
-    // of this run are only created below, after the write.
+    // SAFETY: no task of a previous run can still read the header —
+    // either that run's wait returned (acquiring the final `completed`
+    // store) or the quiesce above did — and tasks of this run are only
+    // created below, after the write. Module docs give the full
+    // argument.
     unsafe {
         *state.header.get() = RunHeader {
             nodes: graph.nodes.as_ptr(),
@@ -416,10 +647,11 @@ pub(crate) fn run_graph(
             options,
         };
     }
-    state.done.store(false, Ordering::SeqCst);
-    if !caller_assist {
-        *state.done_mutex.lock().unwrap() = false;
-    }
+    state.generation.store(generation, Ordering::SeqCst);
+    state.wake_mode.store(wake_mode, Ordering::Relaxed);
+    // Recorded for wait_quiesce's drain-vs-park decision (a Weak so a
+    // lingering RunState never keeps a dropped pool's memory alive).
+    *state.pool.lock().unwrap() = Arc::downgrade(pool.inner());
     // The submission below publishes this store to workers.
     state.remaining.store(n, Ordering::Relaxed);
 
@@ -451,30 +683,256 @@ pub(crate) fn run_graph(
             })
         }));
     }
+    Ok((state, generation))
+}
 
-    // (5) Wait for the run to drain. Either way this pins
-    //     `graph.nodes` (and the topology) for the whole run — the
-    //     soundness linchpin of the raw pointers above.
-    if caller_assist {
-        // Help instead of sleeping: execute ready tasks on this thread
-        // until the run completes (see PoolInner::assist_until).
-        pool.inner().assist_until(|| state.done.load(Ordering::SeqCst));
-    } else {
-        let mut done = state.done_mutex.lock().unwrap();
-        while !*done {
-            done = state.done_cv.wait(done).unwrap();
-        }
-        drop(done);
+/// Rejects a launch from inside a task of the target pool — whether
+/// that task was picked up by a worker thread or by a caller-assist
+/// helper. A worker blocking (or helping) on its own pool's run can
+/// deadlock the pool, so this errors in every build profile, and it
+/// runs before the empty-graph fast path so the answer depends only on
+/// *where* the call was made, never on the graph's node count.
+fn reject_run_from_worker(pool: &ThreadPool) -> Result<(), GraphError> {
+    if pool.current_worker().is_some() || pool.inner().on_assisting_thread() {
+        return Err(GraphError::RunFromWorker);
     }
+    Ok(())
+}
 
-    let panic = state.panic.lock().unwrap().take();
-    match panic {
+/// Takes the run's recorded panic (if any) and renders it as the run
+/// result. Called once per run, after completion.
+fn take_result(graph: &TaskGraph, state: &RunState) -> Result<(), GraphError> {
+    match state.panic.lock().unwrap().take() {
         None => Ok(()),
         Some((node, message)) => Err(GraphError::TaskPanicked {
             node,
             name: graph.nodes[node].name.clone(),
             message,
         }),
+    }
+}
+
+/// Runs `graph` on `pool`, returning once all nodes have executed.
+pub(crate) fn run_graph(
+    graph: &mut TaskGraph,
+    pool: &ThreadPool,
+    options: RunOptions,
+) -> Result<(), GraphError> {
+    reject_run_from_worker(pool)?;
+    if graph.nodes.is_empty() {
+        return Ok(());
+    }
+    let caller_assist = !options.no_caller_assist;
+    let wake_mode = if caller_assist { WAKE_EC } else { WAKE_CONDVAR };
+    let (state, generation) = launch_run(graph, pool, options, wake_mode)?;
+
+    // Wait for the run to drain. Either way this pins `graph.nodes`
+    // (and the topology) for the whole run — the soundness linchpin of
+    // the raw pointers above.
+    if caller_assist {
+        // Help instead of sleeping: execute ready tasks on this thread
+        // until the run completes (see PoolInner::assist_until).
+        pool.inner().assist_until(|| state.is_complete(generation));
+    } else {
+        state.wait_sync(generation);
+    }
+    take_result(graph, &state)
+}
+
+/// Launches `graph` on `pool` without blocking, returning a
+/// [`RunHandle`] for the completion half.
+pub(crate) fn run_graph_async<'g>(
+    graph: &'g mut TaskGraph,
+    pool: &ThreadPool,
+    options: RunOptions,
+) -> Result<RunHandle<'g>, GraphError> {
+    reject_run_from_worker(pool)?;
+    if graph.nodes.is_empty() {
+        // Nothing to run: hand back an already-finished handle. The
+        // generation pair still advances (as a unit — no task ever
+        // observes this state) so handle generations stay unique and
+        // monotone, as documented, even across empty runs.
+        let state = graph.run_state.get_or_insert_with(|| Arc::new(RunState::new())).clone();
+        state.wait_quiesce(); // a forgotten handle's run may be in flight
+        let generation = state.generation.load(Ordering::SeqCst) + 1;
+        state.generation.store(generation, Ordering::SeqCst);
+        state.completed.store(generation, Ordering::SeqCst);
+        return Ok(RunHandle {
+            graph,
+            pool: pool.inner().clone(),
+            state,
+            generation,
+            finished: true,
+        });
+    }
+    let (state, generation) = launch_run(graph, pool, options, WAKE_RUN_EC)?;
+    Ok(RunHandle {
+        graph,
+        pool: pool.inner().clone(),
+        state,
+        generation,
+        finished: false,
+    })
+}
+
+/// Handle to one in-flight graph run, returned by
+/// [`TaskGraph::run_async`].
+///
+/// The handle **is the run's lifetime anchor**: it holds the
+/// `&mut TaskGraph` borrow for as long as it lives (so the graph can
+/// be neither mutated nor dropped under running tasks), and dropping
+/// it blocks until the run is quiescent. Completion can be observed
+/// four ways, freely mixed:
+///
+/// * [`RunHandle::is_done`] — non-blocking flag check;
+/// * [`RunHandle::try_wait`] — non-blocking result harvest;
+/// * [`RunHandle::wait`] — block (parked on the pool's dedicated run
+///   eventcount; the waiter does **not** assist);
+/// * `.await` — [`RunHandle`] implements [`Future`] via a waker slot
+///   on the run's done-path.
+///
+/// A handle is tagged with the run's **generation**: a handle from run
+/// *k* of a graph reports completion for run *k* only, and can never
+/// be satisfied by (or confused with) any later run of the same graph
+/// (the counters are monotone; see the module docs).
+///
+/// Like the blocking waits, [`RunHandle::wait`] called from inside a
+/// task of the *same* pool is rejected with
+/// [`GraphError::RunFromWorker`] in all build profiles — a blocked
+/// worker could deadlock the very run it waits for. (`Drop` in that
+/// position cannot error, so it drains pool tasks instead of
+/// parking — see `PoolInner::wait_run`.)
+#[must_use = "dropping a RunHandle blocks until the run completes; wait() it (or keep it) instead"]
+pub struct RunHandle<'g> {
+    graph: &'g mut TaskGraph,
+    pool: Arc<PoolInner>,
+    state: Arc<RunState>,
+    generation: u64,
+    /// Result already delivered (or the graph was empty): every
+    /// accessor short-circuits and Drop returns immediately.
+    finished: bool,
+}
+
+impl RunHandle<'_> {
+    /// True once this handle's run has fully completed (non-blocking).
+    pub fn is_done(&self) -> bool {
+        self.finished || self.state.is_complete(self.generation)
+    }
+
+    /// The run generation this handle is tagged with — monotonically
+    /// increasing across runs of one graph. Exposed for diagnostics
+    /// and the stale-handle tests.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Non-blocking completion check: `Some(result)` once the run has
+    /// finished, `None` while it is still in flight. After the result
+    /// has been delivered once, keeps returning `Some(Ok(()))`.
+    pub fn try_wait(&mut self) -> Option<Result<(), GraphError>> {
+        if self.finished {
+            return Some(Ok(()));
+        }
+        if !self.state.is_complete(self.generation) {
+            return None;
+        }
+        Some(self.harvest())
+    }
+
+    /// Blocks until the run completes and returns its result. The
+    /// calling thread parks on the pool's dedicated run eventcount —
+    /// it does not execute pool tasks (use the blocking
+    /// [`TaskGraph::run`] if you want caller assistance).
+    ///
+    /// Called from inside a task of the same pool this returns
+    /// [`GraphError::RunFromWorker`] deterministically (even if the
+    /// run already finished); the handle's `Drop` then drains the run
+    /// safely.
+    pub fn wait(mut self) -> Result<(), GraphError> {
+        // Guard first, before even the finished short-circuit: the
+        // answer must depend only on where the call was made (the
+        // launch side orders its guard before the empty-graph fast
+        // path for the same determinism).
+        if self.pool.on_worker_thread() || self.pool.on_assisting_thread() {
+            return Err(GraphError::RunFromWorker);
+        }
+        if self.finished {
+            return Ok(());
+        }
+        self.wait_quiescent();
+        self.harvest()
+    }
+
+    /// Blocks (or drains, on a pool-task thread — see
+    /// `PoolInner::wait_run`) until this handle's run has completed.
+    fn wait_quiescent(&self) {
+        let (pool, state, generation) = (&self.pool, &self.state, self.generation);
+        pool.wait_run(|| state.is_complete(generation));
+    }
+
+    /// Delivers the completed run's result and detaches the handle
+    /// from the completion machinery (waker slot included).
+    fn harvest(&mut self) -> Result<(), GraphError> {
+        debug_assert!(self.state.is_complete(self.generation));
+        self.finished = true;
+        self.state.clear_waker();
+        take_result(self.graph, &self.state)
+    }
+}
+
+impl Drop for RunHandle<'_> {
+    /// Blocks until the run is quiescent, so the graph borrow this
+    /// handle holds cannot end (and the CSR arena cannot be freed)
+    /// under running tasks. On a thread already executing a task of
+    /// this pool, parking could deadlock the run, so the wait drains
+    /// pool tasks instead (see `PoolInner::wait_run`). An unharvested
+    /// panic stays in the state and is discarded by the next launch.
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.wait_quiescent();
+        self.state.clear_waker();
+    }
+}
+
+impl Future for RunHandle<'_> {
+    type Output = Result<(), GraphError>;
+
+    /// Completion future: registers the task's waker in the run
+    /// state's slot and re-checks completion afterwards, so the
+    /// completion path's store-buffering handshake (module docs)
+    /// guarantees either this poll observes the finished run or the
+    /// completer observes the waker. Polling after the result has been
+    /// delivered returns `Ready(Ok(()))` (the handle is fused).
+    ///
+    /// Awaiting from inside a task of the same pool resolves to
+    /// [`GraphError::RunFromWorker`], exactly like [`RunHandle::wait`]
+    /// and regardless of the run's progress or delivered result:
+    /// returning `Pending` there would let the executor park a worker
+    /// whose queues hold the very nodes the run needs.
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        // Guard before everything else, mirroring wait(): the answer
+        // must depend only on where poll was called, never on whether
+        // the run happened to finish (or deliver) a moment earlier.
+        if this.pool.on_worker_thread() || this.pool.on_assisting_thread() {
+            return Poll::Ready(Err(GraphError::RunFromWorker));
+        }
+        if this.finished {
+            return Poll::Ready(Ok(()));
+        }
+        if this.state.is_complete(this.generation) {
+            return Poll::Ready(this.harvest());
+        }
+        this.state.register_waker(cx.waker());
+        // Re-check AFTER publishing the waker: if the run completed in
+        // between, the completer may have missed the flag — deliver
+        // now instead of sleeping on a wakeup that will never come.
+        if this.state.is_complete(this.generation) {
+            return Poll::Ready(this.harvest());
+        }
+        Poll::Pending
     }
 }
 
@@ -877,5 +1335,49 @@ mod tests {
         g.run(&pool).unwrap();
         assert!(g.is_sealed());
         assert_eq!(*log.lock().unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn async_handle_completes_and_generations_advance() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let a = {
+            let c = counter.clone();
+            g.add(move || {
+                c.fetch_add(1, Relaxed);
+            })
+        };
+        let b = {
+            let c = counter.clone();
+            g.add(move || {
+                c.fetch_add(10, Relaxed);
+            })
+        };
+        g.succeed(b, &[a]);
+        let pool = ThreadPool::new(2);
+        let mut last_gen = 0;
+        for run in 1..=5 {
+            let h = g.run_async(&pool).unwrap();
+            assert!(h.generation() > last_gen, "generations are monotone");
+            last_gen = h.generation();
+            h.wait().unwrap();
+            assert_eq!(counter.load(Relaxed), run * 11);
+        }
+        // Sync and async runs share the reusable slot and the
+        // generation sequence.
+        g.run(&pool).unwrap();
+        let h = g.run_async(&pool).unwrap();
+        assert_eq!(h.generation(), last_gen + 2);
+        h.wait().unwrap();
+    }
+
+    #[test]
+    fn async_empty_graph_is_immediately_done() {
+        let mut g = TaskGraph::new();
+        let pool = ThreadPool::new(1);
+        let mut h = g.run_async(&pool).unwrap();
+        assert!(h.is_done());
+        assert!(matches!(h.try_wait(), Some(Ok(()))));
+        h.wait().unwrap();
     }
 }

@@ -17,6 +17,13 @@
 //! instead of sleeping — so a sealed graph's second and later `run()`
 //! calls perform **zero heap allocations** and no handoff context
 //! switch. Each piece is independently toggleable via [`RunOptions`].
+//!
+//! Runs can also be launched **without blocking** (PR 3):
+//! [`TaskGraph::run_async`] submits the sources and returns a
+//! [`RunHandle`] that pins the graph borrow for the lifetime of the
+//! run, so one external thread can keep many graphs in flight and
+//! observe completion by polling, blocking, or `.await`ing the
+//! handle. Sealed re-runs through a handle stay zero-allocation.
 
 mod builder;
 mod dataflow;
@@ -25,7 +32,7 @@ mod trace;
 
 pub use builder::{GraphError, NodeId, TaskGraph};
 pub use dataflow::{Dataflow, DataflowError, Input, Output};
-pub use executor::RunOptions;
+pub use executor::{RunHandle, RunOptions};
 pub use trace::{SpanGuard, TraceEvent, Tracer};
 
 pub(crate) use executor::{execute_node, NodeRun};

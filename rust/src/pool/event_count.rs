@@ -20,9 +20,21 @@
 //! which then observes the published work (the publish is itself a
 //! `SeqCst` store in the deque/injector). If the producer reads
 //! `waiters > 0`, it bumps the epoch and acquires the mutex, which
-//! serializes it against any sleeper between its epoch read and its
+//! serializes it against any sleeper between its epoch check and its
 //! `Condvar::wait`, so the sleeper either sees the new epoch under the
 //! lock or is already waiting and receives the notification.
+//!
+//! The pool instantiates **two** eventcounts: one for workers and
+//! caller-assist helpers (woken by work arrival), and a separate one
+//! for async-run-handle waiters (`PoolInner::wait_run`, woken only by
+//! run completion). The split matters because a `notify_one` wakes an
+//! arbitrary sleeper: a run waiter takes no work, so if it shared the
+//! workers' eventcount it could absorb a work-arrival wakeup, re-park,
+//! and leave the task stranded with the intended worker still asleep.
+//! The same prepare/re-check/commit protocol (with the sleeper's
+//! predicate being the run's SeqCst completion counter instead of the
+//! queues) gives the same no-lost-wakeup guarantee; this handshake is
+//! model-checked under loom in `rust/tests/loom_model.rs`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};

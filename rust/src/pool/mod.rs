@@ -32,6 +32,12 @@
 //! workers on the calling thread instead of sleeping, with its metrics
 //! on a shared extra lane (the last entry of
 //! [`ThreadPool::metrics`]'s snapshot).
+//!
+//! Threads waiting on an **async run handle** (`graph::RunHandle`,
+//! PR 3) are a third population: they take no work, so they park on a
+//! *dedicated* run-completion eventcount (`PoolInner::wait_run`)
+//! rather than the workers' one — a run waiter must never swallow a
+//! work-arrival `notify_one` meant for a sleeping worker.
 
 pub mod deque;
 pub mod event_count;

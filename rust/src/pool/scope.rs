@@ -86,7 +86,13 @@ impl ThreadPool {
     /// resumed on the caller after all tasks drain — mirroring
     /// `std::thread::scope`.
     ///
-    /// Must be called from a non-worker thread (it blocks).
+    /// Must be called from a non-worker thread (it blocks). The same
+    /// rule covers every blocking wait on a pool from inside its own
+    /// tasks — `wait_idle`, `scope`, and `graph::RunHandle::wait`
+    /// alike: a scoped task that holds a run handle for this pool gets
+    /// `GraphError::RunFromWorker` from `wait()` rather than a
+    /// deadlock, and blocking waits against a *different* pool remain
+    /// fine (the guards are per-pool).
     pub fn scope<'env, F, R>(&'env self, f: F) -> R
     where
         F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
@@ -216,5 +222,36 @@ mod tests {
     fn empty_scope_is_fine() {
         let pool = ThreadPool::new(1);
         pool.scope(|_s| {});
+    }
+
+    #[test]
+    fn scoped_task_graph_guards_are_per_pool() {
+        // A scoped task of pool A may run (and block on) graphs
+        // targeting pool B — sync and async alike — but blocking waits
+        // against its OWN pool are rejected deterministically.
+        use crate::graph::{GraphError, TaskGraph};
+        use std::sync::atomic::AtomicUsize;
+
+        let pool_a = ThreadPool::new(1);
+        let pool_b = ThreadPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool_a.scope(|s| {
+            let (hits, pool_a, pool_b) = (&hits, &pool_a, &pool_b);
+            s.submit(move || {
+                // Other pool: sync run works...
+                let mut g = TaskGraph::new();
+                g.add(|| {});
+                g.run(pool_b).unwrap();
+                // ...and an async handle can be waited on.
+                let h = g.run_async(pool_b).unwrap();
+                h.wait().unwrap();
+                // Own pool: launch is rejected, not deadlocked.
+                let mut own = TaskGraph::new();
+                own.add(|| {});
+                assert!(matches!(own.run_async(pool_a), Err(GraphError::RunFromWorker)));
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
     }
 }

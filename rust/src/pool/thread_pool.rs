@@ -180,6 +180,14 @@ pub(crate) struct PoolInner {
     stealers: Vec<Stealer<RawTask>>,
     metrics: Vec<PaddedMetrics>,
     ec: EventCount,
+    /// Dedicated eventcount for threads blocked on a graph-run
+    /// completion ([`PoolInner::wait_run`]). Separate from `ec` on
+    /// purpose: run waiters do not take work, so letting them park on
+    /// the workers' eventcount would let a work-arrival `notify_one`
+    /// land on a waiter that just re-parks — with the task stranded
+    /// and the worker it was meant for still asleep. Only run
+    /// completions notify this one.
+    run_ec: EventCount,
     /// `num_threads + 1` cells; see [`PendingCell`].
     counters: Vec<CachePadded<PendingCell>>,
     /// Tasks whose closure panicked (panics are contained per-job).
@@ -243,6 +251,7 @@ impl ThreadPool {
             // tasks on the submitting thread) — see helper_lane().
             metrics: (0..n + 1).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
             ec: EventCount::new(),
+            run_ec: EventCount::new(),
             counters: (0..n + 1).map(|_| CachePadded::new(PendingCell::default())).collect(),
             panics: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
@@ -405,7 +414,7 @@ impl PoolInner {
     }
 
     /// True if the current thread is a worker of this pool.
-    fn on_worker_thread(&self) -> bool {
+    pub(crate) fn on_worker_thread(&self) -> bool {
         LOCAL.with(|l| matches!(l.get(), Some(lw) if std::ptr::eq(lw.pool, self)))
     }
 
@@ -599,6 +608,58 @@ impl PoolInner {
     /// on the eventcount (the graph executor's run-complete signal).
     pub(crate) fn notify_all_workers(&self) {
         self.ec.notify_all();
+    }
+
+    /// Wakes every thread parked in [`PoolInner::wait_run`] — the
+    /// graph executor's run-completion signal for async handles. O(1)
+    /// load when nobody is parked.
+    pub(crate) fn notify_run_waiters(&self) {
+        self.run_ec.notify_all();
+    }
+
+    /// Blocks until `is_done()` reports true **without** executing
+    /// pool tasks — the completion-wait of an async run handle
+    /// (`graph::RunHandle::wait` / `Drop`). Parks on the dedicated
+    /// run eventcount, so work-arrival wakeups meant for workers are
+    /// never swallowed; `is_done` must become true through pool task
+    /// execution followed by [`PoolInner::notify_run_waiters`] (the
+    /// SeqCst store/load pair plus the eventcount's prepare/re-check
+    /// protocol then guarantee a parked waiter observes it, and a 1 ms
+    /// timeout backstop makes liveness independent of that reasoning).
+    ///
+    /// On a thread that is already executing a task of this pool (a
+    /// worker, or a caller-assist helper mid-task), parking could
+    /// starve the very queues the awaited run needs — handle `Drop`
+    /// still must not return before quiescence, so here the wait
+    /// *drains* instead: it executes pool tasks (every worker deque is
+    /// reachable through its stealer) until `is_done` flips.
+    pub(crate) fn wait_run(self: &Arc<Self>, is_done: impl Fn() -> bool) {
+        if self.on_worker_thread() || self.on_assisting_thread() {
+            let mut rng = XorShift64Star::from_entropy();
+            while !is_done() {
+                let (job, saw_retry) = self.helper_find_task(&mut rng);
+                match job {
+                    Some(job) => self.run_helper_job(job),
+                    // A victim deque is mid-operation; retry shortly.
+                    None if saw_retry => std::hint::spin_loop(),
+                    // Remaining tasks of the run are executing on other
+                    // threads; yield until they finish.
+                    None => std::thread::yield_now(),
+                }
+            }
+            return;
+        }
+        loop {
+            if is_done() {
+                return;
+            }
+            let token = self.run_ec.prepare_wait();
+            if is_done() {
+                self.run_ec.cancel_wait(token);
+                return;
+            }
+            self.run_ec.commit_wait_timeout(token, Duration::from_millis(1));
+        }
     }
 
     /// One find-task attempt for a caller-assist helper: injector
@@ -1017,6 +1078,50 @@ mod tests {
         assert_eq!(count.load(Ordering::Relaxed), 64);
         pool.wait_idle();
         assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn wait_run_parks_until_predicate_flips() {
+        // The non-assisting run-completion wait: the caller parks on
+        // the dedicated run eventcount and is released by
+        // notify_run_waiters (with the 1 ms backstop behind it).
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        let inner = pool.inner().clone();
+        pool.submit(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            d.store(1, Ordering::SeqCst);
+            inner.notify_run_waiters();
+        });
+        let d = done.clone();
+        pool.inner().wait_run(|| d.load(Ordering::SeqCst) == 1);
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn wait_run_on_worker_thread_drains_tasks() {
+        // From inside a pool task, wait_run must execute queued tasks
+        // itself (parking the only worker would deadlock) — the
+        // handle-dropped-on-a-worker path.
+        let pool = Arc::new(ThreadPool::new(1));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let p = pool.clone();
+        pool.submit(move || {
+            let hit = Arc::new(AtomicUsize::new(0));
+            for _ in 0..8 {
+                let h = hit.clone();
+                p.submit(move || {
+                    h.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            let h = hit.clone();
+            p.inner().wait_run(|| h.load(Ordering::SeqCst) == 8);
+            tx.send(hit.load(Ordering::SeqCst)).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), 8);
+        pool.wait_idle();
     }
 
     #[test]

@@ -9,12 +9,17 @@
 //! * [`matmul_graph`] — blocked matrix multiplication as a task graph
 //!   whose node bodies execute AOT-compiled XLA executables through
 //!   [`crate::runtime`] (the three-layer composition).
+//! * [`multi_run`] — N sealed diamond-chain graphs kept in flight from
+//!   one thread through async run handles (the `graph_rerun` async
+//!   series and the concurrency-test tier's stress workload).
 
 pub mod dag;
 pub mod fibonacci;
 pub mod matmul_graph;
+pub mod multi_run;
 pub mod pipeline;
 
 pub use dag::Dag;
+pub use multi_run::MultiRun;
 pub use pipeline::Pipeline;
 pub use fibonacci::{fib_reference, fib_task_count, run_fib};

@@ -1,0 +1,122 @@
+//! Many-graphs-in-flight driver for the async run-handle path (PR 3).
+//!
+//! The blocking `TaskGraph::run` lets one external thread drive
+//! exactly one graph at a time; [`crate::graph::TaskGraph::run_async`]
+//! removes that limit. [`MultiRun`] is the workload harness for it: it
+//! owns N independent sealed diamond-chain graphs (the `graph_rerun`
+//! microbench shape) and, each round, launches **all N** from the one
+//! calling thread before waiting on any — so N runs are genuinely in
+//! flight at once, round after round, with per-graph completion
+//! counters to prove exactly-once execution afterwards.
+//!
+//! Used by the async series of `benches/graph_rerun.rs` and by the
+//! `rust/tests/graph_async.rs` stress tier (which requires a single
+//! thread to sustain ≥ 8 graphs in flight).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::graph::{GraphError, TaskGraph};
+use crate::pool::ThreadPool;
+
+use super::dag::Dag;
+
+/// Drives N independent diamond-chain graphs through `run_async` from
+/// a single thread. See the module docs.
+pub struct MultiRun {
+    graphs: Vec<TaskGraph>,
+    counters: Vec<Arc<AtomicUsize>>,
+    nodes_per_graph: usize,
+    rounds_done: usize,
+}
+
+impl MultiRun {
+    /// Builds `num_graphs` sealed diamond-chain graphs of
+    /// `4 * diamonds` nodes each; every node spins
+    /// `busy_work(i, work_steps)` and bumps its graph's counter.
+    pub fn new(num_graphs: usize, diamonds: usize, work_steps: u32) -> Self {
+        let mut graphs = Vec::with_capacity(num_graphs);
+        let mut counters = Vec::with_capacity(num_graphs);
+        for _ in 0..num_graphs {
+            let (g, counter) = Dag::diamond_chain(diamonds).to_task_graph(work_steps);
+            graphs.push(g);
+            counters.push(counter);
+        }
+        Self {
+            graphs,
+            counters,
+            nodes_per_graph: diamonds * 4,
+            rounds_done: 0,
+        }
+    }
+
+    /// Number of graphs kept in flight per round.
+    pub fn num_graphs(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// Nodes per graph (each executes once per round).
+    pub fn nodes_per_graph(&self) -> usize {
+        self.nodes_per_graph
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_done
+    }
+
+    /// One round: launches **every** graph (all handles live at once —
+    /// `iter_mut` hands out disjoint borrows, so the borrow checker is
+    /// satisfied that no two handles share a graph), then waits for
+    /// them in launch order.
+    pub fn run_round(&mut self, pool: &ThreadPool) -> Result<(), GraphError> {
+        let handles = self
+            .graphs
+            .iter_mut()
+            .map(|g| g.run_async(pool))
+            .collect::<Result<Vec<_>, _>>()?;
+        for h in handles {
+            h.wait()?;
+        }
+        self.rounds_done += 1;
+        Ok(())
+    }
+
+    /// Runs `rounds` rounds back to back.
+    pub fn run_rounds(&mut self, pool: &ThreadPool, rounds: usize) -> Result<(), GraphError> {
+        for _ in 0..rounds {
+            self.run_round(pool)?;
+        }
+        Ok(())
+    }
+
+    /// Total node executions observed across all graphs so far.
+    pub fn total_executions(&self) -> usize {
+        self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// True if every graph has executed exactly
+    /// `rounds_done * nodes_per_graph` nodes — the exactly-once
+    /// invariant for the whole history of rounds.
+    pub fn verify_exactly_once(&self) -> bool {
+        let expect = self.rounds_done * self.nodes_per_graph;
+        self.counters.iter().all(|c| c.load(Ordering::Relaxed) == expect)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_keep_all_graphs_exactly_once() {
+        let pool = ThreadPool::new(2);
+        let mut mr = MultiRun::new(4, 4, 0);
+        assert_eq!(mr.num_graphs(), 4);
+        assert_eq!(mr.nodes_per_graph(), 16);
+        mr.run_rounds(&pool, 5).unwrap();
+        assert_eq!(mr.rounds_done(), 5);
+        assert!(mr.verify_exactly_once());
+        assert_eq!(mr.total_executions(), 4 * 16 * 5);
+    }
+}

@@ -50,6 +50,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static A: CountingAlloc = CountingAlloc;
 
 #[test]
+#[cfg_attr(miri, ignore = "allocation counting is not meaningful under Miri")]
 fn sealed_rerun_makes_zero_heap_allocations() {
     let pool = ThreadPool::new(2);
     // 64-node diamond chain — the `graph_rerun` microbench workload.
@@ -57,17 +58,26 @@ fn sealed_rerun_makes_zero_heap_allocations() {
     let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
     assert!(g.is_sealed());
 
-    // Both wait modes must be allocation-free on the steady state;
-    // measure each after its own warmup (first runs may size queue
-    // capacity, lazily init locks, etc.).
+    // All three wait modes must be allocation-free on the steady
+    // state; measure each after its own warmup (first runs may size
+    // queue capacity, lazily init locks, etc.). The `async-handle`
+    // variant covers the PR 3 path: launch through `run_async`, park
+    // on the run eventcount, harvest through the handle — a handle is
+    // a few words on the stack plus refcount bumps, so sealed re-runs
+    // through it stay zero-allocation like the blocking modes.
     let variants = [
-        ("caller-assist", RunOptions::new()),
-        ("condvar-wait", RunOptions::new().caller_assist(false)),
+        ("caller-assist", Some(RunOptions::new())),
+        ("condvar-wait", Some(RunOptions::new().caller_assist(false))),
+        ("async-handle", None),
     ];
     let mut expected = 0usize;
     for (label, options) in variants {
+        let run_once = |g: &mut scheduling::graph::TaskGraph| match &options {
+            Some(options) => g.run_with_options(&pool, options.clone()).unwrap(),
+            None => g.run_async(&pool).unwrap().wait().unwrap(),
+        };
         for _ in 0..5 {
-            g.run_with_options(&pool, options.clone()).unwrap();
+            run_once(&mut g);
             expected += 64;
         }
         // Quiesce so stray worker activity from the warmup cannot leak
@@ -76,7 +86,7 @@ fn sealed_rerun_makes_zero_heap_allocations() {
 
         let before = ALLOCS.load(Ordering::SeqCst);
         for _ in 0..10 {
-            g.run_with_options(&pool, options.clone()).unwrap();
+            run_once(&mut g);
             expected += 64;
         }
         let allocs = ALLOCS.load(Ordering::SeqCst) - before;

@@ -1,0 +1,386 @@
+//! Concurrency-test tier for async run handles (PR 3).
+//!
+//! `TaskGraph::run_async` turns the executor's single implicit caller
+//! into an explicit handle lifecycle; these tests pin down that
+//! lifecycle end to end:
+//!
+//! * exactly-once execution through a handle, including ≥ 8 graphs in
+//!   flight from one external thread (the PR's acceptance bar);
+//! * handle drop-before-done blocks until quiescent;
+//! * wait-after-done / try_wait / is_done agree;
+//! * generation tagging: a stale handle from run *k* can never be
+//!   satisfied by — nor confuse — run *k + 1* (deterministic, via a
+//!   gate that holds run *k + 1* open);
+//! * the `mem::forget` backstop: a forgotten handle forces the next
+//!   graph use to quiesce instead of rewriting state under running
+//!   tasks;
+//! * the `Future` impl completes through the waker slot;
+//! * blocking waits from inside a task of the same pool are rejected
+//!   with `RunFromWorker`, never deadlocked.
+//!
+//! Sizes shrink under Miri (`cfg(miri)`), which runs this binary in CI
+//! with `-Zmiri-disable-isolation -Zmiri-ignore-leaks`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use scheduling::graph::{GraphError, RunHandle, RunOptions, TaskGraph};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::{Dag, MultiRun};
+
+/// A sealed `4 * diamonds`-node diamond-chain graph whose every node
+/// bumps the returned counter once per run — the `graph_rerun` /
+/// `graph_alloc` workload shape, reused so these tests cover exactly
+/// the graph the benches measure.
+fn counting_graph(diamonds: usize) -> (TaskGraph, Arc<AtomicUsize>) {
+    Dag::diamond_chain(diamonds).to_task_graph(0)
+}
+
+/// A graph whose single node blocks until `gate` opens, then bumps
+/// `counter` — for deterministic "run still in flight" windows.
+fn gated_graph() -> (TaskGraph, Arc<AtomicBool>, Arc<AtomicUsize>) {
+    let gate = Arc::new(AtomicBool::new(false));
+    let counter = Arc::new(AtomicUsize::new(0));
+    let mut g = TaskGraph::new();
+    let (ga, c) = (gate.clone(), counter.clone());
+    g.add(move || {
+        while !ga.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        c.fetch_add(1, Ordering::SeqCst);
+    });
+    (g, gate, counter)
+}
+
+#[test]
+fn async_run_exactly_once_and_rerunnable() {
+    let pool = ThreadPool::new(2);
+    let reps = if cfg!(miri) { 3 } else { 10 };
+    let (mut g, counter) = counting_graph(8);
+    for rep in 1..=reps {
+        let h = g.run_async(&pool).unwrap();
+        h.wait().unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), rep * 32, "rep {rep}");
+    }
+    // Sync and async runs interleave freely on the same graph.
+    g.run(&pool).unwrap();
+    let h = g.run_async(&pool).unwrap();
+    h.wait().unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), (reps + 2) * 32);
+}
+
+#[test]
+fn wait_after_done_and_try_wait_agree() {
+    let pool = ThreadPool::new(2);
+    let (mut g, counter) = counting_graph(4);
+    let mut h = g.run_async(&pool).unwrap();
+    // Spin until the run reports done, then every accessor must agree
+    // (wait-after-done must not block or double-report).
+    while !h.is_done() {
+        std::thread::yield_now();
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 16);
+    assert!(matches!(h.try_wait(), Some(Ok(()))));
+    assert!(h.is_done());
+    h.wait().unwrap();
+}
+
+#[test]
+fn handle_drop_before_done_blocks_until_quiescent() {
+    let pool = ThreadPool::new(2);
+    let diamonds = if cfg!(miri) { 4 } else { 64 };
+    let (mut g, counter) = counting_graph(diamonds);
+    for rep in 1..=8 {
+        let h = g.run_async(&pool).unwrap();
+        drop(h);
+        // Drop returned => the run is quiescent: every node of this
+        // round executed, none will execute later.
+        assert_eq!(counter.load(Ordering::Relaxed), rep * diamonds * 4, "rep {rep}");
+    }
+}
+
+#[test]
+fn eight_graphs_in_flight_from_one_thread() {
+    // The acceptance bar: a single external thread sustains >= 8
+    // graphs in flight via run_async with exactly-once execution.
+    let pool = ThreadPool::new(3);
+    let diamonds = if cfg!(miri) { 2 } else { 16 };
+    let rounds = if cfg!(miri) { 2 } else { 50 };
+    let n_graphs = 8;
+    let mut graphs: Vec<(TaskGraph, Arc<AtomicUsize>)> =
+        (0..n_graphs).map(|_| counting_graph(diamonds)).collect();
+    for round in 1..=rounds {
+        {
+            let handles: Vec<RunHandle<'_>> = graphs
+                .iter_mut()
+                .map(|(g, _)| g.run_async(&pool).unwrap())
+                .collect();
+            // All 8 are in flight here. Wait in reverse launch order so
+            // completion order differs from launch order.
+            for h in handles.into_iter().rev() {
+                h.wait().unwrap();
+            }
+        }
+        for (i, (_, counter)) in graphs.iter().enumerate() {
+            assert_eq!(
+                counter.load(Ordering::Relaxed),
+                round * diamonds * 4,
+                "graph {i} after round {round}"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_run_driver_stress() {
+    let pool = ThreadPool::new(2);
+    let (graphs, diamonds, rounds) = if cfg!(miri) { (8, 2, 2) } else { (12, 16, 40) };
+    let mut mr = MultiRun::new(graphs, diamonds, 0);
+    mr.run_rounds(&pool, rounds).unwrap();
+    assert_eq!(mr.rounds_done(), rounds);
+    assert!(mr.verify_exactly_once(), "exactly-once violated across {rounds} rounds");
+    assert_eq!(mr.total_executions(), graphs * diamonds * 4 * rounds);
+}
+
+#[test]
+fn stale_handle_generation_cannot_observe_next_run() {
+    // Run k completes and leaves `completed == k` in the reusable
+    // state. A fresh handle for run k+1 (held open by the gate) must
+    // not mistake that record for its own completion — and the
+    // generation sequence must advance by exactly one per run.
+    let pool = ThreadPool::new(2);
+    let (mut g, gate, counter) = gated_graph();
+
+    gate.store(true, Ordering::SeqCst); // run k: gate already open
+    let h = g.run_async(&pool).unwrap();
+    let gen_k = h.generation();
+    h.wait().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 1);
+
+    gate.store(false, Ordering::SeqCst);
+    let mut h2 = g.run_async(&pool).unwrap();
+    assert_eq!(h2.generation(), gen_k + 1);
+    // Deterministic window: run k+1 cannot complete while the gate is
+    // closed, so any `true` here could only come from run k's stale
+    // completion record leaking through the generation check.
+    for _ in 0..100 {
+        assert!(!h2.is_done(), "handle for run k+1 observed run k's completion");
+        assert!(h2.try_wait().is_none());
+        std::thread::yield_now();
+    }
+    gate.store(true, Ordering::SeqCst);
+    h2.wait().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "deliberately leaks the forgotten handle's Arcs")]
+fn forgotten_handle_forces_quiescence_on_next_use() {
+    // mem::forget skips the handle's blocking Drop and releases the
+    // graph borrow early; the next use of the graph (here: a new run)
+    // must wait for the orphaned run instead of re-arming state under
+    // its tasks.
+    let pool = ThreadPool::new(2);
+    let (mut g, gate, counter) = gated_graph();
+    let h = g.run_async(&pool).unwrap();
+    std::mem::forget(h);
+    assert_eq!(counter.load(Ordering::SeqCst), 0, "gated run must still be in flight");
+    // Move the graph while the orphan run is in flight: a move runs no
+    // code, so this is only sound because every pointer the run holds
+    // targets heap-pinned structures (Vec-backed nodes, boxed
+    // topology) whose addresses survive the move.
+    let mut g = Box::new(g);
+
+    // Open the gate from a side thread after a beat, then start a new
+    // run: its launch must quiesce first, so by the time it returns a
+    // handle, run 1's node has executed.
+    let ga = gate.clone();
+    let opener = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        ga.store(true, Ordering::SeqCst);
+    });
+    let h2 = g.run_async(&pool).unwrap();
+    assert!(counter.load(Ordering::SeqCst) >= 1, "launch returned before the orphan run drained");
+    h2.wait().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 2);
+    opener.join().unwrap();
+
+    // Mutation after another forget quiesces too (invalidate_caches).
+    gate.store(false, Ordering::SeqCst);
+    let h = g.run_async(&pool).unwrap();
+    std::mem::forget(h);
+    let ga = gate.clone();
+    let opener = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        ga.store(true, Ordering::SeqCst);
+    });
+    let c = counter.clone();
+    g.add(move || {
+        c.fetch_add(100, Ordering::SeqCst);
+    });
+    assert!(counter.load(Ordering::SeqCst) >= 3, "mutation returned before the orphan run drained");
+    opener.join().unwrap();
+    gate.store(true, Ordering::SeqCst);
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 104);
+}
+
+/// Minimal std-only executor for the `Future` impl: poll on the
+/// current thread, park between polls, unpark from the waker.
+fn block_on<F: std::future::Future + Unpin>(mut fut: F) -> F::Output {
+    struct Unparker(std::thread::Thread);
+    impl std::task::Wake for Unparker {
+        fn wake(self: Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+    let waker = std::task::Waker::from(Arc::new(Unparker(std::thread::current())));
+    let mut cx = std::task::Context::from_waker(&waker);
+    let mut fut = std::pin::Pin::new(&mut fut);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            std::task::Poll::Ready(v) => return v,
+            // park_timeout rather than park: a lost wakeup then shows
+            // up as a slow test instead of a hung CI job.
+            std::task::Poll::Pending => std::thread::park_timeout(Duration::from_millis(100)),
+        }
+    }
+}
+
+#[test]
+fn handle_is_a_future_completed_by_the_waker() {
+    let pool = ThreadPool::new(2);
+    let (diamonds, reps) = if cfg!(miri) { (4, 2) } else { (16, 5) };
+    let (mut g, counter) = counting_graph(diamonds);
+    for rep in 1..=reps {
+        let h = g.run_async(&pool).unwrap();
+        block_on(h).unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), rep * diamonds * 4, "rep {rep}");
+    }
+
+    // A panicking node surfaces through the future too.
+    let mut bad = TaskGraph::new();
+    bad.add_named("boom", || panic!("async kaboom"));
+    let h = bad.run_async(&pool).unwrap();
+    match block_on(h) {
+        Err(GraphError::TaskPanicked { name, message, .. }) => {
+            assert_eq!(name.as_deref(), Some("boom"));
+            assert!(message.contains("async kaboom"));
+        }
+        other => panic!("expected TaskPanicked, got {other:?}"),
+    }
+}
+
+#[test]
+fn async_panic_reported_once_and_not_leaked_to_next_run() {
+    let pool = ThreadPool::new(2);
+    let fail = Arc::new(AtomicBool::new(true));
+    let mut g = TaskGraph::new();
+    let f = fail.clone();
+    g.add_named("flaky", move || {
+        if f.load(Ordering::SeqCst) {
+            panic!("first run only");
+        }
+    });
+    let h = g.run_async(&pool).unwrap();
+    assert!(matches!(h.wait(), Err(GraphError::TaskPanicked { node: 0, .. })));
+    // Second run succeeds and must not report the stale panic.
+    fail.store(false, Ordering::SeqCst);
+    g.run_async(&pool).unwrap().wait().unwrap();
+
+    // A panic whose handle is dropped (not waited) is discarded by the
+    // next launch, not misattributed to it.
+    fail.store(true, Ordering::SeqCst);
+    drop(g.run_async(&pool).unwrap());
+    fail.store(false, Ordering::SeqCst);
+    g.run_async(&pool).unwrap().wait().unwrap();
+}
+
+#[test]
+fn launch_and_blocking_wait_rejected_from_worker_tasks() {
+    // Launching on the task's own pool is rejected...
+    let pool = Arc::new(ThreadPool::new(1));
+    let p = pool.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    pool.submit(move || {
+        let mut g = TaskGraph::new();
+        g.add(|| {});
+        tx.send(matches!(g.run_async(&p), Err(GraphError::RunFromWorker))).unwrap();
+    });
+    assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap());
+    pool.wait_idle();
+
+    // ...and so is a blocking wait on a handle that was moved into a
+    // task of the same pool: wait() errors deterministically, and the
+    // handle's Drop drains the run instead of parking the worker.
+    let g: &'static mut TaskGraph = Box::leak(Box::new(TaskGraph::new()));
+    let hit = Arc::new(AtomicUsize::new(0));
+    let h2 = hit.clone();
+    g.add(move || {
+        h2.fetch_add(1, Ordering::SeqCst);
+    });
+    let handle = g.run_async(&pool).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    pool.submit(move || {
+        tx.send(matches!(handle.wait(), Err(GraphError::RunFromWorker))).unwrap();
+    });
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+        "RunHandle::wait from a worker task must return RunFromWorker"
+    );
+    pool.wait_idle();
+    assert_eq!(hit.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn async_honors_topology_and_inline_toggles() {
+    let pool = ThreadPool::new(2);
+    for mask in 0..4u32 {
+        let options = RunOptions {
+            no_inline_continuation: mask & 1 != 0,
+            no_topology_cache: mask & 2 != 0,
+            ..RunOptions::default()
+        };
+        let (mut g, counter) = counting_graph(8);
+        for rep in 1..=3 {
+            g.run_async_with_options(&pool, options.clone()).unwrap().wait().unwrap();
+            assert_eq!(counter.load(Ordering::Relaxed), rep * 32, "mask {mask} rep {rep}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_external_threads_each_with_handle_fleets() {
+    // Several external threads, each keeping its own fleet of graphs
+    // in flight on one shared pool — the helper/waiter machinery must
+    // keep runs isolated.
+    let pool = Arc::new(ThreadPool::new(3));
+    let (threads, graphs, rounds) = if cfg!(miri) { (2, 2, 2) } else { (4, 4, 12) };
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let mut fleet: Vec<(TaskGraph, Arc<AtomicUsize>)> =
+                    (0..graphs).map(|_| counting_graph(4)).collect();
+                for round in 1..=rounds {
+                    let hs: Vec<_> =
+                        fleet.iter_mut().map(|(g, _)| g.run_async(&pool).unwrap()).collect();
+                    for h in hs {
+                        h.wait().unwrap();
+                    }
+                    for (i, (_, c)) in fleet.iter().enumerate() {
+                        assert_eq!(
+                            c.load(Ordering::Relaxed),
+                            round * 16,
+                            "thread {t} graph {i} round {round}"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}

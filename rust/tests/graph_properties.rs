@@ -409,6 +409,97 @@ fn wide_independent_layer_all_sources() {
 }
 
 #[test]
+fn property_matrix_100_shapes_sync_async_all_toggles() {
+    // 100 random DAG shapes × {sync, async} × all 16 RunOptions toggle
+    // combinations (PR 3 satellite). Per run the executor must uphold
+    // exactly-once execution with node-count conservation and
+    // topological-order visitation; the same graph instance is reused
+    // across all 16 masks of a mode, so counters and FnMut state also
+    // survive 16 consecutive re-arms. For async runs the state-reuse
+    // and caller-assist bits are documented no-ops — sweeping them
+    // anyway pins down that they stay harmless.
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0xA51C);
+    for case in 0..100 {
+        let n = 10 + rng.next_below(40) as usize;
+        let w = 1 + rng.next_below(8) as usize;
+        let p = 0.1 + rng.next_f64() * 0.4;
+        let adj = random_dag(&mut rng, n, w, p);
+        for run_async in [false, true] {
+            let (mut g, runs, stamps, _clock) = build_graph(&adj);
+            for mask in 0..16u32 {
+                let options = RunOptions {
+                    no_inline_continuation: mask & 1 != 0,
+                    no_topology_cache: mask & 2 != 0,
+                    no_state_reuse: mask & 4 != 0,
+                    no_caller_assist: mask & 8 != 0,
+                    ..RunOptions::default()
+                };
+                if run_async {
+                    g.run_async_with_options(&pool, options).unwrap().wait().unwrap();
+                } else {
+                    g.run_with_options(&pool, options).unwrap();
+                }
+                let rep = mask as usize + 1;
+                let mut total = 0;
+                for i in 0..n {
+                    let r = runs[i].load(Ordering::SeqCst);
+                    assert_eq!(
+                        r, rep,
+                        "case {case} async={run_async} mask {mask:#07b} node {i} run count"
+                    );
+                    total += r;
+                }
+                assert_eq!(total, n * rep, "case {case} async={run_async}: node-count conservation");
+                for (i, succs) in adj.iter().enumerate() {
+                    let ti = stamps[i].load(Ordering::SeqCst);
+                    for &s in succs {
+                        assert!(
+                            ti < stamps[s].load(Ordering::SeqCst),
+                            "case {case} async={run_async} mask {mask:#07b} edge {i}->{s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn async_handles_over_random_dags_in_flight_together() {
+    // Several random graphs launched before any is waited on — the
+    // async analogue of concurrent_runs_of_different_graphs, from ONE
+    // thread. Exactly-once and topological order must hold per graph
+    // even though their tasks interleave arbitrarily in the pool.
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0xF17);
+    for round in 0..6 {
+        let shapes: Vec<_> = (0..8).map(|_| random_dag(&mut rng, 40, 6, 0.3)).collect();
+        let mut built: Vec<_> = shapes.iter().map(|adj| build_graph(adj)).collect();
+        let handles: Vec<_> = built
+            .iter_mut()
+            .map(|(g, _, _, _)| g.run_async(&pool).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        for (t, ((_, runs, stamps, _clock), adj)) in built.iter().zip(&shapes).enumerate() {
+            for (i, r) in runs.iter().enumerate() {
+                assert_eq!(r.load(Ordering::SeqCst), 1, "round {round} graph {t} node {i}");
+            }
+            for (i, succs) in adj.iter().enumerate() {
+                for &s in succs {
+                    assert!(
+                        stamps[i].load(Ordering::SeqCst) < stamps[s].load(Ordering::SeqCst),
+                        "round {round} graph {t} edge {i}->{s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn mutex_protected_state_needs_no_atomics() {
     // FnMut closures may mutate captured state through a Mutex — the
     // graph edges give the happens-before; this checks the executor

@@ -1,0 +1,236 @@
+//! Loom model checks for the two unsafe arguments the graph executor
+//! rests on (PR 3 satellite; the arguments themselves shipped with
+//! PR 2 "on paper only"):
+//!
+//! 1. the **`RunHeader` rewrite / quiescence protocol** — every header
+//!    read a task performs happens-before the next run's header
+//!    rewrite, through the `AcqRel` remaining-counter decrements and
+//!    the SeqCst monotone `completed` store;
+//! 2. the **completion → waker / eventcount handshake** — the
+//!    store-buffering pairs (`completed` store vs waker-flag /
+//!    waiter-count loads, both SeqCst) lose no wakeup.
+//!
+//! These are *models*: each test re-states the protocol in miniature
+//! with loom types (the production code uses `std` atomics and real
+//! OS parking, which loom cannot instrument), mirroring the exact
+//! fields, orderings, and program order of `graph/executor.rs` and
+//! `pool/event_count.rs`. Loom then exhausts the interleavings: the
+//! `UnsafeCell` access tracking fails the first model if any schedule
+//! lets a task's header read overlap the rewrite, and the asserts /
+//! deadlock detection fail the second if a wakeup can be lost.
+//!
+//! This file is compiled only with `RUSTFLAGS="--cfg loom"` and the
+//! `loom` dev-dependency added (the CI `loom` job does both; the
+//! offline build sees an empty test binary).
+
+#![cfg(loom)]
+
+use loom::cell::UnsafeCell;
+use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+/// Model 1: the RunHeader rewrite/quiescence protocol.
+///
+/// Mirrors executor.rs: tasks read the header (`UnsafeCell`), the
+/// final `remaining` decrement (AcqRel) stores `completed = gen`
+/// (SeqCst) and notifies; the launcher waits for `completed >= gen`
+/// under the condvar (the `wait_sync` path — the eventcount path is
+/// model 3) and only then rewrites the header for the next run. Loom's
+/// UnsafeCell fails the test if any interleaving lets a task's read
+/// overlap the rewrite.
+#[test]
+fn header_rewrite_waits_for_task_quiescence() {
+    loom::model(|| {
+        struct State {
+            header: UnsafeCell<u64>,
+            remaining: AtomicUsize,
+            completed: AtomicU64,
+            sync_waiters: AtomicUsize,
+            done_mutex: Mutex<()>,
+            done_cv: Condvar,
+        }
+        let st = Arc::new(State {
+            header: UnsafeCell::new(1),
+            remaining: AtomicUsize::new(2),
+            completed: AtomicU64::new(0),
+            sync_waiters: AtomicUsize::new(0),
+            done_mutex: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+
+        // Two tasks of run 1 (generation 1).
+        let tasks: Vec<_> = (0..2)
+            .map(|_| {
+                let st = st.clone();
+                thread::spawn(move || {
+                    // The task's header read, as in execute_node.
+                    st.header.with(|p| assert_eq!(unsafe { *p }, 1));
+                    if st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        // finish(): completed store, then flag-gated
+                        // condvar notify — exact order of executor.rs.
+                        st.completed.store(1, Ordering::SeqCst);
+                        if st.sync_waiters.load(Ordering::SeqCst) != 0 {
+                            drop(st.done_mutex.lock().unwrap());
+                            st.done_cv.notify_all();
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        // The launcher's wait_sync(1), verbatim.
+        st.sync_waiters.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut guard = st.done_mutex.lock().unwrap();
+            while st.completed.load(Ordering::SeqCst) < 1 {
+                guard = st.done_cv.wait(guard).unwrap();
+            }
+        }
+        st.sync_waiters.fetch_sub(1, Ordering::SeqCst);
+
+        // Quiescent: re-arm the header for run 2. Any schedule in
+        // which a task could still read it is a loom failure.
+        st.header.with_mut(|p| unsafe { *p = 2 });
+        st.remaining.store(1, Ordering::Relaxed);
+
+        for t in tasks {
+            t.join().unwrap();
+        }
+    });
+}
+
+/// Model 2: the completion → waker handshake (Future path).
+///
+/// Poller: publish waker, `has_waker.store(true, SeqCst)`, then
+/// re-check `completed` (SeqCst). Completer: `completed.store(SeqCst)`,
+/// then check `has_waker` (SeqCst). Store-buffering: at least one side
+/// must observe the other, so either the poll returns ready or the
+/// waker fires — never neither.
+#[test]
+fn done_flag_waker_handshake_loses_no_wakeup() {
+    loom::model(|| {
+        struct State {
+            completed: AtomicU64,
+            has_waker: AtomicBool,
+            waker: Mutex<Option<u32>>, // stand-in for the Waker
+            woken: AtomicBool,
+        }
+        let st = Arc::new(State {
+            completed: AtomicU64::new(0),
+            has_waker: AtomicBool::new(false),
+            waker: Mutex::new(None),
+            woken: AtomicBool::new(false),
+        });
+
+        // Completer (the finishing task).
+        let completer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                st.completed.store(1, Ordering::SeqCst);
+                if st.has_waker.load(Ordering::SeqCst) {
+                    let waker = st.waker.lock().unwrap().take();
+                    st.has_waker.store(false, Ordering::SeqCst);
+                    if waker.is_some() {
+                        st.woken.store(true, Ordering::SeqCst);
+                    }
+                }
+            })
+        };
+
+        // Poller (RunHandle::poll): register, then re-check.
+        *st.waker.lock().unwrap() = Some(7);
+        st.has_waker.store(true, Ordering::SeqCst);
+        let observed_done = st.completed.load(Ordering::SeqCst) >= 1;
+
+        completer.join().unwrap();
+        assert!(
+            observed_done || st.woken.load(Ordering::SeqCst),
+            "pending future with no wakeup: the task would sleep forever"
+        );
+    });
+}
+
+/// Model 3: the completion → eventcount handshake (wait_run path, and
+/// the same protocol workers/assist helpers use).
+///
+/// A miniature of `pool/event_count.rs` (epoch + waiter count + mutex
+/// + condvar, all SeqCst) driven by wait_run's loop: check done,
+/// prepare_wait, re-check done, commit. The producer stores `done`
+/// then calls notify_all. If the producer reads `waiters == 0`, the
+/// sleeper's registration came later in the SeqCst total order, so its
+/// re-check observes `done`; otherwise the epoch bump + mutex
+/// serialization delivers the notification. Loom's deadlock detection
+/// fails the test if any schedule strands the waiter.
+#[test]
+fn done_flag_eventcount_handshake_loses_no_wakeup() {
+    loom::model(|| {
+        struct Ec {
+            epoch: AtomicU64,
+            waiters: AtomicUsize,
+            mutex: Mutex<()>,
+            cv: Condvar,
+        }
+        impl Ec {
+            fn prepare_wait(&self) -> u64 {
+                self.waiters.fetch_add(1, Ordering::SeqCst);
+                self.epoch.load(Ordering::SeqCst)
+            }
+            fn cancel_wait(&self) {
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn commit_wait(&self, epoch: u64) {
+                let mut guard = self.mutex.lock().unwrap();
+                while self.epoch.load(Ordering::SeqCst) == epoch {
+                    guard = self.cv.wait(guard).unwrap();
+                }
+                drop(guard);
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn notify_all(&self) {
+                if self.waiters.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                self.epoch.fetch_add(1, Ordering::SeqCst);
+                drop(self.mutex.lock().unwrap());
+                self.cv.notify_all();
+            }
+        }
+        struct State {
+            done: AtomicU64,
+            ec: Ec,
+        }
+        let st = Arc::new(State {
+            done: AtomicU64::new(0),
+            ec: Ec {
+                epoch: AtomicU64::new(0),
+                waiters: AtomicUsize::new(0),
+                mutex: Mutex::new(()),
+                cv: Condvar::new(),
+            },
+        });
+
+        // Producer: the run's final task.
+        let producer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                st.done.store(1, Ordering::SeqCst);
+                st.ec.notify_all();
+            })
+        };
+
+        // Consumer: one iteration of wait_run's park loop (without the
+        // 1 ms backstop — the model must be live without it).
+        if st.done.load(Ordering::SeqCst) < 1 {
+            let epoch = st.ec.prepare_wait();
+            if st.done.load(Ordering::SeqCst) >= 1 {
+                st.ec.cancel_wait();
+            } else {
+                st.ec.commit_wait(epoch);
+            }
+        }
+        assert_eq!(st.done.load(Ordering::SeqCst), 1);
+
+        producer.join().unwrap();
+    });
+}
