@@ -1,0 +1,201 @@
+//! PRIO — priority scheduling (PR 4): skewed-DAG makespan with
+//! critical-path-first dispatch vs the shape-oblivious FIFO rule, plus
+//! a mixed-priority async fleet.
+//!
+//! Three reports land in the ledger (`BENCH_pr4.json`):
+//!
+//! * **PRIO skewed-DAG makespan** — a weighted `Dag::skewed_diamond`
+//!   (many light branches + one heavy spine, spine head buried
+//!   mid-successor-list so FIFO neither starts nor finishes it early)
+//!   re-run under critical-path-first vs FIFO dispatch. The spine is
+//!   the makespan lower bound; starting it late stretches the run, so
+//!   `critical-path` should beat `fifo` whenever threads < branches.
+//! * **ABL-7 priority toggles** — the PR 4 toggle sweep: all-on /
+//!   `no_critical_path` / `no_priority_lanes` / all-off (the all-off
+//!   arm is the pre-PR 4 FIFO path, scheduling-identical by design).
+//! * **PRIO mixed-priority fleet** — 9 sealed diamond-chain graphs in
+//!   flight from one thread (`MultiRun` shape) tagged High/Normal/Low
+//!   in thirds; per-class completion latency is measured by polling the
+//!   handle fleet, showing the run-class lanes actually tier tenants.
+//!
+//! Knobs: `THREADS` (default 2), `RERUNS` (default 40 makespan samples
+//! per bench iteration), `BENCH_FAST=1` (smoke profile, smaller
+//! graphs).
+
+use std::time::{Duration, Instant};
+
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report, Summary};
+use scheduling::graph::{RunOptions, RunPriority};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::{Dag, MultiRun};
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let reruns: usize = std::env::var("RERUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 10 } else { 40 });
+    let pool = ThreadPool::new(threads);
+
+    // ---- PRIO: skewed-DAG makespan, critical-path vs FIFO ----------
+    // Width light branches (weight 1) + a `spine`-long heavy chain
+    // (weight 8) from one source into one sink. Serial spine work is
+    // the makespan floor; FIFO discovers the spine head mid-deque, so
+    // its makespan carries an O(branches / threads) startup delay that
+    // critical-path-first dispatch removes.
+    // Sized so the spine dominates (total work / threads < serial
+    // spine) while the branch pool is wide enough that FIFO's spine
+    // startup delay is a sizable slice of the makespan.
+    let (width, spine, heavy, steps) = if fast { (192, 24, 8, 200) } else { (768, 64, 8, 400) };
+    let dag = Dag::skewed_diamond(width, spine)
+        .with_weights(|i| if (width + 1..=width + spine).contains(&i) { heavy } else { 1 });
+    let spine_units = spine as u64 * heavy as u64;
+    let mut report = Report::new(
+        "PRIO skewed-DAG makespan (PR 4)",
+        format!(
+            "skewed({width}w+{spine}s) weighted DAG ({} nodes, spine {spine}x w={heavy}, \
+             serial spine = {spine_units} weight-units) re-run {reruns}x per sample; \
+             {threads} threads; critical-path = rank-first dispatch + priority lanes, \
+             fifo = pre-PR4 first-ready-inline dispatch",
+            dag.len()
+        ),
+    );
+    let variants: [(&str, RunOptions); 2] = [
+        ("critical-path", RunOptions::new()),
+        ("fifo", RunOptions::new().critical_path(false).priority_lanes(false)),
+    ];
+    let param = format!("skewed{}x{reruns}", dag.len());
+    for (label, options) in &variants {
+        let (mut g, _counter) = dag.to_task_graph(steps);
+        g.run_with_options(&pool, options.clone()).unwrap(); // warm + seal reuse
+        let summary = bench_wall(&opts, || {
+            for _ in 0..reruns {
+                g.run_with_options(&pool, options.clone()).unwrap();
+            }
+        });
+        report.push(param.clone(), *label, summary);
+        eprintln!("  makespan variant {label} done");
+    }
+    report.print();
+    record_json("priority_makespan", "wall", threads, &report);
+    if let Some(r) = report.speedup(&param, "critical-path", "fifo") {
+        println!("SHAPE critical-path-wins@{param}: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
+    }
+
+    // ---- ABL-7: the PR 4 toggles swept independently ----------------
+    let mut report = Report::new(
+        "ABL-7 priority toggles (PR 4)",
+        format!(
+            "same skewed weighted DAG, {reruns} re-runs per sample, {threads} threads; \
+             critical-path dispatch and injector priority lanes disabled one at a time \
+             (all-off = the pre-PR 4 FIFO scheduling path)"
+        ),
+    );
+    let ablations: [(&str, RunOptions); 4] = [
+        ("all-on", RunOptions::new()),
+        ("no-critical-path", RunOptions::new().critical_path(false)),
+        ("no-priority-lanes", RunOptions::new().priority_lanes(false)),
+        ("all-off", RunOptions::new().critical_path(false).priority_lanes(false)),
+    ];
+    for (label, options) in &ablations {
+        let (mut g, _counter) = dag.to_task_graph(steps);
+        g.run_with_options(&pool, options.clone()).unwrap();
+        let summary = bench_wall(&opts, || {
+            for _ in 0..reruns {
+                g.run_with_options(&pool, options.clone()).unwrap();
+            }
+        });
+        report.push(param.clone(), *label, summary);
+        eprintln!("  toggle variant {label} done");
+    }
+    report.print();
+    record_json("priority_toggles", "wall", threads, &report);
+
+    // ---- PRIO mixed-priority fleet: per-class completion latency ----
+    // 9 diamond-chain graphs launched from one thread per round, tagged
+    // High/Normal/Low in thirds. All sources funnel through the
+    // injector's priority lanes, so High-class runs should complete
+    // (strictly: be observed complete) earlier on average. Latency per
+    // class = time from fleet launch to the last handle of that class
+    // reporting done, sampled over many rounds by polling the fleet.
+    let (fleet_size, diamonds, fleet_steps, rounds) =
+        if fast { (9, 24, 200, 20) } else { (9, 64, 400, 60) };
+    let classes = [RunPriority::High, RunPriority::Normal, RunPriority::Low];
+    let mut graphs: Vec<_> = (0..fleet_size)
+        .map(|_| Dag::diamond_chain(diamonds).to_task_graph(fleet_steps))
+        .collect();
+    // Warm every graph (seals state, sizes queues).
+    for (g, _) in graphs.iter_mut() {
+        g.run(&pool).unwrap();
+    }
+    let mut per_class: [Vec<Duration>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for _ in 0..rounds {
+        let launch = Instant::now();
+        let mut handles: Vec<_> = graphs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, (g, _))| {
+                let class = classes[i % classes.len()];
+                g.run_async_with_options(&pool, RunOptions::new().priority(class)).unwrap()
+            })
+            .collect();
+        // Poll until each class's last handle reports done, stamping
+        // the completion time per class.
+        let mut class_done: [Option<Duration>; 3] = [None; 3];
+        while class_done.iter().any(|d| d.is_none()) {
+            for (ci, done) in class_done.iter_mut().enumerate() {
+                if done.is_none()
+                    && handles
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % classes.len() == ci)
+                        .all(|(_, h)| h.is_done())
+                {
+                    *done = Some(launch.elapsed());
+                }
+            }
+            std::hint::spin_loop();
+        }
+        for (ci, d) in class_done.iter().enumerate() {
+            per_class[ci].push(d.unwrap());
+        }
+        for h in handles.drain(..) {
+            h.wait().unwrap();
+        }
+    }
+    let mut report = Report::new(
+        "PRIO mixed-priority fleet (PR 4)",
+        format!(
+            "{fleet_size} async diamond-chain graphs ({}-node) in flight per round, \
+             classes High/Normal/Low in thirds, {rounds} rounds, {threads} threads; \
+             per-class latency = launch -> last handle of the class done (polled)",
+            diamonds * 4
+        ),
+    );
+    let fleet_param = format!("fleet{fleet_size}x{}", diamonds * 4);
+    for (ci, class) in classes.iter().enumerate() {
+        report.push(fleet_param.clone(), class.as_str(), Summary::from_samples(&per_class[ci]));
+    }
+    // Whole-round throughput through the MultiRun driver + wait_all
+    // combinator (the same mixed-class fleet, drained by parking on the
+    // run eventcount instead of polling).
+    let class_options: Vec<RunOptions> =
+        classes.iter().map(|&c| RunOptions::new().priority(c)).collect();
+    let mut mr = MultiRun::new(fleet_size, diamonds, fleet_steps);
+    mr.run_round_with_options(&pool, &class_options).unwrap(); // warm
+    let summary = bench_wall(&opts, || {
+        mr.run_round_with_options(&pool, &class_options).unwrap();
+    });
+    assert!(mr.verify_exactly_once(), "mixed-class fleet: exactly-once violated");
+    report.push(fleet_param.clone(), "round-wait_all", summary);
+    report.print();
+    record_json("priority_fleet", "wall", threads, &report);
+    if let Some(r) = report.speedup(&fleet_param, "high", "low") {
+        println!(
+            "SHAPE class-tiering@{fleet_param}: {r:.2}x {}",
+            if r >= 1.0 { "PASS" } else { "CHECK" }
+        );
+    }
+}

@@ -16,6 +16,7 @@ use crate::pool::ThreadPool;
 use crate::util::CachePadded;
 
 use super::executor::{run_graph, run_graph_async, RunHandle, RunOptions, RunState};
+use super::schedule::Schedule;
 
 /// Handle to a node of a [`TaskGraph`], returned by [`TaskGraph::add`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -84,6 +85,11 @@ pub(crate) struct Node {
     /// Uncompleted-predecessor count, reset before every run.
     pub(crate) pending: AtomicUsize,
     pub(crate) name: Option<String>,
+    /// Cost weight for the critical-path analysis (PR 4): the node's
+    /// contribution to the weighted longest-path-to-sink rank. Default
+    /// 1 (every node equally expensive); set via
+    /// [`TaskGraph::set_weight`] / [`TaskGraph::add_weighted`].
+    pub(crate) weight: u32,
 }
 
 // SAFETY: `func` is only touched by the one worker that executes the
@@ -107,11 +113,13 @@ const PENDING_PER_LINE: usize = 32;
 /// * `pending` — the per-run uncompleted-predecessor counters in one
 ///   dense, cache-line-aligned allocation, so resetting them is a
 ///   single linear sweep and decrementing them touches no cold data.
-/// * `sources` — indices of zero-predecessor nodes, precomputed so a
-///   re-run submits its source burst without building a fresh `Vec`.
+/// * `sched` — the seal-time priority analysis (PR 4): per-node
+///   critical-path ranks and rank buckets, plus the precomputed source
+///   lists (insertion-ordered and rank-ordered) so a re-run submits its
+///   source burst without building a fresh `Vec`.
 ///
 /// Built on first run or by [`TaskGraph::seal`]; dropped by any
-/// mutation (`add*`, `succeed`, `precede`).
+/// mutation (`add*`, `succeed`, `precede`, `set_weight`).
 pub(crate) struct Topology {
     /// CSR row offsets; length `n + 1`.
     offsets: Vec<u32>,
@@ -122,8 +130,11 @@ pub(crate) struct Topology {
     /// Dense per-node counters, grouped [`PENDING_PER_LINE`] to a
     /// padded line (see the const's docs).
     pending: Vec<CachePadded<[AtomicU32; PENDING_PER_LINE]>>,
-    /// Nodes with zero predecessors, as submitted on every run.
-    pub(crate) sources: Vec<u32>,
+    /// Seal-time priority analysis (PR 4): critical-path ranks,
+    /// rank-quartile buckets, and the rank-ordered source list — a
+    /// dense companion to `pending`, dropped with the topology on any
+    /// mutation (see `graph/schedule.rs`).
+    sched: Schedule,
 }
 
 impl Topology {
@@ -146,15 +157,25 @@ impl Topology {
             succ_arena.extend(node.successors.iter().map(|&s| s as u32));
         }
         let lines = n.div_ceil(PENDING_PER_LINE);
+        let init_pending: Vec<u32> = nodes.iter().map(|x| x.num_predecessors as u32).collect();
+        let weights: Vec<u32> = nodes.iter().map(|x| x.weight).collect();
+        let sched = Schedule::build(&offsets, &succ_arena, &init_pending, &weights);
         Self {
             offsets,
             succ_arena,
-            init_pending: nodes.iter().map(|x| x.num_predecessors as u32).collect(),
+            init_pending,
             pending: (0..lines)
                 .map(|_| CachePadded::new(std::array::from_fn(|_| AtomicU32::new(0))))
                 .collect(),
-            sources: (0..n).filter(|&i| nodes[i].num_predecessors == 0).map(|i| i as u32).collect(),
+            sched,
         }
+    }
+
+    /// The seal-time priority schedule (ranks, buckets, ordered
+    /// sources).
+    #[inline]
+    pub(crate) fn sched(&self) -> &Schedule {
+        &self.sched
     }
 
     /// Successors of node `i` as a slice of the arena.
@@ -274,15 +295,24 @@ impl TaskGraph {
     /// Adds a task — a closure taking no arguments and returning
     /// nothing; use captures for inputs and outputs.
     pub fn add<F: FnMut() + Send + 'static>(&mut self, f: F) -> NodeId {
-        self.add_boxed(Box::new(f), None)
+        self.add_boxed(Box::new(f), None, 1)
     }
 
     /// Adds a named task (names show up in error messages and traces).
     pub fn add_named<F: FnMut() + Send + 'static>(&mut self, name: impl Into<String>, f: F) -> NodeId {
-        self.add_boxed(Box::new(f), Some(name.into()))
+        self.add_boxed(Box::new(f), Some(name.into()), 1)
     }
 
-    fn add_boxed(&mut self, f: Box<dyn FnMut() + Send>, name: Option<String>) -> NodeId {
+    /// Adds a task with an explicit cost weight for the critical-path
+    /// analysis (PR 4): the seal-time rank of a node is its weight plus
+    /// the heaviest downstream chain, and critical-path-first dispatch
+    /// drains high-rank nodes first. [`TaskGraph::add`] is
+    /// `add_weighted(1, f)`.
+    pub fn add_weighted<F: FnMut() + Send + 'static>(&mut self, weight: u32, f: F) -> NodeId {
+        self.add_boxed(Box::new(f), None, weight)
+    }
+
+    fn add_boxed(&mut self, f: Box<dyn FnMut() + Send>, name: Option<String>, weight: u32) -> NodeId {
         self.invalidate_caches();
         let id = self.nodes.len();
         self.nodes.push(Node {
@@ -291,8 +321,42 @@ impl TaskGraph {
             num_predecessors: 0,
             pending: AtomicUsize::new(0),
             name,
+            weight,
         });
         NodeId(id)
+    }
+
+    /// Sets a node's cost weight (see [`TaskGraph::add_weighted`]).
+    /// Like every mutation, this invalidates the sealed topology (the
+    /// rank array depends on weights); the next run or
+    /// [`TaskGraph::seal`] recomputes it.
+    ///
+    /// # Panics
+    /// If `id` is out of bounds.
+    pub fn set_weight(&mut self, id: NodeId, weight: u32) {
+        assert!(id.0 < self.nodes.len(), "NodeId out of range");
+        self.invalidate_caches();
+        self.nodes[id.0].weight = weight;
+    }
+
+    /// A node's cost weight (default 1).
+    ///
+    /// # Panics
+    /// If `id` is out of bounds (an id from another graph).
+    pub fn weight(&self, id: NodeId) -> u32 {
+        assert!(id.0 < self.nodes.len(), "NodeId out of range");
+        self.nodes[id.0].weight
+    }
+
+    /// A node's critical-path rank — its weighted longest-path-to-sink
+    /// (own weight included) — or `None` while the graph is unsealed
+    /// (ranks are computed at seal time; see `graph/schedule.rs`).
+    ///
+    /// # Panics
+    /// If `id` is out of bounds (an id from another graph).
+    pub fn rank(&self, id: NodeId) -> Option<u64> {
+        assert!(id.0 < self.nodes.len(), "NodeId out of range");
+        self.topology.as_ref().map(|t| t.sched().ranks[id.0])
     }
 
     /// Declares that `task` runs after every task in `deps`
@@ -635,7 +699,7 @@ mod tests {
             assert_eq!(t.successors(0), &[2]);
             assert_eq!(t.successors(1), &[2]);
             assert_eq!(t.successors(2), &[] as &[u32]);
-            assert_eq!(t.sources, vec![0, 1]);
+            assert_eq!(t.sched().sources, vec![0, 1]);
             t.reset_pending();
             assert_eq!(t.pending(0).load(Ordering::Relaxed), 0);
             assert_eq!(t.pending(2).load(Ordering::Relaxed), 2);
@@ -672,7 +736,43 @@ mod tests {
             assert_eq!(t.pending(i).load(Ordering::Relaxed), 1, "node {i}");
             assert_eq!(t.successors(i - 1), &[i as u32]);
         }
-        assert_eq!(t.sources, vec![0]);
+        assert_eq!(t.sched().sources, vec![0]);
+    }
+
+    #[test]
+    fn weights_and_ranks_follow_seal_lifecycle() {
+        let mut g = TaskGraph::new();
+        let a = g.add(|| {});
+        let heavy = g.add_weighted(10, || {});
+        let light = g.add(|| {});
+        let sink = g.add(|| {});
+        g.succeed(heavy, &[a]);
+        g.succeed(light, &[a]);
+        g.succeed(sink, &[heavy, light]);
+        assert_eq!(g.weight(a), 1);
+        assert_eq!(g.weight(heavy), 10);
+        // Unsealed: no ranks yet.
+        assert_eq!(g.rank(a), None);
+        g.seal().unwrap();
+        assert_eq!(g.rank(sink), Some(1));
+        assert_eq!(g.rank(heavy), Some(11));
+        assert_eq!(g.rank(light), Some(2));
+        assert_eq!(g.rank(a), Some(12), "source rank follows the heavy arm");
+        // set_weight un-seals (ranks depend on weights) and the next
+        // seal recomputes.
+        g.set_weight(light, 100);
+        assert!(!g.is_sealed());
+        assert_eq!(g.rank(a), None);
+        g.seal().unwrap();
+        assert_eq!(g.rank(a), Some(102));
+    }
+
+    #[test]
+    #[should_panic(expected = "NodeId out of range")]
+    fn set_weight_rejects_foreign_ids() {
+        let mut g = TaskGraph::new();
+        g.add(|| {});
+        g.set_weight(NodeId(5), 2);
     }
 
     #[test]

@@ -11,6 +11,23 @@
 //! wider than [`READY_BURST`]). A linear chain therefore runs entirely
 //! on one worker as a single pool job.
 //!
+//! # Priority scheduling (PR 4)
+//!
+//! On a sealed graph the §2.2 rule is **critical-path-first** by
+//! default: the inline continuation is the *highest-rank* ready
+//! successor (rank = weighted longest-path-to-sink, computed at seal
+//! time — see `graph/schedule.rs`), and the remaining ready successors
+//! are published most-critical-first ([`ReadyBurst`]). Cross-thread
+//! submissions additionally ride the injector's priority lanes,
+//! composing the run's [`RunPriority`] class with each node's rank
+//! bucket, so concurrent fleets can express tenant tiers. Both
+//! behaviours are independently toggleable
+//! ([`RunOptions::no_critical_path`], [`RunOptions::no_priority_lanes`]);
+//! with both off a run is scheduled exactly like the pre-PR 4 FIFO
+//! path. None of this allocates on the re-run path: ranks, buckets,
+//! and the ordered source lists are seal-time arrays, and burst
+//! sorting is in-place on the stack buffer.
+//!
 //! # Re-run hot path (PR 2)
 //!
 //! The paper's §4.2 benchmarks re-run the same `tasks` collection over
@@ -135,6 +152,8 @@ use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::task::{Context, Poll, Waker};
 
 use super::builder::{GraphError, Node, TaskGraph, Topology};
+use super::schedule::{lane_compose, RunPriority, Schedule};
+use crate::pool::injector::DEFAULT_LANE;
 use crate::pool::task::RawTask;
 use crate::pool::thread_pool::PoolInner;
 use crate::pool::ThreadPool;
@@ -166,6 +185,25 @@ pub struct RunOptions {
     /// by [`TaskGraph::run_async`]: handle waiters park on the run
     /// eventcount and never assist.
     pub no_caller_assist: bool,
+    /// Disable critical-path-first dispatch (PR 4): fall back to the
+    /// paper's shape-oblivious §2.2 rule (first ready successor inline,
+    /// rest FIFO) instead of "highest-rank ready successor inline, rest
+    /// in descending rank order". Also implied whenever the run has no
+    /// rank information (`no_topology_cache` — the rank array lives in
+    /// the sealed topology).
+    pub no_critical_path: bool,
+    /// Disable the injector's priority lanes for this run (PR 4):
+    /// cross-thread submissions all use the default lane instead of the
+    /// run-class × node-rank composition (`graph/schedule.rs`). With
+    /// both this and `no_critical_path` set, a run's scheduling is
+    /// bit-identical to the pre-PR 4 FIFO path.
+    pub no_priority_lanes: bool,
+    /// Priority class of the whole run (PR 4): the tenant tier for
+    /// concurrent fleets. Shifts every cross-thread submission of this
+    /// run up or down the injector's lane order; node ranks refine the
+    /// order within the class. No effect while `no_priority_lanes` is
+    /// set.
+    pub priority: RunPriority,
     /// Record per-node execution spans into this tracer
     /// (see [`super::Tracer`]).
     pub tracer: Option<Arc<super::Tracer>>,
@@ -201,6 +239,25 @@ impl RunOptions {
     /// Toggles caller-assisted execution (PR 2 piece 3).
     pub fn caller_assist(mut self, on: bool) -> Self {
         self.no_caller_assist = !on;
+        self
+    }
+
+    /// Toggles critical-path-first dispatch (PR 4).
+    pub fn critical_path(mut self, on: bool) -> Self {
+        self.no_critical_path = !on;
+        self
+    }
+
+    /// Toggles the injector priority lanes for this run (PR 4).
+    pub fn priority_lanes(mut self, on: bool) -> Self {
+        self.no_priority_lanes = !on;
+        self
+    }
+
+    /// Tags the whole run with a priority class (PR 4) — see
+    /// [`RunPriority`].
+    pub fn priority(mut self, class: RunPriority) -> Self {
+        self.priority = class;
         self
     }
 
@@ -445,6 +502,108 @@ pub(crate) struct NodeRun {
 /// one counter bump + one wake per `READY_BURST` successors.
 const READY_BURST: usize = 32;
 
+/// The priority-aware ready-successor burst (PR 4): a stack buffer that
+/// — when the run has rank information and critical-path dispatch is on
+/// — is sorted by descending rank before every flush and submitted
+/// through `PoolInner::submit_node_burst`, which keeps the
+/// most-critical-first order under every queue discipline (reversed
+/// pushes for the owner's LIFO deque, contiguous per-lane batches for
+/// the FIFO injector). Entirely stack-allocated: the sort is in-place
+/// (`sort_unstable_by_key`) and the per-lane grouping walks slices, so
+/// sealed re-runs stay zero-allocation with priorities enabled.
+///
+/// Fan-outs wider than [`READY_BURST`] flush and refill; each flushed
+/// burst is internally rank-ordered, but ordering across bursts is
+/// best-effort (the inline candidate is still the global maximum — see
+/// `execute_node`).
+struct ReadyBurst<'a> {
+    buf: [usize; READY_BURST],
+    len: usize,
+    /// `Some(ranks)` ⇒ critical-path mode: sort descending, reverse
+    /// LIFO pushes.
+    ranks: Option<&'a [u64]>,
+    /// Rank-quartile buckets for the lane composition (present iff the
+    /// run has a sealed topology).
+    buckets: Option<&'a [u8]>,
+    /// `None` ⇒ priority lanes disabled: everything to [`DEFAULT_LANE`].
+    class: Option<RunPriority>,
+}
+
+impl<'a> ReadyBurst<'a> {
+    fn new(sched: Option<&'a Schedule>, options: &RunOptions) -> Self {
+        ReadyBurst {
+            buf: [0; READY_BURST],
+            len: 0,
+            ranks: sched.filter(|_| !options.no_critical_path).map(|s| s.ranks.as_slice()),
+            buckets: sched.map(|s| s.buckets.as_slice()),
+            class: (!options.no_priority_lanes).then_some(options.priority),
+        }
+    }
+
+    /// True when this run uses rank-aware dispatch (highest-rank inline
+    /// continuation, rank-ordered bursts).
+    #[inline]
+    fn critical_path(&self) -> bool {
+        self.ranks.is_some()
+    }
+
+    #[inline]
+    fn rank(&self, node: usize) -> u64 {
+        self.ranks.map(|r| r[node]).unwrap_or(0)
+    }
+
+    /// Buffers a ready node, flushing first if full.
+    fn push(&mut self, node: usize, pool: &Arc<PoolInner>, state: &Arc<RunState>) {
+        if self.len == READY_BURST {
+            self.flush(pool, state);
+        }
+        self.buf[self.len] = node;
+        self.len += 1;
+    }
+
+    /// Publishes the buffered nodes as one burst and empties the
+    /// buffer.
+    fn flush(&mut self, pool: &Arc<PoolInner>, state: &Arc<RunState>) {
+        let n = self.len;
+        if n == 0 {
+            return;
+        }
+        if self.ranks.is_none() && self.class.is_none() {
+            // Both priority behaviours off: the untouched pre-PR 4
+            // submission path, bit-identical by construction.
+            pool.submit_job_batch(self.buf[..n].iter().map(|&node| {
+                RawTask::node(NodeRun {
+                    state: state.clone(),
+                    node,
+                })
+            }));
+            self.len = 0;
+            return;
+        }
+        let ranked = if let Some(ranks) = self.ranks {
+            // Descending rank; node index breaks ties so the order is
+            // deterministic under any discovery interleaving.
+            self.buf[..n].sort_unstable_by_key(|&i| (std::cmp::Reverse(ranks[i]), i));
+            true
+        } else {
+            false
+        };
+        let (class, buckets) = (self.class, self.buckets);
+        let lane_for = move |node: usize| match class {
+            Some(class) => lane_compose(class, buckets.map(|b| b[node])),
+            None => DEFAULT_LANE,
+        };
+        let mk = |node: usize| {
+            RawTask::node(NodeRun {
+                state: state.clone(),
+                node,
+            })
+        };
+        pool.submit_node_burst(&self.buf[..n], ranked, &lane_for, &mk);
+        self.len = 0;
+    }
+}
+
 /// Executes `run.node`, then chains ready successors per §2.2.
 /// Called from the node-task vtable (`pool::task`) on a worker, or on
 /// a caller-assist helper thread (`worker_index` is then the pool's
@@ -457,6 +616,9 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     // SAFETY: non-null topo points at the graph-owned Topology, pinned
     // like the node slice until the run completes.
     let topo: Option<&Topology> = unsafe { header.topo.as_ref() };
+    // Seal-time priority schedule (PR 4); absent when the topology
+    // cache is disabled, which also disables critical-path dispatch.
+    let sched: Option<&Schedule> = topo.map(|t| t.sched());
     let no_inline = header.options.no_inline_continuation;
     let mut current = run.node;
     loop {
@@ -466,12 +628,14 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
         //    the wrapped function"), containing panics so counters
         //    still advance and the run cannot deadlock.
         let span = header.options.tracer.as_ref().map(|t| {
-            t.span(
+            t.span_ranked(
                 worker_index,
                 match &node.name {
                     Some(n) => n.clone(),
                     None => format!("n{current}"),
                 },
+                sched.map(|s| s.ranks[current]).unwrap_or(0),
+                header.options.priority,
             )
         });
         // SAFETY: exclusive access per the module-level protocol.
@@ -490,36 +654,39 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
         drop(span); // record the span before scheduling successors
 
         // 2. Decrement each successor's uncompleted-predecessor count.
-        //    First ready successor continues inline; the rest are
-        //    buffered and submitted as bursts (a single pending-counter
-        //    bump and a single wake per burst instead of per task) —
-        //    unless batched wakeups are disabled in the PoolConfig, in
-        //    which case submit_job_batch degrades to the seed's
-        //    per-successor submission for the ablation bench.
+        //    With critical-path dispatch (PR 4, default on a sealed
+        //    graph): the **highest-rank** ready successor continues
+        //    inline, the rest are buffered, rank-sorted, and published
+        //    most-critical-first (a single pending-counter bump and a
+        //    single wake per burst). The FIFO fallback (`no_critical_
+        //    path`, or no rank information) keeps the paper's rule:
+        //    first ready successor inline, rest in discovery order.
+        //    When batched wakeups are disabled in the PoolConfig the
+        //    burst degrades to the seed's per-successor submission for
+        //    the ablation bench.
         let mut inline_next: Option<usize> = None;
-        let mut ready = [0usize; READY_BURST];
-        let mut nready = 0usize;
+        let mut burst = ReadyBurst::new(sched, &header.options);
         {
             let mut on_ready = |succ: usize| {
-                if !no_inline && inline_next.is_none() {
-                    inline_next = Some(succ);
-                    return;
+                if !no_inline {
+                    match inline_next {
+                        None => {
+                            inline_next = Some(succ);
+                            return;
+                        }
+                        // Critical-path mode: keep the max-rank ready
+                        // successor as the inline continuation, even
+                        // across burst flushes — displaced candidates
+                        // join the burst like any other ready node.
+                        Some(cur) if burst.critical_path() && burst.rank(succ) > burst.rank(cur) => {
+                            burst.push(cur, pool, &state);
+                            inline_next = Some(succ);
+                            return;
+                        }
+                        _ => {}
+                    }
                 }
-                if nready == READY_BURST {
-                    // Buffer full (fan-out wider than READY_BURST):
-                    // flush the whole burst as one batch and refill, so
-                    // wide fan-outs keep the one-bump/one-wake batching
-                    // instead of degrading to per-successor submission.
-                    pool.submit_job_batch(ready.iter().map(|&node| {
-                        RawTask::node(NodeRun {
-                            state: state.clone(),
-                            node,
-                        })
-                    }));
-                    nready = 0;
-                }
-                ready[nready] = succ;
-                nready += 1;
+                burst.push(succ, pool, &state);
             };
             // AcqRel on the decrements: the final decrement acquires
             // every predecessor's release, ordering all predecessor
@@ -542,14 +709,7 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
                 }
             }
         }
-        if nready > 0 {
-            pool.submit_job_batch(ready[..nready].iter().map(|&node| {
-                RawTask::node(NodeRun {
-                    state: state.clone(),
-                    node,
-                })
-            }));
-        }
+        burst.flush(pool, &state);
 
         // 3. Mark this node complete. After this point we must not
         //    touch `node`, `header`, or `topo` again: if this was the
@@ -627,6 +787,10 @@ fn launch_run(
     } else {
         graph.run_state.get_or_insert_with(|| Arc::new(RunState::new())).clone()
     };
+    // Scheduling knobs needed after `options` moves into the header.
+    let critical_path = use_topo && !options.no_critical_path;
+    let lanes_on = !options.no_priority_lanes;
+    let class = options.priority;
     // Drop any panic a dropped-without-wait handle left unharvested.
     state.panic.lock().unwrap().take();
     let generation = state.generation.load(Ordering::SeqCst) + 1;
@@ -659,15 +823,34 @@ fn launch_run(
     //     graph with S independent sources wakes the pool once, not S
     //     times. Validation guarantees at least one source exists for a
     //     non-empty acyclic graph. The sealed path reuses the
-    //     precomputed source list; the fallback builds it fresh.
+    //     precomputed source lists (rank-ordered for critical-path
+    //     runs, insertion-ordered otherwise); the fallback builds its
+    //     list fresh. Lane composition matches the successor bursts
+    //     (run class × node rank bucket — see `graph/schedule.rs`).
+    let mk = |node: usize| {
+        RawTask::node(NodeRun {
+            state: state.clone(),
+            node,
+        })
+    };
     if use_topo {
-        let topo = graph.topology.as_ref().unwrap();
-        pool.inner().submit_job_batch(topo.sources.iter().map(|&node| {
-            RawTask::node(NodeRun {
-                state: state.clone(),
-                node: node as usize,
-            })
-        }));
+        let sched = graph.topology.as_ref().unwrap().sched();
+        if critical_path || lanes_on {
+            let nodes: &[usize] = if critical_path { &sched.sources_desc } else { &sched.sources };
+            let buckets = sched.buckets.as_slice();
+            let lane_for = move |node: usize| {
+                if lanes_on {
+                    lane_compose(class, Some(buckets[node]))
+                } else {
+                    DEFAULT_LANE
+                }
+            };
+            pool.inner().submit_node_burst(nodes, critical_path, &lane_for, &mk);
+        } else {
+            // Both priority behaviours off: the untouched pre-PR 4
+            // submission path, bit-identical by construction.
+            pool.inner().submit_job_batch(sched.sources.iter().map(|&node| mk(node)));
+        }
     } else {
         let sources: Vec<usize> = graph
             .nodes
@@ -676,12 +859,14 @@ fn launch_run(
             .filter(|(_, node)| node.num_predecessors == 0)
             .map(|(i, _)| i)
             .collect();
-        pool.inner().submit_job_batch(sources.iter().map(|&node| {
-            RawTask::node(NodeRun {
-                state: state.clone(),
-                node,
-            })
-        }));
+        // No rank information without the topology cache: sources are
+        // submitted in insertion order, lane from the class alone.
+        if lanes_on {
+            let lane_for = move |_node: usize| lane_compose(class, None);
+            pool.inner().submit_node_burst(&sources, false, &lane_for, &mk);
+        } else {
+            pool.inner().submit_job_batch(sources.iter().map(|&node| mk(node)));
+        }
     }
     Ok((state, generation))
 }
@@ -894,6 +1079,71 @@ impl Drop for RunHandle<'_> {
         self.wait_quiescent();
         self.state.clear_waker();
     }
+}
+
+/// Blocks until **every** handle's run has completed, then harvests
+/// them all, returning the first error encountered (in slice order).
+///
+/// This is the fleet combinator for `run_async` (PR 3 follow-up): the
+/// waiter parks on the run eventcount of the first still-pending
+/// handle's pool instead of spin-polling `is_done()`. Fleets spanning
+/// several pools stay live through the eventcount's 1 ms re-check
+/// backstop (see `PoolInner::wait_run`), so a completion on another
+/// pool is observed at most one backstop tick late.
+///
+/// Called from inside a task of a pool that any handle targets, this
+/// returns [`GraphError::RunFromWorker`] deterministically, exactly
+/// like [`RunHandle::wait`] (a parked worker could deadlock the very
+/// runs it waits for). An empty fleet is trivially complete.
+pub fn wait_all(handles: &mut [RunHandle<'_>]) -> Result<(), GraphError> {
+    // Guard first, before any completion check: the answer must depend
+    // only on where the call was made (see RunHandle::wait).
+    if handles.iter().any(|h| h.pool.on_worker_thread() || h.pool.on_assisting_thread()) {
+        return Err(GraphError::RunFromWorker);
+    }
+    if let Some(pending) = handles.iter().position(|h| !h.is_done()) {
+        let pool = handles[pending].pool.clone();
+        pool.wait_run(|| handles.iter().all(|h| h.is_done()));
+    }
+    let mut result = Ok(());
+    for h in handles.iter_mut() {
+        // All runs are complete, so try_wait always harvests; keep the
+        // first error but detach every handle from its run.
+        if let Some(Err(e)) = h.try_wait() {
+            if result.is_ok() {
+                result = Err(e);
+            }
+        }
+    }
+    result
+}
+
+/// Blocks until **at least one** handle's run has completed and
+/// returns its index (the lowest such index when several are already
+/// done). The winner is *not* harvested — call
+/// [`RunHandle::try_wait`] / [`RunHandle::wait`] on it to collect the
+/// result.
+///
+/// Parks on the first handle's pool run eventcount instead of
+/// spin-polling; multi-pool fleets ride the same 1 ms backstop as
+/// [`wait_all`]. On a thread already executing a task of that pool the
+/// wait *drains* pool tasks instead of parking (see
+/// `PoolInner::wait_run`), so it cannot deadlock a single-worker pool.
+///
+/// # Panics
+/// If `handles` is empty — there is no run whose completion could ever
+/// be awaited.
+pub fn wait_any(handles: &mut [RunHandle<'_>]) -> usize {
+    assert!(!handles.is_empty(), "wait_any on an empty handle fleet");
+    if let Some(done) = handles.iter().position(|h| h.is_done()) {
+        return done;
+    }
+    let pool = handles[0].pool.clone();
+    pool.wait_run(|| handles.iter().any(|h| h.is_done()));
+    handles
+        .iter()
+        .position(|h| h.is_done())
+        .expect("wait_run returned with no completed handle")
 }
 
 impl Future for RunHandle<'_> {
@@ -1114,7 +1364,7 @@ mod tests {
                 no_topology_cache: mask & 2 != 0,
                 no_state_reuse: mask & 4 != 0,
                 no_caller_assist: mask & 8 != 0,
-                tracer: None,
+                ..RunOptions::default()
             };
             let counter = Arc::new(AtomicUsize::new(0));
             let mut g = TaskGraph::new();
@@ -1142,6 +1392,43 @@ mod tests {
             for rep in 1..=3 {
                 g.run_with_options(&pool, options.clone()).unwrap();
                 assert_eq!(counter.load(Relaxed), rep * 32, "mask={mask:#06b} rep={rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_toggles_and_classes_are_behaviour_preserving() {
+        // The PR 4 knobs (critical-path dispatch, priority lanes, run
+        // class) are pure scheduling hints: every combination must keep
+        // exactly-once execution across re-runs, on a weighted graph.
+        let pool = ThreadPool::new(2);
+        for mask in 0..4u32 {
+            for class in [RunPriority::High, RunPriority::Normal, RunPriority::Low] {
+                let options = RunOptions {
+                    no_critical_path: mask & 1 != 0,
+                    no_priority_lanes: mask & 2 != 0,
+                    priority: class,
+                    ..RunOptions::default()
+                };
+                let counter = Arc::new(AtomicUsize::new(0));
+                let mut g = TaskGraph::new();
+                let mk = |c: &Arc<AtomicUsize>| {
+                    let c = c.clone();
+                    move || {
+                        c.fetch_add(1, Relaxed);
+                    }
+                };
+                let src = g.add(mk(&counter));
+                let heavy = g.add_weighted(9, mk(&counter));
+                let light = g.add(mk(&counter));
+                let sink = g.add_weighted(3, mk(&counter));
+                g.succeed(heavy, &[src]);
+                g.succeed(light, &[src]);
+                g.succeed(sink, &[heavy, light]);
+                for rep in 1..=3 {
+                    g.run_with_options(&pool, options.clone()).unwrap();
+                    assert_eq!(counter.load(Relaxed), rep * 4, "mask={mask} class={class:?} rep={rep}");
+                }
             }
         }
     }

@@ -18,6 +18,13 @@
 //! calls perform **zero heap allocations** and no handoff context
 //! switch. Each piece is independently toggleable via [`RunOptions`].
 //!
+//! Scheduling is **priority-aware** (PR 4): sealing also computes each
+//! node's weighted critical-path rank (`schedule.rs`), the continuation
+//! rule prefers the highest-rank ready successor, submission bursts are
+//! published most-critical-first through the injector's priority lanes,
+//! and whole runs carry a [`RunPriority`] class so concurrent fleets
+//! can express tenant tiers — all toggleable via [`RunOptions`].
+//!
 //! Runs can also be launched **without blocking** (PR 3):
 //! [`TaskGraph::run_async`] submits the sources and returns a
 //! [`RunHandle`] that pins the graph borrow for the lifetime of the
@@ -28,11 +35,13 @@
 mod builder;
 mod dataflow;
 mod executor;
+mod schedule;
 mod trace;
 
 pub use builder::{GraphError, NodeId, TaskGraph};
 pub use dataflow::{Dataflow, DataflowError, Input, Output};
-pub use executor::{RunHandle, RunOptions};
+pub use executor::{wait_all, wait_any, RunHandle, RunOptions};
+pub use schedule::RunPriority;
 pub use trace::{SpanGuard, TraceEvent, Tracer};
 
 pub(crate) use executor::{execute_node, NodeRun};

@@ -1,0 +1,298 @@
+//! Seal-time priority analysis: critical-path ranks, rank-quantile
+//! buckets, and the run-class → injector-lane composition (PR 4).
+//!
+//! The paper's §2.2 continuation rule is shape-oblivious: it executes
+//! the *first* ready successor inline and submits the rest FIFO, so on
+//! skewed DAGs the critical path routinely waits behind short branches.
+//! The standard fix (Taskflow and the task-graph scheduling literature)
+//! is priority-aware ready-task selection, and the PR 2 CSR arena makes
+//! the static analysis nearly free: one reverse-topological sweep at
+//! seal time.
+//!
+//! # Rank
+//!
+//! A node's **rank** is its weighted longest-path-to-sink: its own cost
+//! weight ([`crate::graph::TaskGraph::set_weight`], default 1) plus the
+//! maximum rank among its successors. The rank of a node is therefore
+//! the remaining serial work on the most expensive dependency chain
+//! through it — exactly the quantity a makespan-minimizing scheduler
+//! wants to drain first. Ranks live in a dense array alongside the
+//! pending counters and are invalidated with the topology cache (any
+//! mutation of the graph, including `set_weight`, drops them; the next
+//! seal recomputes).
+//!
+//! # Dispatch (see `graph/executor.rs`)
+//!
+//! With critical-path-first dispatch enabled (the default;
+//! [`crate::graph::RunOptions::no_critical_path`] disables it), the
+//! continuation rule becomes: execute the **highest-rank** ready
+//! successor inline, and submit the rest most-critical-first (the burst
+//! buffer is sorted by descending rank; worker-local LIFO pushes are
+//! reversed so owners also pop in descending rank).
+//!
+//! # Lanes
+//!
+//! The pool's injector has [`crate::pool::injector::NUM_LANES`] (4)
+//! priority lanes. A task's lane composes the **run's priority class**
+//! ([`RunPriority`]: High / Normal / Low — tenant tiers for concurrent
+//! async fleets) with the **node's rank bucket** (top-half vs
+//! bottom-half rank within its graph):
+//!
+//! | run class \ node rank | top half | bottom half |
+//! |---|---|---|
+//! | High   | lane 0 | lane 1 |
+//! | Normal | lane 1 | lane 2 |
+//! | Low    | lane 2 | lane 3 |
+//!
+//! Untagged submissions (plain `submit`, lanes disabled) use lane 1,
+//! and an occasional lowest-first pop bounds starvation (see
+//! `pool/injector.rs`).
+
+use std::cmp::Reverse;
+
+use crate::pool::injector::NUM_LANES;
+
+/// Priority class of a whole graph run — the tenant tier knob for
+/// concurrent fleets ([`crate::graph::RunOptions::priority`]): every
+/// task of a High run outranks every task of a Low run in the
+/// injector's lane order (node ranks refine the order *within* a
+/// class; see the module docs for the composition table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RunPriority {
+    /// Served first: lanes 0–1.
+    High,
+    /// The default tier: lanes 1–2.
+    #[default]
+    Normal,
+    /// Served last (but never starved — the injector's reverse-scan
+    /// tick guarantees occasional low-lane pops): lanes 2–3.
+    Low,
+}
+
+impl RunPriority {
+    /// Lane of this class's most critical work (the row base in the
+    /// composition table).
+    #[inline]
+    pub(crate) fn lane_base(self) -> u8 {
+        match self {
+            RunPriority::High => 0,
+            RunPriority::Normal => 1,
+            RunPriority::Low => 2,
+        }
+    }
+
+    /// Stable lower-case name (trace export, bench labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunPriority::High => "high",
+            RunPriority::Normal => "normal",
+            RunPriority::Low => "low",
+        }
+    }
+}
+
+/// Composes a run class with a node's rank bucket into an injector
+/// lane. `bucket` is the node's rank quartile (0 = most critical) or
+/// `None` when no rank information exists (topology cache disabled) —
+/// unranked nodes are treated as critical so a class's work is never
+/// accidentally demoted a tier.
+#[inline]
+pub(crate) fn lane_compose(class: RunPriority, bucket: Option<u8>) -> u8 {
+    let bonus = bucket.map(|b| b >> 1).unwrap_or(0); // quartiles 0–1 ⇒ +0, 2–3 ⇒ +1
+    (class.lane_base() + bonus).min(NUM_LANES as u8 - 1)
+}
+
+/// The sealed priority schedule of a graph: per-node critical-path
+/// ranks, rank-quartile buckets, and pre-ordered source lists. Built by
+/// `Topology::build` (one reverse-topological sweep, O(nodes + edges))
+/// and dropped with it on any mutation.
+pub(crate) struct Schedule {
+    /// Weighted longest-path-to-sink per node (own weight included);
+    /// the priority key for inline selection and burst ordering.
+    pub(crate) ranks: Vec<u64>,
+    /// Rank quartile per node, 0 = most critical 25 %. Only the
+    /// top-half/bottom-half split feeds the lane composition, but the
+    /// full quartile is kept for traces and diagnostics.
+    pub(crate) buckets: Vec<u8>,
+    /// Zero-predecessor nodes in insertion order (the FIFO source
+    /// burst, as `usize` for the burst-submission path).
+    pub(crate) sources: Vec<usize>,
+    /// Zero-predecessor nodes sorted by descending rank (node index
+    /// breaks ties, so the order is deterministic) — the
+    /// critical-path-first source burst.
+    pub(crate) sources_desc: Vec<usize>,
+}
+
+impl Schedule {
+    /// Builds the schedule from the CSR topology pieces: `offsets` /
+    /// `succ` are the flattened successor arena, `indeg` the per-node
+    /// in-degrees, `weights` the per-node cost weights.
+    ///
+    /// The caller (seal) has already validated acyclicity, so Kahn's
+    /// algorithm visits every node; the reverse of that visitation
+    /// order is a valid reverse-topological order for the rank sweep.
+    pub(crate) fn build(offsets: &[u32], succ: &[u32], indeg: &[u32], weights: &[u32]) -> Self {
+        let n = indeg.len();
+        debug_assert_eq!(offsets.len(), n + 1);
+        debug_assert_eq!(weights.len(), n);
+
+        // Kahn order (the Vec doubles as the queue). Validation ran its
+        // own Kahn pass moments earlier, but its cycle-check cache
+        // deliberately discards the visitation order (keeping it would
+        // pin an O(n) Vec for the life of every validated graph);
+        // re-deriving it here keeps seal a one-time, cold-path cost.
+        let mut deg = indeg.to_vec();
+        let mut order: Vec<u32> = (0..n as u32).filter(|&i| deg[i as usize] == 0).collect();
+        let sources: Vec<usize> = order.iter().map(|&i| i as usize).collect();
+        let mut head = 0;
+        while head < order.len() {
+            let i = order[head] as usize;
+            head += 1;
+            for &s in &succ[offsets[i] as usize..offsets[i + 1] as usize] {
+                deg[s as usize] -= 1;
+                if deg[s as usize] == 0 {
+                    order.push(s);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), n, "Schedule::build requires an acyclic graph");
+
+        // Reverse-topological sweep: every successor's rank is final
+        // before its predecessors are visited.
+        let mut ranks = vec![0u64; n];
+        for &i in order.iter().rev() {
+            let i = i as usize;
+            let tail = succ[offsets[i] as usize..offsets[i + 1] as usize]
+                .iter()
+                .map(|&s| ranks[s as usize])
+                .max()
+                .unwrap_or(0);
+            ranks[i] = weights[i] as u64 + tail;
+        }
+
+        // Quartile thresholds from a descending-sorted copy. The
+        // boundaries are approximate for tiny graphs (ties all land in
+        // the more critical bucket), which errs on the side of not
+        // demoting work — only the top/bottom-half split feeds lanes.
+        let buckets = if n == 0 {
+            Vec::new()
+        } else {
+            let mut sorted = ranks.clone();
+            sorted.sort_unstable_by_key(|&r| Reverse(r));
+            let th: [u64; 3] = [1usize, 2, 3].map(|k| sorted[(n * k / 4).min(n - 1)]);
+            ranks.iter().map(|&r| th.iter().filter(|&&t| r < t).count() as u8).collect()
+        };
+
+        let mut sources_desc = sources.clone();
+        sources_desc.sort_unstable_by_key(|&i| (Reverse(ranks[i]), i));
+
+        Schedule {
+            ranks,
+            buckets,
+            sources,
+            sources_desc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::injector::DEFAULT_LANE;
+
+    /// CSR-ify an adjacency list for direct Schedule::build tests.
+    fn csr(adj: &[Vec<usize>]) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let mut offsets = vec![0u32];
+        let mut succ = Vec::new();
+        let mut indeg = vec![0u32; adj.len()];
+        for succs in adj {
+            for &s in succs {
+                succ.push(s as u32);
+                indeg[s] += 1;
+            }
+            offsets.push(succ.len() as u32);
+        }
+        (offsets, succ, indeg)
+    }
+
+    #[test]
+    fn chain_ranks_count_down_to_the_sink() {
+        // 0 -> 1 -> 2 -> 3, unit weights: ranks 4, 3, 2, 1.
+        let adj = vec![vec![1], vec![2], vec![3], vec![]];
+        let (o, s, d) = csr(&adj);
+        let sched = Schedule::build(&o, &s, &d, &[1, 1, 1, 1]);
+        assert_eq!(sched.ranks, vec![4, 3, 2, 1]);
+        assert_eq!(sched.sources, vec![0]);
+        assert_eq!(sched.sources_desc, vec![0]);
+    }
+
+    #[test]
+    fn weighted_diamond_rank_takes_the_heavy_arm() {
+        // 0 -> {1 (w=10), 2 (w=1)} -> 3: the source's rank follows the
+        // heavy arm.
+        let adj = vec![vec![1, 2], vec![3], vec![3], vec![]];
+        let (o, s, d) = csr(&adj);
+        let sched = Schedule::build(&o, &s, &d, &[1, 10, 1, 2]);
+        assert_eq!(sched.ranks[3], 2);
+        assert_eq!(sched.ranks[1], 12);
+        assert_eq!(sched.ranks[2], 3);
+        assert_eq!(sched.ranks[0], 13);
+    }
+
+    #[test]
+    fn sources_desc_orders_by_rank_then_index() {
+        // Three independent chains of different lengths; source order
+        // by descending rank, index breaking ties.
+        let adj = vec![
+            vec![3],   // 0: chain of 2 -> rank 2
+            vec![],    // 1: isolated -> rank 1
+            vec![4],   // 2: chain of 2 -> rank 2 (ties with 0)
+            vec![],    // 3
+            vec![],    // 4
+        ];
+        let (o, s, d) = csr(&adj);
+        let sched = Schedule::build(&o, &s, &d, &[1; 5]);
+        assert_eq!(sched.sources, vec![0, 1, 2]);
+        assert_eq!(sched.sources_desc, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn buckets_split_ranks_into_quartiles() {
+        // A pure chain of 8: ranks 8..1, one node per bucket pair.
+        let adj: Vec<Vec<usize>> =
+            (0..8).map(|i| if i + 1 < 8 { vec![i + 1] } else { vec![] }).collect();
+        let (o, s, d) = csr(&adj);
+        let sched = Schedule::build(&o, &s, &d, &[1; 8]);
+        // Descending ranks 8..=1; thresholds at sorted[2], [4], [6] =
+        // 6, 4, 2. Buckets: rank >= 6 -> 0, >= 4 -> 1, >= 2 -> 2, else 3.
+        assert_eq!(sched.buckets, vec![0, 0, 0, 1, 1, 2, 2, 3]);
+        // Uniform ranks collapse into the most critical bucket.
+        let adj = vec![vec![], vec![], vec![], vec![]];
+        let (o, s, d) = csr(&adj);
+        let sched = Schedule::build(&o, &s, &d, &[1; 4]);
+        assert_eq!(sched.buckets, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn lane_composition_matches_the_doc_table() {
+        use RunPriority::*;
+        for (class, top, bottom) in [(High, 0, 1), (Normal, 1, 2), (Low, 2, 3)] {
+            assert_eq!(lane_compose(class, Some(0)), top, "{class:?} q0");
+            assert_eq!(lane_compose(class, Some(1)), top, "{class:?} q1");
+            assert_eq!(lane_compose(class, Some(2)), bottom, "{class:?} q2");
+            assert_eq!(lane_compose(class, Some(3)), bottom, "{class:?} q3");
+            // No rank information: treated as critical.
+            assert_eq!(lane_compose(class, None), top, "{class:?} unranked");
+        }
+        assert_eq!(DEFAULT_LANE, 1, "untagged submissions share the Normal-critical lane");
+    }
+
+    #[test]
+    fn empty_graph_schedule_is_empty() {
+        let sched = Schedule::build(&[0], &[], &[], &[]);
+        assert!(sched.ranks.is_empty());
+        assert!(sched.buckets.is_empty());
+        assert!(sched.sources.is_empty());
+        assert!(sched.sources_desc.is_empty());
+    }
+}

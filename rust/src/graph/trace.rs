@@ -16,6 +16,8 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::schedule::RunPriority;
+
 /// One recorded task execution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
@@ -27,6 +29,13 @@ pub struct TraceEvent {
     pub start_us: u64,
     /// Duration in µs.
     pub dur_us: u64,
+    /// Critical-path rank of the node at execution time (PR 4) — 0
+    /// when the run had no rank information (unsealed / topology cache
+    /// disabled). Exported so a Chrome-trace view can check whether
+    /// the critical path actually ran first.
+    pub rank: u64,
+    /// Priority class of the run the node belonged to.
+    pub class: RunPriority,
 }
 
 /// Collects [`TraceEvent`]s across a run. Shareable (`&Tracer` is
@@ -54,17 +63,35 @@ impl Tracer {
     }
 
     /// Starts a span; call [`SpanGuard::finish`] (or drop it) to record.
+    /// Rank and class default to 0 / [`RunPriority::Normal`] — the
+    /// graph executor uses [`Tracer::span_ranked`] to attach the node's
+    /// scheduling context.
     pub fn span(&self, worker: usize, name: impl Into<String>) -> SpanGuard<'_> {
+        self.span_ranked(worker, name, 0, RunPriority::Normal)
+    }
+
+    /// [`Tracer::span`] carrying the node's critical-path rank and the
+    /// run's priority class (PR 4), so exported traces can show whether
+    /// the critical path actually ran first.
+    pub fn span_ranked(
+        &self,
+        worker: usize,
+        name: impl Into<String>,
+        rank: u64,
+        class: RunPriority,
+    ) -> SpanGuard<'_> {
         SpanGuard {
             tracer: self,
             worker,
             name: name.into(),
             start: Instant::now(),
+            rank,
+            class,
             recorded: false,
         }
     }
 
-    fn record(&self, worker: usize, name: String, start: Instant, end: Instant) {
+    fn record(&self, worker: usize, name: String, start: Instant, end: Instant, rank: u64, class: RunPriority) {
         let start_us = start.duration_since(self.epoch).as_micros() as u64;
         let dur_us = end.duration_since(start).as_micros() as u64;
         self.events.lock().unwrap().push(TraceEvent {
@@ -72,6 +99,8 @@ impl Tracer {
             name,
             start_us,
             dur_us,
+            rank,
+            class,
         });
     }
 
@@ -116,11 +145,14 @@ impl Tracer {
                 out.push(',');
             }
             out.push_str(&format!(
-                "\n{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{}}}",
+                "\n{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\
+                 \"args\":{{\"rank\":{},\"class\":\"{}\"}}}}",
                 escape(&e.name),
                 e.start_us,
                 e.dur_us.max(1),
-                e.worker
+                e.worker,
+                e.rank,
+                e.class.as_str()
             ));
         }
         out.push_str("\n]\n");
@@ -159,6 +191,8 @@ pub struct SpanGuard<'t> {
     worker: usize,
     name: String,
     start: Instant,
+    rank: u64,
+    class: RunPriority,
     recorded: bool,
 }
 
@@ -171,8 +205,14 @@ impl SpanGuard<'_> {
     fn record_now(&mut self) {
         if !self.recorded {
             self.recorded = true;
-            self.tracer
-                .record(self.worker, std::mem::take(&mut self.name), self.start, Instant::now());
+            self.tracer.record(
+                self.worker,
+                std::mem::take(&mut self.name),
+                self.start,
+                Instant::now(),
+                self.rank,
+                self.class,
+            );
         }
     }
 }
@@ -220,6 +260,22 @@ mod tests {
         assert!(json.contains("\\\"name\\\\x"));
         assert!(json.contains("\"tid\":3"));
         assert_eq!(json.matches("\"ph\":\"X\"").count(), 2);
+        // Plain spans export neutral scheduling context.
+        assert_eq!(json.matches("\"args\":{\"rank\":0,\"class\":\"normal\"}").count(), 2);
+    }
+
+    #[test]
+    fn ranked_spans_carry_rank_and_class() {
+        let t = Tracer::new();
+        t.span_ranked(1, "critical", 42, RunPriority::High).finish();
+        t.span_ranked(0, "tail", 1, RunPriority::Low).finish();
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        let crit = evs.iter().find(|e| e.name == "critical").unwrap();
+        assert_eq!((crit.rank, crit.class), (42, RunPriority::High));
+        let json = t.to_chrome_trace();
+        assert!(json.contains("\"args\":{\"rank\":42,\"class\":\"high\"}"));
+        assert!(json.contains("\"args\":{\"rank\":1,\"class\":\"low\"}"));
     }
 
     #[test]

@@ -23,6 +23,26 @@ use std::ptr;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Number of priority lanes the pool's injection queue is split into
+/// (PR 4). Lane 0 is the most urgent; lane `NUM_LANES - 1` the least.
+/// Four lanes are enough to compose a run's priority class
+/// (High/Normal/Low) with a node's critical-path standing (top-half /
+/// bottom-half rank) — see `graph::schedule::lane_compose`.
+pub const NUM_LANES: usize = 4;
+
+/// Lane used by submissions with no priority information: plain
+/// `ThreadPool::submit`, graph runs with priority lanes disabled, and
+/// Normal-class critical nodes. Sits above Normal-class non-critical
+/// work and below High-class work, so untagged tasks are neither
+/// starved nor favoured.
+pub const DEFAULT_LANE: u8 = 1;
+
+/// Every `STARVATION_TICK`-th pop scans the lanes lowest-priority
+/// first, so a saturated high lane cannot starve low-lane work forever
+/// (the starvation bound the run-class design promises). Prime, so the
+/// reversed pops do not beat against power-of-two submission patterns.
+const STARVATION_TICK: usize = 61;
+
 /// Common interface for injection queues.
 pub trait Injector<T>: Send + Sync {
     /// Enqueues a value (multi-producer).
@@ -310,6 +330,94 @@ impl<T> Drop for SegQueue<T> {
     }
 }
 
+/// The pool's injection queue split into [`NUM_LANES`] priority lanes
+/// (PR 4): one [`Injector`] per lane plus a scan policy.
+///
+/// * **push** — producers that know a task's priority push to its lane
+///   ([`LaneInjector::push_to`] / [`LaneInjector::push_batch_to`]);
+///   everything else lands in [`DEFAULT_LANE`].
+/// * **pop** — consumers (workers stealing from the injector, assist
+///   helpers) scan lane 0 → N-1, so cross-thread submission and
+///   injector-side stealing both prefer critical work. Every
+///   [`STARVATION_TICK`]-th pop scans N-1 → 0 instead, bounding how
+///   long a loaded high lane can starve the low lanes.
+///
+/// Within a lane each sub-injector keeps its own FIFO order, so with
+/// every producer using one lane (priority lanes disabled) the
+/// structure degenerates to exactly the old single-queue behaviour —
+/// the other lanes cost one emptiness-flag load per pop.
+pub struct LaneInjector<T> {
+    lanes: Vec<Box<dyn Injector<T>>>,
+}
+
+thread_local! {
+    /// Per-thread pop tick driving the occasional reverse scan. Thread
+    /// local on purpose: a shared counter would put a cross-core RMW on
+    /// every non-empty pop (defeating the lock-free injector arm), and
+    /// the starvation bound only needs each *consumer* to look at the
+    /// low lanes now and then — per-thread ticks give exactly that.
+    static LANE_TICK: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+impl<T: Send> LaneInjector<T> {
+    /// Builds [`NUM_LANES`] lanes from the given sub-injector factory.
+    pub fn new(mk: impl Fn() -> Box<dyn Injector<T>>) -> Self {
+        Self {
+            lanes: (0..NUM_LANES).map(|_| mk()).collect(),
+        }
+    }
+
+    /// Enqueues into `lane` (clamped to the valid range).
+    pub fn push_to(&self, lane: u8, value: T) {
+        self.lanes[(lane as usize).min(NUM_LANES - 1)].push(value);
+    }
+
+    /// Enqueues into [`DEFAULT_LANE`] (untagged submissions).
+    pub fn push(&self, value: T) {
+        self.push_to(DEFAULT_LANE, value);
+    }
+
+    /// Enqueues a burst into `lane`, paying the lane's per-burst
+    /// synchronization cost once (see [`Injector::push_batch`]).
+    pub fn push_batch_to(&self, lane: u8, values: &mut dyn Iterator<Item = T>) {
+        self.lanes[(lane as usize).min(NUM_LANES - 1)].push_batch(values);
+    }
+
+    /// Dequeues the most urgent available task (see the scan policy in
+    /// the type docs).
+    pub fn pop(&self) -> Option<T> {
+        // Empty fast path first: idle workers poll the injector on
+        // every find-task sweep, and that path must stay load-only
+        // (four emptiness-flag loads, no tick bookkeeping).
+        if self.is_empty() {
+            return None;
+        }
+        // The tick advances only when work may be taken, which is
+        // exactly when the starvation bound matters.
+        let tick = LANE_TICK.with(|t| {
+            let v = t.get().wrapping_add(1);
+            t.set(v);
+            v
+        });
+        if tick % STARVATION_TICK == 0 {
+            self.lanes.iter().rev().find_map(|lane| lane.pop())
+        } else {
+            self.lanes.iter().find_map(|lane| lane.pop())
+        }
+    }
+
+    /// Approximate emptiness across all lanes (same staleness caveats
+    /// as [`Injector::is_empty`]).
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    /// Approximate total length across all lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +513,86 @@ mod tests {
     #[test]
     fn seg_queue_mpmc() {
         mpmc_stress(Arc::new(SegQueue::new()));
+    }
+
+    fn lane_injector() -> LaneInjector<usize> {
+        LaneInjector::new(|| Box::new(MutexInjector::new()))
+    }
+
+    #[test]
+    fn lanes_pop_highest_priority_first() {
+        let q = lane_injector();
+        q.push_to(3, 30);
+        q.push_to(0, 0);
+        q.push_to(2, 20);
+        q.push_to(0, 1);
+        q.push_to(1, 10);
+        assert_eq!(q.len(), 5);
+        // Forward scans: lane 0 FIFO, then lane 1, 2, 3.
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(20));
+        assert_eq!(q.pop(), Some(30));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn lanes_default_push_goes_to_default_lane() {
+        let q = lane_injector();
+        q.push(7);
+        q.push_to(DEFAULT_LANE + 1, 8);
+        q.push_to(0, 6);
+        assert_eq!(q.pop(), Some(6));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), Some(8));
+    }
+
+    #[test]
+    fn lanes_batch_push_preserves_fifo_within_lane() {
+        let q = lane_injector();
+        q.push_batch_to(2, &mut (0..50usize));
+        q.push_batch_to(1, &mut (100..110usize));
+        for i in 100..110 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        for i in 0..50 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn lanes_out_of_range_lane_is_clamped() {
+        let q = lane_injector();
+        q.push_to(200, 1);
+        q.push_to(NUM_LANES as u8 - 1, 0);
+        assert_eq!(q.len(), 2);
+        // Both landed in the last lane, FIFO within it.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(0));
+    }
+
+    #[test]
+    fn lanes_starvation_tick_eventually_pops_low_lane() {
+        // With lane 0 always loaded, the reverse scan must still reach
+        // lane 3 within STARVATION_TICK pops.
+        let q = lane_injector();
+        q.push_to(3, usize::MAX);
+        let mut popped_low = false;
+        for i in 0..200 {
+            q.push_to(0, i);
+            match q.pop() {
+                Some(usize::MAX) => {
+                    popped_low = true;
+                    break;
+                }
+                Some(_) => {}
+                None => unreachable!("lane 0 was just pushed"),
+            }
+        }
+        assert!(popped_low, "low lane starved past the starvation bound");
     }
 
     #[test]

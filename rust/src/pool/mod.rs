@@ -52,7 +52,7 @@ pub mod thread_pool;
 pub use deque::{deque, Steal, Stealer, Worker, MAX_STEAL_BATCH};
 pub use event_count::EventCount;
 pub use fence_deque::{fence_deque, FenceStealer, FenceWorker};
-pub use injector::{Injector, MutexInjector, SegQueue};
+pub use injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_LANE, NUM_LANES};
 pub use handle::{JoinError, TaskHandle};
 pub use metrics::{PoolSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use scope::Scope;

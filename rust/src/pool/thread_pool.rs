@@ -52,7 +52,7 @@ use std::time::Duration;
 
 use super::deque::{deque, Steal, Stealer, Worker};
 use super::event_count::EventCount;
-use super::injector::{Injector, MutexInjector, SegQueue};
+use super::injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_LANE, NUM_LANES};
 use super::metrics::{PaddedMetrics, PoolSnapshot, WorkerMetrics};
 use super::task::RawTask;
 use crate::util::{CachePadded, XorShift64Star};
@@ -176,7 +176,12 @@ struct PendingCell {
 }
 
 pub(crate) struct PoolInner {
-    injector: Box<dyn Injector<RawTask>>,
+    /// Global injection queue, split into [`NUM_LANES`] priority lanes
+    /// (PR 4): untagged submissions use [`DEFAULT_LANE`]; graph runs
+    /// with priority lanes enabled spread tasks by run class × node
+    /// rank (`graph::schedule::lane_compose`). Workers and helpers pop
+    /// most-urgent-first with a starvation-bounding reverse scan.
+    injector: LaneInjector<RawTask>,
     stealers: Vec<Stealer<RawTask>>,
     metrics: Vec<PaddedMetrics>,
     ec: EventCount,
@@ -239,10 +244,13 @@ impl ThreadPool {
             owners.push(w);
             stealers.push(s);
         }
-        let injector: Box<dyn Injector<RawTask>> = match config.injector {
-            InjectorKind::Mutex => Box::new(MutexInjector::new()),
-            InjectorKind::LockFree => Box::new(SegQueue::new()),
-        };
+        let kind = config.injector;
+        let injector = LaneInjector::new(move || -> Box<dyn Injector<RawTask>> {
+            match kind {
+                InjectorKind::Mutex => Box::new(MutexInjector::new()),
+                InjectorKind::LockFree => Box::new(SegQueue::new()),
+            }
+        });
         let inner = Arc::new(PoolInner {
             injector,
             stealers,
@@ -429,6 +437,13 @@ impl PoolInner {
     /// push so a job can never be findable (and completable) before
     /// it is counted — the quiescence scan depends on that order.
     pub(crate) fn submit_job(&self, job: RawTask) {
+        self.submit_job_to(DEFAULT_LANE, job);
+    }
+
+    /// [`PoolInner::submit_job`] with an explicit injector lane for the
+    /// cross-thread path. A worker's own deque has no lanes — the lane
+    /// only matters when the task travels through the injector.
+    pub(crate) fn submit_job_to(&self, lane: u8, job: RawTask) {
         LOCAL.with(|l| match l.get() {
             Some(lw) if std::ptr::eq(lw.pool, self) => {
                 self.counters[lw.index].submitted.fetch_add(1, Ordering::Release);
@@ -440,7 +455,7 @@ impl PoolInner {
             }
             _ => {
                 self.counters[self.external_cell()].submitted.fetch_add(1, Ordering::Release);
-                self.injector.push(job);
+                self.injector.push_to(lane, job);
             }
         });
         // O(1) load (no lock, no syscall) when nobody is parked.
@@ -478,7 +493,7 @@ impl PoolInner {
             _ => {
                 self.counters[self.external_cell()].submitted.fetch_add(n as u64, Ordering::Release);
                 let mut jobs = jobs;
-                self.injector.push_batch(&mut jobs);
+                self.injector.push_batch_to(DEFAULT_LANE, &mut jobs);
             }
         });
         if n == 1 {
@@ -486,6 +501,102 @@ impl PoolInner {
         } else {
             // One epoch bump + one broadcast instead of n wakes;
             // excess sleepers re-check their work sources and re-park.
+            self.ec.notify_all();
+        }
+    }
+
+    /// Priority-aware burst submission for graph nodes (PR 4): the
+    /// graph executor hands over the ready node indices plus two
+    /// callbacks — `lane_for` (the composed injector lane of a node)
+    /// and `mk` (node index → `RawTask`).
+    ///
+    /// `ranked` means `nodes` is sorted by **descending** critical-path
+    /// rank, and the burst must reach consumers most-critical-first in
+    /// every queue discipline:
+    ///
+    /// * worker-local deque (LIFO for its owner) — pushed in *reverse*,
+    ///   so the owner pops in descending rank;
+    /// * injector lanes (FIFO) — pushed in the given order, grouped
+    ///   into contiguous per-lane batches (`lane_for` is monotone
+    ///   non-decreasing along a rank-sorted burst, so grouping is one
+    ///   forward walk).
+    ///
+    /// Unranked bursts keep their discovery order; per-lane grouping
+    /// then takes one filtering pass per lane. Counter/wake discipline
+    /// is identical to [`PoolInner::submit_job_batch`], including the
+    /// per-task fallback when batched wakeups are disabled.
+    pub(crate) fn submit_node_burst(
+        &self,
+        nodes: &[usize],
+        ranked: bool,
+        lane_for: &dyn Fn(usize) -> u8,
+        mk: &dyn Fn(usize) -> RawTask,
+    ) {
+        let n = nodes.len();
+        if n == 0 {
+            return;
+        }
+        if !self.batched_wakeups {
+            // Per-task submission (ablation arm). Keep the LIFO
+            // compensation: on a worker, later pushes pop first.
+            if ranked && self.on_worker_thread() {
+                for &node in nodes.iter().rev() {
+                    self.submit_job_to(lane_for(node), mk(node));
+                }
+            } else {
+                for &node in nodes {
+                    self.submit_job_to(lane_for(node), mk(node));
+                }
+            }
+            return;
+        }
+        LOCAL.with(|l| match l.get() {
+            Some(lw) if std::ptr::eq(lw.pool, self) => {
+                // Count before publishing (see submit_job).
+                self.counters[lw.index].submitted.fetch_add(n as u64, Ordering::Release);
+                let push = |node: usize| {
+                    // SAFETY: as in submit_job.
+                    unsafe { (*lw.queue).push(mk(node)) };
+                };
+                if ranked {
+                    nodes.iter().rev().for_each(|&node| push(node));
+                } else {
+                    nodes.iter().for_each(|&node| push(node));
+                }
+                self.metrics[lw.index].on_push_n(n as u64);
+            }
+            _ => {
+                self.counters[self.external_cell()].submitted.fetch_add(n as u64, Ordering::Release);
+                if ranked {
+                    // Contiguous per-lane runs of the rank-sorted burst.
+                    let mut i = 0;
+                    while i < n {
+                        let lane = lane_for(nodes[i]);
+                        let mut j = i + 1;
+                        while j < n && lane_for(nodes[j]) == lane {
+                            j += 1;
+                        }
+                        self.injector
+                            .push_batch_to(lane, &mut nodes[i..j].iter().map(|&node| mk(node)));
+                        i = j;
+                    }
+                } else {
+                    for lane in 0..NUM_LANES as u8 {
+                        let mut it = nodes
+                            .iter()
+                            .filter(|&&node| lane_for(node) == lane)
+                            .map(|&node| mk(node))
+                            .peekable();
+                        if it.peek().is_some() {
+                            self.injector.push_batch_to(lane, &mut it);
+                        }
+                    }
+                }
+            }
+        });
+        if n == 1 {
+            self.ec.notify_one();
+        } else {
             self.ec.notify_all();
         }
     }

@@ -31,6 +31,11 @@ pub struct Dag {
     pub adj: Vec<Vec<usize>>,
     /// Human-readable generator tag (for bench tables).
     pub kind: String,
+    /// Optional per-node cost weights (PR 4): scale each node's
+    /// synthetic work *and* feed the task graph's critical-path ranks
+    /// ([`crate::graph::TaskGraph::add_weighted`]). `None` means unit
+    /// weights. Attach with [`Dag::with_weights`].
+    pub weights: Option<Vec<u32>>,
 }
 
 /// Spins `steps` PRNG iterations — the per-node synthetic work.
@@ -53,6 +58,7 @@ impl Dag {
         Self {
             adj,
             kind: format!("chain({n})"),
+            weights: None,
         }
     }
 
@@ -77,6 +83,7 @@ impl Dag {
         Self {
             adj,
             kind: format!("btree(d={depth})"),
+            weights: None,
         }
     }
 
@@ -105,6 +112,7 @@ impl Dag {
         Self {
             adj,
             kind: format!("dag({layers}x{width},p={p})"),
+            weights: None,
         }
     }
 
@@ -128,6 +136,7 @@ impl Dag {
         Self {
             adj,
             kind: format!("diamonds({diamonds})"),
+            weights: None,
         }
     }
 
@@ -151,7 +160,62 @@ impl Dag {
         Self {
             adj,
             kind: format!("wavefront({g}x{g})"),
+            weights: None,
         }
+    }
+
+    /// A skewed diamond (PR 4): one source fanning out to `width`
+    /// single-node light branches **and** one `spine`-long chain, all
+    /// joining in one sink. The spine head sits in the *middle* of the
+    /// source's successor list, so shape-oblivious FIFO dispatch
+    /// neither starts it first (inline continuation takes the first
+    /// successor) nor last — the worst realistic case for makespan,
+    /// which critical-path-first dispatch fixes once the spine carries
+    /// heavy weights (attach them with [`Dag::with_weights`]; spine
+    /// nodes are indices `width + 1 ..= width + spine`).
+    ///
+    /// `width + spine + 2` nodes: source 0, branches `1..=width`,
+    /// spine `width + 1..=width + spine`, sink last.
+    pub fn skewed_diamond(width: usize, spine: usize) -> Self {
+        assert!(width >= 1 && spine >= 1, "skewed_diamond needs at least one branch and one spine node");
+        let n = width + spine + 2;
+        let sink = n - 1;
+        let spine_head = width + 1;
+        let mut adj = vec![Vec::new(); n];
+        for b in 1..=width / 2 {
+            adj[0].push(b);
+        }
+        adj[0].push(spine_head);
+        for b in (width / 2 + 1)..=width {
+            adj[0].push(b);
+        }
+        for b in 1..=width {
+            adj[b].push(sink);
+        }
+        for s in spine_head..width + spine {
+            adj[s].push(s + 1);
+        }
+        adj[width + spine].push(sink);
+        Self {
+            adj,
+            kind: format!("skewed({width}w+{spine}s)"),
+            weights: None,
+        }
+    }
+
+    /// Attaches per-node cost weights generated by `weight_of(node)` —
+    /// the priority bench's lever for non-uniform critical paths. The
+    /// weights scale both the synthetic node work and the task graph's
+    /// seal-time ranks (see [`Dag::to_task_graph`]).
+    pub fn with_weights(mut self, weight_of: impl Fn(usize) -> u32) -> Self {
+        self.weights = Some((0..self.len()).map(weight_of).collect());
+        self
+    }
+
+    /// Cost weight of node `i` (1 unless [`Dag::with_weights`] was
+    /// used).
+    pub fn weight(&self, i: usize) -> u32 {
+        self.weights.as_ref().map(|w| w[i]).unwrap_or(1)
     }
 
     /// Node count.
@@ -181,16 +245,20 @@ impl Dag {
     }
 
     /// Materializes as a [`TaskGraph`] whose node `i` runs
-    /// `busy_work(i, work_steps)` and bumps a shared completion
-    /// counter. Returns `(graph, counter)`.
+    /// `busy_work(i, weight(i) * work_steps)` and bumps a shared
+    /// completion counter; node weights also become the graph's
+    /// critical-path weights ([`TaskGraph::add_weighted`]). Returns
+    /// `(graph, counter)`.
     pub fn to_task_graph(&self, work_steps: u32) -> (TaskGraph, Arc<AtomicUsize>) {
         let counter = Arc::new(AtomicUsize::new(0));
         let mut g = TaskGraph::with_capacity(self.len());
         let ids: Vec<_> = (0..self.len())
             .map(|i| {
                 let counter = counter.clone();
-                g.add(move || {
-                    std::hint::black_box(busy_work(i as u64, work_steps));
+                let w = self.weight(i);
+                let steps = work_steps.saturating_mul(w);
+                g.add_weighted(w, move || {
+                    std::hint::black_box(busy_work(i as u64, steps));
                     counter.fetch_add(1, Ordering::Relaxed);
                 })
             })
@@ -210,18 +278,21 @@ impl Dag {
     }
 
     /// Executes the DAG on any [`Executor`] via countdown closures:
-    /// node bodies run `busy_work(i, work_steps)`; each completion
-    /// decrements successors' counters and submits the ready ones.
-    /// Returns the number of executed nodes (== `len()` on success).
+    /// node bodies run `busy_work(i, weight(i) * work_steps)` (the
+    /// same per-node work as [`Dag::to_task_graph`], so weighted
+    /// comparisons stay fair); each completion decrements successors'
+    /// counters and submits the ready ones. Returns the number of
+    /// executed nodes (== `len()` on success).
     pub fn run_countdown(&self, ex: &Arc<dyn Executor>, work_steps: u32) -> usize {
         struct State {
             adj: Vec<Vec<usize>>,
             pending: Vec<AtomicUsize>,
             executed: AtomicUsize,
-            work_steps: u32,
+            /// Per-node spin steps (`weight(i) * work_steps`).
+            steps: Vec<u32>,
         }
         fn run_node(ex: Arc<dyn Executor>, st: Arc<State>, i: usize) {
-            std::hint::black_box(busy_work(i as u64, st.work_steps));
+            std::hint::black_box(busy_work(i as u64, st.steps[i]));
             st.executed.fetch_add(1, Ordering::Relaxed);
             for &s in &st.adj[i] {
                 if st.pending[s].fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -237,7 +308,7 @@ impl Dag {
             adj: self.adj.clone(),
             pending: indeg.iter().map(|&d| AtomicUsize::new(d)).collect(),
             executed: AtomicUsize::new(0),
-            work_steps,
+            steps: (0..self.len()).map(|i| work_steps.saturating_mul(self.weight(i))).collect(),
         });
         for (i, &d) in indeg.iter().enumerate() {
             if d == 0 {
@@ -255,7 +326,7 @@ impl Dag {
     pub fn run_sequential(&self, work_steps: u32) -> u64 {
         let mut acc = 0u64;
         for i in 0..self.len() {
-            acc = acc.wrapping_add(busy_work(i as u64, work_steps));
+            acc = acc.wrapping_add(busy_work(i as u64, work_steps.saturating_mul(self.weight(i))));
         }
         acc
     }
@@ -306,6 +377,49 @@ mod tests {
         g.run(&pool).unwrap();
         g.run(&pool).unwrap();
         assert_eq!(counter.load(Ordering::Relaxed), 128);
+    }
+
+    #[test]
+    fn skewed_diamond_shape_and_weights() {
+        let width = 6;
+        let spine = 4;
+        let d = Dag::skewed_diamond(width, spine).with_weights(|i| {
+            if (width + 1..=width + spine).contains(&i) {
+                8
+            } else {
+                1
+            }
+        });
+        assert_eq!(d.len(), width + spine + 2);
+        // Source fans out to every branch plus the spine head; the
+        // spine head sits mid-list.
+        assert_eq!(d.adj[0].len(), width + 1);
+        assert_eq!(d.adj[0][width / 2], width + 1, "spine head is mid-list");
+        let deg = d.in_degrees();
+        assert_eq!(deg[0], 0);
+        assert_eq!(deg[d.len() - 1], width + 1, "sink joins every arm");
+        assert_eq!(d.weight(1), 1);
+        assert_eq!(d.weight(width + 1), 8);
+
+        // Materialized: spine ranks dominate branch ranks.
+        let (mut g, counter) = d.to_task_graph(0);
+        assert!(g.is_sealed());
+        use crate::graph::NodeId;
+        let spine_head_rank = g.rank(NodeId(width + 1)).unwrap();
+        let branch_rank = g.rank(NodeId(1)).unwrap();
+        assert_eq!(branch_rank, 2); // branch + sink
+        assert_eq!(spine_head_rank, 8 * spine as u64 + 1);
+        assert_eq!(g.rank(NodeId(0)).unwrap(), spine_head_rank + 1);
+        // And it runs exactly-once, twice.
+        let pool = ThreadPool::new(2);
+        g.run(&pool).unwrap();
+        g.run(&pool).unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 2 * d.len());
+        // Weighted countdown and sequential baselines agree on count.
+        for ex in crate::baseline::all_executors(2) {
+            assert_eq!(d.run_countdown(&ex, 1), d.len(), "{}", ex.name());
+        }
+        let _ = d.run_sequential(1);
     }
 
     #[test]

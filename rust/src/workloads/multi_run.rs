@@ -16,7 +16,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::graph::{GraphError, TaskGraph};
+use crate::graph::{wait_all, GraphError, RunOptions, TaskGraph};
 use crate::pool::ThreadPool;
 
 use super::dag::Dag;
@@ -90,6 +90,32 @@ impl MultiRun {
         Ok(())
     }
 
+    /// One round with per-graph [`RunOptions`], cycled over the fleet
+    /// (graph `i` launches with `options[i % options.len()]`) — the
+    /// mixed-priority scenario: tag thirds of the fleet High / Normal /
+    /// Low and watch per-class completion latency. The whole fleet is
+    /// in flight at once and drained through [`wait_all`] (parked on
+    /// the run eventcount, not spin-polled).
+    ///
+    /// # Panics
+    /// If `options` is empty.
+    pub fn run_round_with_options(
+        &mut self,
+        pool: &ThreadPool,
+        options: &[RunOptions],
+    ) -> Result<(), GraphError> {
+        assert!(!options.is_empty(), "run_round_with_options needs at least one RunOptions");
+        let mut handles = self
+            .graphs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, g)| g.run_async_with_options(pool, options[i % options.len()].clone()))
+            .collect::<Result<Vec<_>, _>>()?;
+        wait_all(&mut handles)?;
+        self.rounds_done += 1;
+        Ok(())
+    }
+
     /// Total node executions observed across all graphs so far.
     pub fn total_executions(&self) -> usize {
         self.counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
@@ -107,6 +133,7 @@ impl MultiRun {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::RunPriority;
 
     #[test]
     fn rounds_keep_all_graphs_exactly_once() {
@@ -118,5 +145,25 @@ mod tests {
         assert_eq!(mr.rounds_done(), 5);
         assert!(mr.verify_exactly_once());
         assert_eq!(mr.total_executions(), 4 * 16 * 5);
+    }
+
+    #[test]
+    fn mixed_priority_rounds_stay_exactly_once() {
+        // A 6-graph fleet launched as High/Normal/Low thirds, several
+        // rounds: class tags are pure scheduling hints, so per-graph
+        // exactly-once must hold regardless.
+        let pool = ThreadPool::new(2);
+        let mut mr = MultiRun::new(6, 4, 0);
+        let classes: Vec<RunOptions> =
+            [RunPriority::High, RunPriority::Normal, RunPriority::Low]
+                .into_iter()
+                .map(|c| RunOptions::new().priority(c))
+                .collect();
+        for _ in 0..4 {
+            mr.run_round_with_options(&pool, &classes).unwrap();
+        }
+        assert_eq!(mr.rounds_done(), 4);
+        assert!(mr.verify_exactly_once());
+        assert_eq!(mr.total_executions(), 6 * 16 * 4);
     }
 }

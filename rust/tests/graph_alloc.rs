@@ -15,7 +15,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use scheduling::graph::RunOptions;
+use scheduling::graph::{RunOptions, RunPriority};
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::Dag;
 
@@ -95,6 +95,43 @@ fn sealed_rerun_makes_zero_heap_allocations() {
             "{label}: sealed re-runs must not allocate (saw {allocs} allocations in 10 runs)"
         );
         assert_eq!(counter.load(Ordering::Relaxed), expected, "{label}: node executions");
+    }
+
+    // PR 4: priority scheduling must not reintroduce allocations. A
+    // *weighted* skewed graph exercises the whole rank machinery —
+    // seal-time ranks/buckets, the burst sort, the lane composition —
+    // under the default options (critical path + lanes on) and under a
+    // High-class run; both must stay allocation-free on sealed re-runs
+    // (ranks and ordered source lists are seal-time arrays, the burst
+    // sort is in-place on the stack buffer).
+    let (wwidth, wspine) = (24usize, 8usize);
+    let wdag = Dag::skewed_diamond(wwidth, wspine)
+        .with_weights(|i| if (wwidth + 1..=wwidth + wspine).contains(&i) { 8 } else { 1 });
+    let wnodes = wdag.len();
+    let (mut wg, wcounter) = wdag.to_task_graph(0);
+    assert!(wg.is_sealed());
+    let wvariants = [
+        ("weighted-critical-path", RunOptions::new()),
+        ("weighted-high-class", RunOptions::new().priority(RunPriority::High)),
+    ];
+    let mut wexpected = 0usize;
+    for (label, options) in wvariants {
+        for _ in 0..5 {
+            wg.run_with_options(&pool, options.clone()).unwrap();
+            wexpected += wnodes;
+        }
+        pool.wait_idle();
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            wg.run_with_options(&pool, options.clone()).unwrap();
+            wexpected += wnodes;
+        }
+        let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            allocs, 0,
+            "{label}: weighted sealed re-runs must not allocate (saw {allocs} in 10 runs)"
+        );
+        assert_eq!(wcounter.load(Ordering::Relaxed), wexpected, "{label}: node executions");
     }
 
     // Sanity: the machinery is actually counting.

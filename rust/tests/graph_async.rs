@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use scheduling::graph::{GraphError, RunHandle, RunOptions, TaskGraph};
+use scheduling::graph::{wait_all, wait_any, GraphError, RunHandle, RunOptions, TaskGraph};
 use scheduling::pool::ThreadPool;
 use scheduling::workloads::{Dag, MultiRun};
 
@@ -383,4 +383,84 @@ fn concurrent_external_threads_each_with_handle_fleets() {
     for h in handles {
         h.join().unwrap();
     }
+}
+
+#[test]
+fn wait_all_drains_a_fleet_without_polling() {
+    // The PR 4 fleet combinator: 8 handles in flight from one thread,
+    // drained by a single wait_all parked on the run eventcount.
+    let pool = ThreadPool::new(2);
+    let rounds = if cfg!(miri) { 2 } else { 6 };
+    let mut fleet: Vec<(TaskGraph, Arc<AtomicUsize>)> = (0..8).map(|_| counting_graph(4)).collect();
+    for round in 1..=rounds {
+        let mut handles: Vec<_> =
+            fleet.iter_mut().map(|(g, _)| g.run_async(&pool).unwrap()).collect();
+        wait_all(&mut handles).unwrap();
+        // Every handle is harvested: drop is now free and the counters
+        // show exactly-once for the whole fleet.
+        drop(handles);
+        for (i, (_, c)) in fleet.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), round * 16, "graph {i} round {round}");
+        }
+    }
+    // The empty fleet is trivially complete.
+    let mut none: Vec<RunHandle<'_>> = Vec::new();
+    wait_all(&mut none).unwrap();
+}
+
+#[test]
+fn wait_all_reports_the_first_panicking_run() {
+    let pool = ThreadPool::new(2);
+    let (mut ok, counter) = counting_graph(2);
+    let mut bad = TaskGraph::new();
+    bad.add_named("boom", || panic!("fleet failure"));
+    let mut handles = vec![ok.run_async(&pool).unwrap(), bad.run_async(&pool).unwrap()];
+    match wait_all(&mut handles) {
+        Err(GraphError::TaskPanicked { name, message, .. }) => {
+            assert_eq!(name.as_deref(), Some("boom"));
+            assert!(message.contains("fleet failure"));
+        }
+        other => panic!("expected TaskPanicked, got {other:?}"),
+    }
+    drop(handles);
+    assert_eq!(counter.load(Ordering::Relaxed), 8, "the healthy run still completed");
+}
+
+#[test]
+fn wait_any_returns_a_completed_index_first() {
+    // One gated (held-open) run plus one free run: wait_any must come
+    // back with the free run's index while the gated run is still in
+    // flight, without executing pool tasks on this thread.
+    let pool = ThreadPool::new(2);
+    let (mut gated, gate, gated_counter) = gated_graph();
+    let (mut free, free_counter) = counting_graph(2);
+    {
+        let mut handles = vec![gated.run_async(&pool).unwrap(), free.run_async(&pool).unwrap()];
+        let winner = wait_any(&mut handles);
+        assert_eq!(winner, 1, "the ungated run finishes first");
+        assert!(handles[winner].is_done());
+        assert_eq!(free_counter.load(Ordering::Relaxed), 8);
+        assert_eq!(gated_counter.load(Ordering::SeqCst), 0, "gated run still in flight");
+        // Harvest the winner, then release the gate and drain the rest.
+        assert!(matches!(handles.remove(winner).wait(), Ok(())));
+        gate.store(true, Ordering::SeqCst);
+        wait_all(&mut handles).unwrap();
+    }
+    assert_eq!(gated_counter.load(Ordering::SeqCst), 1);
+    // With everything already done, wait_any returns the lowest index.
+    let mut handles = vec![gated.run_async(&pool).unwrap(), free.run_async(&pool).unwrap()];
+    for h in handles.iter() {
+        while !h.is_done() {
+            std::thread::yield_now();
+        }
+    }
+    assert_eq!(wait_any(&mut handles), 0);
+    wait_all(&mut handles).unwrap();
+}
+
+#[test]
+#[should_panic(expected = "empty handle fleet")]
+fn wait_any_on_an_empty_fleet_panics() {
+    let mut none: Vec<RunHandle<'_>> = Vec::new();
+    let _ = wait_any(&mut none);
 }

@@ -17,7 +17,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use scheduling::graph::{GraphError, RunOptions, TaskGraph};
+use scheduling::graph::{GraphError, RunOptions, RunPriority, TaskGraph};
 use scheduling::pool::ThreadPool;
 use scheduling::util::Pcg32;
 use scheduling::workloads::Dag;
@@ -409,30 +409,37 @@ fn wide_independent_layer_all_sources() {
 }
 
 #[test]
-fn property_matrix_100_shapes_sync_async_all_toggles() {
-    // 100 random DAG shapes × {sync, async} × all 16 RunOptions toggle
-    // combinations (PR 3 satellite). Per run the executor must uphold
-    // exactly-once execution with node-count conservation and
-    // topological-order visitation; the same graph instance is reused
-    // across all 16 masks of a mode, so counters and FnMut state also
-    // survive 16 consecutive re-arms. For async runs the state-reuse
-    // and caller-assist bits are documented no-ops — sweeping them
-    // anyway pins down that they stay harmless.
+fn property_matrix_shapes_sync_async_all_toggles() {
+    // 36 random DAG shapes × {sync, async} × all 64 RunOptions toggle
+    // combinations (PR 3 satellite, widened by the PR 4 priority bits),
+    // with the run's priority class cycled per case. Per run the
+    // executor must uphold exactly-once execution with node-count
+    // conservation and topological-order visitation; the same graph
+    // instance is reused across all 64 masks of a mode, so counters and
+    // FnMut state also survive 64 consecutive re-arms. For async runs
+    // the state-reuse and caller-assist bits are documented no-ops —
+    // sweeping them anyway pins down that they stay harmless, and the
+    // `no_critical_path`/`no_priority_lanes` bits must be pure
+    // scheduling hints in every combination.
     let pool = ThreadPool::new(3);
     let mut rng = Pcg32::seeded(0xA51C);
-    for case in 0..100 {
+    for case in 0..36 {
         let n = 10 + rng.next_below(40) as usize;
         let w = 1 + rng.next_below(8) as usize;
         let p = 0.1 + rng.next_f64() * 0.4;
         let adj = random_dag(&mut rng, n, w, p);
+        let class = [RunPriority::High, RunPriority::Normal, RunPriority::Low][case % 3];
         for run_async in [false, true] {
             let (mut g, runs, stamps, _clock) = build_graph(&adj);
-            for mask in 0..16u32 {
+            for mask in 0..64u32 {
                 let options = RunOptions {
                     no_inline_continuation: mask & 1 != 0,
                     no_topology_cache: mask & 2 != 0,
                     no_state_reuse: mask & 4 != 0,
                     no_caller_assist: mask & 8 != 0,
+                    no_critical_path: mask & 16 != 0,
+                    no_priority_lanes: mask & 32 != 0,
+                    priority: class,
                     ..RunOptions::default()
                 };
                 if run_async {
@@ -446,7 +453,7 @@ fn property_matrix_100_shapes_sync_async_all_toggles() {
                     let r = runs[i].load(Ordering::SeqCst);
                     assert_eq!(
                         r, rep,
-                        "case {case} async={run_async} mask {mask:#07b} node {i} run count"
+                        "case {case} async={run_async} mask {mask:#08b} node {i} run count"
                     );
                     total += r;
                 }
@@ -456,7 +463,7 @@ fn property_matrix_100_shapes_sync_async_all_toggles() {
                     for &s in succs {
                         assert!(
                             ti < stamps[s].load(Ordering::SeqCst),
-                            "case {case} async={run_async} mask {mask:#07b} edge {i}->{s}"
+                            "case {case} async={run_async} mask {mask:#08b} edge {i}->{s}"
                         );
                     }
                 }
@@ -496,6 +503,134 @@ fn async_handles_over_random_dags_in_flight_together() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn weighted_random_dags_hold_invariants_under_every_priority_config() {
+    // Random weights make the rank analysis non-trivial; topological
+    // order, exactly-once, and node-count conservation must hold for
+    // every (critical-path, lanes, class) combination, sync and async,
+    // across re-runs of the same weighted graph.
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0x5E1F);
+    for case in 0..6 {
+        let n = 30 + rng.next_below(60) as usize;
+        let adj = random_dag(&mut rng, n, 6, 0.3);
+        let weights: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(16)).collect();
+        for run_async in [false, true] {
+            // build_graph with per-node weights (`add_weighted`) plus a
+            // set_weight exercise on node 0.
+            let runs: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+            let stamps: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+            let clock = Arc::new(AtomicUsize::new(1));
+            let mut g = TaskGraph::with_capacity(n);
+            let ids: Vec<_> = (0..n)
+                .map(|i| {
+                    let (runs, stamps, clock) = (runs.clone(), stamps.clone(), clock.clone());
+                    g.add_weighted(weights[i], move || {
+                        runs[i].fetch_add(1, Ordering::SeqCst);
+                        stamps[i].store(clock.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for (i, succs) in adj.iter().enumerate() {
+                for &s in succs {
+                    g.precede(ids[i], &[ids[s]]);
+                }
+            }
+            g.set_weight(ids[0], weights[0].max(2));
+            let mut rep = 0;
+            for no_critical_path in [false, true] {
+                for no_priority_lanes in [false, true] {
+                    for class in [RunPriority::High, RunPriority::Normal, RunPriority::Low] {
+                        let options = RunOptions {
+                            no_critical_path,
+                            no_priority_lanes,
+                            priority: class,
+                            ..RunOptions::default()
+                        };
+                        if run_async {
+                            g.run_async_with_options(&pool, options).unwrap().wait().unwrap();
+                        } else {
+                            g.run_with_options(&pool, options).unwrap();
+                        }
+                        rep += 1;
+                        let mut total = 0;
+                        for i in 0..n {
+                            let r = runs[i].load(Ordering::SeqCst);
+                            assert_eq!(
+                                r, rep,
+                                "case {case} async={run_async} cp-off={no_critical_path} \
+                                 lanes-off={no_priority_lanes} class={class:?} node {i}"
+                            );
+                            total += r;
+                        }
+                        assert_eq!(total, n * rep, "case {case}: node-count conservation");
+                        for (i, succs) in adj.iter().enumerate() {
+                            let ti = stamps[i].load(Ordering::SeqCst);
+                            for &s in succs {
+                                assert!(
+                                    ti < stamps[s].load(Ordering::SeqCst),
+                                    "case {case} async={run_async} class={class:?} edge {i}->{s}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_worker_executes_ready_set_in_descending_rank_order() {
+    // One worker, caller assist off (the calling thread only blocks),
+    // so the schedule is fully deterministic: after the source, the
+    // worker must drain the ready branches strictly by descending
+    // critical-path rank — the highest as the inline continuation, the
+    // rest via the rank-compensated deque order. Weights are chosen so
+    // every rank is distinct.
+    let pool = ThreadPool::new(1);
+    let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut g = TaskGraph::new();
+    let mk = |i: usize, order: &Arc<Mutex<Vec<usize>>>| {
+        let order = order.clone();
+        move || order.lock().unwrap().push(i)
+    };
+    let src = g.add(mk(0, &order));
+    // Distinct weights, deliberately not in discovery order.
+    let weights: [u32; 6] = [3, 17, 5, 13, 7, 19];
+    let branches: Vec<_> = (0..6)
+        .map(|b| {
+            let id = g.add_weighted(weights[b], mk(1 + b, &order));
+            g.succeed(id, &[src]);
+            id
+        })
+        .collect();
+    let sink = g.add(mk(7, &order));
+    g.succeed(sink, &branches);
+    g.seal().unwrap();
+
+    // Expected: branches sorted by descending rank (= weight + 1),
+    // ties impossible by construction.
+    let mut expect: Vec<(u64, usize)> = branches
+        .iter()
+        .enumerate()
+        .map(|(b, &id)| (g.rank(id).unwrap(), 1 + b))
+        .collect();
+    expect.sort_by_key(|&(rank, _)| std::cmp::Reverse(rank));
+    let expect: Vec<usize> = expect.into_iter().map(|(_, i)| i).collect();
+
+    let options = RunOptions::new().caller_assist(false);
+    for rep in 0..3 {
+        order.lock().unwrap().clear();
+        g.run_with_options(&pool, options.clone()).unwrap();
+        let seen = order.lock().unwrap().clone();
+        assert_eq!(seen[0], 0, "source first (rep {rep})");
+        assert_eq!(*seen.last().unwrap(), 7, "sink last (rep {rep})");
+        assert_eq!(seen[1..=6], expect[..], "descending-rank branch order (rep {rep})");
     }
 }
 

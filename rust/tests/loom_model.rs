@@ -8,7 +8,11 @@
 //!    the SeqCst monotone `completed` store;
 //! 2. the **completion → waker / eventcount handshake** — the
 //!    store-buffering pairs (`completed` store vs waker-flag /
-//!    waiter-count loads, both SeqCst) lose no wakeup.
+//!    waiter-count loads, both SeqCst) lose no wakeup;
+//! 3. the **priority-lane push/steal protocol** (PR 4) — a task pushed
+//!    into any injector lane (per-lane emptiness flag, Release store)
+//!    is never lost by a consumer scanning the lanes and parking on
+//!    the eventcount.
 //!
 //! These are *models*: each test re-states the protocol in miniature
 //! with loom types (the production code uses `std` atomics and real
@@ -148,6 +152,139 @@ fn done_flag_waker_handshake_loses_no_wakeup() {
             observed_done || st.woken.load(Ordering::SeqCst),
             "pending future with no wakeup: the task would sleep forever"
         );
+    });
+}
+
+/// Model 4: the priority-lane push/steal protocol (PR 4).
+///
+/// A miniature of `pool/injector.rs`'s `LaneInjector<MutexInjector>`
+/// (two lanes, each a mutex'd slot plus a `maybe_nonempty` flag with
+/// the exact Release/Acquire orderings of `MutexInjector`) combined
+/// with the worker park protocol of `thread_pool.rs`: the consumer
+/// scans all lanes, prepares a wait, re-checks (`any_work`, i.e. the
+/// lane flags), and only then commits the park. The producer pushes
+/// into the *low* lane — the one a priority-ordered scan reaches last —
+/// and then notifies. Loom exhausts the interleavings: if the flag
+/// protocol or the prepare/re-check ordering could let the push slip
+/// between scan and park, the consumer would sleep with a task queued
+/// and deadlock detection fails the test.
+#[test]
+fn priority_lane_push_is_never_lost_by_a_parking_consumer() {
+    loom::model(|| {
+        struct Lane {
+            queue: Mutex<Option<u32>>,
+            maybe_nonempty: AtomicBool,
+        }
+        impl Lane {
+            fn push(&self, v: u32) {
+                let mut q = self.queue.lock().unwrap();
+                *q = Some(v);
+                // MutexInjector::push: flag store under the lock,
+                // Release.
+                self.maybe_nonempty.store(true, Ordering::Release);
+            }
+            fn pop(&self) -> Option<u32> {
+                // MutexInjector::pop: flag fast path (Acquire), then
+                // the lock.
+                if !self.maybe_nonempty.load(Ordering::Acquire) {
+                    return None;
+                }
+                let mut q = self.queue.lock().unwrap();
+                let v = q.take();
+                if q.is_none() {
+                    self.maybe_nonempty.store(false, Ordering::Release);
+                }
+                v
+            }
+            fn is_empty(&self) -> bool {
+                !self.maybe_nonempty.load(Ordering::Acquire)
+            }
+        }
+        struct Ec {
+            epoch: AtomicU64,
+            waiters: AtomicUsize,
+            mutex: Mutex<()>,
+            cv: Condvar,
+        }
+        impl Ec {
+            fn prepare_wait(&self) -> u64 {
+                self.waiters.fetch_add(1, Ordering::SeqCst);
+                self.epoch.load(Ordering::SeqCst)
+            }
+            fn cancel_wait(&self) {
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn commit_wait(&self, epoch: u64) {
+                let mut guard = self.mutex.lock().unwrap();
+                while self.epoch.load(Ordering::SeqCst) == epoch {
+                    guard = self.cv.wait(guard).unwrap();
+                }
+                drop(guard);
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn notify_all(&self) {
+                if self.waiters.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                self.epoch.fetch_add(1, Ordering::SeqCst);
+                drop(self.mutex.lock().unwrap());
+                self.cv.notify_all();
+            }
+        }
+        struct State {
+            lanes: [Lane; 2],
+            ec: Ec,
+        }
+        let mk_lane = || Lane {
+            queue: Mutex::new(None),
+            maybe_nonempty: AtomicBool::new(false),
+        };
+        let st = Arc::new(State {
+            lanes: [mk_lane(), mk_lane()],
+            ec: Ec {
+                epoch: AtomicU64::new(0),
+                waiters: AtomicUsize::new(0),
+                mutex: Mutex::new(()),
+                cv: Condvar::new(),
+            },
+        });
+
+        // Producer: push into the LOW lane (scanned last), then wake —
+        // submit_job_to's order (push before notify).
+        let producer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                st.lanes[1].push(7);
+                st.ec.notify_all();
+            })
+        };
+
+        // Consumer: the worker loop in miniature — scan, prepare,
+        // re-check the lane flags, commit; repeat until the task is
+        // taken. The model must be live without any timeout backstop.
+        let scan = |st: &State| st.lanes.iter().find_map(|l| l.pop());
+        let mut got = None;
+        while got.is_none() {
+            if let Some(v) = scan(&st) {
+                got = Some(v);
+                break;
+            }
+            let epoch = st.ec.prepare_wait();
+            // any_work() re-check before parking.
+            if !st.lanes.iter().all(|l| l.is_empty()) {
+                st.ec.cancel_wait();
+                continue;
+            }
+            if let Some(v) = scan(&st) {
+                st.ec.cancel_wait();
+                got = Some(v);
+                break;
+            }
+            st.ec.commit_wait(epoch);
+        }
+        assert_eq!(got, Some(7), "the pushed task must be consumed");
+
+        producer.join().unwrap();
     });
 }
 
