@@ -22,6 +22,10 @@
 //!    reuse, and caller-assisted execution toggles (`RunOptions`) live
 //!    in `benches/graph_rerun.rs` (report "ABL-6"), next to the
 //!    re-run latency workload they optimize.
+//! 7. **Sharded submission (PR 5, "ABL-8")**: flat single-injector
+//!    pool vs sharded pools under a many-producer submission storm —
+//!    the workload the per-shard injector lanes exist for — plus a
+//!    shard-imbalance probe from the per-shard depth snapshot.
 //!
 //! Knobs: `BENCH_FAST=1`, `THREADS`.
 
@@ -41,6 +45,124 @@ fn main() {
     inline_ablation(&opts);
     spin_ablation(&opts);
     hot_path_ablation(&opts);
+    sharding_ablation(&opts);
+}
+
+/// ABL-8: sharded submission & locality-aware stealing (PR 5). A
+/// many-producer storm — P external threads each firing a stream of
+/// independent `submit`s — against the same pool in flat
+/// (`shard_size >= num_threads`, the pre-PR 5 single injector) and
+/// sharded configurations, plus a graph-workload sanity series to show
+/// sharding does not tax the §2.2 fan-out path. Also reports the
+/// per-shard depth imbalance sampled mid-storm (satellite: the storm
+/// bench must report shard imbalance, not just throughput).
+fn sharding_ablation(opts: &BenchOptions) {
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let producers = threads.max(2);
+    const PER: usize = 2_500;
+    let mut report = Report::new(
+        "ABL-8 sharded submission & locality-aware stealing (PR 5)",
+        format!(
+            "{producers} producer threads x {PER} tasks through submit(); \
+             flat = single injector (pre-PR 5), shard=N = N workers per shard; {threads} threads"
+        ),
+    );
+
+    let variants: [(&str, usize); 3] = [
+        ("flat", usize::MAX), // shard_size >= num_threads ⇒ 1 shard
+        ("shard=2", 2),
+        ("shard=1", 1),
+    ];
+
+    for (label, shard_size) in variants {
+        let pool = Arc::new(ThreadPool::with_config(PoolConfig {
+            num_threads: threads,
+            shard_size,
+            ..PoolConfig::default()
+        }));
+
+        // Many-producer submission storm: the injector-contention path.
+        let p = pool.clone();
+        let summary = bench_wall(opts, move || {
+            let count = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..producers {
+                let (pool, count) = (p.clone(), count.clone());
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..PER {
+                        let c = count.clone();
+                        pool.submit(move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            p.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), producers * PER);
+        });
+        report.push("storm", label, summary);
+
+        // Imbalance probe: wedge-free mid-storm sampling — fire the
+        // storm once more and sample depths while producers run.
+        {
+            let count = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..producers {
+                let (pool, count) = (pool.clone(), count.clone());
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..PER {
+                        let c = count.clone();
+                        pool.submit(move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                }));
+            }
+            let mut max_imbalance = 0.0f64;
+            let mut max_depth = 0usize;
+            while count.load(Ordering::Relaxed) < producers * PER {
+                let snap = pool.metrics();
+                max_imbalance = max_imbalance.max(snap.shard_imbalance());
+                max_depth =
+                    max_depth.max(snap.shards.iter().map(|s| s.queued()).sum::<usize>());
+                std::thread::yield_now();
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            pool.wait_idle();
+            let snap = pool.metrics().total();
+            println!(
+                "SHARD imbalance@{label}: max={max_imbalance:.2} peak-depth={max_depth} \
+                 remote-injector-pops={} remote-steals={}",
+                snap.remote_injector_pops, snap.remote_steals
+            );
+        }
+
+        // Graph sanity: sharding must not tax worker-local fan-out.
+        let (mut g, _c) = Dag::binary_tree(12).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("btree(d=12)", label, summary);
+        eprintln!("  sharding variant {label} done");
+    }
+
+    report.print();
+    record_json("ablations_sharding", "wall", threads, &report);
+
+    if let Some(r) = report.speedup("storm", "shard=2", "flat") {
+        println!("SHAPE sharded-storm-wins: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
+    }
+    if let Some(r) = report.speedup("btree(d=12)", "shard=2", "flat") {
+        println!(
+            "SHAPE sharding-graph-parity: {r:.2}x {}",
+            if (0.8..=1.25).contains(&r) { "PASS" } else { "CHECK" }
+        );
+    }
 }
 
 /// ABL-5: each PR-1 hot-path optimization toggled off individually

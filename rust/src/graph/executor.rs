@@ -28,6 +28,20 @@
 //! and the ordered source lists are seal-time arrays, and burst
 //! sorting is in-place on the stack buffer.
 //!
+//! # Shard-aware submission (PR 5)
+//!
+//! Every cross-thread submission a run makes — the source burst from
+//! the launching thread, successor bursts published by assist
+//! helpers — routes through the pool's shard layer
+//! (`pool/topology.rs`): by default the launching thread's striped
+//! round-robin (or an assist helper's home shard) picks the injector,
+//! and [`RunOptions::shard`] pins the whole run to one shard so a
+//! fleet of graphs can partition the machine. Worker-local pushes
+//! (the common §2.2 case) never consult the shard layer — the
+//! executing worker's deque is already the locality optimum — and on
+//! a single-shard pool all of this degenerates to the pre-PR 5
+//! single-injector path.
+//!
 //! # Re-run hot path (PR 2)
 //!
 //! The paper's §4.2 benchmarks re-run the same `tasks` collection over
@@ -204,6 +218,17 @@ pub struct RunOptions {
     /// order within the class. No effect while `no_priority_lanes` is
     /// set.
     pub priority: RunPriority,
+    /// Home shard of the run (PR 5): pins every **cross-thread**
+    /// submission of this run (sources launched from the caller,
+    /// successors published by assist helpers) to one shard's
+    /// injector, so a fleet of concurrent graphs can each keep their
+    /// working set on one cache-sharing worker group. Clamped to the
+    /// pool's shard count; `None` (default) routes through the
+    /// striped round-robin / assist-home rules. Worker-local pushes
+    /// are unaffected — the executing worker's own deque is already
+    /// the locality optimum — and the two-level sweep means a pinned
+    /// run can never starve even if its shard's workers are busy.
+    pub shard: Option<usize>,
     /// Record per-node execution spans into this tracer
     /// (see [`super::Tracer`]).
     pub tracer: Option<Arc<super::Tracer>>,
@@ -258,6 +283,13 @@ impl RunOptions {
     /// [`RunPriority`].
     pub fn priority(mut self, class: RunPriority) -> Self {
         self.priority = class;
+        self
+    }
+
+    /// Pins the run's cross-thread submissions to one shard (PR 5) —
+    /// see [`RunOptions::shard`].
+    pub fn on_shard(mut self, shard: usize) -> Self {
+        self.shard = Some(shard);
         self
     }
 
@@ -527,6 +559,9 @@ struct ReadyBurst<'a> {
     buckets: Option<&'a [u8]>,
     /// `None` ⇒ priority lanes disabled: everything to [`DEFAULT_LANE`].
     class: Option<RunPriority>,
+    /// Shard pin for the run's cross-thread submissions (PR 5) —
+    /// see [`RunOptions::shard`].
+    shard: Option<usize>,
 }
 
 impl<'a> ReadyBurst<'a> {
@@ -537,6 +572,7 @@ impl<'a> ReadyBurst<'a> {
             ranks: sched.filter(|_| !options.no_critical_path).map(|s| s.ranks.as_slice()),
             buckets: sched.map(|s| s.buckets.as_slice()),
             class: (!options.no_priority_lanes).then_some(options.priority),
+            shard: options.shard,
         }
     }
 
@@ -570,13 +606,18 @@ impl<'a> ReadyBurst<'a> {
         }
         if self.ranks.is_none() && self.class.is_none() {
             // Both priority behaviours off: the untouched pre-PR 4
-            // submission path, bit-identical by construction.
-            pool.submit_job_batch(self.buf[..n].iter().map(|&node| {
-                RawTask::node(NodeRun {
-                    state: state.clone(),
-                    node,
-                })
-            }));
+            // submission path, bit-identical by construction (the
+            // shard hint only selects WHICH injector an off-worker
+            // burst lands in, never how it is queued).
+            pool.submit_job_batch_sharded(
+                self.shard,
+                self.buf[..n].iter().map(|&node| {
+                    RawTask::node(NodeRun {
+                        state: state.clone(),
+                        node,
+                    })
+                }),
+            );
             self.len = 0;
             return;
         }
@@ -599,7 +640,7 @@ impl<'a> ReadyBurst<'a> {
                 node,
             })
         };
-        pool.submit_node_burst(&self.buf[..n], ranked, &lane_for, &mk);
+        pool.submit_node_burst(self.shard, &self.buf[..n], ranked, &lane_for, &mk);
         self.len = 0;
     }
 }
@@ -791,6 +832,7 @@ fn launch_run(
     let critical_path = use_topo && !options.no_critical_path;
     let lanes_on = !options.no_priority_lanes;
     let class = options.priority;
+    let shard = options.shard;
     // Drop any panic a dropped-without-wait handle left unharvested.
     state.panic.lock().unwrap().take();
     let generation = state.generation.load(Ordering::SeqCst) + 1;
@@ -845,11 +887,12 @@ fn launch_run(
                     DEFAULT_LANE
                 }
             };
-            pool.inner().submit_node_burst(nodes, critical_path, &lane_for, &mk);
+            pool.inner().submit_node_burst(shard, nodes, critical_path, &lane_for, &mk);
         } else {
             // Both priority behaviours off: the untouched pre-PR 4
             // submission path, bit-identical by construction.
-            pool.inner().submit_job_batch(sched.sources.iter().map(|&node| mk(node)));
+            pool.inner()
+                .submit_job_batch_sharded(shard, sched.sources.iter().map(|&node| mk(node)));
         }
     } else {
         let sources: Vec<usize> = graph
@@ -863,9 +906,10 @@ fn launch_run(
         // submitted in insertion order, lane from the class alone.
         if lanes_on {
             let lane_for = move |_node: usize| lane_compose(class, None);
-            pool.inner().submit_node_burst(&sources, false, &lane_for, &mk);
+            pool.inner().submit_node_burst(shard, &sources, false, &lane_for, &mk);
         } else {
-            pool.inner().submit_job_batch(sources.iter().map(|&node| mk(node)));
+            pool.inner()
+                .submit_job_batch_sharded(shard, sources.iter().map(|&node| mk(node)));
         }
     }
     Ok((state, generation))

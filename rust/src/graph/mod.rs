@@ -25,6 +25,12 @@
 //! and whole runs carry a [`RunPriority`] class so concurrent fleets
 //! can express tenant tiers — all toggleable via [`RunOptions`].
 //!
+//! Submission is **shard-aware** (PR 5): a run's cross-thread bursts
+//! route through the pool's per-shard injectors (striped round-robin
+//! by default), and [`RunOptions::shard`] pins a run to one shard so a
+//! fleet of concurrent graphs can partition the machine's cache
+//! domains between them.
+//!
 //! Runs can also be launched **without blocking** (PR 3):
 //! [`TaskGraph::run_async`] submits the sources and returns a
 //! [`RunHandle`] that pins the graph borrow for the lifetime of the
@@ -42,6 +48,6 @@ pub use builder::{GraphError, NodeId, TaskGraph};
 pub use dataflow::{Dataflow, DataflowError, Input, Output};
 pub use executor::{wait_all, wait_any, RunHandle, RunOptions};
 pub use schedule::RunPriority;
-pub use trace::{SpanGuard, TraceEvent, Tracer};
+pub use trace::{ShardDepthSample, SpanGuard, TraceEvent, Tracer};
 
 pub(crate) use executor::{execute_node, NodeRun};

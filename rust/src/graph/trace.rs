@@ -12,11 +12,19 @@
 //! Recording is two `Instant::now()` calls plus one mutex-free vec
 //! push into a per-worker buffer, so tracing a run costs nanoseconds
 //! per task — it can stay on in examples.
+//!
+//! Besides task spans, a tracer can record **shard-depth samples**
+//! (PR 5): [`Tracer::sample_shard_depths`] snapshots each shard's
+//! queued work from a [`crate::pool::PoolSnapshot`], and the Chrome
+//! export renders them as counter tracks (`ph:"C"`) next to the task
+//! slices — so a storm run shows not just *what* executed where but
+//! how evenly the shards' queues were loaded while it did.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::schedule::RunPriority;
+use crate::pool::PoolSnapshot;
 
 /// One recorded task execution.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,6 +46,20 @@ pub struct TraceEvent {
     pub class: RunPriority,
 }
 
+/// One shard-depth probe (PR 5): how much work one shard's queues held
+/// at `ts_us`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardDepthSample {
+    /// Sample time, µs since tracer epoch.
+    pub ts_us: u64,
+    /// Shard index.
+    pub shard: usize,
+    /// Injector depth (all lanes).
+    pub injector_depth: usize,
+    /// Summed member deque depth.
+    pub deque_depth: usize,
+}
+
 /// Collects [`TraceEvent`]s across a run. Shareable (`&Tracer` is
 /// `Sync`); per-event cost is one mutex'd push (uncontended in
 /// practice: events are pushed at task granularity).
@@ -45,6 +67,7 @@ pub struct TraceEvent {
 pub struct Tracer {
     epoch: Instant,
     events: Mutex<Vec<TraceEvent>>,
+    depth_samples: Mutex<Vec<ShardDepthSample>>,
 }
 
 impl Default for Tracer {
@@ -59,7 +82,29 @@ impl Tracer {
         Self {
             epoch: Instant::now(),
             events: Mutex::new(Vec::new()),
+            depth_samples: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Records one shard-depth probe per shard of `snapshot` (PR 5).
+    /// Call it from a sampler loop (or between benchmark phases) with
+    /// `pool.metrics()`; flat pools record a single shard-0 track.
+    pub fn sample_shard_depths(&self, snapshot: &PoolSnapshot) {
+        let ts_us = Instant::now().duration_since(self.epoch).as_micros() as u64;
+        let mut samples = self.depth_samples.lock().unwrap();
+        for (shard, s) in snapshot.shards.iter().enumerate() {
+            samples.push(ShardDepthSample {
+                ts_us,
+                shard,
+                injector_depth: s.injector_depth,
+                deque_depth: s.deque_depth,
+            });
+        }
+    }
+
+    /// Snapshot of the recorded shard-depth samples, in sample order.
+    pub fn shard_depth_samples(&self) -> Vec<ShardDepthSample> {
+        self.depth_samples.lock().unwrap().clone()
     }
 
     /// Starts a span; call [`SpanGuard::finish`] (or drop it) to record.
@@ -121,13 +166,16 @@ impl Tracer {
         evs
     }
 
-    /// Clears recorded events (reuse between runs).
+    /// Clears recorded events and depth samples (reuse between runs).
     pub fn clear(&self) {
         self.events.lock().unwrap().clear();
+        self.depth_samples.lock().unwrap().clear();
     }
 
     /// Chrome trace JSON (`chrome://tracing` / Perfetto "trace event
-    /// format", complete events). Strings are minimally escaped.
+    /// format"): complete events for task spans, counter events
+    /// (`ph:"C"`, one track per shard) for the PR 5 depth samples.
+    /// Strings are minimally escaped.
     pub fn to_chrome_trace(&self) -> String {
         fn escape(s: &str) -> String {
             s.chars()
@@ -139,21 +187,36 @@ impl Tracer {
                 })
                 .collect()
         }
+        let mut parts: Vec<String> = self
+            .events()
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\
+                     \"args\":{{\"rank\":{},\"class\":\"{}\"}}}}",
+                    escape(&e.name),
+                    e.start_us,
+                    e.dur_us.max(1),
+                    e.worker,
+                    e.rank,
+                    e.class.as_str()
+                )
+            })
+            .collect();
+        parts.extend(self.shard_depth_samples().iter().map(|s| {
+            format!(
+                "{{\"name\":\"shard{} depth\",\"cat\":\"shard\",\"ph\":\"C\",\"ts\":{},\"pid\":0,\
+                 \"args\":{{\"injector\":{},\"deques\":{}}}}}",
+                s.shard, s.ts_us, s.injector_depth, s.deque_depth
+            )
+        }));
         let mut out = String::from("[");
-        for (i, e) in self.events().iter().enumerate() {
+        for (i, p) in parts.iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
-            out.push_str(&format!(
-                "\n{{\"name\":\"{}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\
-                 \"args\":{{\"rank\":{},\"class\":\"{}\"}}}}",
-                escape(&e.name),
-                e.start_us,
-                e.dur_us.max(1),
-                e.worker,
-                e.rank,
-                e.class.as_str()
-            ));
+            out.push('\n');
+            out.push_str(p);
         }
         out.push_str("\n]\n");
         out
@@ -294,9 +357,42 @@ mod tests {
     fn clear_resets() {
         let t = Tracer::new();
         t.span(0, "a").finish();
+        t.sample_shard_depths(&PoolSnapshot::default());
         assert_eq!(t.len(), 1);
         t.clear();
         assert!(t.is_empty());
+        assert!(t.shard_depth_samples().is_empty());
         assert_eq!(t.ascii_gantt(10), "(no events)\n");
+    }
+
+    #[test]
+    fn shard_depth_samples_export_as_counter_events() {
+        use crate::pool::ShardSnapshot;
+        let t = Tracer::new();
+        let snap = PoolSnapshot {
+            workers: Vec::new(),
+            shards: vec![
+                ShardSnapshot {
+                    injector_depth: 3,
+                    deque_depth: 1,
+                    ..ShardSnapshot::default()
+                },
+                ShardSnapshot::default(),
+            ],
+        };
+        t.sample_shard_depths(&snap);
+        let samples = t.shard_depth_samples();
+        assert_eq!(samples.len(), 2);
+        assert_eq!((samples[0].shard, samples[0].injector_depth, samples[0].deque_depth), (0, 3, 1));
+        assert_eq!(samples[1].shard, 1);
+        let json = t.to_chrome_trace();
+        assert!(json.contains("\"name\":\"shard0 depth\""));
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"args\":{\"injector\":3,\"deques\":1}"));
+        // Mixed spans + counters stay comma-separated well-formed.
+        t.span(0, "task").finish();
+        let json = t.to_chrome_trace();
+        assert_eq!(json.matches("\"ph\":\"C\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 1);
     }
 }

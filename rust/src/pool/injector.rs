@@ -23,6 +23,8 @@ use std::ptr;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::CachePadded;
+
 /// Number of priority lanes the pool's injection queue is split into
 /// (PR 4). Lane 0 is the most urgent; lane `NUM_LANES - 1` the least.
 /// Four lanes are enough to compose a run's priority class
@@ -348,15 +350,19 @@ impl<T> Drop for SegQueue<T> {
 /// the other lanes cost one emptiness-flag load per pop.
 pub struct LaneInjector<T> {
     lanes: Vec<Box<dyn Injector<T>>>,
-}
-
-thread_local! {
-    /// Per-thread pop tick driving the occasional reverse scan. Thread
-    /// local on purpose: a shared counter would put a cross-core RMW on
-    /// every non-empty pop (defeating the lock-free injector arm), and
-    /// the starvation bound only needs each *consumer* to look at the
-    /// low lanes now and then — per-thread ticks give exactly that.
-    static LANE_TICK: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+    /// Pop tick driving the occasional reverse scan — **per-injector**
+    /// state (PR 5). It used to be a process-wide thread-local shared
+    /// by every `LaneInjector`, which let unrelated pools (and now
+    /// unrelated shards of one pool) advance each other's tick: one
+    /// injector could reverse-scan twice in a row while its neighbour
+    /// never did, voiding the per-queue starvation bound. A relaxed
+    /// per-injector counter restores the bound exactly — every
+    /// [`STARVATION_TICK`]-th *pop of this injector* scans reversed —
+    /// and the RMW it costs sits on a path that already takes a lock
+    /// (`MutexInjector`) or a CAS (`SegQueue`) per pop; the empty fast
+    /// path below never touches it. Cache-padded so the hot tick line
+    /// is not shared with the read-only lane pointers.
+    tick: CachePadded<AtomicUsize>,
 }
 
 impl<T: Send> LaneInjector<T> {
@@ -364,6 +370,7 @@ impl<T: Send> LaneInjector<T> {
     pub fn new(mk: impl Fn() -> Box<dyn Injector<T>>) -> Self {
         Self {
             lanes: (0..NUM_LANES).map(|_| mk()).collect(),
+            tick: CachePadded::new(AtomicUsize::new(0)),
         }
     }
 
@@ -394,11 +401,7 @@ impl<T: Send> LaneInjector<T> {
         }
         // The tick advances only when work may be taken, which is
         // exactly when the starvation bound matters.
-        let tick = LANE_TICK.with(|t| {
-            let v = t.get().wrapping_add(1);
-            t.set(v);
-            v
-        });
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed).wrapping_add(1);
         if tick % STARVATION_TICK == 0 {
             self.lanes.iter().rev().find_map(|lane| lane.pop())
         } else {
@@ -415,6 +418,21 @@ impl<T: Send> LaneInjector<T> {
     /// Approximate total length across all lanes.
     pub fn len(&self) -> usize {
         self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    /// Approximate length of one lane (clamped index). Feeds the
+    /// per-shard depth snapshot in `ThreadPool::metrics()` (PR 5).
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lanes[lane.min(NUM_LANES - 1)].len()
+    }
+
+    /// Approximate per-lane lengths, one probe per lane.
+    pub fn lane_depths(&self) -> [usize; NUM_LANES] {
+        let mut depths = [0usize; NUM_LANES];
+        for (d, l) in depths.iter_mut().zip(&self.lanes) {
+            *d = l.len();
+        }
+        depths
     }
 }
 
@@ -593,6 +611,44 @@ mod tests {
             }
         }
         assert!(popped_low, "low lane starved past the starvation bound");
+    }
+
+    #[test]
+    fn starvation_tick_is_per_injector() {
+        // Two injectors popped in lockstep: each must fire its reverse
+        // scan on ITS OWN 61st pop. With the old process-wide
+        // thread-local tick, q2's pops advanced q1's cadence and the
+        // sentinel would surface after ~30 q1-pops instead of 61.
+        let q1 = lane_injector();
+        let q2 = lane_injector();
+        q1.push_to(3, usize::MAX);
+        let mut q1_pops = 0usize;
+        loop {
+            q1.push_to(0, q1_pops);
+            q2.push_to(0, q1_pops);
+            let got = q1.pop().expect("lane 0 was just pushed");
+            let _ = q2.pop().expect("lane 0 was just pushed");
+            q1_pops += 1;
+            if got == usize::MAX {
+                break;
+            }
+            assert!(q1_pops <= 200, "low lane starved past the bound");
+        }
+        // The reverse scan fires exactly on q1's own STARVATION_TICK-th
+        // pop, independent of q2's identical traffic.
+        assert_eq!(q1_pops, STARVATION_TICK);
+    }
+
+    #[test]
+    fn lane_depths_track_per_lane_lengths() {
+        let q = lane_injector();
+        q.push_to(0, 1);
+        q.push_to(2, 2);
+        q.push_to(2, 3);
+        assert_eq!(q.lane_depths(), [1, 0, 2, 0]);
+        assert_eq!(q.lane_len(2), 2);
+        assert_eq!(q.lane_len(200), 0); // clamped to the last lane
+        assert_eq!(q.len(), 3);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::injector::NUM_LANES;
 use crate::util::CachePadded;
 
 /// Counters owned by one worker thread.
@@ -31,11 +32,23 @@ pub struct WorkerMetrics {
     pub steal_batch_tasks: AtomicU64,
     /// Tasks taken from the global injector.
     pub injector_pops: AtomicU64,
-    /// Times this worker went to sleep on the eventcount.
+    /// Times this worker transitioned into an eventcount park (counted
+    /// once per idle spell, not per `commit_wait` call — multi-shard
+    /// parks re-check on a timeout backstop, and those cycles are not
+    /// new parks).
     pub parks: AtomicU64,
     /// Graph continuations executed inline (paper §2.2: the first ready
     /// successor runs on the same worker without re-queueing).
     pub inline_continuations: AtomicU64,
+    /// Steals whose victim lived in a *different shard* (PR 5) — the
+    /// level-2 half of the two-level sweep. Also counted in `steals`,
+    /// so `remote_steals / steals` is the cross-shard traffic fraction
+    /// the locality-aware sweep is meant to keep low.
+    pub remote_steals: AtomicU64,
+    /// Injector pops served by a *remote shard's* injector (PR 5).
+    /// Also counted in `injector_pops`, same ratio semantics as
+    /// `remote_steals`.
+    pub remote_injector_pops: AtomicU64,
 }
 
 macro_rules! bump {
@@ -59,6 +72,8 @@ impl WorkerMetrics {
         on_injector_pop => injector_pops,
         on_park => parks,
         on_inline_continuation => inline_continuations,
+        on_remote_steal => remote_steals,
+        on_remote_injector_pop => remote_injector_pops,
     }
 
     /// Records a batched steal that moved `extra` additional tasks
@@ -94,10 +109,15 @@ pub struct WorkerSnapshot {
     pub steal_batch_tasks: u64,
     /// Tasks taken from the global injector.
     pub injector_pops: u64,
-    /// Times the worker parked on the eventcount.
+    /// Times the worker transitioned into an eventcount park (one per
+    /// idle spell; backstop re-check cycles do not recount).
     pub parks: u64,
     /// Graph continuations executed inline (paper §2.2).
     pub inline_continuations: u64,
+    /// Cross-shard steals (subset of `steals`; PR 5).
+    pub remote_steals: u64,
+    /// Remote-shard injector pops (subset of `injector_pops`; PR 5).
+    pub remote_injector_pops: u64,
 }
 
 impl WorkerSnapshot {
@@ -123,7 +143,36 @@ impl WorkerMetrics {
             injector_pops: self.injector_pops.load(Ordering::Relaxed),
             parks: self.parks.load(Ordering::Relaxed),
             inline_continuations: self.inline_continuations.load(Ordering::Relaxed),
+            remote_steals: self.remote_steals.load(Ordering::Relaxed),
+            remote_injector_pops: self.remote_injector_pops.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Point-in-time queue depths of one shard (PR 5): how much work is
+/// sitting in the shard's injector lanes and its members' deques, and
+/// how many of its workers are parked. All values are relaxed probes —
+/// exact only while the pool is quiescent — but good enough for the
+/// imbalance signal the ABL-8 storm bench reports.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    /// Worker-index range `[start, end)` of the shard's members.
+    pub workers: (usize, usize),
+    /// Per-lane injector depths (lane 0 = most urgent).
+    pub lane_depths: [usize; NUM_LANES],
+    /// Total injector depth (sum of `lane_depths`).
+    pub injector_depth: usize,
+    /// Summed depth of the member workers' deques.
+    pub deque_depth: usize,
+    /// Members currently registered as (prospective) sleepers on the
+    /// shard's eventcount.
+    pub parked: usize,
+}
+
+impl ShardSnapshot {
+    /// Queued work visible in this shard (injector + member deques).
+    pub fn queued(&self) -> usize {
+        self.injector_depth + self.deque_depth
     }
 }
 
@@ -132,6 +181,8 @@ impl WorkerMetrics {
 pub struct PoolSnapshot {
     /// Per-worker snapshots, indexed by worker id.
     pub workers: Vec<WorkerSnapshot>,
+    /// Per-shard queue depths (PR 5); a flat pool reports one shard.
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl PoolSnapshot {
@@ -148,8 +199,27 @@ impl PoolSnapshot {
             t.injector_pops += w.injector_pops;
             t.parks += w.parks;
             t.inline_continuations += w.inline_continuations;
+            t.remote_steals += w.remote_steals;
+            t.remote_injector_pops += w.remote_injector_pops;
         }
         t
+    }
+
+    /// Shard-depth imbalance at snapshot time: max over shards of
+    /// queued work divided by the mean (1.0 = perfectly even, higher =
+    /// one shard hoards the queue). 0.0 when there is nothing queued
+    /// or only one shard — the flat pool has no imbalance to report.
+    pub fn shard_imbalance(&self) -> f64 {
+        if self.shards.len() < 2 {
+            return 0.0;
+        }
+        let depths: Vec<usize> = self.shards.iter().map(|s| s.queued()).collect();
+        let total: usize = depths.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / depths.len() as f64;
+        *depths.iter().max().unwrap() as f64 / mean
     }
 
     /// Fraction of executed tasks that arrived by stealing — the
@@ -170,15 +240,23 @@ impl std::fmt::Display for PoolSnapshot {
         writeln!(
             f,
             "pool: executed={} pushes={} pops={} steals={} steal_fail={} steal_batches={} \
-             batch_tasks={} injector={} parks={} inline={}",
+             batch_tasks={} injector={} parks={} inline={} remote_steals={} remote_injector={}",
             t.executed(), t.pushes, t.pops, t.steals, t.steal_failures, t.steal_batches,
-            t.steal_batch_tasks, t.injector_pops, t.parks, t.inline_continuations
+            t.steal_batch_tasks, t.injector_pops, t.parks, t.inline_continuations,
+            t.remote_steals, t.remote_injector_pops
         )?;
         for (i, w) in self.workers.iter().enumerate() {
             writeln!(
                 f,
                 "  w{i}: executed={} pops={} steals={} parks={} inline={}",
                 w.executed(), w.pops, w.steals, w.parks, w.inline_continuations
+            )?;
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            writeln!(
+                f,
+                "  shard{i}[w{}..w{}): injector={} lanes={:?} deques={} parked={}",
+                s.workers.0, s.workers.1, s.injector_depth, s.lane_depths, s.deque_depth, s.parked
             )?;
         }
         Ok(())
@@ -222,7 +300,7 @@ mod tests {
             injector_pops: 2,
             ..Default::default()
         };
-        let p = PoolSnapshot { workers: vec![a, b] };
+        let p = PoolSnapshot { workers: vec![a, b], shards: Vec::new() };
         assert_eq!(p.total().executed(), 13);
         assert!((p.steal_ratio() - 5.0 / 13.0).abs() < 1e-12);
     }
@@ -230,5 +308,42 @@ mod tests {
     #[test]
     fn empty_pool_ratio_is_zero() {
         assert_eq!(PoolSnapshot::default().steal_ratio(), 0.0);
+    }
+
+    #[test]
+    fn shard_imbalance_max_over_mean() {
+        let mk = |inj: usize, deq: usize| ShardSnapshot {
+            injector_depth: inj,
+            deque_depth: deq,
+            ..ShardSnapshot::default()
+        };
+        let p = PoolSnapshot {
+            workers: Vec::new(),
+            shards: vec![mk(6, 0), mk(1, 1), mk(0, 0), mk(0, 0)],
+        };
+        // depths 6,2,0,0 — mean 2, max 6.
+        assert!((p.shard_imbalance() - 3.0).abs() < 1e-12);
+        // Single shard / empty queues report no imbalance.
+        let flat = PoolSnapshot { workers: Vec::new(), shards: vec![mk(5, 5)] };
+        assert_eq!(flat.shard_imbalance(), 0.0);
+        let idle = PoolSnapshot { workers: Vec::new(), shards: vec![mk(0, 0), mk(0, 0)] };
+        assert_eq!(idle.shard_imbalance(), 0.0);
+    }
+
+    #[test]
+    fn remote_counters_roll_up() {
+        let m = WorkerMetrics::default();
+        m.on_steal();
+        m.on_steal();
+        m.on_remote_steal();
+        m.on_injector_pop();
+        m.on_remote_injector_pop();
+        let s = m.snapshot();
+        assert_eq!(s.steals, 2);
+        assert_eq!(s.remote_steals, 1);
+        assert_eq!(s.injector_pops, 1);
+        assert_eq!(s.remote_injector_pops, 1);
+        // Remote counters are subsets, not additional executions.
+        assert_eq!(s.executed(), 3);
     }
 }

@@ -4,8 +4,14 @@
 //!   with single-task `steal` and half-the-run `steal_batch_and_pop`.
 //! * [`fence_deque`] — Chase–Lev deque, Lê et al. fence style
 //!   (ablation comparator), same steal API.
-//! * [`injector`] — global submission queue for non-worker threads,
-//!   with a batched `push_batch` for fan-out bursts.
+//! * [`injector`] — submission queue for non-worker threads, with a
+//!   batched `push_batch` for fan-out bursts. Since PR 5 the pool
+//!   holds one injector **per shard** rather than one global one.
+//! * [`topology`] — the shard layer (PR 5): workers are grouped into
+//!   cache-sharing shards; each shard owns an injector and an
+//!   eventcount, submissions route by origin (worker deque / assist
+//!   home shard / striped round-robin), and the idle sweep is
+//!   two-level (home shard first, then remote shards).
 //! * [`event_count`] — sleep/wake protocol for idle workers.
 //! * `task` (crate-private) — `RawTask`: the allocation-free task
 //!   cell. Closures up to 3 words (and all task-graph nodes) are
@@ -23,8 +29,12 @@
 //! around it is sharded per worker ([`thread_pool`] module docs):
 //! submit and completion each touch one cache-padded single-writer
 //! counter cell, and wakeups are throttled to an O(1) load unless a
-//! worker is actually parked. `benches/ablations.rs` toggles each of
-//! these optimizations independently via [`PoolConfig`].
+//! worker is actually parked. Cross-thread submissions are further
+//! sharded by [`topology`] (PR 5): each worker shard owns its own
+//! injector lanes and eventcount, so producer storms spread over
+//! `num_shards` queues and wakeups target cache-sharing neighbours
+//! first. `benches/ablations.rs` toggles each of these optimizations
+//! independently via [`PoolConfig`] (ABL-8 covers flat vs. sharded).
 //!
 //! Besides the workers, external threads can temporarily execute pool
 //! tasks as **helpers**: a caller-assisted graph run
@@ -48,12 +58,14 @@ pub mod metrics;
 pub mod scope;
 pub(crate) mod task;
 pub mod thread_pool;
+pub mod topology;
 
 pub use deque::{deque, Steal, Stealer, Worker, MAX_STEAL_BATCH};
 pub use event_count::EventCount;
 pub use fence_deque::{fence_deque, FenceStealer, FenceWorker};
 pub use injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_LANE, NUM_LANES};
 pub use handle::{JoinError, TaskHandle};
-pub use metrics::{PoolSnapshot, WorkerMetrics, WorkerSnapshot};
+pub use metrics::{PoolSnapshot, ShardSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use scope::Scope;
 pub use thread_pool::{InjectorKind, PoolConfig, ThreadPool};
+pub use topology::{PoolTopology, DEFAULT_SHARD_WORKERS};

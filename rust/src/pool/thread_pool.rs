@@ -4,7 +4,9 @@
 //!
 //! * one Chase–Lev deque per worker ([`super::deque`], the fence-free
 //!   variant);
-//! * a global injector for submissions from non-worker threads;
+//! * an injector per worker **shard** for submissions from non-worker
+//!   threads (one global injector in the paper; sharded since PR 5 —
+//!   see below);
 //! * **thread-local worker registration**: instead of a map from thread
 //!   id to queue index (the "typical approach" the paper calls out), a
 //!   `thread_local!` slot identifies the current worker and its deque,
@@ -43,6 +45,44 @@
 //! `submitted`; equal sums ⇒ idle): any job whose completion the
 //! first pass counted had its submission counted by the second, so
 //! the test cannot report idle while work is in flight.
+//!
+//! # Sharded submission & locality-aware stealing (PR 5)
+//!
+//! Workers are grouped into **shards** ([`super::topology`]): each
+//! shard owns its own [`LaneInjector`] and its own [`EventCount`], so
+//! external submission storms fan out over `num_shards` queues instead
+//! of serializing on one CAS/mutex line, and sleep/wake traffic stays
+//! inside a cache-sharing neighbourhood.
+//!
+//! * **Submission routing** — a worker pushes to its own deque
+//!   (unchanged); a caller-assist helper pushes to the home shard it
+//!   was assigned on entry; any other external thread round-robins
+//!   over shards through a *striped* (thread-local) cursor, so two
+//!   producer threads never contend on a routing counter either. A
+//!   graph run can pin its cross-thread submissions to one shard
+//!   (`graph::RunOptions::shard`), and [`ThreadPool::submit_to_shard`]
+//!   pins a single task.
+//! * **Two-level idle sweep** — own deque → home-shard injector →
+//!   same-shard victim deques (batched steal) → remote shards
+//!   (injector, then deques, random start). Locality is preferred but
+//!   every queue of every shard is visited before a worker gives up,
+//!   so cross-shard starvation is impossible; the sweep-order and
+//!   starvation tests in `rust/tests/pool_sharding.rs` pin both
+//!   properties down.
+//! * **Park protocol** — a worker parks on its *shard's* eventcount,
+//!   but only after re-checking **all** shards' injectors and deques
+//!   ([`PoolInner::any_work`]); producers wake a home-shard sleeper
+//!   first and fall through to any shard with a sleeper. The
+//!   two-level re-check/wake handshake is loom-modeled in
+//!   `rust/tests/loom_model.rs`, and multi-shard parks keep a timeout
+//!   backstop so liveness never rests on the model alone.
+//!
+//! A pool with a single shard (any pool where
+//! `shard_size >= num_threads`, including every small pool under the
+//! auto setting) routes through exactly the pre-PR 5 code: one
+//! injector, one eventcount, a flat victim sweep, unbounded parks.
+//! `ABL-8` in `benches/ablations.rs` measures flat vs. sharded under
+//! a many-producer storm.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -53,9 +93,22 @@ use std::time::Duration;
 use super::deque::{deque, Steal, Stealer, Worker};
 use super::event_count::EventCount;
 use super::injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_LANE, NUM_LANES};
-use super::metrics::{PaddedMetrics, PoolSnapshot, WorkerMetrics};
+use super::metrics::{PaddedMetrics, PoolSnapshot, ShardSnapshot, WorkerMetrics};
 use super::task::RawTask;
+use super::topology::PoolTopology;
 use crate::util::{CachePadded, XorShift64Star};
+
+/// Timeout backstop for multi-shard worker parks: with per-shard
+/// eventcounts, the producer-side wakeup targeting crosses eventcount
+/// instances (notify the home shard's sleeper first, fall through to
+/// any shard with one). That protocol is loom-modeled, but unlike the
+/// single-eventcount case it is not the decade-old textbook argument,
+/// so multi-shard parks re-check their work sources at this cadence
+/// regardless — one spurious sweep per parked worker per period, which
+/// keeps Fig. 2's CPU-time story intact while making liveness
+/// unconditional. Flat (single-shard) pools park unbounded, exactly
+/// as before PR 5.
+const SHARD_PARK_BACKSTOP: Duration = Duration::from_millis(100);
 
 /// Which injector implementation backs external submissions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -91,6 +144,14 @@ pub struct PoolConfig {
     /// single wake instead of per-task submission (hot-path
     /// optimization 3; applies to graph fan-out and source submission).
     pub batched_wakeups: bool,
+    /// Workers per shard (PR 5): each shard owns its own injector and
+    /// eventcount, and the idle sweep prefers same-shard work. `0`
+    /// (the default) derives the size from the worker count —
+    /// shards of up to [`super::topology::DEFAULT_SHARD_WORKERS`]
+    /// workers, so small pools stay flat. Any value
+    /// `>= num_threads` forces a single shard: the flat, pre-PR 5
+    /// pool (the ABL-8 comparison arm).
+    pub shard_size: usize,
 }
 
 impl Default for PoolConfig {
@@ -103,6 +164,7 @@ impl Default for PoolConfig {
             inline_tasks: true,
             steal_batch: true,
             batched_wakeups: true,
+            shard_size: 0,
         }
     }
 }
@@ -125,7 +187,31 @@ thread_local! {
     /// `TaskGraph::run` calls on the same pool deterministically — the
     /// same task must error whether a worker or a helper picked it up.
     static ASSISTING: Cell<*const ()> = const { Cell::new(std::ptr::null()) };
+    /// Home shard of the current assist scope (PR 5): assigned on
+    /// entry (`AssistGuard::enter`), it is where the helper's
+    /// submissions land and where it parks. Only meaningful while
+    /// `ASSISTING` matches the pool being asked.
+    static ASSIST_SHARD: Cell<usize> = const { Cell::new(0) };
+    /// Striped round-robin cursors for external submissions (PR 5):
+    /// per-thread AND per-pool (keyed by `PoolInner` address — a tiny
+    /// linear-scan vec, since a thread rarely feeds more than a couple
+    /// of pools), so spreading a submission storm over the shards
+    /// costs zero shared RMWs — the very contention sharding removes
+    /// must not sneak back in through the router. Per-pool keying
+    /// matters: one shared counter would let interleaved submissions
+    /// to two pools alias (e.g. two 2-shard pools fed alternately
+    /// would each see a constant cursor parity and re-concentrate on
+    /// one shard). A reused allocation address after a pool drop can
+    /// at worst inherit a stale cursor value, which only shifts the
+    /// round-robin phase.
+    static STRIPE: std::cell::RefCell<Vec<(*const (), usize)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
+
+/// Seed source for [`STRIPE`]: one global bump per (thread, pool)
+/// *first touch* (cold), staggering the cursors' round-robin phases so
+/// simultaneous storms do not all start hammering shard 0.
+static STRIPE_SEED: AtomicUsize = AtomicUsize::new(0);
 
 /// Clears the TLS registration even if the worker loop unwinds.
 struct LocalGuard;
@@ -139,16 +225,22 @@ impl Drop for LocalGuard {
 /// Marks the current thread as assisting `pool` for the guard's
 /// lifetime, restoring the previous value on drop (assist scopes for
 /// different pools can nest: a helper-executed task may legitimately
-/// run a graph on a *different* pool).
+/// run a graph on a *different* pool). The guard also assigns the
+/// helper its **home shard** (PR 5) — round-robin via the striped
+/// cursor, so consecutive assist scopes spread over the shards — which
+/// is where the helper submits, pops first, and parks.
 struct AssistGuard {
     prev: *const (),
+    prev_shard: usize,
 }
 
 impl AssistGuard {
     fn enter(pool: &PoolInner) -> Self {
         let ptr = pool as *const PoolInner as *const ();
+        let shard = pool.striped_shard();
         AssistGuard {
             prev: ASSISTING.with(|a| a.replace(ptr)),
+            prev_shard: ASSIST_SHARD.with(|s| s.replace(shard)),
         }
     }
 }
@@ -157,6 +249,8 @@ impl Drop for AssistGuard {
     fn drop(&mut self) {
         let prev = self.prev;
         ASSISTING.with(|a| a.set(prev));
+        let prev_shard = self.prev_shard;
+        ASSIST_SHARD.with(|s| s.set(prev_shard));
     }
 }
 
@@ -167,31 +261,48 @@ impl Drop for AssistGuard {
 /// Writer discipline: cell `i < n` is written only by worker `i`
 /// (submissions it makes, completions it executes), so the hot path
 /// never contends on a shared line; cell `n` takes submissions from
-/// non-worker threads and completions from caller-assist helper
-/// threads (`run_helper_job`) — both off the worker hot path.
+/// non-worker threads (plus the explicitly shard-pinned
+/// [`ThreadPool::submit_to_shard`], wherever it is called from) and
+/// completions from caller-assist helper threads (`run_helper_job`) —
+/// all off the worker hot path.
 #[derive(Default)]
 struct PendingCell {
     submitted: AtomicU64,
     completed: AtomicU64,
 }
 
-pub(crate) struct PoolInner {
-    /// Global injection queue, split into [`NUM_LANES`] priority lanes
-    /// (PR 4): untagged submissions use [`DEFAULT_LANE`]; graph runs
-    /// with priority lanes enabled spread tasks by run class × node
-    /// rank (`graph::schedule::lane_compose`). Workers and helpers pop
+/// One shard's scheduling state (PR 5): its injection queue and its
+/// sleep/wake domain. A flat pool holds exactly one of these, and the
+/// code that indexes `shards[0]` is then the pre-PR 5 single-injector,
+/// single-eventcount pool verbatim.
+struct ShardState {
+    /// The shard's injection queue, split into [`NUM_LANES`] priority
+    /// lanes (PR 4): untagged submissions use [`DEFAULT_LANE`]; graph
+    /// runs with priority lanes enabled spread tasks by run class ×
+    /// node rank (`graph::schedule::lane_compose`). Consumers pop
     /// most-urgent-first with a starvation-bounding reverse scan.
     injector: LaneInjector<RawTask>,
+    /// Eventcount the shard's workers (and assist helpers homed here)
+    /// park on. Producers prefer waking a home-shard sleeper and fall
+    /// through to other shards' sleepers ([`PoolInner::notify_shard`]).
+    ec: EventCount,
+}
+
+pub(crate) struct PoolInner {
+    /// Per-shard injectors + eventcounts; `topology` maps workers to
+    /// entries. Length 1 = the flat pre-PR 5 pool.
+    shards: Box<[ShardState]>,
+    /// Worker → shard arithmetic (immutable).
+    topology: PoolTopology,
     stealers: Vec<Stealer<RawTask>>,
     metrics: Vec<PaddedMetrics>,
-    ec: EventCount,
     /// Dedicated eventcount for threads blocked on a graph-run
-    /// completion ([`PoolInner::wait_run`]). Separate from `ec` on
-    /// purpose: run waiters do not take work, so letting them park on
-    /// the workers' eventcount would let a work-arrival `notify_one`
-    /// land on a waiter that just re-parks — with the task stranded
-    /// and the worker it was meant for still asleep. Only run
-    /// completions notify this one.
+    /// completion ([`PoolInner::wait_run`]). Separate from the shards'
+    /// eventcounts on purpose: run waiters do not take work, so
+    /// letting them park where workers park would let a work-arrival
+    /// `notify_one` land on a waiter that just re-parks — with the
+    /// task stranded and the worker it was meant for still asleep.
+    /// Only run completions notify this one.
     run_ec: EventCount,
     /// `num_threads + 1` cells; see [`PendingCell`].
     counters: Vec<CachePadded<PendingCell>>,
@@ -245,20 +356,27 @@ impl ThreadPool {
             stealers.push(s);
         }
         let kind = config.injector;
-        let injector = LaneInjector::new(move || -> Box<dyn Injector<RawTask>> {
+        let mk_injector = move || -> Box<dyn Injector<RawTask>> {
             match kind {
                 InjectorKind::Mutex => Box::new(MutexInjector::new()),
                 InjectorKind::LockFree => Box::new(SegQueue::new()),
             }
-        });
+        };
+        let topology = PoolTopology::new(n, config.shard_size);
+        let shards: Box<[ShardState]> = (0..topology.num_shards())
+            .map(|_| ShardState {
+                injector: LaneInjector::new(mk_injector),
+                ec: EventCount::new(),
+            })
+            .collect();
         let inner = Arc::new(PoolInner {
-            injector,
+            shards,
+            topology,
             stealers,
             // `n + 1` blocks: one per worker plus the shared helper
             // lane used by caller-assist threads (graph runs executing
             // tasks on the submitting thread) — see helper_lane().
             metrics: (0..n + 1).map(|_| PaddedMetrics::new(WorkerMetrics::default())).collect(),
-            ec: EventCount::new(),
             run_ec: EventCount::new(),
             counters: (0..n + 1).map(|_| CachePadded::new(PendingCell::default())).collect(),
             panics: AtomicU64::new(0),
@@ -366,11 +484,60 @@ impl ThreadPool {
     /// Snapshot of scheduler metrics across workers. The last entry is
     /// the shared **helper lane**: work executed by caller-assist
     /// threads (graph runs helping from the submitting thread) rather
-    /// than by a pool worker.
+    /// than by a pool worker. `shards` carries the per-shard queue
+    /// depths (PR 5) — injector lanes, member deques, parked workers —
+    /// so a storm benchmark can report shard imbalance
+    /// ([`PoolSnapshot::shard_imbalance`]), not just throughput.
     pub fn metrics(&self) -> PoolSnapshot {
+        let inner = &*self.inner;
+        let shards = (0..inner.num_shards())
+            .map(|s| {
+                let members = inner.topology.members(s);
+                let lane_depths = inner.shards[s].injector.lane_depths();
+                ShardSnapshot {
+                    workers: (members.start, members.end),
+                    injector_depth: lane_depths.iter().sum(),
+                    lane_depths,
+                    deque_depth: members.map(|w| inner.stealers[w].len()).sum(),
+                    parked: inner.shards[s].ec.waiter_count(),
+                }
+            })
+            .collect();
         PoolSnapshot {
-            workers: self.inner.metrics.iter().map(|m| m.snapshot()).collect(),
+            workers: inner.metrics.iter().map(|m| m.snapshot()).collect(),
+            shards,
         }
+    }
+
+    /// Number of shards the pool's workers are grouped into (PR 5);
+    /// 1 = the flat pre-PR 5 pool. See [`PoolConfig::shard_size`].
+    pub fn num_shards(&self) -> usize {
+        self.inner.num_shards()
+    }
+
+    /// Submits a task pinned to `shard`'s injector (clamped to the
+    /// valid range) — the per-task locality knob (PR 5): co-locate a
+    /// producer's stream of tasks on one cache-sharing worker group
+    /// instead of round-robining it across the pool. Unlike
+    /// [`ThreadPool::submit`], this routes through the shard's
+    /// injector even when called from a worker thread — the point is
+    /// shard placement, not the caller's own deque. The task is still
+    /// visible to every shard through the two-level sweep, so pinning
+    /// can never strand work.
+    pub fn submit_to_shard<F: FnOnce() + Send + 'static>(&self, shard: usize, f: F) {
+        let job = if self.inner.inline_tasks {
+            RawTask::closure(f)
+        } else {
+            RawTask::boxed_closure(f)
+        };
+        let inner = &*self.inner;
+        let shard = shard.min(inner.num_shards() - 1);
+        // External-cell counting keeps the quiescence scan balanced
+        // (the cell is multi-writer by design; see PendingCell docs);
+        // count-before-publish as everywhere.
+        inner.counters[inner.external_cell()].submitted.fetch_add(1, Ordering::Release);
+        inner.shards[shard].injector.push_to(DEFAULT_LANE, job);
+        inner.notify_shard(shard);
     }
 
     /// Worker index of the current thread if it belongs to this pool.
@@ -389,7 +556,7 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        self.inner.ec.notify_all();
+        self.inner.notify_all_workers();
         for t in self.threads.drain(..) {
             // A worker that parked between the store and the notify is
             // still woken: prepare_wait/notify ordering is SeqCst (see
@@ -432,19 +599,138 @@ impl PoolInner {
         self.counters.len() - 1
     }
 
+    /// Number of shards (≥ 1).
+    #[inline]
+    pub(crate) fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Next shard from this thread's striped round-robin cursor for
+    /// *this pool* (PR 5): a thread-local per-pool counter seeded once
+    /// from a global bump, so concurrent producers spread over the
+    /// shards without sharing a routing counter and without aliasing
+    /// across pools (see [`STRIPE`]). Flat pools skip the TLS
+    /// entirely.
+    fn striped_shard(&self) -> usize {
+        let ns = self.num_shards();
+        if ns == 1 {
+            return 0;
+        }
+        let key = self as *const PoolInner as *const ();
+        STRIPE.with(|s| {
+            let mut cursors = s.borrow_mut();
+            let cur = match cursors.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, cur)) => {
+                    *cur = cur.wrapping_add(1);
+                    *cur
+                }
+                None => {
+                    let seed = STRIPE_SEED.fetch_add(1, Ordering::Relaxed);
+                    cursors.push((key, seed));
+                    seed
+                }
+            };
+            cur % ns
+        })
+    }
+
+    /// Resolves the target shard of an injector-bound submission:
+    /// an explicit hint (clamped) wins; a caller-assist helper routes
+    /// to its home shard; everything else round-robins through the
+    /// striped cursor. Single-shard pools resolve to 0 without
+    /// touching any of that — the flat fast path.
+    fn route_shard(&self, hint: Option<usize>) -> usize {
+        if self.num_shards() == 1 {
+            return 0;
+        }
+        if let Some(shard) = hint {
+            return shard.min(self.num_shards() - 1);
+        }
+        if self.on_assisting_thread() {
+            return ASSIST_SHARD.with(|s| s.get()).min(self.num_shards() - 1);
+        }
+        self.striped_shard()
+    }
+
+    /// Home shard of the current thread for *consuming* work: a worker
+    /// sweeps from its own shard, an assist helper from the shard it
+    /// was assigned on entry, anything else from shard 0.
+    fn current_home_shard(&self) -> usize {
+        if let Some(lw) = LOCAL.with(|l| l.get()) {
+            if std::ptr::eq(lw.pool, self) {
+                return self.topology.shard_of(lw.index);
+            }
+        }
+        if self.on_assisting_thread() {
+            return ASSIST_SHARD.with(|s| s.get()).min(self.num_shards() - 1);
+        }
+        0
+    }
+
+    /// True when every shard's injector looks empty (same staleness
+    /// caveats as [`Injector::is_empty`]).
+    fn injectors_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.injector.is_empty())
+    }
+
+    /// Wakes one sleeper for work pushed toward `shard`, preferring a
+    /// **home-shard** sleeper (it finds the task on the first probe of
+    /// its sweep) and falling through to any shard with a sleeper —
+    /// work must never idle behind a shard whose workers are all busy
+    /// while another shard sleeps. If no shard has a registered
+    /// sleeper this is `num_shards` SeqCst loads and no syscall; any
+    /// sleeper registering after those loads re-checks **all** shards
+    /// before committing its park ([`PoolInner::any_work`]), which is
+    /// the same two-sided argument as the single-eventcount protocol
+    /// (`event_count.rs` module docs), extended across eventcount
+    /// instances — loom-modeled in `rust/tests/loom_model.rs` and
+    /// backstopped by [`SHARD_PARK_BACKSTOP`].
+    fn notify_shard(&self, shard: usize) {
+        let ns = self.num_shards();
+        if ns == 1 {
+            // Flat pool: the pre-PR 5 notify, bit for bit.
+            self.shards[0].ec.notify_one();
+            return;
+        }
+        for k in 0..ns {
+            let s = (shard + k) % ns;
+            if self.shards[s].ec.waiter_count() > 0 {
+                self.shards[s].ec.notify_one();
+                return;
+            }
+        }
+    }
+
+    /// Burst flavour of [`PoolInner::notify_shard`]: `n > 1` tasks were
+    /// published, so broadcast — the home shard's sleepers plus every
+    /// other shard's (remote sleepers may be the only idle capacity,
+    /// and excess wakeups just re-check and re-park, exactly as the
+    /// pre-PR 5 `notify_all` behaved).
+    fn notify_burst(&self, shard: usize, n: usize) {
+        if n == 1 {
+            self.notify_shard(shard);
+            return;
+        }
+        let ns = self.num_shards();
+        for k in 0..ns {
+            self.shards[(shard + k) % ns].ec.notify_all();
+        }
+    }
+
     /// Schedules a job: local deque if on a worker of this pool,
     /// injector otherwise. The submitted-counter bump precedes the
     /// push so a job can never be findable (and completable) before
     /// it is counted — the quiescence scan depends on that order.
     pub(crate) fn submit_job(&self, job: RawTask) {
-        self.submit_job_to(DEFAULT_LANE, job);
+        self.submit_job_to(None, DEFAULT_LANE, job);
     }
 
-    /// [`PoolInner::submit_job`] with an explicit injector lane for the
-    /// cross-thread path. A worker's own deque has no lanes — the lane
-    /// only matters when the task travels through the injector.
-    pub(crate) fn submit_job_to(&self, lane: u8, job: RawTask) {
-        LOCAL.with(|l| match l.get() {
+    /// [`PoolInner::submit_job`] with an explicit injector lane (and,
+    /// PR 5, an optional shard hint) for the cross-thread path. A
+    /// worker's own deque has no lanes and no shard routing — both
+    /// only matter when the task travels through an injector.
+    pub(crate) fn submit_job_to(&self, hint: Option<usize>, lane: u8, job: RawTask) {
+        let target = match LOCAL.with(|l| l.get()) {
             Some(lw) if std::ptr::eq(lw.pool, self) => {
                 self.counters[lw.index].submitted.fetch_add(1, Ordering::Release);
                 // SAFETY: `queue` points at the Worker owned by this
@@ -452,14 +738,18 @@ impl PoolInner {
                 // it executes; we are that task.
                 unsafe { (*lw.queue).push(job) };
                 self.metrics[lw.index].on_push();
+                // Wake a neighbour first: it can steal with one probe.
+                self.topology.shard_of(lw.index)
             }
             _ => {
+                let shard = self.route_shard(hint);
                 self.counters[self.external_cell()].submitted.fetch_add(1, Ordering::Release);
-                self.injector.push_to(lane, job);
+                self.shards[shard].injector.push_to(lane, job);
+                shard
             }
-        });
-        // O(1) load (no lock, no syscall) when nobody is parked.
-        self.ec.notify_one();
+        };
+        // O(1) loads (no lock, no syscall) when nobody is parked.
+        self.notify_shard(target);
     }
 
     /// Schedules a burst of jobs with one counter bump, one deque/
@@ -470,9 +760,19 @@ impl PoolInner {
     where
         I: ExactSizeIterator<Item = RawTask>,
     {
+        self.submit_job_batch_sharded(None, jobs);
+    }
+
+    /// [`PoolInner::submit_job_batch`] with an optional shard hint
+    /// (PR 5): the whole burst lands in one shard's injector, keeping
+    /// its FIFO order intact and its consumers cache-local.
+    pub(crate) fn submit_job_batch_sharded<I>(&self, hint: Option<usize>, jobs: I)
+    where
+        I: ExactSizeIterator<Item = RawTask>,
+    {
         if !self.batched_wakeups {
             for job in jobs {
-                self.submit_job(job);
+                self.submit_job_to(hint, DEFAULT_LANE, job);
             }
             return;
         }
@@ -480,7 +780,7 @@ impl PoolInner {
         if n == 0 {
             return;
         }
-        LOCAL.with(|l| match l.get() {
+        let target = match LOCAL.with(|l| l.get()) {
             Some(lw) if std::ptr::eq(lw.pool, self) => {
                 // Count before publishing (see submit_job).
                 self.counters[lw.index].submitted.fetch_add(n as u64, Ordering::Release);
@@ -489,20 +789,19 @@ impl PoolInner {
                     unsafe { (*lw.queue).push(job) };
                 }
                 self.metrics[lw.index].on_push_n(n as u64);
+                self.topology.shard_of(lw.index)
             }
             _ => {
+                let shard = self.route_shard(hint);
                 self.counters[self.external_cell()].submitted.fetch_add(n as u64, Ordering::Release);
                 let mut jobs = jobs;
-                self.injector.push_batch_to(DEFAULT_LANE, &mut jobs);
+                self.shards[shard].injector.push_batch_to(DEFAULT_LANE, &mut jobs);
+                shard
             }
-        });
-        if n == 1 {
-            self.ec.notify_one();
-        } else {
-            // One epoch bump + one broadcast instead of n wakes;
-            // excess sleepers re-check their work sources and re-park.
-            self.ec.notify_all();
-        }
+        };
+        // One epoch bump + broadcast instead of n wakes for n > 1;
+        // excess sleepers re-check their work sources and re-park.
+        self.notify_burst(target, n);
     }
 
     /// Priority-aware burst submission for graph nodes (PR 4): the
@@ -524,9 +823,13 @@ impl PoolInner {
     /// Unranked bursts keep their discovery order; per-lane grouping
     /// then takes one filtering pass per lane. Counter/wake discipline
     /// is identical to [`PoolInner::submit_job_batch`], including the
-    /// per-task fallback when batched wakeups are disabled.
+    /// per-task fallback when batched wakeups are disabled. The shard
+    /// `hint` (PR 5) pins the cross-thread half of the burst to one
+    /// shard's injector (`graph::RunOptions::shard`); worker-local
+    /// pushes ignore it — the owner's deque *is* the locality optimum.
     pub(crate) fn submit_node_burst(
         &self,
+        hint: Option<usize>,
         nodes: &[usize],
         ranked: bool,
         lane_for: &dyn Fn(usize) -> u8,
@@ -541,16 +844,16 @@ impl PoolInner {
             // compensation: on a worker, later pushes pop first.
             if ranked && self.on_worker_thread() {
                 for &node in nodes.iter().rev() {
-                    self.submit_job_to(lane_for(node), mk(node));
+                    self.submit_job_to(hint, lane_for(node), mk(node));
                 }
             } else {
                 for &node in nodes {
-                    self.submit_job_to(lane_for(node), mk(node));
+                    self.submit_job_to(hint, lane_for(node), mk(node));
                 }
             }
             return;
         }
-        LOCAL.with(|l| match l.get() {
+        let target = match LOCAL.with(|l| l.get()) {
             Some(lw) if std::ptr::eq(lw.pool, self) => {
                 // Count before publishing (see submit_job).
                 self.counters[lw.index].submitted.fetch_add(n as u64, Ordering::Release);
@@ -564,8 +867,11 @@ impl PoolInner {
                     nodes.iter().for_each(|&node| push(node));
                 }
                 self.metrics[lw.index].on_push_n(n as u64);
+                self.topology.shard_of(lw.index)
             }
             _ => {
+                let shard = self.route_shard(hint);
+                let injector = &self.shards[shard].injector;
                 self.counters[self.external_cell()].submitted.fetch_add(n as u64, Ordering::Release);
                 if ranked {
                     // Contiguous per-lane runs of the rank-sorted burst.
@@ -576,8 +882,7 @@ impl PoolInner {
                         while j < n && lane_for(nodes[j]) == lane {
                             j += 1;
                         }
-                        self.injector
-                            .push_batch_to(lane, &mut nodes[i..j].iter().map(|&node| mk(node)));
+                        injector.push_batch_to(lane, &mut nodes[i..j].iter().map(|&node| mk(node)));
                         i = j;
                     }
                 } else {
@@ -588,17 +893,14 @@ impl PoolInner {
                             .map(|&node| mk(node))
                             .peekable();
                         if it.peek().is_some() {
-                            self.injector.push_batch_to(lane, &mut it);
+                            injector.push_batch_to(lane, &mut it);
                         }
                     }
                 }
+                shard
             }
-        });
-        if n == 1 {
-            self.ec.notify_one();
-        } else {
-            self.ec.notify_all();
-        }
+        };
+        self.notify_burst(target, n);
     }
 
     /// Called on the executing worker after a job finishes.
@@ -611,7 +913,7 @@ impl PoolInner {
         // the stale-emptiness-flag corner).
         if self.idle_waiters.load(Ordering::Acquire) != 0
             && self.stealers[index].is_empty()
-            && self.injector.is_empty()
+            && self.injectors_empty()
         {
             // Lock/unlock pairs with the check-then-wait in wait_idle.
             drop(self.idle_mutex.lock().unwrap());
@@ -638,10 +940,69 @@ impl PoolInner {
         submitted == completed
     }
 
-    /// One attempt to find work: own deque, then injector, then a
-    /// random-start sweep over the other workers' deques (taking up to
-    /// half a victim's run per visit when batched stealing is on).
-    /// Returns `(job, saw_retry)`.
+    /// One random-start batched-steal sweep over the victim deques in
+    /// `victims` (a shard's member range), skipping `index`. Shared by
+    /// both levels of the two-level sweep. Returns the stolen job, if
+    /// any, and ORs lost-race observations into `saw_retry`.
+    fn try_steal_range(
+        &self,
+        index: usize,
+        local: &Worker<RawTask>,
+        victims: std::ops::Range<usize>,
+        rng: &mut XorShift64Star,
+        saw_retry: &mut bool,
+    ) -> Option<RawTask> {
+        let m = &self.metrics[index];
+        let len = victims.len();
+        if len == 0 || (len == 1 && victims.start == index) {
+            return None;
+        }
+        let start = victims.start + rng.next_below(len);
+        for k in 0..len {
+            let victim = victims.start + (start - victims.start + k) % len;
+            if victim == index {
+                continue;
+            }
+            let result = if self.steal_batch {
+                let (result, extra) = self.stealers[victim].steal_batch_and_pop_counted(local);
+                if extra > 0 {
+                    m.on_steal_batch(extra as u64);
+                    // The moved tasks enter the local deque and are
+                    // counted as pushes; their eventual pops keep
+                    // executed() covering every task exactly once.
+                    m.on_push_n(extra as u64);
+                }
+                result
+            } else {
+                self.stealers[victim].steal()
+            };
+            match result {
+                Steal::Success(job) => {
+                    m.on_steal();
+                    return Some(job);
+                }
+                Steal::Retry => {
+                    m.on_steal_failure();
+                    *saw_retry = true;
+                }
+                Steal::Empty => {}
+            }
+        }
+        None
+    }
+
+    /// One attempt to find work — the **two-level sweep** (PR 5):
+    ///
+    /// 1. own deque;
+    /// 2. home-shard injector;
+    /// 3. same-shard victim deques (random start, batched steal);
+    /// 4. remote shards in random rotation — each shard's injector,
+    ///    then its member deques.
+    ///
+    /// Locality first, but every queue of every shard is visited
+    /// before giving up, so cross-shard starvation is impossible. On a
+    /// flat (single-shard) pool steps 2–3 cover everything and step 4
+    /// vanishes — the exact pre-PR 5 sweep. Returns `(job, saw_retry)`.
     fn find_task(
         &self,
         index: usize,
@@ -653,42 +1014,37 @@ impl PoolInner {
             m.on_pop();
             return (Some(job), false);
         }
-        if let Some(job) = self.injector.pop() {
+        let home = self.topology.shard_of(index);
+        if let Some(job) = self.shards[home].injector.pop() {
             m.on_injector_pop();
             return (Some(job), false);
         }
-        let n = self.stealers.len();
         let mut saw_retry = false;
-        if n > 1 {
-            let start = rng.next_below(n);
-            for k in 0..n {
-                let victim = (start + k) % n;
-                if victim == index {
-                    continue;
+        if let Some(job) =
+            self.try_steal_range(index, local, self.topology.members(home), rng, &mut saw_retry)
+        {
+            return (Some(job), saw_retry);
+        }
+        let ns = self.num_shards();
+        if ns > 1 {
+            // Random rotation over the ns-1 remote shards.
+            let start = rng.next_below(ns - 1);
+            for j in 0..ns - 1 {
+                let shard = (home + 1 + (start + j) % (ns - 1)) % ns;
+                if let Some(job) = self.shards[shard].injector.pop() {
+                    m.on_injector_pop();
+                    m.on_remote_injector_pop();
+                    return (Some(job), saw_retry);
                 }
-                let result = if self.steal_batch {
-                    let (result, extra) = self.stealers[victim].steal_batch_and_pop_counted(local);
-                    if extra > 0 {
-                        m.on_steal_batch(extra as u64);
-                        // The moved tasks enter the local deque and are
-                        // counted as pushes; their eventual pops keep
-                        // executed() covering every task exactly once.
-                        m.on_push_n(extra as u64);
-                    }
-                    result
-                } else {
-                    self.stealers[victim].steal()
-                };
-                match result {
-                    Steal::Success(job) => {
-                        m.on_steal();
-                        return (Some(job), saw_retry);
-                    }
-                    Steal::Retry => {
-                        m.on_steal_failure();
-                        saw_retry = true;
-                    }
-                    Steal::Empty => {}
+                if let Some(job) = self.try_steal_range(
+                    index,
+                    local,
+                    self.topology.members(shard),
+                    rng,
+                    &mut saw_retry,
+                ) {
+                    m.on_remote_steal();
+                    return (Some(job), saw_retry);
                 }
             }
         }
@@ -696,9 +1052,12 @@ impl PoolInner {
     }
 
     /// True if any work might be available (used to re-check before
-    /// parking; conservative — may say true spuriously).
+    /// parking; conservative — may say true spuriously). Probes
+    /// **every** shard's injector and every deque: the two-level
+    /// re-check that makes a park safe no matter which shard the work
+    /// landed in.
     fn any_work(&self) -> bool {
-        !self.injector.is_empty() || self.stealers.iter().any(|s| !s.is_empty())
+        !self.injectors_empty() || self.stealers.iter().any(|s| !s.is_empty())
     }
 
     /// Metrics index of the shared helper lane (caller-assist threads).
@@ -716,9 +1075,11 @@ impl PoolInner {
     }
 
     /// Wakes every parked worker *and* any caller-assist thread parked
-    /// on the eventcount (the graph executor's run-complete signal).
+    /// on the eventcounts (the graph executor's run-complete signal).
     pub(crate) fn notify_all_workers(&self) {
-        self.ec.notify_all();
+        for shard in self.shards.iter() {
+            shard.ec.notify_all();
+        }
     }
 
     /// Wakes every thread parked in [`PoolInner::wait_run`] — the
@@ -773,15 +1134,24 @@ impl PoolInner {
         }
     }
 
-    /// One find-task attempt for a caller-assist helper: injector
-    /// first (graph sources and helper-submitted successors land
-    /// there), then a random-start single-task steal sweep. Helpers
-    /// own no deque, so no batched stealing. Returns `(job, saw_retry)`.
+    /// One find-task attempt for a caller-assist helper: home-shard
+    /// injector first (the helper's own submissions land there), then
+    /// the remote shards' injectors, then a random-start single-task
+    /// steal sweep over every deque. Helpers own no deque, so no
+    /// batched stealing. Returns `(job, saw_retry)`.
     fn helper_find_task(&self, rng: &mut XorShift64Star) -> (Option<RawTask>, bool) {
         let m = &self.metrics[self.helper_lane()];
-        if let Some(job) = self.injector.pop() {
-            m.on_injector_pop();
-            return (Some(job), false);
+        let home = self.current_home_shard();
+        let ns = self.num_shards();
+        for k in 0..ns {
+            let shard = (home + k) % ns;
+            if let Some(job) = self.shards[shard].injector.pop() {
+                m.on_injector_pop();
+                if shard != home {
+                    m.on_remote_injector_pop();
+                }
+                return (Some(job), false);
+            }
         }
         let n = self.stealers.len();
         let start = rng.next_below(n);
@@ -810,7 +1180,7 @@ impl PoolInner {
         self.counters[self.external_cell()].completed.fetch_add(1, Ordering::Release);
         // Mirror finish_job's wait_idle nudge (helpers have no own
         // deque to check).
-        if self.idle_waiters.load(Ordering::Acquire) != 0 && self.injector.is_empty() {
+        if self.idle_waiters.load(Ordering::Acquire) != 0 && self.injectors_empty() {
             drop(self.idle_mutex.lock().unwrap());
             self.idle_cv.notify_all();
         }
@@ -833,6 +1203,9 @@ impl PoolInner {
     pub(crate) fn assist_until(self: &Arc<Self>, done: impl Fn() -> bool) {
         debug_assert!(!self.on_worker_thread(), "assist_until on a worker thread");
         let _assisting = AssistGuard::enter(self);
+        // Park on the home shard the guard just assigned: completions
+        // and home-shard submissions notify there first.
+        let home_ec = &self.shards[self.current_home_shard()].ec;
         let mut rng = XorShift64Star::from_entropy();
         loop {
             if done() {
@@ -849,12 +1222,12 @@ impl PoolInner {
                 std::hint::spin_loop();
                 continue;
             }
-            let token = self.ec.prepare_wait();
+            let token = home_ec.prepare_wait();
             if done() || self.any_work() {
-                self.ec.cancel_wait(token);
+                home_ec.cancel_wait(token);
                 continue;
             }
-            self.ec.commit_wait_timeout(token, Duration::from_millis(1));
+            home_ec.commit_wait_timeout(token, Duration::from_millis(1));
         }
     }
 
@@ -878,6 +1251,16 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
     });
     let _guard = LocalGuard;
     let mut rng = XorShift64Star::from_entropy();
+    // This worker's sleep/wake domain (PR 5): it parks on its home
+    // shard's eventcount, which producers probe first when routing a
+    // wakeup toward this shard.
+    let home_ec = &inner.shards[inner.topology.shard_of(index)].ec;
+    let flat = inner.num_shards() == 1;
+    // `parks` counts transitions INTO idleness, not commit_wait calls:
+    // a multi-shard park wakes every SHARD_PARK_BACKSTOP to re-check,
+    // and counting each backstop cycle would make an idle sharded pool
+    // look like it thrashes sleep/wake next to the flat arm in ABL-8.
+    let mut counted_park = false;
 
     'outer: loop {
         // Work until dry, spinning through `spin_rounds` extra sweeps.
@@ -888,6 +1271,7 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
                 Some(job) => {
                     inner.run_job(index, job);
                     spins = 0;
+                    counted_park = false;
                 }
                 None if saw_retry => {
                     // Someone is mid-operation on a victim deque;
@@ -904,10 +1288,13 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
             }
         }
 
-        // Park protocol: register as sleeper, re-check, sleep.
-        let token = inner.ec.prepare_wait();
+        // Park protocol: register as sleeper on the home shard's
+        // eventcount, re-check EVERY shard's queues (any_work — the
+        // two-level re-check that pairs with notify_shard's waiter
+        // scan), sleep.
+        let token = home_ec.prepare_wait();
         if inner.shutdown.load(Ordering::SeqCst) {
-            inner.ec.cancel_wait(token);
+            home_ec.cancel_wait(token);
             // Drain remaining work before exiting so drop() does not
             // strand submitted tasks.
             while let (Some(job), _) = inner.find_task(index, &queue, &mut rng) {
@@ -916,11 +1303,21 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
             break 'outer;
         }
         if inner.any_work() {
-            inner.ec.cancel_wait(token);
+            home_ec.cancel_wait(token);
             continue;
         }
-        inner.metrics[index].on_park();
-        inner.ec.commit_wait(token);
+        if !counted_park {
+            inner.metrics[index].on_park();
+            counted_park = true;
+        }
+        if flat {
+            // Single eventcount: the textbook protocol, park unbounded.
+            home_ec.commit_wait(token);
+        } else {
+            // Cross-eventcount wakeup targeting: keep the liveness
+            // backstop (see SHARD_PARK_BACKSTOP).
+            home_ec.commit_wait_timeout(token, SHARD_PARK_BACKSTOP);
+        }
     }
 }
 
@@ -1232,6 +1629,223 @@ mod tests {
             tx.send(hit.load(Ordering::SeqCst)).unwrap();
         });
         assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), 8);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn default_small_pool_is_flat() {
+        // Pools of up to DEFAULT_SHARD_WORKERS workers collapse to one
+        // shard under the auto setting — the pre-PR 5 shape.
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.num_shards(), 1);
+        let snap = pool.metrics();
+        assert_eq!(snap.shards.len(), 1);
+        assert_eq!(snap.shards[0].workers, (0, 2));
+        assert_eq!(snap.shard_imbalance(), 0.0);
+    }
+
+    #[test]
+    fn explicit_shard_size_splits_pool() {
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 4,
+            shard_size: 2,
+            ..PoolConfig::default()
+        });
+        assert_eq!(pool.num_shards(), 2);
+        let snap = pool.metrics();
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.shards[0].workers, (0, 2));
+        assert_eq!(snap.shards[1].workers, (2, 4));
+        // The sharded pool still executes everything exactly once.
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..500 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn submit_to_shard_lands_in_target_injector() {
+        // Workers wedged on gates -> the pinned submissions must sit in
+        // the chosen shard's injector, observable via the depth
+        // snapshot, and still execute after release.
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 2,
+            shard_size: 1,
+            spin_rounds: 0,
+            ..PoolConfig::default()
+        });
+        let gate = Arc::new(AtomicUsize::new(0));
+        let started = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let (g, s) = (gate.clone(), started.clone());
+            pool.submit(move || {
+                s.fetch_add(1, Ordering::SeqCst);
+                while g.load(Ordering::SeqCst) == 0 {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        while started.load(Ordering::SeqCst) < 2 {
+            std::thread::yield_now();
+        }
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let h = hits.clone();
+            pool.submit_to_shard(1, move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let snap = pool.metrics();
+        assert_eq!(snap.shards[1].injector_depth, 8);
+        assert_eq!(snap.shards[0].injector_depth, 0);
+        assert!(snap.shard_imbalance() > 1.0);
+        gate.store(1, Ordering::SeqCst);
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        // Out-of-range shards clamp instead of panicking.
+        let h = hits.clone();
+        pool.submit_to_shard(999, move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn striped_cursor_is_per_pool() {
+        // Interleaved external submissions to TWO sharded pools from
+        // one thread must round-robin within EACH pool — a cursor
+        // shared across pools would alias (constant parity per pool)
+        // and pile every task of a pool onto one shard.
+        let mk = || {
+            ThreadPool::with_config(PoolConfig {
+                num_threads: 2,
+                shard_size: 1,
+                spin_rounds: 0,
+                ..PoolConfig::default()
+            })
+        };
+        let (pool_a, pool_b) = (mk(), mk());
+        // Wedge all four workers so staged submissions stay queued.
+        let gate = Arc::new(AtomicUsize::new(0));
+        let started = Arc::new(AtomicUsize::new(0));
+        for pool in [&pool_a, &pool_b] {
+            for _ in 0..2 {
+                let (g, s) = (gate.clone(), started.clone());
+                pool.submit(move || {
+                    s.fetch_add(1, Ordering::SeqCst);
+                    while g.load(Ordering::SeqCst) == 0 {
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        }
+        while started.load(Ordering::SeqCst) < 4 {
+            std::thread::yield_now();
+        }
+        for _ in 0..4 {
+            pool_a.submit(|| {});
+            pool_b.submit(|| {});
+        }
+        for (name, pool) in [("a", &pool_a), ("b", &pool_b)] {
+            let snap = pool.metrics();
+            assert_eq!(
+                (snap.shards[0].injector_depth, snap.shards[1].injector_depth),
+                (2, 2),
+                "pool {name}: alternating submits must alternate shards"
+            );
+        }
+        gate.store(1, Ordering::SeqCst);
+        pool_a.wait_idle();
+        pool_b.wait_idle();
+    }
+
+    #[test]
+    fn per_worker_shards_still_share_all_work() {
+        // shard_size=1: every worker is its own shard; level-2 of the
+        // sweep is the only cross-worker path and must still deliver
+        // everything.
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 3,
+            shard_size: 1,
+            ..PoolConfig::default()
+        });
+        assert_eq!(pool.num_shards(), 3);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..300 {
+            let c = count.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 300);
+    }
+
+    #[test]
+    fn sharded_pool_toggles_remain_correct() {
+        // Sharding composed with each hot-path toggle off.
+        for (name, config) in [
+            ("sharded-default", PoolConfig { shard_size: 2, ..PoolConfig::default() }),
+            (
+                "sharded-all-off",
+                PoolConfig {
+                    shard_size: 2,
+                    inline_tasks: false,
+                    steal_batch: false,
+                    batched_wakeups: false,
+                    ..PoolConfig::default()
+                },
+            ),
+            (
+                "sharded-lockfree",
+                PoolConfig {
+                    shard_size: 2,
+                    injector: InjectorKind::LockFree,
+                    ..PoolConfig::default()
+                },
+            ),
+        ] {
+            let pool = ThreadPool::with_config(PoolConfig { num_threads: 4, ..config });
+            assert_eq!(pool.num_shards(), 2, "{name}");
+            let count = Arc::new(AtomicUsize::new(0));
+            for _ in 0..1000 {
+                let c = count.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(count.load(Ordering::Relaxed), 1000, "{name}");
+        }
+    }
+
+    #[test]
+    fn assist_until_on_sharded_pool() {
+        // The helper gets a home shard on entry and must still drain
+        // work from every shard.
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 2,
+            shard_size: 1,
+            ..PoolConfig::default()
+        });
+        let count = Arc::new(AtomicUsize::new(0));
+        for shard in 0..2 {
+            for _ in 0..32 {
+                let c = count.clone();
+                pool.submit_to_shard(shard, move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        let c = count.clone();
+        pool.inner().assist_until(move || c.load(Ordering::Relaxed) >= 64);
+        assert_eq!(count.load(Ordering::Relaxed), 64);
         pool.wait_idle();
     }
 

@@ -1,0 +1,175 @@
+//! Pool topology: how workers are grouped into **shards** (PR 5).
+//!
+//! The paper's pool has one global injection queue and a flat victim
+//! sweep: every external submission serializes on a single CAS/mutex
+//! line, and a thief is as likely to steal from a worker on the far
+//! side of the machine as from its cache-sharing neighbour. Taskflow's
+//! executor and the ROADMAP's "Distributed injector" / "NUMA-aware
+//! stealing" items both point the same way: group workers into shards
+//! of cache-sharing neighbours, give each shard its own injector (and
+//! its own sleep/wake domain), and make the idle sweep **two-level** —
+//! exhaust the home shard before crossing to remote shards.
+//!
+//! This module is pure arithmetic over `(num_workers, shard_size)`:
+//! it owns no queues and no synchronization, so the scheduling code in
+//! `thread_pool.rs` can ask "whose shard is worker 7 in?" or "which
+//! workers belong to shard 2?" without any shared state. Workers are
+//! assigned to shards contiguously (`worker / shard_size`), matching
+//! how OSes enumerate SMT siblings and core-complex neighbours, so a
+//! shard approximates an L3/CCX domain without any platform probing.
+//!
+//! A pool with **one shard** is exactly the pre-PR 5 flat pool: one
+//! injector, one eventcount, one victim sweep over everyone. Small
+//! pools (and any pool configured with `shard_size >= num_threads`)
+//! are clamped to that shape, and `ABL-8` in `benches/ablations.rs`
+//! measures flat vs. sharded under a many-producer storm.
+
+/// Workers per shard when [`crate::pool::PoolConfig::shard_size`] is
+/// left at 0 (auto). Eight matches the core-complex / L3-slice size of
+/// the common desktop and server parts this crate targets; pools with
+/// at most this many workers (i.e. most `available_parallelism()`
+/// laptops and all of the paper's testbeds) collapse to a single
+/// shard and keep the exact pre-PR 5 behaviour.
+pub const DEFAULT_SHARD_WORKERS: usize = 8;
+
+/// The shard layout of one pool. Immutable after construction; shared
+/// freely by reference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolTopology {
+    num_workers: usize,
+    shard_size: usize,
+    num_shards: usize,
+}
+
+impl PoolTopology {
+    /// Computes the layout for `num_workers` workers with a configured
+    /// shard size (`0` = auto, see [`DEFAULT_SHARD_WORKERS`]). The
+    /// effective shard size is clamped to `1..=num_workers`, so
+    /// `shard_size >= num_workers` (or a small pool under auto) yields
+    /// exactly one shard — the flat pre-PR 5 pool.
+    pub fn new(num_workers: usize, shard_size: usize) -> Self {
+        let num_workers = num_workers.max(1);
+        let shard_size = if shard_size == 0 {
+            DEFAULT_SHARD_WORKERS
+        } else {
+            shard_size
+        }
+        .clamp(1, num_workers);
+        let num_shards = num_workers.div_ceil(shard_size);
+        PoolTopology {
+            num_workers,
+            shard_size,
+            num_shards,
+        }
+    }
+
+    /// Total worker count.
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// Workers per shard (the last shard may hold fewer).
+    #[inline]
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// Number of shards (≥ 1).
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// True when the pool is flat (a single shard) — the configuration
+    /// that must route through the pre-PR 5 code paths bit-identically.
+    #[inline]
+    pub fn is_flat(&self) -> bool {
+        self.num_shards == 1
+    }
+
+    /// Home shard of `worker` (contiguous assignment).
+    #[inline]
+    pub fn shard_of(&self, worker: usize) -> usize {
+        debug_assert!(worker < self.num_workers);
+        worker / self.shard_size
+    }
+
+    /// Worker-index range of `shard`'s members.
+    #[inline]
+    pub fn members(&self, shard: usize) -> std::ops::Range<usize> {
+        debug_assert!(shard < self.num_shards);
+        let start = shard * self.shard_size;
+        start..((start + self.shard_size).min(self.num_workers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_pools_collapse_to_one_shard() {
+        for n in 1..=DEFAULT_SHARD_WORKERS {
+            let t = PoolTopology::new(n, 0);
+            assert!(t.is_flat(), "{n} workers");
+            assert_eq!(t.num_shards(), 1);
+            assert_eq!(t.members(0), 0..n);
+        }
+    }
+
+    #[test]
+    fn explicit_shard_size_partitions_contiguously() {
+        let t = PoolTopology::new(8, 2);
+        assert_eq!(t.num_shards(), 4);
+        assert_eq!(t.shard_size(), 2);
+        for w in 0..8 {
+            assert_eq!(t.shard_of(w), w / 2);
+            assert!(t.members(t.shard_of(w)).contains(&w));
+        }
+        assert_eq!(t.members(3), 6..8);
+    }
+
+    #[test]
+    fn ragged_last_shard() {
+        let t = PoolTopology::new(9, 4);
+        assert_eq!(t.num_shards(), 3);
+        assert_eq!(t.members(0), 0..4);
+        assert_eq!(t.members(1), 4..8);
+        assert_eq!(t.members(2), 8..9);
+        assert_eq!(t.shard_of(8), 2);
+    }
+
+    #[test]
+    fn oversized_shard_size_is_flat() {
+        let t = PoolTopology::new(3, 64);
+        assert!(t.is_flat());
+        assert_eq!(t.shard_size(), 3);
+        assert_eq!(t.members(0), 0..3);
+    }
+
+    #[test]
+    fn shard_size_one_is_per_worker_shards() {
+        let t = PoolTopology::new(4, 1);
+        assert_eq!(t.num_shards(), 4);
+        for w in 0..4 {
+            assert_eq!(t.shard_of(w), w);
+            assert_eq!(t.members(w), w..w + 1);
+        }
+    }
+
+    #[test]
+    fn auto_splits_large_pools() {
+        let t = PoolTopology::new(32, 0);
+        assert_eq!(t.shard_size(), DEFAULT_SHARD_WORKERS);
+        assert_eq!(t.num_shards(), 4);
+        assert!(!t.is_flat());
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let t = PoolTopology::new(0, 0);
+        assert_eq!(t.num_workers(), 1);
+        assert!(t.is_flat());
+    }
+}

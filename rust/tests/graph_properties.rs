@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use scheduling::graph::{GraphError, RunOptions, RunPriority, TaskGraph};
-use scheduling::pool::ThreadPool;
+use scheduling::pool::{PoolConfig, ThreadPool};
 use scheduling::util::Pcg32;
 use scheduling::workloads::Dag;
 
@@ -465,6 +465,70 @@ fn property_matrix_shapes_sync_async_all_toggles() {
                             ti < stamps[s].load(Ordering::SeqCst),
                             "case {case} async={run_async} mask {mask:#08b} edge {i}->{s}"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_matrix_on_sharded_pool() {
+    // The PR 5 sharding bit of the matrix: the same §2.2 invariants on
+    // sharded pools (2 shards of 2, and per-worker shards), sync and
+    // async, over the scheduling toggle bits plus a cycled
+    // RunOptions::shard pin (None / each shard / out-of-range). A
+    // sharded pool changes only WHERE cross-thread submissions queue;
+    // exactly-once, conservation, and topological order must be
+    // untouched across consecutive re-arms on the same graph.
+    for shard_size in [2usize, 1] {
+        let pool = ThreadPool::with_config(PoolConfig {
+            num_threads: 4,
+            shard_size,
+            ..PoolConfig::default()
+        });
+        assert!(pool.num_shards() > 1);
+        let mut rng = Pcg32::seeded(0x5AAD ^ shard_size as u64);
+        for case in 0..12 {
+            let n = 10 + rng.next_below(40) as usize;
+            let w = 1 + rng.next_below(8) as usize;
+            let p = 0.1 + rng.next_f64() * 0.4;
+            let adj = random_dag(&mut rng, n, w, p);
+            for run_async in [false, true] {
+                let (mut g, runs, stamps, _clock) = build_graph(&adj);
+                let pins = [None, Some(0), Some(1), Some(usize::MAX)];
+                for mask in 0..8u32 {
+                    let mut options = RunOptions {
+                        no_inline_continuation: mask & 1 != 0,
+                        no_topology_cache: mask & 2 != 0,
+                        no_priority_lanes: mask & 4 != 0,
+                        ..RunOptions::default()
+                    };
+                    options.shard = pins[(mask as usize + case) % pins.len()];
+                    if run_async {
+                        g.run_async_with_options(&pool, options).unwrap().wait().unwrap();
+                    } else {
+                        g.run_with_options(&pool, options).unwrap();
+                    }
+                    let rep = mask as usize + 1;
+                    let mut total = 0;
+                    for i in 0..n {
+                        let r = runs[i].load(Ordering::SeqCst);
+                        assert_eq!(
+                            r, rep,
+                            "shard_size {shard_size} case {case} async={run_async} mask {mask:#05b} node {i}"
+                        );
+                        total += r;
+                    }
+                    assert_eq!(total, n * rep);
+                    for (i, succs) in adj.iter().enumerate() {
+                        let ti = stamps[i].load(Ordering::SeqCst);
+                        for &s in succs {
+                            assert!(
+                                ti < stamps[s].load(Ordering::SeqCst),
+                                "shard_size {shard_size} case {case} async={run_async} mask {mask:#05b} edge {i}->{s}"
+                            );
+                        }
                     }
                 }
             }

@@ -12,7 +12,18 @@
 //! 3. the **priority-lane push/steal protocol** (PR 4) — a task pushed
 //!    into any injector lane (per-lane emptiness flag, Release store)
 //!    is never lost by a consumer scanning the lanes and parking on
-//!    the eventcount.
+//!    the eventcount;
+//! 4. the **two-level sweep / sharded park protocol** (PR 5) — with
+//!    one injector and one eventcount *per shard*, a task pushed into
+//!    a remote shard is never lost by a worker that re-checks all
+//!    shards and parks on its home shard's eventcount, against a
+//!    producer that scans waiter counts and wakes the first shard
+//!    with a sleeper;
+//! 5. the **batched-steal claim protocol** (PR 1 deque, modeled here
+//!    per the ROADMAP's "deques under loom" item) — the hand-rolled
+//!    Chase–Lev top/bottom index protocol delivers every element
+//!    exactly once when a `steal_batch_and_pop` loop races the
+//!    owner's LIFO pops.
 //!
 //! These are *models*: each test re-states the protocol in miniature
 //! with loom types (the production code uses `std` atomics and real
@@ -30,7 +41,7 @@
 #![cfg(loom)]
 
 use loom::cell::UnsafeCell;
-use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use loom::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use loom::sync::{Arc, Condvar, Mutex};
 use loom::thread;
 
@@ -285,6 +296,300 @@ fn priority_lane_push_is_never_lost_by_a_parking_consumer() {
         assert_eq!(got, Some(7), "the pushed task must be consumed");
 
         producer.join().unwrap();
+    });
+}
+
+/// Model 5: the two-level sweep / sharded park protocol (PR 5).
+///
+/// Two shards, each a miniature of `thread_pool.rs`'s `ShardState`:
+/// one injector lane (`MutexInjector`'s flag protocol, as in model 4)
+/// plus one eventcount (all SeqCst, as in `event_count.rs`). The
+/// producer is `submit_job_to`'s cross-thread path in miniature: push
+/// into the REMOTE shard's lane, then `notify_shard` — scan the waiter
+/// counts starting at the target shard and `notify_one` the first
+/// eventcount with a registered sleeper (no-op if none). The consumer
+/// is a worker of shard 0: sweep home lane then remote lane (the
+/// two-level sweep), `prepare_wait` on the HOME eventcount, re-check
+/// **both** shards (`any_work`), and only then commit — with no
+/// timeout backstop, so a lost wakeup deadlocks the model and fails
+/// the test. This is the cross-eventcount extension of model 3's
+/// two-sided argument: either the producer's SeqCst waiter-count scan
+/// observes the consumer's registration (and pokes that eventcount),
+/// or the consumer's registration came later in the SeqCst order and
+/// its all-shards re-check observes the push.
+#[test]
+fn sharded_push_is_never_lost_by_home_shard_parker() {
+    loom::model(|| {
+        struct Lane {
+            queue: Mutex<Option<u32>>,
+            maybe_nonempty: AtomicBool,
+        }
+        impl Lane {
+            fn push(&self, v: u32) {
+                let mut q = self.queue.lock().unwrap();
+                *q = Some(v);
+                self.maybe_nonempty.store(true, Ordering::Release);
+            }
+            fn pop(&self) -> Option<u32> {
+                if !self.maybe_nonempty.load(Ordering::Acquire) {
+                    return None;
+                }
+                let mut q = self.queue.lock().unwrap();
+                let v = q.take();
+                if q.is_none() {
+                    self.maybe_nonempty.store(false, Ordering::Release);
+                }
+                v
+            }
+            fn is_empty(&self) -> bool {
+                !self.maybe_nonempty.load(Ordering::Acquire)
+            }
+        }
+        struct Ec {
+            epoch: AtomicU64,
+            waiters: AtomicUsize,
+            mutex: Mutex<()>,
+            cv: Condvar,
+        }
+        impl Ec {
+            fn new() -> Self {
+                Ec {
+                    epoch: AtomicU64::new(0),
+                    waiters: AtomicUsize::new(0),
+                    mutex: Mutex::new(()),
+                    cv: Condvar::new(),
+                }
+            }
+            fn prepare_wait(&self) -> u64 {
+                self.waiters.fetch_add(1, Ordering::SeqCst);
+                self.epoch.load(Ordering::SeqCst)
+            }
+            fn cancel_wait(&self) {
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn commit_wait(&self, epoch: u64) {
+                let mut guard = self.mutex.lock().unwrap();
+                while self.epoch.load(Ordering::SeqCst) == epoch {
+                    guard = self.cv.wait(guard).unwrap();
+                }
+                drop(guard);
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+            }
+            fn notify_one(&self) {
+                if self.waiters.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                self.epoch.fetch_add(1, Ordering::SeqCst);
+                drop(self.mutex.lock().unwrap());
+                self.cv.notify_one();
+            }
+        }
+        struct Shard {
+            lane: Lane,
+            ec: Ec,
+        }
+        let mk_shard = || Shard {
+            lane: Lane {
+                queue: Mutex::new(None),
+                maybe_nonempty: AtomicBool::new(false),
+            },
+            ec: Ec::new(),
+        };
+        let st = Arc::new([mk_shard(), mk_shard()]);
+
+        // Producer: push into shard 1 (remote for the consumer), then
+        // notify_shard(1) — waiter-count scan from the target shard.
+        let producer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                st[1].lane.push(7);
+                for k in 0..2 {
+                    let s = (1 + k) % 2;
+                    if st[s].ec.waiters.load(Ordering::SeqCst) > 0 {
+                        st[s].ec.notify_one();
+                        break;
+                    }
+                }
+            })
+        };
+
+        // Consumer: worker of shard 0 — two-level sweep, park on the
+        // home eventcount after re-checking ALL shards.
+        let sweep = |st: &[Shard; 2]| st[0].lane.pop().or_else(|| st[1].lane.pop());
+        let mut got = None;
+        while got.is_none() {
+            if let Some(v) = sweep(&st) {
+                got = Some(v);
+                break;
+            }
+            let epoch = st[0].ec.prepare_wait();
+            // any_work(): every shard's queues, not just home.
+            if !st[0].lane.is_empty() || !st[1].lane.is_empty() {
+                st[0].ec.cancel_wait();
+                continue;
+            }
+            st[0].ec.commit_wait(epoch);
+        }
+        assert_eq!(got, Some(7), "the remote-shard push must be consumed");
+
+        producer.join().unwrap();
+    });
+}
+
+/// Model 6: the batched-steal claim protocol on the hand-rolled deque
+/// (PR 5 satellite; ROADMAP's "the deques under loom").
+///
+/// A miniature of `pool/deque.rs` with the exact index protocol and
+/// memory orders of the production code — `top`/`bottom` `AtomicI64`,
+/// owner `pop` reserving `bottom - 1` with a SeqCst `fetch_sub`
+/// (the fence-free store-load trick) and racing thieves with a CAS on
+/// `top` for the last element; thief `steal` validating a speculative
+/// slot read with a SeqCst CAS on `top`; and
+/// `steal_batch_and_pop_counted`'s loop of single steals sized from a
+/// pre-steal snapshot. Slots are atomics rather than raw memory (the
+/// claim protocol, not the buffer reclamation, is what the batch loop
+/// composes — and what this model checks): the assertion is
+/// exactly-once delivery of every element across owner pops and the
+/// thief's batch, under every interleaving.
+#[test]
+fn steal_batch_and_pop_claims_each_element_exactly_once() {
+    loom::model(|| {
+        const CAP: usize = 4; // power of two ≥ N
+        const N: i64 = 3;
+        struct Deque {
+            top: AtomicI64,
+            bottom: AtomicI64,
+            slots: [AtomicU64; CAP],
+        }
+        impl Deque {
+            fn new() -> Self {
+                Deque {
+                    top: AtomicI64::new(0),
+                    bottom: AtomicI64::new(0),
+                    slots: [
+                        AtomicU64::new(0),
+                        AtomicU64::new(0),
+                        AtomicU64::new(0),
+                        AtomicU64::new(0),
+                    ],
+                }
+            }
+            // Worker::push (no grow: CAP > N).
+            fn push(&self, b: i64, v: u64) {
+                self.slots[b as usize & (CAP - 1)].store(v, Ordering::Relaxed);
+                self.bottom.store(b + 1, Ordering::Release);
+            }
+            // Worker::pop, owner-only (`b` = cached bottom).
+            fn pop(&self, bottom_cache: &mut i64) -> Option<u64> {
+                let b = *bottom_cache;
+                let t_approx = self.top.load(Ordering::Relaxed);
+                if t_approx >= b {
+                    return None;
+                }
+                let b = self.bottom.fetch_sub(1, Ordering::SeqCst) - 1;
+                *bottom_cache = b;
+                let t = self.top.load(Ordering::SeqCst);
+                let result = if t < b {
+                    Some(self.slots[b as usize & (CAP - 1)].load(Ordering::Relaxed))
+                } else if t == b {
+                    let value = self.slots[b as usize & (CAP - 1)].load(Ordering::Relaxed);
+                    if self
+                        .top
+                        .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        Some(value)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                self.bottom.store(b + 1, Ordering::SeqCst);
+                *bottom_cache = b + 1;
+                result
+            }
+            // Stealer::steal.
+            fn steal(&self) -> Result<Option<u64>, ()> {
+                let t = self.top.load(Ordering::SeqCst);
+                let b = self.bottom.load(Ordering::SeqCst);
+                if t >= b {
+                    return Ok(None); // Empty
+                }
+                let value = self.slots[t as usize & (CAP - 1)].load(Ordering::Acquire);
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    Ok(Some(value))
+                } else {
+                    Err(()) // Retry
+                }
+            }
+        }
+
+        let dq = Arc::new(Deque::new());
+        // Owner pre-fills N elements (values 1..=N; 0 = empty slot).
+        {
+            let mut b = 0i64;
+            for v in 1..=N {
+                dq.push(b, v as u64);
+                b += 1;
+            }
+        }
+
+        // Thief: steal_batch_and_pop_counted in miniature — size the
+        // batch from a pre-steal snapshot, first steal returns for
+        // execution, the loop moves up to `want` extras; Empty or a
+        // lost race ends the batch (the production early-outs).
+        let thief = {
+            let dq = dq.clone();
+            thread::spawn(move || {
+                let t = dq.top.load(Ordering::SeqCst);
+                let b = dq.bottom.load(Ordering::SeqCst);
+                let available = b - t;
+                if available <= 0 {
+                    return Vec::new();
+                }
+                let mut taken = Vec::new();
+                match dq.steal() {
+                    Ok(Some(v)) => taken.push(v),
+                    _ => return taken,
+                }
+                let want = ((available as usize + 1) / 2).saturating_sub(1);
+                while taken.len() - 1 < want {
+                    match dq.steal() {
+                        Ok(Some(v)) => taken.push(v),
+                        _ => break,
+                    }
+                }
+                taken
+            })
+        };
+
+        // Owner: LIFO pops until its side observes empty.
+        let mut popped = Vec::new();
+        let mut bottom_cache = N;
+        loop {
+            match dq.pop(&mut bottom_cache) {
+                Some(v) => popped.push(v),
+                None => {
+                    // Production pop returns None for both "lost the
+                    // last-element race" and "empty"; the owner's loop
+                    // re-checks via the cached bottom. Model the
+                    // terminal empty check directly.
+                    if dq.top.load(Ordering::SeqCst) >= bottom_cache {
+                        break;
+                    }
+                }
+            }
+        }
+
+        let stolen = thief.join().unwrap();
+        let mut all: Vec<u64> = popped.into_iter().chain(stolen).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![1, 2, 3], "every element exactly once");
     });
 }
 
