@@ -1,0 +1,153 @@
+//! CANCEL / OVERLOAD — run-lifecycle robustness benches (PR 6).
+//!
+//! Two reports land in the ledger (`BENCH_pr6.json`):
+//!
+//! * **CANCEL time-to-cancel (PR 6)** — a sealed 10 000-node diamond
+//!   chain: run to completion, aborted at launch by a pre-cancelled
+//!   token (the abort-path floor: one flag check per skipped node and
+//!   the normal pending-counter cascade), and cancelled midway through
+//!   an async run (launch → wait for ~¼ of the nodes → `cancel()` →
+//!   harvest). The cancel series bound how long a caller waits for
+//!   quiescence after giving up on a run; both must come in well under
+//!   running the graph to completion.
+//! * **OVERLOAD admission goodput (PR 6)** — a fleet of 4×`max`
+//!   64-node graphs kept in flight per round (4× oversubmription of
+//!   the admission budget): an unlimited pool vs. one with
+//!   `max_inflight_runs = threads`. Admission-on paces submission (the
+//!   blocking launch parks on the budget eventcount), so the series
+//!   measures the throughput cost of backpressure on identical total
+//!   work — plus the pool's own `shed_runs`/lifecycle counters printed
+//!   for the record.
+//!
+//! Knobs: `RERUNS` (default 20), `THREADS` (default 2), `BENCH_FAST=1`
+//! (drops RERUNS to 5).
+
+use std::sync::atomic::Ordering;
+
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
+use scheduling::graph::{CancelToken, GraphError, RunOptions};
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::workloads::{Dag, MultiRun};
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let reruns: usize = std::env::var("RERUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 5 } else { 20 });
+    let pool = ThreadPool::new(threads);
+
+    // ---- CANCEL: time-to-cancel a 10k-node run ---------------------
+    let nodes = 10_000usize;
+    let mut report = Report::new(
+        "CANCEL time-to-cancel (PR 6)",
+        format!(
+            "sealed 10000-node diamond chain, {reruns} runs per sample, {threads} threads; \
+             complete = run to the end, cancel-at-launch = pre-cancelled token (abort floor), \
+             cancel-midway = run_async, spin until ~25% of nodes executed, cancel(), harvest"
+        ),
+    );
+    let param = format!("diamond{nodes} x{reruns}");
+
+    let (mut g, counter) = Dag::diamond_chain(nodes / 4).to_task_graph(0);
+    g.run(&pool).unwrap(); // warm: sizes queues, builds run state
+    let summary = bench_wall(&opts, || {
+        for _ in 0..reruns {
+            g.run(&pool).unwrap();
+        }
+    });
+    assert!(counter.load(Ordering::Relaxed) >= nodes * reruns);
+    report.push(param.clone(), "complete", summary);
+
+    let token = CancelToken::new();
+    token.cancel();
+    let at_launch = RunOptions::new().cancel_token(token);
+    let summary = bench_wall(&opts, || {
+        for _ in 0..reruns {
+            let r = g.run_with_options(&pool, at_launch.clone());
+            assert!(matches!(r, Err(GraphError::Cancelled)));
+        }
+    });
+    report.push(param.clone(), "cancel-at-launch", summary);
+
+    // Midway: the handle cancels a live run. The node count at the
+    // cancel point is approximate by design (workers race the flag),
+    // so the run may occasionally finish first — accept both results
+    // and measure launch → quiescent-harvest wall time either way.
+    g.run(&pool).unwrap(); // re-warm after the aborted batch
+    let summary = bench_wall(&opts, || {
+        for _ in 0..reruns {
+            let baseline = counter.load(Ordering::Relaxed);
+            let mut handle = g.run_async(&pool).unwrap();
+            while counter.load(Ordering::Relaxed) - baseline < nodes / 4 && !handle.is_done() {
+                std::hint::spin_loop();
+            }
+            handle.cancel();
+            match handle.wait() {
+                Ok(()) | Err(GraphError::Cancelled) => {}
+                Err(e) => panic!("unexpected cancel-midway result: {e}"),
+            }
+        }
+    });
+    report.push(param.clone(), "cancel-midway", summary);
+
+    report.print();
+    record_json("cancel_latency", "wall", threads, &report);
+
+    for (series, shape) in
+        [("cancel-at-launch", "cancel-floor-wins"), ("cancel-midway", "cancel-midway-wins")]
+    {
+        if let Some(r) = report.speedup(&param, series, "complete") {
+            println!("SHAPE {shape}@{param}: {r:.2}x {}", if r >= 1.0 { "PASS" } else { "CHECK" });
+        }
+    }
+
+    // ---- OVERLOAD: goodput under 4x oversubscription ---------------
+    let fleet = 4 * threads.max(1);
+    let rounds = (reruns * 5).max(10);
+    let mut report = Report::new(
+        "OVERLOAD admission goodput (PR 6)",
+        format!(
+            "{fleet} 64-node sealed diamond chains in flight per round ({rounds} rounds per \
+             sample), {threads} threads; admission-off = unlimited pool, admission-on = \
+             max_inflight_runs={threads} (blocking launches park on the budget eventcount); \
+             identical total node executions per series"
+        ),
+    );
+    let param = format!("fleet{fleet} x{rounds}");
+
+    let mut mr = MultiRun::new(fleet, 16, 0);
+    mr.run_round(&pool).unwrap(); // warm per fleet
+    let summary = bench_wall(&opts, || {
+        mr.run_rounds(&pool, rounds).unwrap();
+    });
+    assert!(mr.verify_exactly_once(), "admission-off: exactly-once violated");
+    report.push(param.clone(), "admission-off", summary);
+
+    let gated = ThreadPool::with_config(PoolConfig {
+        num_threads: threads,
+        max_inflight_runs: threads,
+        ..PoolConfig::default()
+    });
+    let mut mr = MultiRun::new(fleet, 16, 0);
+    mr.run_round(&gated).unwrap();
+    let summary = bench_wall(&opts, || {
+        mr.run_rounds(&gated, rounds).unwrap();
+    });
+    assert!(mr.verify_exactly_once(), "admission-on: exactly-once violated");
+    report.push(param.clone(), format!("admission-on(max={threads})"), summary);
+    eprintln!("  admission-on pool after sweep:\n{}", gated.metrics());
+
+    report.print();
+    record_json("overload_admission", "wall", threads, &report);
+
+    if let Some(r) = report.speedup(&param, &format!("admission-on(max={threads})"), "admission-off")
+    {
+        // Backpressure trades peak goodput for bounded queues; flag
+        // only a collapse, not the expected small pacing cost.
+        let verdict = if r >= 0.5 { "PASS" } else { "CHECK" };
+        println!("SHAPE admission-pacing-cost@{param}: {r:.2}x {verdict}");
+    }
+}

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use crate::pool::ThreadPool;
 use crate::util::CachePadded;
 
-use super::executor::{run_graph, run_graph_async, RunHandle, RunOptions, RunState};
+use super::executor::{run_graph, run_graph_async, try_run_graph, RunHandle, RunOptions, RunState};
 use super::schedule::Schedule;
 
 /// Handle to a node of a [`TaskGraph`], returned by [`TaskGraph::add`].
@@ -31,17 +31,39 @@ pub enum GraphError {
         /// Indices of nodes left with nonzero in-degree by Kahn's algorithm.
         stuck: Vec<usize>,
     },
-    /// One or more tasks panicked during the run. The graph still ran
-    /// to completion (successors of a panicked node do run — counters
-    /// would deadlock otherwise); the first panic is reported here.
-    TaskPanicked {
+    /// A task panicked during the run, which **aborts** the run (PR 6):
+    /// nodes not yet dispatched when the panic was recorded are
+    /// cancelled (their closures never execute; their counters still
+    /// drain, so the pool quiesces normally), the worker that caught
+    /// the panic is quarantined-and-revived rather than lost, and the
+    /// first panic payload is reported here. The graph un-poisons on
+    /// its next run.
+    NodePanicked {
         /// Index of the first panicking node.
         node: usize,
         /// Name of the node, if it was given one.
         name: Option<String>,
         /// Panic payload rendered to a string when possible.
-        message: String,
+        payload: String,
     },
+    /// The run was cancelled — via [`crate::graph::RunHandle::cancel`]
+    /// or a [`crate::graph::CancelToken`] passed through
+    /// [`RunOptions::cancel_token`](crate::graph::RunOptions::cancel_token).
+    /// Cancellation is cooperative and takes effect at node-dispatch
+    /// boundaries: nodes already executing finish, unreached nodes are
+    /// skipped (counters still drain, so quiescence and generation
+    /// accounting stay exact).
+    Cancelled,
+    /// The run's [`RunOptions::deadline`](crate::graph::RunOptions::deadline)
+    /// expired before completion. Enforced through the same cooperative
+    /// cancel path as [`GraphError::Cancelled`].
+    DeadlineExceeded,
+    /// The pool's admission budget
+    /// ([`crate::pool::PoolConfig::max_inflight_runs`] /
+    /// [`crate::pool::PoolConfig::max_queued_tasks`]) is exhausted:
+    /// [`TaskGraph::try_run`] refuses new runs instead of growing the
+    /// queues without bound, and `Low`-class runs are shed first.
+    Overloaded,
     /// [`TaskGraph::run`] was called from inside a task of the pool it
     /// targets — whether that task was picked up by a worker thread or
     /// by a caller-assist helper. The run would need that very
@@ -58,10 +80,17 @@ impl std::fmt::Display for GraphError {
             GraphError::Cycle { stuck } => {
                 write!(f, "task graph contains a cycle involving nodes {stuck:?}")
             }
-            GraphError::TaskPanicked { node, name, message } => match name {
-                Some(n) => write!(f, "task {node} ({n}) panicked: {message}"),
-                None => write!(f, "task {node} panicked: {message}"),
+            GraphError::NodePanicked { node, name, payload } => match name {
+                Some(n) => write!(f, "task {node} ({n}) panicked (run aborted): {payload}"),
+                None => write!(f, "task {node} panicked (run aborted): {payload}"),
             },
+            GraphError::Cancelled => write!(f, "graph run cancelled"),
+            GraphError::DeadlineExceeded => write!(f, "graph run deadline exceeded"),
+            GraphError::Overloaded => write!(
+                f,
+                "pool admission budget exhausted (max_inflight_runs / max_queued_tasks); \
+                 retry later or raise the budget"
+            ),
             GraphError::RunFromWorker => write!(
                 f,
                 "TaskGraph::run called from a worker task of the target pool \
@@ -518,6 +547,27 @@ impl TaskGraph {
     pub fn run_with_options(&mut self, pool: &ThreadPool, options: RunOptions) -> Result<(), GraphError> {
         self.validate()?;
         run_graph(self, pool, options)
+    }
+
+    /// [`TaskGraph::run`] that **refuses instead of waiting** when the
+    /// pool's admission budget
+    /// ([`crate::pool::PoolConfig::max_inflight_runs`] /
+    /// [`crate::pool::PoolConfig::max_queued_tasks`]) is exhausted,
+    /// returning [`GraphError::Overloaded`] without submitting
+    /// anything. On a pool with no budget configured this is exactly
+    /// `run`.
+    pub fn try_run(&mut self, pool: &ThreadPool) -> Result<(), GraphError> {
+        self.try_run_with_options(pool, RunOptions::default())
+    }
+
+    /// [`TaskGraph::try_run`] with explicit [`RunOptions`].
+    pub fn try_run_with_options(
+        &mut self,
+        pool: &ThreadPool,
+        options: RunOptions,
+    ) -> Result<(), GraphError> {
+        self.validate()?;
+        try_run_graph(self, pool, options)
     }
 
     /// Launches the graph on `pool` **without blocking**, returning a

@@ -42,6 +42,45 @@
 //! a single-shard pool all of this degenerates to the pre-PR 5
 //! single-injector path.
 //!
+//! # Run-lifecycle robustness (PR 6)
+//!
+//! A launched run can now be stopped, timed out, and survive a
+//! panicking node, and the pool can bound how many runs it accepts:
+//!
+//! * **Cooperative cancellation** — [`RunHandle::cancel`] (one run) and
+//!   [`CancelToken`] via [`RunOptions::cancel_token`] (a whole fleet)
+//!   set a per-run abort cause that every worker checks at the
+//!   node-dispatch boundary, *before* running the node's closure. A
+//!   closure that already started is never preempted; every node not
+//!   yet started is **skipped** — its task still flows through the
+//!   successor pending-counter decrements and the `remaining` count,
+//!   so the run drains to the normal quiescent completion (`finish`
+//!   fires exactly once, every waiter kind wakes, `wait_idle`
+//!   balances) and the generation pair stays exact. The result
+//!   surfaces as [`GraphError::Cancelled`] from every wait surface
+//!   (`run`, `wait`, `try_wait`, `Future::poll`).
+//! * **Deadlines** — [`RunOptions::deadline`] arms the pool's
+//!   monotonic timer (one lazily-spawned thread over a min-heap —
+//!   `pool/timer.rs`), which promotes the run's abort cause to
+//!   *deadline* when it fires; the same skip-and-cascade path then
+//!   drains the run, surfacing [`GraphError::DeadlineExceeded`]. The
+//!   timer also backs [`RunHandle::wait_timeout`].
+//! * **Panic quarantine** — a panicking node records the first payload
+//!   and **aborts the run**: the remaining nodes are skipped exactly
+//!   like a cancellation and the run reports
+//!   [`GraphError::NodePanicked`] (node id, optional name, rendered
+//!   payload). The slot un-poisons on the next launch (payload and
+//!   cause are cleared in the quiescent window), and the pool's
+//!   workers revive themselves should a panic ever escape the node
+//!   containment, so the pool never silently shrinks (see
+//!   `pool/thread_pool.rs`).
+//! * **Admission control** — `PoolConfig::max_inflight_runs` /
+//!   `max_queued_tasks` bound the pool's graph-run intake:
+//!   [`TaskGraph::try_run`] fails fast with
+//!   [`GraphError::Overloaded`], blocking launches park on a budget
+//!   eventcount, and Low-class runs are shed first (never blocked) so
+//!   background work yields to the tiers above it under overload.
+//!
 //! # Re-run hot path (PR 2)
 //!
 //! The paper's §4.2 benchmarks re-run the same `tasks` collection over
@@ -164,13 +203,47 @@ use std::ptr;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::task::{Context, Poll, Waker};
+use std::time::{Duration, Instant};
 
 use super::builder::{GraphError, Node, TaskGraph, Topology};
 use super::schedule::{lane_compose, RunPriority, Schedule};
 use crate::pool::injector::DEFAULT_LANE;
 use crate::pool::task::RawTask;
 use crate::pool::thread_pool::PoolInner;
+use crate::pool::timer;
 use crate::pool::ThreadPool;
+
+/// Fleet-wide cooperative cancellation token (PR 6).
+///
+/// Attach a clone to any number of runs via
+/// [`RunOptions::cancel_token`]; calling [`CancelToken::cancel`]
+/// aborts every run carrying the token at its next node-dispatch
+/// boundary (a closure already running is never preempted). The token
+/// is **sticky**: once cancelled it stays cancelled, so a later run
+/// launched with the same token aborts at its first dispatch — build a
+/// fresh token per wave if that is not what you want. Cloning is a
+/// refcount bump; sealed re-runs with a token stay allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Requests cancellation of every run carrying a clone of this
+    /// token. Idempotent; returns immediately (the runs drain
+    /// cooperatively — wait on their handles to observe quiescence).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`CancelToken::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
 
 /// Options controlling one graph run. The default is every
 /// optimization ON (the paper's §2.2 behaviour plus the PR 2 re-run
@@ -232,6 +305,19 @@ pub struct RunOptions {
     /// Record per-node execution spans into this tracer
     /// (see [`super::Tracer`]).
     pub tracer: Option<Arc<super::Tracer>>,
+    /// Fleet-wide cancel token (PR 6): checked at every node-dispatch
+    /// boundary of the run and promoted into the run's abort cause on
+    /// first observation — see [`CancelToken`]. `None` (default)
+    /// leaves per-run [`RunHandle::cancel`] as the only cancel path.
+    pub cancel: Option<CancelToken>,
+    /// Deadline for the whole run (PR 6), measured from launch. When
+    /// it expires before completion the run aborts exactly like a
+    /// cancellation (remaining nodes skipped, quiescence exact) and
+    /// reports [`GraphError::DeadlineExceeded`]. Enforced by the
+    /// lazily-spawned monotonic timer thread (`pool/timer.rs`);
+    /// arming it allocates one timer entry, so deadline runs are
+    /// excluded from the zero-alloc re-run guarantee.
+    pub deadline: Option<Duration>,
 }
 
 impl RunOptions {
@@ -298,6 +384,20 @@ impl RunOptions {
         self.tracer = Some(tracer);
         self
     }
+
+    /// Attaches a fleet-wide [`CancelToken`] (PR 6) — see
+    /// [`RunOptions::cancel`].
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Sets a deadline for the run (PR 6) — see
+    /// [`RunOptions::deadline`].
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// The per-run view of the graph: raw pointers into the
@@ -333,6 +433,15 @@ const WAKE_EC: u8 = 0; // sync caller-assist run: the workers' eventcount
 const WAKE_RUN_EC: u8 = 1; // async handle: the dedicated run eventcount
 const WAKE_CONDVAR: u8 = 2; // sync condvar run: no eventcount at all
 
+/// Abort causes of a run (PR 6), stored in [`RunState::cancelled`].
+/// First cause wins (CAS from `CAUSE_NONE`); reset only in the
+/// quiescent launch window. The cause drives the dispatch-boundary
+/// skip in [`execute_node`] and the typed error in [`take_result`].
+const CAUSE_NONE: u8 = 0; // run proceeds normally
+const CAUSE_CANCEL: u8 = 1; // RunHandle::cancel or a fleet CancelToken
+const CAUSE_DEADLINE: u8 = 2; // the run's deadline expired (timer thread)
+const CAUSE_PANIC: u8 = 3; // a node panicked; payload is in `panic`
+
 /// Shared state of one in-flight graph run, reusable across runs.
 pub(crate) struct RunState {
     /// See [`RunHeader`]. Written only between runs (the quiescent
@@ -356,6 +465,14 @@ pub(crate) struct RunState {
     /// Cleared at launch so an unharvested panic from a dropped handle
     /// cannot leak into the next run's result.
     panic: Mutex<Option<(usize, String)>>,
+    /// Abort cause of the current run (PR 6, `CAUSE_*`): first cause
+    /// wins; every dispatch boundary checks it and skips the node when
+    /// set. Reset in the quiescent launch window (the un-poison step).
+    cancelled: AtomicU8,
+    /// True while this run holds one of the pool's admission slots
+    /// (PR 6, `PoolConfig::max_inflight_runs`); the completion path
+    /// releases it exactly once (`swap`).
+    admitted: AtomicBool,
     /// Threads blocked in [`RunState::wait_sync`] (condvar-mode waiters
     /// and the forgotten-handle quiesce backstop); gates the
     /// completion-side condvar notify to one load when unused.
@@ -400,6 +517,8 @@ impl RunState {
             completed: AtomicU64::new(0),
             wake_mode: AtomicU8::new(WAKE_EC),
             panic: Mutex::new(None),
+            cancelled: AtomicU8::new(CAUSE_NONE),
+            admitted: AtomicBool::new(false),
             sync_waiters: AtomicUsize::new(0),
             done_mutex: Mutex::new(()),
             done_cv: Condvar::new(),
@@ -413,6 +532,19 @@ impl RunState {
     #[inline]
     fn is_complete(&self, gen: u64) -> bool {
         self.completed.load(Ordering::SeqCst) >= gen
+    }
+
+    /// Requests an abort of the current run with `cause` (PR 6). The
+    /// first cause wins — a deadline firing after a user cancel (or a
+    /// panic after either) leaves the original cause in place, and the
+    /// panic payload is reported with priority by [`take_result`]
+    /// regardless of which cause won the CAS. Returns whether this
+    /// call set the cause.
+    fn abort(&self, cause: u8) -> bool {
+        debug_assert_ne!(cause, CAUSE_NONE);
+        self.cancelled
+            .compare_exchange(CAUSE_NONE, cause, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
     }
 
     /// Completion path: records run `generation` as done and wakes
@@ -459,6 +591,13 @@ impl RunState {
             // predicate check and cv.wait.
             drop(self.done_mutex.lock().unwrap());
             self.done_cv.notify_all();
+        }
+        // PR 6: return this run's admission slot (if it took one) and
+        // wake launchers parked on the budget eventcount. The `swap`
+        // makes the release exactly-once even if a later quiesce path
+        // revisits this state.
+        if self.admitted.swap(false, Ordering::SeqCst) {
+            pool.release_run_slot();
         }
     }
 
@@ -665,34 +804,67 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     loop {
         let node = header.node(current);
 
+        // 0. Dispatch-boundary cancellation check (PR 6): a run whose
+        //    abort cause is set — by `RunHandle::cancel`, a fleet
+        //    token, the deadline timer, or an earlier node's panic —
+        //    **skips** every node it has not yet started. The skip
+        //    still flows through the successor decrements and the
+        //    `remaining` count below, so the run drains to the normal
+        //    quiescent completion and the generation counters stay
+        //    exact. A closure that already started is never preempted
+        //    (cooperative model: this is the only check point).
+        let aborted = state.cancelled.load(Ordering::SeqCst) != CAUSE_NONE
+            || match &header.options.cancel {
+                // Promote the fleet token into the per-run cause so
+                // the rest of the cascade (and the final result) need
+                // only the run-local atomic.
+                Some(token) if token.is_cancelled() => {
+                    state.abort(CAUSE_CANCEL);
+                    true
+                }
+                _ => false,
+            };
+
         // 1. Execute the wrapped function (paper: "it first executes
         //    the wrapped function"), containing panics so counters
-        //    still advance and the run cannot deadlock.
-        let span = header.options.tracer.as_ref().map(|t| {
-            t.span_ranked(
-                worker_index,
-                match &node.name {
-                    Some(n) => n.clone(),
-                    None => format!("n{current}"),
-                },
-                sched.map(|s| s.ranks[current]).unwrap_or(0),
-                header.options.priority,
-            )
-        });
-        // SAFETY: exclusive access per the module-level protocol.
-        let func = unsafe { &mut *node.func.get() };
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(func)) {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "<non-string panic payload>".to_string());
-            let mut p = state.panic.lock().unwrap();
-            if p.is_none() {
-                *p = Some((current, msg));
+        //    still advance and the run cannot deadlock. A panic
+        //    records its first payload and aborts the run (PR 6):
+        //    remaining nodes are skipped exactly like a cancellation
+        //    and the run reports `GraphError::NodePanicked`.
+        if !aborted {
+            let span = header.options.tracer.as_ref().map(|t| {
+                t.span_ranked(
+                    worker_index,
+                    match &node.name {
+                        Some(n) => n.clone(),
+                        None => format!("n{current}"),
+                    },
+                    sched.map(|s| s.ranks[current]).unwrap_or(0),
+                    header.options.priority,
+                )
+            });
+            // SAFETY: exclusive access per the module-level protocol.
+            let func = unsafe { &mut *node.func.get() };
+            let outcome = if chaos_should_panic(&state) {
+                catch_unwind(|| panic!("chaos: injected node panic"))
+            } else {
+                catch_unwind(AssertUnwindSafe(func))
+            };
+            if let Err(payload) = outcome {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic payload>".to_string());
+                let mut p = state.panic.lock().unwrap();
+                if p.is_none() {
+                    *p = Some((current, msg));
+                }
+                drop(p);
+                state.abort(CAUSE_PANIC);
             }
+            drop(span); // record the span before scheduling successors
         }
-        drop(span); // record the span before scheduling successors
 
         // 2. Decrement each successor's uncompleted-predecessor count.
         //    With critical-path dispatch (PR 4, default on a sealed
@@ -772,6 +944,79 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
     }
 }
 
+/// Chaos fault injection (PR 6, `--features chaos`): decides whether
+/// the node about to execute should panic instead, and — as a side
+/// effect — may inject a forced cancellation of the run. Rates come
+/// from `CHAOS_PANIC_RATE` / `CHAOS_CANCEL_RATE` (events per 1000
+/// dispatches; default 0 = inert even with the feature compiled in),
+/// stream seeded by `CHAOS_SEED`.
+#[cfg(feature = "chaos")]
+fn chaos_should_panic(state: &RunState) -> bool {
+    let cfg = chaos::config();
+    if chaos::roll(cfg.cancel_per_mille) {
+        state.abort(CAUSE_CANCEL);
+    }
+    chaos::roll(cfg.panic_per_mille)
+}
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+fn chaos_should_panic(_state: &RunState) -> bool {
+    false
+}
+
+/// Runtime-gated fault injection for the CI chaos job (PR 6). Only
+/// compiled under `--features chaos`; with the env rates unset the
+/// hooks are inert, so the full suite still passes under the feature.
+#[cfg(feature = "chaos")]
+mod chaos {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::OnceLock;
+
+    pub(super) struct Config {
+        pub(super) panic_per_mille: u32,
+        pub(super) cancel_per_mille: u32,
+    }
+
+    static CONFIG: OnceLock<Config> = OnceLock::new();
+    static RNG: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+    pub(super) fn config() -> &'static Config {
+        CONFIG.get_or_init(|| {
+            let rate = |key: &str| {
+                std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+            };
+            if let Some(seed) =
+                std::env::var("CHAOS_SEED").ok().and_then(|v| v.parse::<u64>().ok())
+            {
+                // Odd-ize so a zero seed still produces a live stream.
+                RNG.store(seed.wrapping_mul(2).wrapping_add(1), Ordering::Relaxed);
+            }
+            Config {
+                panic_per_mille: rate("CHAOS_PANIC_RATE"),
+                cancel_per_mille: rate("CHAOS_CANCEL_RATE"),
+            }
+        })
+    }
+
+    /// One splitmix64 step on a process-shared counter per roll;
+    /// concurrent rolls just interleave the stream, which is fine for
+    /// fault injection.
+    pub(super) fn roll(per_mille: u32) -> bool {
+        if per_mille == 0 {
+            return false;
+        }
+        let x = RNG.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+        let mut z = x;
+        z ^= z >> 30;
+        z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^= z >> 27;
+        z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % 1000) < per_mille as u64
+    }
+}
+
 /// The launch half shared by [`run_graph`] and [`run_graph_async`]:
 /// guards, quiesce backstop, topology + counter re-arm, header
 /// rewrite, and the source-burst submission. Returns the armed state
@@ -781,6 +1026,7 @@ fn launch_run(
     pool: &ThreadPool,
     options: RunOptions,
     wake_mode: u8,
+    admitted: bool,
 ) -> Result<(Arc<RunState>, u64), GraphError> {
     let n = graph.nodes.len();
     debug_assert!(n > 0, "empty graphs are handled by the callers");
@@ -833,8 +1079,19 @@ fn launch_run(
     let lanes_on = !options.no_priority_lanes;
     let class = options.priority;
     let shard = options.shard;
-    // Drop any panic a dropped-without-wait handle left unharvested.
+    let deadline = options.deadline;
+    // Un-poison the slot (PR 6): drop any panic a dropped-without-wait
+    // handle left unharvested and clear the previous run's abort
+    // cause — both writes are in the quiescent window, so no task of
+    // any run can observe them mid-flight. (A fleet [`CancelToken`] is
+    // sticky by design: if it is already cancelled, this run's first
+    // dispatch re-promotes it and the run aborts immediately.)
     state.panic.lock().unwrap().take();
+    state.cancelled.store(CAUSE_NONE, Ordering::SeqCst);
+    // Whether this run holds one of the pool's admission slots (PR 6);
+    // `finish` releases it exactly once. Stored before the sources are
+    // submitted so completion can never miss the release.
+    state.admitted.store(admitted, Ordering::SeqCst);
     let generation = state.generation.load(Ordering::SeqCst) + 1;
     let topo_ptr: *const Topology = match (use_topo, graph.topology.as_ref()) {
         (true, Some(t)) => t.as_ref() as *const Topology,
@@ -860,6 +1117,29 @@ fn launch_run(
     *state.pool.lock().unwrap() = Arc::downgrade(pool.inner());
     // The submission below publishes this store to workers.
     state.remaining.store(n, Ordering::Relaxed);
+
+    // Arm the deadline (PR 6) *after* the generation store — the timer
+    // fires only while the generation still matches and the run is
+    // incomplete, so a stale entry for a finished (or re-armed) run is
+    // a no-op — and *before* the sources are submitted, so even a
+    // zero-length deadline is honoured at the very first dispatch
+    // boundary. The expiry itself just promotes the abort cause; the
+    // skip cascade drains the run through the normal completion path.
+    if let Some(after) = deadline {
+        let weak = Arc::downgrade(&state);
+        timer::schedule_at(
+            Instant::now() + after,
+            Box::new(move || {
+                if let Some(state) = weak.upgrade() {
+                    if state.generation.load(Ordering::SeqCst) == generation
+                        && !state.is_complete(generation)
+                    {
+                        state.abort(CAUSE_DEADLINE);
+                    }
+                }
+            }),
+        );
+    }
 
     // (4) Submit every source (zero predecessors) as one burst — a
     //     graph with S independent sources wakes the pool once, not S
@@ -928,32 +1208,86 @@ fn reject_run_from_worker(pool: &ThreadPool) -> Result<(), GraphError> {
     Ok(())
 }
 
-/// Takes the run's recorded panic (if any) and renders it as the run
-/// result. Called once per run, after completion.
+/// Renders the completed run's outcome (called once per run, after
+/// completion): a recorded panic wins — the payload is the harder
+/// fact, whichever cause won the first-writer CAS — then the abort
+/// cause, else success. The cause itself is reset by the next launch.
 fn take_result(graph: &TaskGraph, state: &RunState) -> Result<(), GraphError> {
-    match state.panic.lock().unwrap().take() {
-        None => Ok(()),
-        Some((node, message)) => Err(GraphError::TaskPanicked {
+    if let Some((node, payload)) = state.panic.lock().unwrap().take() {
+        return Err(GraphError::NodePanicked {
             node,
             name: graph.nodes[node].name.clone(),
-            message,
-        }),
+            payload,
+        });
+    }
+    match state.cancelled.load(Ordering::SeqCst) {
+        CAUSE_DEADLINE => Err(GraphError::DeadlineExceeded),
+        CAUSE_CANCEL => Err(GraphError::Cancelled),
+        _ => Ok(()),
     }
 }
 
-/// Runs `graph` on `pool`, returning once all nodes have executed.
+/// Admission mode of one launch (PR 6): fail fast
+/// ([`TaskGraph::try_run`]) or park on the pool's budget eventcount
+/// (plain `run` / `run_async`).
+#[derive(Clone, Copy, PartialEq)]
+enum Admission {
+    Block,
+    TryNow,
+}
+
+/// The PR 6 admission gate, run after the worker-thread guard and the
+/// empty-graph fast path. Returns whether the run took a budget slot
+/// (`false` when the pool's budget is unlimited — the default — so
+/// existing behaviour is untouched). Low-class runs are shed first:
+/// they see a reduced slot limit and never block, even in
+/// [`Admission::Block`] mode.
+fn admit_run(
+    pool: &ThreadPool,
+    n_tasks: usize,
+    class: RunPriority,
+    mode: Admission,
+) -> Result<bool, GraphError> {
+    let low = matches!(class, RunPriority::Low);
+    let block = mode == Admission::Block && !low;
+    pool.inner().admit_run(n_tasks, low, block).map_err(|()| GraphError::Overloaded)
+}
+
+/// Runs `graph` on `pool`, returning once all nodes have executed (or
+/// the run aborted — cancel, deadline, panic — and drained).
 pub(crate) fn run_graph(
     graph: &mut TaskGraph,
     pool: &ThreadPool,
     options: RunOptions,
 ) -> Result<(), GraphError> {
+    run_graph_admitted(graph, pool, options, Admission::Block)
+}
+
+/// Fail-fast variant behind [`TaskGraph::try_run`] (PR 6): identical
+/// to [`run_graph`] except an exhausted admission budget returns
+/// [`GraphError::Overloaded`] immediately instead of parking.
+pub(crate) fn try_run_graph(
+    graph: &mut TaskGraph,
+    pool: &ThreadPool,
+    options: RunOptions,
+) -> Result<(), GraphError> {
+    run_graph_admitted(graph, pool, options, Admission::TryNow)
+}
+
+fn run_graph_admitted(
+    graph: &mut TaskGraph,
+    pool: &ThreadPool,
+    options: RunOptions,
+    admission: Admission,
+) -> Result<(), GraphError> {
     reject_run_from_worker(pool)?;
     if graph.nodes.is_empty() {
         return Ok(());
     }
+    let admitted = admit_run(pool, graph.nodes.len(), options.priority, admission)?;
     let caller_assist = !options.no_caller_assist;
     let wake_mode = if caller_assist { WAKE_EC } else { WAKE_CONDVAR };
-    let (state, generation) = launch_run(graph, pool, options, wake_mode)?;
+    let (state, generation) = launch_run(graph, pool, options, wake_mode, admitted)?;
 
     // Wait for the run to drain. Either way this pins `graph.nodes`
     // (and the topology) for the whole run — the soundness linchpin of
@@ -968,8 +1302,12 @@ pub(crate) fn run_graph(
     take_result(graph, &state)
 }
 
-/// Launches `graph` on `pool` without blocking, returning a
-/// [`RunHandle`] for the completion half.
+/// Launches `graph` on `pool` without blocking on completion,
+/// returning a [`RunHandle`] for that half. The launch itself is
+/// subject to admission control (PR 6): with a budget configured and
+/// exhausted, a Normal/High launch parks on the budget eventcount
+/// until a slot frees and a Low launch is shed with
+/// [`GraphError::Overloaded`].
 pub(crate) fn run_graph_async<'g>(
     graph: &'g mut TaskGraph,
     pool: &ThreadPool,
@@ -994,7 +1332,8 @@ pub(crate) fn run_graph_async<'g>(
             finished: true,
         });
     }
-    let (state, generation) = launch_run(graph, pool, options, WAKE_RUN_EC)?;
+    let admitted = admit_run(pool, graph.nodes.len(), options.priority, Admission::Block)?;
+    let (state, generation) = launch_run(graph, pool, options, WAKE_RUN_EC, admitted)?;
     Ok(RunHandle {
         graph,
         pool: pool.inner().clone(),
@@ -1053,6 +1392,60 @@ impl RunHandle<'_> {
     /// and the stale-handle tests.
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Requests cooperative cancellation of this handle's run (PR 6):
+    /// every node not yet started is skipped, the run drains to the
+    /// normal quiescent completion, and the wait surfaces report
+    /// [`GraphError::Cancelled`]. Returns immediately — wait on the
+    /// handle to observe the drain. Idempotent, and a no-op once the
+    /// run has completed (cancelling a finished run does not poison
+    /// the result or any later run). A cancel racing the final node's
+    /// completion may legitimately land either way.
+    pub fn cancel(&self) {
+        if self.finished || self.state.is_complete(self.generation) {
+            return;
+        }
+        self.state.abort(CAUSE_CANCEL);
+    }
+
+    /// Bounded wait (PR 6): blocks until the run completes or
+    /// `timeout` elapses. Returns `Some(result)` on completion — the
+    /// handle is then fused like after [`RunHandle::try_wait`] — or
+    /// `None` on timeout, in which case the run keeps going and the
+    /// handle stays live (time out, then [`RunHandle::cancel`], then
+    /// [`RunHandle::wait`] is the graceful-shutdown idiom). Backed by
+    /// the same monotonic timer thread as [`RunOptions::deadline`]:
+    /// the timer pokes the pool's run eventcount at the deadline, so
+    /// the waiter parks instead of spin-polling. From inside a task of
+    /// the same pool this returns `Some(Err(RunFromWorker))`, exactly
+    /// like the other wait surfaces.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<(), GraphError>> {
+        if self.pool.on_worker_thread() || self.pool.on_assisting_thread() {
+            return Some(Err(GraphError::RunFromWorker));
+        }
+        if self.finished {
+            return Some(Ok(()));
+        }
+        if !self.state.is_complete(self.generation) {
+            let deadline = Instant::now() + timeout;
+            let weak = Arc::downgrade(&self.pool);
+            timer::schedule_at(
+                deadline,
+                Box::new(move || {
+                    if let Some(pool) = weak.upgrade() {
+                        pool.notify_run_waiters();
+                    }
+                }),
+            );
+            let (state, generation) = (&self.state, self.generation);
+            self.pool
+                .wait_run(|| state.is_complete(generation) || Instant::now() >= deadline);
+            if !self.state.is_complete(self.generation) {
+                return None;
+            }
+        }
+        Some(self.harvest())
     }
 
     /// Non-blocking completion check: `Some(result)` once the run has
@@ -1532,7 +1925,7 @@ mod tests {
     }
 
     #[test]
-    fn panicking_node_reported_and_graph_completes() {
+    fn panicking_node_aborts_run_and_reports() {
         let after = Arc::new(AtomicUsize::new(0));
         let mut g = TaskGraph::new();
         let bad = g.add_named("bad", || panic!("kaboom"));
@@ -1545,21 +1938,60 @@ mod tests {
         g.succeed(next, &[bad]);
         let pool = ThreadPool::new(2);
         match g.run(&pool) {
-            Err(GraphError::TaskPanicked { node, name, message }) => {
+            Err(GraphError::NodePanicked { node, name, payload }) => {
                 assert_eq!(node, 0);
                 assert_eq!(name.as_deref(), Some("bad"));
-                assert!(message.contains("kaboom"));
+                assert!(payload.contains("kaboom"));
             }
             other => panic!("expected panic error, got {other:?}"),
         }
-        // Successors of the panicked node still ran (documented policy).
-        assert_eq!(after.load(Relaxed), 1);
+        // PR 6 abort semantics: the panicked node's successor is
+        // skipped, the run still drains to quiescence, and every
+        // worker is alive afterwards.
+        assert_eq!(after.load(Relaxed), 0);
+        pool.wait_idle();
+        assert_eq!(pool.metrics().alive_workers, 2);
         // A rerun of the same (reused) state reports the fresh panic,
-        // not a stale one.
+        // not a stale one — and the abort cause does not leak into the
+        // rerun either (un-poisoned at launch).
         match g.run(&pool) {
-            Err(GraphError::TaskPanicked { node, .. }) => assert_eq!(node, 0),
+            Err(GraphError::NodePanicked { node, .. }) => assert_eq!(node, 0),
             other => panic!("expected panic error on rerun, got {other:?}"),
         }
+        assert_eq!(after.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn cancel_before_first_dispatch_skips_all_closures() {
+        // A pre-cancelled fleet token aborts the run at the very first
+        // dispatch boundary: zero closures execute, the run drains,
+        // and the same graph runs clean immediately afterwards.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let mut prev: Option<crate::graph::NodeId> = None;
+        for _ in 0..32 {
+            let ran = ran.clone();
+            let id = g.add(move || {
+                ran.fetch_add(1, Relaxed);
+            });
+            if let Some(p) = prev {
+                g.succeed(id, &[p]);
+            }
+            prev = Some(id);
+        }
+        let pool = ThreadPool::new(2);
+        let token = CancelToken::new();
+        token.cancel();
+        let options = RunOptions::new().cancel_token(token.clone());
+        assert!(matches!(
+            g.run_with_options(&pool, options),
+            Err(GraphError::Cancelled)
+        ));
+        assert_eq!(ran.load(Relaxed), 0);
+        pool.wait_idle();
+        // Fresh token (the old one is sticky): the rerun is clean.
+        g.run_with_options(&pool, RunOptions::new().cancel_token(CancelToken::new())).unwrap();
+        assert_eq!(ran.load(Relaxed), 32);
     }
 
     #[test]

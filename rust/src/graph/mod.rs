@@ -37,6 +37,15 @@
 //! run, so one external thread can keep many graphs in flight and
 //! observe completion by polling, blocking, or `.await`ing the
 //! handle. Sealed re-runs through a handle stay zero-allocation.
+//!
+//! Runs have a **lifecycle** (PR 6): cooperative cancellation
+//! ([`RunHandle::cancel`], fleet-wide [`CancelToken`]s), deadlines
+//! ([`RunOptions::deadline`]), typed panic quarantine
+//! ([`GraphError::NodePanicked`] aborts the run, the graph un-poisons
+//! on the next `run()`), and admission control with backpressure
+//! (`PoolConfig::max_inflight_runs` / `max_queued_tasks`,
+//! [`TaskGraph::try_run`] → [`GraphError::Overloaded`]). See the
+//! executor module docs for the full failure model.
 
 mod builder;
 mod dataflow;
@@ -46,7 +55,7 @@ mod trace;
 
 pub use builder::{GraphError, NodeId, TaskGraph};
 pub use dataflow::{Dataflow, DataflowError, Input, Output};
-pub use executor::{wait_all, wait_any, RunHandle, RunOptions};
+pub use executor::{wait_all, wait_any, CancelToken, RunHandle, RunOptions};
 pub use schedule::RunPriority;
 pub use trace::{ShardDepthSample, SpanGuard, TraceEvent, Tracer};
 

@@ -183,6 +183,17 @@ pub struct PoolSnapshot {
     pub workers: Vec<WorkerSnapshot>,
     /// Per-shard queue depths (PR 5); a flat pool reports one shard.
     pub shards: Vec<ShardSnapshot>,
+    /// Workers currently inside their run loop (PR 6). Equal to the
+    /// configured thread count for a healthy pool — the worker-revival
+    /// path exists precisely so this never silently drops.
+    pub alive_workers: usize,
+    /// Times a worker caught an unwind that escaped task containment
+    /// and revived in place (PR 6). Zero in a correct build; nonzero
+    /// means panic containment regressed somewhere.
+    pub worker_revivals: u64,
+    /// Low-class runs rejected by admission control (PR 6's shed-first
+    /// overload policy).
+    pub shed_runs: u64,
 }
 
 impl PoolSnapshot {
@@ -245,6 +256,11 @@ impl std::fmt::Display for PoolSnapshot {
             t.steal_batch_tasks, t.injector_pops, t.parks, t.inline_continuations,
             t.remote_steals, t.remote_injector_pops
         )?;
+        writeln!(
+            f,
+            "  lifecycle: alive_workers={} worker_revivals={} shed_runs={}",
+            self.alive_workers, self.worker_revivals, self.shed_runs
+        )?;
         for (i, w) in self.workers.iter().enumerate() {
             writeln!(
                 f,
@@ -300,7 +316,7 @@ mod tests {
             injector_pops: 2,
             ..Default::default()
         };
-        let p = PoolSnapshot { workers: vec![a, b], shards: Vec::new() };
+        let p = PoolSnapshot { workers: vec![a, b], ..PoolSnapshot::default() };
         assert_eq!(p.total().executed(), 13);
         assert!((p.steal_ratio() - 5.0 / 13.0).abs() < 1e-12);
     }
@@ -318,15 +334,15 @@ mod tests {
             ..ShardSnapshot::default()
         };
         let p = PoolSnapshot {
-            workers: Vec::new(),
             shards: vec![mk(6, 0), mk(1, 1), mk(0, 0), mk(0, 0)],
+            ..PoolSnapshot::default()
         };
         // depths 6,2,0,0 — mean 2, max 6.
         assert!((p.shard_imbalance() - 3.0).abs() < 1e-12);
         // Single shard / empty queues report no imbalance.
-        let flat = PoolSnapshot { workers: Vec::new(), shards: vec![mk(5, 5)] };
+        let flat = PoolSnapshot { shards: vec![mk(5, 5)], ..PoolSnapshot::default() };
         assert_eq!(flat.shard_imbalance(), 0.0);
-        let idle = PoolSnapshot { workers: Vec::new(), shards: vec![mk(0, 0), mk(0, 0)] };
+        let idle = PoolSnapshot { shards: vec![mk(0, 0), mk(0, 0)], ..PoolSnapshot::default() };
         assert_eq!(idle.shard_imbalance(), 0.0);
     }
 

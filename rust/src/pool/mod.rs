@@ -58,6 +58,7 @@ pub mod metrics;
 pub mod scope;
 pub(crate) mod task;
 pub mod thread_pool;
+pub(crate) mod timer;
 pub mod topology;
 
 pub use deque::{deque, Steal, Stealer, Worker, MAX_STEAL_BATCH};

@@ -83,6 +83,33 @@
 //! injector, one eventcount, a flat victim sweep, unbounded parks.
 //! `ABL-8` in `benches/ablations.rs` measures flat vs. sharded under
 //! a many-producer storm.
+//!
+//! # Run-lifecycle robustness (PR 6)
+//!
+//! Two pool-side additions back the graph layer's lifecycle work:
+//!
+//! * **Admission control** — [`PoolConfig::max_inflight_runs`] and
+//!   [`PoolConfig::max_queued_tasks`] bound how many graph runs may be
+//!   in flight and how much queued work a new run may pile on. The
+//!   graph executor calls [`PoolInner::admit_run`] before launching:
+//!   `try_run` fails fast with `GraphError::Overloaded`, blocking
+//!   `run` parks on a dedicated budget eventcount until a slot frees,
+//!   and Low-class runs (PR 4) are shed first — they see a reduced
+//!   effective limit and never block. Both knobs default to `0`
+//!   (unlimited), in which case admission is a single branch and the
+//!   pool behaves exactly as before PR 6.
+//! * **Panic quarantine & worker revival** — closure panics are
+//!   contained in the task vtable and graph-node panics inside
+//!   `graph::execute_node`, so nothing unwinds into the worker loop by
+//!   construction. Defense-in-depth for the day that invariant breaks:
+//!   [`PoolInner::run_job`] completes its counter bump through a drop
+//!   guard (an escaped unwind can no longer unbalance the quiescence
+//!   scan and hang `wait_idle`), and the worker loop catches any
+//!   escaped unwind, records it (`PoolSnapshot::worker_revivals`), and
+//!   **revives in place** — deque and TLS registration live in the
+//!   same frame, so the worker re-enters its sweep with identity
+//!   intact and the pool never silently shrinks.
+//!   `PoolSnapshot::alive_workers` reports the live count.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -152,6 +179,20 @@ pub struct PoolConfig {
     /// `>= num_threads` forces a single shard: the flat, pre-PR 5
     /// pool (the ABL-8 comparison arm).
     pub shard_size: usize,
+    /// Maximum graph runs in flight at once (PR 6). `0` (the default)
+    /// means unlimited — admission is then a single branch. When set,
+    /// `try_run` beyond the limit returns `GraphError::Overloaded`,
+    /// blocking `run` waits on the budget eventcount, and Low-class
+    /// runs see a reduced effective limit (shed first, never block).
+    pub max_inflight_runs: usize,
+    /// Maximum tasks that may be queued (pending estimate) for a new
+    /// run to be admitted (PR 6). `0` (the default) means unlimited.
+    /// Checked together with `max_inflight_runs` at admission time;
+    /// the estimate is the same relaxed snapshot as
+    /// [`ThreadPool::pending`], which is exactly the right tool for a
+    /// backpressure heuristic (precise counting would put a shared RMW
+    /// back on the submit path sharding just removed).
+    pub max_queued_tasks: usize,
 }
 
 impl Default for PoolConfig {
@@ -165,6 +206,8 @@ impl Default for PoolConfig {
             steal_batch: true,
             batched_wakeups: true,
             shard_size: 0,
+            max_inflight_runs: 0,
+            max_queued_tasks: 0,
         }
     }
 }
@@ -318,6 +361,30 @@ pub(crate) struct PoolInner {
     inline_tasks: bool,
     steal_batch: bool,
     batched_wakeups: bool,
+    /// Admission limits (PR 6); 0 = unlimited. See [`PoolConfig`].
+    max_inflight_runs: usize,
+    max_queued_tasks: usize,
+    /// Graph runs currently holding an admission slot. Only counted
+    /// when `max_inflight_runs > 0` — the unlimited default never
+    /// touches this cell.
+    inflight_runs: AtomicUsize,
+    /// Eventcount blocking `run` callers park on when the budget is
+    /// exhausted; every released slot broadcasts here. Separate from
+    /// the shard eventcounts for the same reason `run_ec` is: budget
+    /// waiters take no work, so a work-arrival wakeup must never land
+    /// on one.
+    budget_ec: EventCount,
+    /// Low-class runs rejected by admission (shed-first policy).
+    shed_runs: AtomicU64,
+    /// Workers currently inside `worker_loop` (PR 6): incremented at
+    /// entry, decremented at exit. `metrics()` reports it so tests can
+    /// assert the pool never silently shrinks after a panic.
+    alive_workers: AtomicUsize,
+    /// Times a worker caught an unwind that escaped task containment
+    /// and revived in place (PR 6). Zero in any correct build — the
+    /// vtable and `execute_node` contain all panics — so a nonzero
+    /// value is a loud signal that containment regressed.
+    worker_revivals: AtomicU64,
 }
 
 /// The work-stealing thread pool (see module docs).
@@ -388,6 +455,13 @@ impl ThreadPool {
             inline_tasks: config.inline_tasks,
             steal_batch: config.steal_batch,
             batched_wakeups: config.batched_wakeups,
+            max_inflight_runs: config.max_inflight_runs,
+            max_queued_tasks: config.max_queued_tasks,
+            inflight_runs: AtomicUsize::new(0),
+            budget_ec: EventCount::new(),
+            shed_runs: AtomicU64::new(0),
+            alive_workers: AtomicUsize::new(0),
+            worker_revivals: AtomicU64::new(0),
         });
         let threads = owners
             .into_iter()
@@ -463,15 +537,7 @@ impl ThreadPool {
     /// synchronization, exact only while the pool is externally
     /// quiescent. Use [`ThreadPool::wait_idle`] to synchronize.
     pub fn pending(&self) -> usize {
-        let mut completed = 0u64;
-        for c in &self.inner.counters {
-            completed += c.completed.load(Ordering::Relaxed);
-        }
-        let mut submitted = 0u64;
-        for c in &self.inner.counters {
-            submitted += c.submitted.load(Ordering::Relaxed);
-        }
-        submitted.saturating_sub(completed) as usize
+        self.inner.pending_estimate()
     }
 
     /// Number of tasks that panicked (panics are contained per-task and
@@ -506,6 +572,9 @@ impl ThreadPool {
         PoolSnapshot {
             workers: inner.metrics.iter().map(|m| m.snapshot()).collect(),
             shards,
+            alive_workers: inner.alive_workers.load(Ordering::SeqCst),
+            worker_revivals: inner.worker_revivals.load(Ordering::Relaxed),
+            shed_runs: inner.shed_runs.load(Ordering::Relaxed),
         }
     }
 
@@ -940,6 +1009,112 @@ impl PoolInner {
         submitted == completed
     }
 
+    /// Relaxed snapshot of jobs submitted but not yet finished — the
+    /// backing of [`ThreadPool::pending`] and the queue-pressure check
+    /// in [`PoolInner::admit_run`]. Exact only while the pool is
+    /// externally quiescent; good enough for a backpressure heuristic.
+    pub(crate) fn pending_estimate(&self) -> usize {
+        let mut completed = 0u64;
+        for c in &self.counters {
+            completed += c.completed.load(Ordering::Relaxed);
+        }
+        let mut submitted = 0u64;
+        for c in &self.counters {
+            submitted += c.submitted.load(Ordering::Relaxed);
+        }
+        submitted.saturating_sub(completed) as usize
+    }
+
+    /// One admission attempt (PR 6): takes an inflight slot if the
+    /// budget allows. Callers that got `true` must pair it with
+    /// exactly one [`PoolInner::release_run_slot`].
+    ///
+    /// Low-class runs see a reduced effective limit — at least one
+    /// slot, but the top quarter of the budget is reserved for
+    /// Normal/High runs, so under saturation Low is shed first
+    /// (PR 4's run classes carried into overload policy).
+    fn try_take_slot(&self, n_tasks: usize, low_class: bool) -> bool {
+        let max = self.max_inflight_runs;
+        if max > 0 {
+            let limit = if low_class { (max - max / 4).max(1) } else { max };
+            let mut cur = self.inflight_runs.load(Ordering::SeqCst);
+            loop {
+                if cur >= limit {
+                    return false;
+                }
+                match self.inflight_runs.compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        } else {
+            // Only the queue knob is set; still hold a slot so release
+            // stays symmetric (and notifies blocked waiters).
+            self.inflight_runs.fetch_add(1, Ordering::SeqCst);
+        }
+        if self.max_queued_tasks > 0
+            && self.pending_estimate().saturating_add(n_tasks) > self.max_queued_tasks
+        {
+            // Give the slot back; a waiter refused while we held it
+            // re-checks on the notify (or its 1 ms backstop).
+            self.inflight_runs.fetch_sub(1, Ordering::SeqCst);
+            self.budget_ec.notify_all();
+            return false;
+        }
+        true
+    }
+
+    /// Admits a graph run of `n_tasks` nodes under the pool's budget
+    /// (PR 6). Returns `Ok(true)` if a slot was taken (the run must
+    /// release it on completion), `Ok(false)` if admission is
+    /// unlimited (both knobs 0 — the zero-cost default), and `Err(())`
+    /// if the pool is overloaded. `block` callers park on the budget
+    /// eventcount until a slot frees instead of failing; the graph
+    /// layer never blocks Low-class runs (shed-first policy).
+    pub(crate) fn admit_run(
+        &self,
+        n_tasks: usize,
+        low_class: bool,
+        block: bool,
+    ) -> Result<bool, ()> {
+        if self.max_inflight_runs == 0 && self.max_queued_tasks == 0 {
+            return Ok(false);
+        }
+        loop {
+            if self.try_take_slot(n_tasks, low_class) {
+                return Ok(true);
+            }
+            if !block {
+                if low_class {
+                    self.shed_runs.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(());
+            }
+            // Park until a slot is released. The 1 ms backstop also
+            // covers queue-pressure admission, where capacity frees
+            // through task completions that do not notify budget_ec.
+            let token = self.budget_ec.prepare_wait();
+            if self.try_take_slot(n_tasks, low_class) {
+                self.budget_ec.cancel_wait(token);
+                return Ok(true);
+            }
+            self.budget_ec.commit_wait_timeout(token, Duration::from_millis(1));
+        }
+    }
+
+    /// Releases an admission slot taken by [`PoolInner::admit_run`]
+    /// (`Ok(true)`) and wakes blocked admission waiters. Called
+    /// exactly once per admitted run, from the run's completion path.
+    pub(crate) fn release_run_slot(&self) {
+        self.inflight_runs.fetch_sub(1, Ordering::SeqCst);
+        self.budget_ec.notify_all();
+    }
+
     /// One random-start batched-steal sweep over the victim deques in
     /// `victims` (a shard's member range), skipping `index`. Shared by
     /// both levels of the two-level sweep. Returns the stolen job, if
@@ -1176,14 +1351,25 @@ impl PoolInner {
     /// the shared helper lane and the completion to the external
     /// counter cell, keeping the two-pass quiescence scan balanced.
     fn run_helper_job(self: &Arc<Self>, job: RawTask) {
-        job.run(self, self.helper_lane());
-        self.counters[self.external_cell()].completed.fetch_add(1, Ordering::Release);
-        // Mirror finish_job's wait_idle nudge (helpers have no own
-        // deque to check).
-        if self.idle_waiters.load(Ordering::Acquire) != 0 && self.injectors_empty() {
-            drop(self.idle_mutex.lock().unwrap());
-            self.idle_cv.notify_all();
+        // Completion counting rides a drop guard (PR 6): if an unwind
+        // ever escapes task containment, the quiescence scan must not
+        // be left unbalanced — an uncounted completion would hang
+        // wait_idle forever.
+        struct HelperFinishGuard<'a>(&'a PoolInner);
+        impl Drop for HelperFinishGuard<'_> {
+            fn drop(&mut self) {
+                let pool = self.0;
+                pool.counters[pool.external_cell()].completed.fetch_add(1, Ordering::Release);
+                // Mirror finish_job's wait_idle nudge (helpers have no
+                // own deque to check).
+                if pool.idle_waiters.load(Ordering::Acquire) != 0 && pool.injectors_empty() {
+                    drop(pool.idle_mutex.lock().unwrap());
+                    pool.idle_cv.notify_all();
+                }
+            }
         }
+        let _finish = HelperFinishGuard(self);
+        job.run(self, self.helper_lane());
     }
 
     /// Caller-assisted execution (graph executor, PR 2): runs pool
@@ -1235,13 +1421,39 @@ impl PoolInner {
     /// vtable (counted via [`PoolInner::note_panic`]); graph nodes
     /// contain panics in `graph::execute_node`. (Executed counts are
     /// derived from pop/steal/injector counters — see metrics.rs.)
+    ///
+    /// The completion bump runs through a drop guard (PR 6): if an
+    /// unwind ever escapes containment, `finish_job` still fires, so
+    /// the quiescence counters stay balanced and the worker-loop
+    /// revival catch resumes a pool whose `wait_idle` still works.
     pub(crate) fn run_job(self: &Arc<Self>, index: usize, job: RawTask) {
+        struct FinishGuard<'a> {
+            pool: &'a PoolInner,
+            index: usize,
+        }
+        impl Drop for FinishGuard<'_> {
+            fn drop(&mut self) {
+                self.pool.finish_job(self.index);
+            }
+        }
+        let _finish = FinishGuard { pool: self, index };
         job.run(self, index);
-        self.finish_job(index);
     }
 }
 
 fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
+    // Live-worker accounting (PR 6): the decrement rides a drop guard
+    // so even an unwind past the revival catch below (impossible by
+    // construction, but this is the robustness layer) keeps the count
+    // honest.
+    inner.alive_workers.fetch_add(1, Ordering::SeqCst);
+    struct AliveGuard<'a>(&'a PoolInner);
+    impl Drop for AliveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.alive_workers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _alive = AliveGuard(&inner);
     LOCAL.with(|l| {
         l.set(Some(LocalWorker {
             pool: Arc::as_ptr(&inner),
@@ -1264,28 +1476,41 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
 
     'outer: loop {
         // Work until dry, spinning through `spin_rounds` extra sweeps.
-        let mut spins = 0;
-        loop {
-            let (job, saw_retry) = inner.find_task(index, &queue, &mut rng);
-            match job {
-                Some(job) => {
-                    inner.run_job(index, job);
-                    spins = 0;
-                    counted_park = false;
-                }
-                None if saw_retry => {
-                    // Someone is mid-operation on a victim deque;
-                    // back off a touch and retry without parking.
-                    std::hint::spin_loop();
-                }
-                None => {
-                    spins += 1;
-                    if spins > inner.spin_rounds {
-                        break;
+        // The sweep runs under catch_unwind (PR 6): task containment
+        // (vtable + execute_node) means no panic reaches this frame by
+        // construction, but if one ever does, the worker records it
+        // and **revives in place** — deque and TLS registration live
+        // in this very frame, so identity survives and the pool never
+        // silently shrinks. run_job's drop guard has already kept the
+        // completion counters balanced on that path.
+        let dry = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut spins = 0;
+            loop {
+                let (job, saw_retry) = inner.find_task(index, &queue, &mut rng);
+                match job {
+                    Some(job) => {
+                        inner.run_job(index, job);
+                        spins = 0;
+                        counted_park = false;
                     }
-                    std::thread::yield_now();
+                    None if saw_retry => {
+                        // Someone is mid-operation on a victim deque;
+                        // back off a touch and retry without parking.
+                        std::hint::spin_loop();
+                    }
+                    None => {
+                        spins += 1;
+                        if spins > inner.spin_rounds {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
                 }
             }
+        }));
+        if dry.is_err() {
+            inner.worker_revivals.fetch_add(1, Ordering::Relaxed);
+            continue 'outer;
         }
 
         // Park protocol: register as sleeper on the home shard's

@@ -1,0 +1,193 @@
+//! Lazily-spawned monotonic timer (PR 6).
+//!
+//! One process-global thread over a min-heap of `(Instant, callback)`
+//! entries backs both run deadlines ([`crate::graph::RunOptions::deadline`])
+//! and bounded handle waits ([`crate::graph::RunHandle::wait_timeout`]).
+//! The thread is spawned on the first [`schedule_at`] call — programs
+//! that never use deadlines pay nothing — and then sleeps on a condvar
+//! until the earliest entry is due (or a new, earlier entry arrives).
+//!
+//! Entries are fire-and-forget closures. The graph layer keeps them
+//! self-defusing: a deadline entry holds a `Weak` to its run state plus
+//! the launch generation, and checks both before promoting the abort
+//! cause, so a stale entry for a completed (or re-armed, or dropped)
+//! run is a no-op. Firing happens **outside** the heap lock — a
+//! callback may itself schedule a new entry.
+//!
+//! Resolution is best-effort wall-clock (`Instant`-monotonic,
+//! condvar-granular): entries never fire early, and under scheduler
+//! noise they fire as soon after their due time as the thread runs.
+//! That is exactly the cooperative-cancellation contract — the abort is
+//! observed at the next node-dispatch boundary anyway.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// A scheduled callback. Ordered so the **earliest** deadline is the
+/// heap maximum (reverse comparison); `seq` breaks ties FIFO.
+struct Entry {
+    at: Instant,
+    seq: u64,
+    fire: Box<dyn FnOnce() + Send>,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Reversed on both keys: BinaryHeap is a max-heap, we want the
+        // earliest (and, among equals, first-scheduled) entry on top.
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct TimerState {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+}
+
+struct Timer {
+    state: Mutex<TimerState>,
+    cv: Condvar,
+}
+
+fn timer() -> &'static Timer {
+    static TIMER: OnceLock<Timer> = OnceLock::new();
+    TIMER.get_or_init(|| {
+        let timer = Timer {
+            state: Mutex::new(TimerState {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+            }),
+            cv: Condvar::new(),
+        };
+        std::thread::Builder::new()
+            .name("graph-timer".to_string())
+            .spawn(timer_loop)
+            .expect("failed to spawn the timer thread");
+        timer
+    })
+}
+
+fn timer_loop() {
+    let timer = timer();
+    let mut guard = timer.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        match guard.heap.peek() {
+            // Due: pop and fire outside the lock so a callback can
+            // re-enter schedule_at without deadlocking.
+            Some(entry) if entry.at <= now => {
+                let entry = guard.heap.pop().unwrap();
+                drop(guard);
+                (entry.fire)();
+                guard = timer.state.lock().unwrap();
+            }
+            // Pending: sleep until the earliest entry is due; a new
+            // earlier entry notifies the condvar and re-enters here.
+            Some(entry) => {
+                let wait = entry.at - now;
+                guard = timer.cv.wait_timeout(guard, wait).unwrap().0;
+            }
+            // Idle: park until something is scheduled. The thread is
+            // global and never exits; an idle timer costs one parked
+            // thread, which the lazy spawn already gated on first use.
+            None => {
+                guard = timer.cv.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// Schedules `fire` to run on the timer thread at (or as soon as
+/// possible after) `at`. Never fires early. Allocates the heap entry;
+/// the deadline/wait-timeout paths are documented as outside the
+/// zero-alloc re-run guarantee for exactly this reason.
+pub(crate) fn schedule_at(at: Instant, fire: Box<dyn FnOnce() + Send>) {
+    let t = timer();
+    let mut state = t.state.lock().unwrap();
+    let seq = state.next_seq;
+    state.next_seq += 1;
+    let is_new_min = match state.heap.peek() {
+        Some(top) => at < top.at,
+        None => true,
+    };
+    state.heap.push(Entry { at, seq, fire });
+    drop(state);
+    // Only a new minimum changes what the sleeping thread must do;
+    // waking it for later entries would be harmless but noisy.
+    if is_new_min {
+        t.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn entries_fire_in_deadline_order_and_never_early() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let start = Instant::now();
+        // Schedule out of order; expect firing in deadline order.
+        for (label, ms) in [("c", 60u64), ("a", 20), ("b", 40)] {
+            let log = log.clone();
+            schedule_at(
+                start + Duration::from_millis(ms),
+                Box::new(move || {
+                    log.lock().unwrap().push((label, start.elapsed()));
+                }),
+            );
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        let log = log.lock().unwrap();
+        let labels: Vec<_> = log.iter().map(|(l, _)| *l).collect();
+        assert_eq!(labels, vec!["a", "b", "c"]);
+        for (label, at) in log.iter() {
+            let due = match *label {
+                "a" => 20,
+                "b" => 40,
+                _ => 60,
+            };
+            assert!(
+                *at >= Duration::from_millis(due),
+                "{label} fired early: {at:?} < {due}ms"
+            );
+        }
+    }
+
+    #[test]
+    fn callback_may_reschedule() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        schedule_at(
+            Instant::now() + Duration::from_millis(5),
+            Box::new(move || {
+                let h2 = h.clone();
+                h.fetch_add(1, Ordering::SeqCst);
+                schedule_at(
+                    Instant::now() + Duration::from_millis(5),
+                    Box::new(move || {
+                        h2.fetch_add(1, Ordering::SeqCst);
+                    }),
+                );
+            }),
+        );
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

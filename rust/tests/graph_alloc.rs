@@ -134,6 +134,37 @@ fn sealed_rerun_makes_zero_heap_allocations() {
         assert_eq!(wcounter.load(Ordering::Relaxed), wexpected, "{label}: node executions");
     }
 
+    // PR 6: an *aborted* run must not poison the zero-alloc guarantee
+    // — and cancellation itself is allocation-free (the abort cause is
+    // one atomic, skipped nodes ride the normal cascade, and the typed
+    // error is a unit variant). Warm up, then measure a pre-cancelled
+    // run followed by recovery re-runs in the same window.
+    let token = scheduling::graph::CancelToken::new();
+    token.cancel();
+    let cancelled = RunOptions::new().cancel_token(token);
+    for _ in 0..5 {
+        g.run_with_options(&pool, RunOptions::new()).unwrap();
+        expected += 64;
+    }
+    pool.wait_idle();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        // The aborted run skips every node (counter unchanged).
+        assert!(matches!(
+            g.run_with_options(&pool, cancelled.clone()),
+            Err(scheduling::graph::GraphError::Cancelled)
+        ));
+        // The same sealed graph's next run() succeeds — un-poisoned.
+        g.run_with_options(&pool, RunOptions::new()).unwrap();
+        expected += 64;
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        allocs, 0,
+        "abort-recover: cancelled + recovery sealed re-runs must not allocate (saw {allocs})"
+    );
+    assert_eq!(counter.load(Ordering::Relaxed), expected, "abort-recover: node executions");
+
     // Sanity: the machinery is actually counting.
     let before = ALLOCS.load(Ordering::SeqCst);
     drop(std::hint::black_box(Box::new([0u8; 64])));

@@ -264,11 +264,11 @@ fn handle_is_a_future_completed_by_the_waker() {
     bad.add_named("boom", || panic!("async kaboom"));
     let h = bad.run_async(&pool).unwrap();
     match block_on(h) {
-        Err(GraphError::TaskPanicked { name, message, .. }) => {
+        Err(GraphError::NodePanicked { name, payload, .. }) => {
             assert_eq!(name.as_deref(), Some("boom"));
-            assert!(message.contains("async kaboom"));
+            assert!(payload.contains("async kaboom"));
         }
-        other => panic!("expected TaskPanicked, got {other:?}"),
+        other => panic!("expected NodePanicked, got {other:?}"),
     }
 }
 
@@ -284,7 +284,7 @@ fn async_panic_reported_once_and_not_leaked_to_next_run() {
         }
     });
     let h = g.run_async(&pool).unwrap();
-    assert!(matches!(h.wait(), Err(GraphError::TaskPanicked { node: 0, .. })));
+    assert!(matches!(h.wait(), Err(GraphError::NodePanicked { node: 0, .. })));
     // Second run succeeds and must not report the stale panic.
     fail.store(false, Ordering::SeqCst);
     g.run_async(&pool).unwrap().wait().unwrap();
@@ -416,11 +416,11 @@ fn wait_all_reports_the_first_panicking_run() {
     bad.add_named("boom", || panic!("fleet failure"));
     let mut handles = vec![ok.run_async(&pool).unwrap(), bad.run_async(&pool).unwrap()];
     match wait_all(&mut handles) {
-        Err(GraphError::TaskPanicked { name, message, .. }) => {
+        Err(GraphError::NodePanicked { name, payload, .. }) => {
             assert_eq!(name.as_deref(), Some("boom"));
-            assert!(message.contains("fleet failure"));
+            assert!(payload.contains("fleet failure"));
         }
-        other => panic!("expected TaskPanicked, got {other:?}"),
+        other => panic!("expected NodePanicked, got {other:?}"),
     }
     drop(handles);
     assert_eq!(counter.load(Ordering::Relaxed), 8, "the healthy run still completed");

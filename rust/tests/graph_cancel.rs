@@ -1,0 +1,512 @@
+//! Run-lifecycle robustness tier (PR 6).
+//!
+//! Pins down the cancellation / deadline / panic-quarantine /
+//! admission surfaces end to end:
+//!
+//! * cancel before launch, mid-run, and after completion (idempotent);
+//! * a cancelled 10k-node run stops without running remaining nodes
+//!   and reports the typed error from **every** wait surface —
+//!   blocking `run`, `RunHandle::wait`, `try_wait`, and
+//!   `Future::poll` — leaving the pool quiescent;
+//! * deadlines: an expired deadline aborts (never early), a generous
+//!   one never fires, and `wait_timeout` returns `None` on timeout
+//!   without consuming the handle;
+//! * generation counters stay monotone across aborted runs and the
+//!   same sealed graph un-poisons on its next run;
+//! * a panicking node aborts its run with `NodePanicked` while the
+//!   pool keeps its full worker complement — on flat and sharded
+//!   (shard_size=2) pools, sync and async (the catch_unwind coverage
+//!   matrix);
+//! * admission control: `try_run` beyond `max_inflight_runs` fails
+//!   with `Overloaded`, Low-class runs are shed first, blocking `run`
+//!   waits for a released slot;
+//! * 64 option-mask property rows with cancellation injected at a
+//!   random node of a random DAG;
+//! * `chaos_*` tests (feature `chaos`, rates via `CHAOS_PANIC_RATE` /
+//!   `CHAOS_CANCEL_RATE`) — injection-tolerant storms asserting
+//!   no-deadlock, typed errors, and a usable pool, never exact counts.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scheduling::graph::{CancelToken, GraphError, RunOptions, RunPriority, TaskGraph};
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::util::Pcg32;
+use scheduling::workloads::Dag;
+
+/// Blocks on a `RunHandle`'s `Future` impl with a thread-parking
+/// waker (same idiom as `graph_async.rs`) — the fourth wait surface.
+fn block_on<F: std::future::Future>(fut: F) -> F::Output {
+    struct Unparker(std::thread::Thread);
+    impl std::task::Wake for Unparker {
+        fn wake(self: Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+    let waker = std::task::Waker::from(Arc::new(Unparker(std::thread::current())));
+    let mut cx = std::task::Context::from_waker(&waker);
+    let mut fut = std::pin::pin!(fut);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            std::task::Poll::Ready(v) => return v,
+            // park_timeout rather than park: a lost wakeup then shows
+            // up as a slow test instead of a hung CI job.
+            std::task::Poll::Pending => std::thread::park_timeout(Duration::from_millis(100)),
+        }
+    }
+}
+
+/// `n`-node linear chain counting total executions.
+fn chain(n: usize) -> (TaskGraph, Arc<AtomicUsize>) {
+    Dag::linear_chain(n).to_task_graph(0)
+}
+
+/// Two-node chain whose head spins until `gate` opens — a
+/// deterministic "run in flight" window; the tail bumps `tail_runs`.
+fn gated_chain() -> (TaskGraph, Arc<AtomicBool>, Arc<AtomicUsize>) {
+    let gate = Arc::new(AtomicBool::new(false));
+    let tail_runs = Arc::new(AtomicUsize::new(0));
+    let mut g = TaskGraph::new();
+    let ga = gate.clone();
+    let head = g.add(move || {
+        while !ga.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+    });
+    let t = tail_runs.clone();
+    let tail = g.add(move || {
+        t.fetch_add(1, Ordering::SeqCst);
+    });
+    g.precede(head, &[tail]);
+    (g, gate, tail_runs)
+}
+
+#[test]
+fn cancel_before_mid_after_is_idempotent() {
+    let pool = ThreadPool::new(2);
+
+    // Before: a pre-cancelled token skips every node.
+    let (mut g, counter) = chain(64);
+    let token = CancelToken::new();
+    token.cancel();
+    token.cancel(); // idempotent on the token itself
+    let r = g.run_with_options(&pool, RunOptions::new().cancel_token(token));
+    assert!(matches!(r, Err(GraphError::Cancelled)));
+    assert_eq!(counter.load(Ordering::Relaxed), 0);
+
+    // Mid-run: cancel while the head node is blocked; the tail (its
+    // successor) must be skipped once the head finishes.
+    let (mut gg, gate, tail_runs) = gated_chain();
+    let h = gg.run_async(&pool).unwrap();
+    h.cancel();
+    h.cancel(); // idempotent on the handle
+    gate.store(true, Ordering::SeqCst);
+    assert!(matches!(h.wait(), Err(GraphError::Cancelled)));
+    assert_eq!(tail_runs.load(Ordering::SeqCst), 0, "successor ran after cancel");
+
+    // After: cancelling a completed run is a no-op and the harvest
+    // stays Ok.
+    gate.store(true, Ordering::SeqCst);
+    let mut h = gg.run_async(&pool).unwrap();
+    while !h.is_done() {
+        std::thread::yield_now();
+    }
+    h.cancel();
+    assert!(matches!(h.try_wait(), Some(Ok(()))));
+    assert_eq!(tail_runs.load(Ordering::SeqCst), 1);
+
+    // The graph itself is un-poisoned: a plain re-run succeeds.
+    gg.run(&pool).unwrap();
+    assert_eq!(tail_runs.load(Ordering::SeqCst), 2);
+    pool.wait_idle();
+}
+
+#[test]
+fn cancelled_10k_run_reports_from_every_wait_surface() {
+    let pool = ThreadPool::new(4);
+    let n = 10_000;
+    let (mut g, counter) = chain(n);
+
+    // Surface 1: blocking run().
+    let pre = CancelToken::new();
+    pre.cancel();
+    let r = g.run_with_options(&pool, RunOptions::new().cancel_token(pre.clone()));
+    assert!(matches!(r, Err(GraphError::Cancelled)), "blocking run surface");
+    // Surface 2: RunHandle::wait.
+    let h = g.run_async_with_options(&pool, RunOptions::new().cancel_token(pre.clone())).unwrap();
+    assert!(matches!(h.wait(), Err(GraphError::Cancelled)), "wait surface");
+    // Surface 3: try_wait (poll until resolved).
+    let mut h = g.run_async_with_options(&pool, RunOptions::new().cancel_token(pre.clone())).unwrap();
+    let r = loop {
+        if let Some(r) = h.try_wait() {
+            break r;
+        }
+        std::thread::yield_now();
+    };
+    assert!(matches!(r, Err(GraphError::Cancelled)), "try_wait surface");
+    // Surface 4: Future::poll.
+    let h = g.run_async_with_options(&pool, RunOptions::new().cancel_token(pre)).unwrap();
+    assert!(matches!(block_on(h), Err(GraphError::Cancelled)), "future surface");
+
+    // No node of the 10k chain ever ran, and the pool is quiescent
+    // with balanced metrics.
+    assert_eq!(counter.load(Ordering::Relaxed), 0, "cancelled nodes must not run");
+    pool.wait_idle();
+    assert_eq!(pool.pending(), 0);
+    let m = pool.metrics();
+    assert_eq!(m.alive_workers, 4);
+    assert_eq!(m.worker_revivals, 0);
+
+    // Same sealed graph, fresh run: every node executes.
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), n);
+}
+
+#[test]
+fn deadline_expiry_aborts_and_generous_deadline_does_not() {
+    let pool = ThreadPool::new(2);
+
+    // Hold the run open past a short deadline: the tail must be
+    // skipped and the error is DeadlineExceeded, never early.
+    let (mut g, gate, tail_runs) = gated_chain();
+    let deadline = Duration::from_millis(20);
+    let started = Instant::now();
+    let h = g
+        .run_async_with_options(&pool, RunOptions::new().deadline(deadline))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    gate.store(true, Ordering::SeqCst);
+    match h.wait() {
+        Err(GraphError::DeadlineExceeded) => {
+            assert!(started.elapsed() >= deadline, "deadline fired early");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(tail_runs.load(Ordering::SeqCst), 0);
+
+    // A generous deadline never aborts a fast run.
+    let (mut fast, counter) = chain(128);
+    fast.run_with_options(&pool, RunOptions::new().deadline(Duration::from_secs(60))).unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), 128);
+    pool.wait_idle();
+}
+
+#[test]
+fn wait_timeout_returns_none_then_some() {
+    let pool = ThreadPool::new(2);
+    let (mut g, gate, tail_runs) = gated_chain();
+    let mut h = g.run_async(&pool).unwrap();
+    // Still in flight: a bounded wait times out without consuming the
+    // handle or the run.
+    assert!(h.wait_timeout(Duration::from_millis(30)).is_none());
+    assert!(!h.is_done());
+    gate.store(true, Ordering::SeqCst);
+    // Now it completes well within the bound.
+    match h.wait_timeout(Duration::from_secs(30)) {
+        Some(Ok(())) => {}
+        other => panic!("expected Some(Ok), got {other:?}"),
+    }
+    // After done: immediate.
+    assert!(matches!(h.wait_timeout(Duration::from_millis(1)), Some(Ok(()))));
+    assert_eq!(tail_runs.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn generations_stay_monotone_across_aborted_runs() {
+    let pool = ThreadPool::new(2);
+    let (mut g, counter) = chain(32);
+    let h = g.run_async(&pool).unwrap();
+    let g1 = h.generation();
+    h.wait().unwrap();
+
+    // An aborted run still consumes exactly one generation.
+    let token = CancelToken::new();
+    token.cancel();
+    let h = g.run_async_with_options(&pool, RunOptions::new().cancel_token(token)).unwrap();
+    assert_eq!(h.generation(), g1 + 1);
+    assert!(matches!(h.wait(), Err(GraphError::Cancelled)));
+
+    let h = g.run_async(&pool).unwrap();
+    assert_eq!(h.generation(), g1 + 2);
+    h.wait().unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), 64, "two clean runs of 32 nodes");
+}
+
+/// Builds a pool with an admission budget.
+fn budget_pool(threads: usize, max_inflight: usize) -> ThreadPool {
+    ThreadPool::with_config(PoolConfig {
+        num_threads: threads,
+        max_inflight_runs: max_inflight,
+        ..PoolConfig::default()
+    })
+}
+
+#[test]
+fn try_run_overloads_then_recovers_when_slot_releases() {
+    let pool = budget_pool(2, 1);
+    let (mut gated, gate, _tail) = gated_chain();
+    let h = gated.run_async(&pool).unwrap(); // holds the only slot
+
+    let (mut g, counter) = chain(16);
+    assert!(matches!(g.try_run(&pool), Err(GraphError::Overloaded)));
+    assert_eq!(counter.load(Ordering::Relaxed), 0, "rejected run must not submit");
+
+    gate.store(true, Ordering::SeqCst);
+    h.wait().unwrap(); // releases the slot
+    g.try_run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), 16);
+    pool.wait_idle();
+}
+
+#[test]
+fn blocking_run_waits_for_admission_instead_of_failing() {
+    let pool = Arc::new(budget_pool(2, 1));
+    let (mut gated, gate, _tail) = gated_chain();
+    let h = gated.run_async(&pool).unwrap(); // holds the only slot
+
+    // A blocking run from another thread parks on the budget
+    // eventcount and completes once the slot frees.
+    let p = pool.clone();
+    let blocked = std::thread::spawn(move || {
+        let (mut g, counter) = chain(16);
+        g.run(&p).unwrap();
+        counter.load(Ordering::Relaxed)
+    });
+    // Give the blocked thread time to reach admission, then release.
+    std::thread::sleep(Duration::from_millis(50));
+    gate.store(true, Ordering::SeqCst);
+    h.wait().unwrap();
+    assert_eq!(blocked.join().unwrap(), 16);
+    pool.wait_idle();
+}
+
+#[test]
+fn low_class_runs_are_shed_first() {
+    // max_inflight_runs = 4 → Low's effective limit is 3: with three
+    // slots held, a Low try_run is shed while a Normal one still fits.
+    let pool = budget_pool(4, 4);
+    let gate = Arc::new(AtomicBool::new(false));
+    let mut holders: Vec<TaskGraph> = (0..3)
+        .map(|_| {
+            let mut g = TaskGraph::new();
+            let ga = gate.clone();
+            g.add(move || {
+                while !ga.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            });
+            g
+        })
+        .collect();
+    let handles: Vec<_> = holders.iter_mut().map(|g| g.run_async(&pool).unwrap()).collect();
+
+    let (mut low, low_counter) = chain(8);
+    let shed_before = pool.metrics().shed_runs;
+    assert!(matches!(
+        low.try_run_with_options(&pool, RunOptions::new().priority(RunPriority::Low)),
+        Err(GraphError::Overloaded)
+    ));
+    assert_eq!(low_counter.load(Ordering::Relaxed), 0);
+    assert_eq!(pool.metrics().shed_runs, shed_before + 1, "shed counter records the Low reject");
+
+    // The fourth slot is reserved for Normal/High: it still runs.
+    let (mut normal, normal_counter) = chain(8);
+    normal.try_run(&pool).unwrap();
+    assert_eq!(normal_counter.load(Ordering::Relaxed), 8);
+
+    gate.store(true, Ordering::SeqCst);
+    for h in handles {
+        h.wait().unwrap();
+    }
+    // With the slots released, Low is admitted again.
+    low.try_run_with_options(&pool, RunOptions::new().priority(RunPriority::Low)).unwrap();
+    assert_eq!(low_counter.load(Ordering::Relaxed), 8);
+    pool.wait_idle();
+}
+
+/// The catch_unwind coverage matrix: a panicking node must abort its
+/// run with `NodePanicked` — and the pool must keep its full worker
+/// complement — on flat and sharded pools, through the sync and async
+/// surfaces alike.
+#[test]
+fn panic_quarantine_matrix_flat_and_sharded_sync_and_async() {
+    let pools = [
+        ("flat", ThreadPool::with_config(PoolConfig { num_threads: 4, shard_size: 64, ..PoolConfig::default() })),
+        ("sharded", ThreadPool::with_config(PoolConfig { num_threads: 4, shard_size: 2, ..PoolConfig::default() })),
+    ];
+    for (label, pool) in pools {
+        for mode in ["sync", "async"] {
+            // A fan-out behind the panicking node: its successors are
+            // skipped (abort semantics), so the after-counter stays 0.
+            let after = Arc::new(AtomicUsize::new(0));
+            let mut g = TaskGraph::new();
+            let boom = g.add_named("boom", || panic!("quarantine me"));
+            let succs: Vec<_> = (0..8)
+                .map(|_| {
+                    let a = after.clone();
+                    g.add(move || {
+                        a.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            g.precede(boom, &succs);
+
+            let result = match mode {
+                "sync" => g.run(&pool),
+                _ => g.run_async(&pool).unwrap().wait(),
+            };
+            match result {
+                Err(GraphError::NodePanicked { node, name, payload }) => {
+                    assert_eq!(node, 0, "{label}/{mode}");
+                    assert_eq!(name.as_deref(), Some("boom"), "{label}/{mode}");
+                    assert!(payload.contains("quarantine me"), "{label}/{mode}: {payload}");
+                }
+                other => panic!("{label}/{mode}: expected NodePanicked, got {other:?}"),
+            }
+            assert_eq!(after.load(Ordering::SeqCst), 0, "{label}/{mode}: successors ran");
+            pool.wait_idle();
+            let m = pool.metrics();
+            assert_eq!(m.alive_workers, 4, "{label}/{mode}: pool silently shrank");
+            assert_eq!(m.worker_revivals, 0, "{label}/{mode}: containment regressed");
+
+            // The pool stays fully usable.
+            let (mut ok, counter) = chain(32);
+            ok.run(&pool).unwrap();
+            assert_eq!(counter.load(Ordering::Relaxed), 32, "{label}/{mode}");
+        }
+    }
+}
+
+/// Random DAG: nodes 0..n, edges only i -> j with i < j (acyclic by
+/// construction), edge probability `p` within a window of `w` — the
+/// `graph_properties.rs` generator.
+fn random_dag(rng: &mut Pcg32, n: usize, w: usize, p: f64) -> Vec<Vec<usize>> {
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..(i + 1 + w).min(n) {
+            if rng.next_f64() < p {
+                adj[i].push(j);
+            }
+        }
+    }
+    adj
+}
+
+#[test]
+fn sixty_four_option_masks_with_cancellation_at_a_random_node() {
+    // 6 toggle bits → 64 rows: every RunOptions combination runs a
+    // random DAG in which one randomly chosen node fires a
+    // CancelToken *from inside the run*. Whatever the interleaving,
+    // the invariants hold: at-most-once per node, the cancelling node
+    // ran, the run drains to a typed result, and the graph re-runs
+    // cleanly afterwards (exactly-once, Ok).
+    let pool = ThreadPool::new(3);
+    let mut rng = Pcg32::seeded(0xCA_7CE1);
+    for mask in 0..64u32 {
+        let n = 30 + rng.next_below(50) as usize;
+        let w = 1 + rng.next_below(6) as usize;
+        let adj = random_dag(&mut rng, n, w, 0.35);
+        let cancel_node = rng.next_below(n as u32) as usize;
+        let token = CancelToken::new();
+
+        let runs: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let mut g = TaskGraph::with_capacity(n);
+        let ids: Vec<_> = (0..n)
+            .map(|i| {
+                let (runs, token) = (runs.clone(), token.clone());
+                g.add(move || {
+                    runs[i].fetch_add(1, Ordering::SeqCst);
+                    if i == cancel_node {
+                        token.cancel();
+                    }
+                })
+            })
+            .collect();
+        for (i, succs) in adj.iter().enumerate() {
+            for &s in succs {
+                g.precede(ids[i], &[ids[s]]);
+            }
+        }
+
+        let options = RunOptions::inline(mask & 1 == 0)
+            .topology_cache(mask & 2 == 0)
+            .state_reuse(mask & 4 == 0)
+            .caller_assist(mask & 8 == 0)
+            .critical_path(mask & 16 == 0)
+            .priority_lanes(mask & 32 == 0)
+            .cancel_token(token.clone());
+        match g.run_with_options(&pool, options) {
+            // The token may win before or after the last dispatch.
+            Ok(()) | Err(GraphError::Cancelled) => {}
+            other => panic!("mask {mask}: unexpected result {other:?}"),
+        }
+        assert_eq!(runs[cancel_node].load(Ordering::SeqCst), 1, "mask {mask}: cancel node");
+        for i in 0..n {
+            assert!(runs[i].load(Ordering::SeqCst) <= 1, "mask {mask}: node {i} ran twice");
+        }
+
+        // Sticky token: a re-run with it aborts immediately...
+        let before: usize = (0..n).map(|i| runs[i].load(Ordering::SeqCst)).sum();
+        assert!(matches!(
+            g.run_with_options(&pool, RunOptions::new().cancel_token(token)),
+            Err(GraphError::Cancelled)
+        ));
+        let after: usize = (0..n).map(|i| runs[i].load(Ordering::SeqCst)).sum();
+        assert_eq!(before, after, "mask {mask}: sticky-token re-run executed nodes");
+        // ...while a token-free re-run is exactly-once for every node.
+        g.run(&pool).unwrap_or_else(|e| panic!("mask {mask}: clean re-run failed: {e}"));
+        let total: usize = (0..n).map(|i| runs[i].load(Ordering::SeqCst)).sum();
+        assert_eq!(total, before + n, "mask {mask}: clean re-run not exactly-once");
+    }
+    pool.wait_idle();
+}
+
+/// Chaos-feature storms: with `--features chaos` and nonzero
+/// `CHAOS_PANIC_RATE` / `CHAOS_CANCEL_RATE`, the executor injects
+/// random node panics and forced cancellations. These tests are
+/// **injection-tolerant**: they assert liveness (no deadlock), typed
+/// errors, and a healthy pool — never exact execution counts. With
+/// the feature off (or rates 0) they degrade to plain soak tests.
+#[cfg(feature = "chaos")]
+mod chaos_storms {
+    use super::*;
+
+    #[test]
+    fn chaos_storm_sync_runs_never_deadlock() {
+        let pool = ThreadPool::new(4);
+        let (mut g, _counter) = Dag::layered_random(6, 8, 0.4, 7).to_task_graph(0);
+        for round in 0..200 {
+            match g.run(&pool) {
+                Ok(())
+                | Err(GraphError::Cancelled)
+                | Err(GraphError::NodePanicked { .. }) => {}
+                other => panic!("round {round}: unexpected result {other:?}"),
+            }
+        }
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.metrics().alive_workers, 4);
+    }
+
+    #[test]
+    fn chaos_storm_async_fleet_stays_harvestable() {
+        let pool = ThreadPool::new(4);
+        let mut fleet: Vec<TaskGraph> =
+            (0..8).map(|_| Dag::diamond_chain(8).to_task_graph(0).0).collect();
+        for round in 0..50 {
+            let handles: Vec<_> = fleet.iter_mut().map(|g| g.run_async(&pool).unwrap()).collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                match h.wait() {
+                    Ok(())
+                    | Err(GraphError::Cancelled)
+                    | Err(GraphError::NodePanicked { .. }) => {}
+                    other => panic!("round {round} graph {i}: unexpected {other:?}"),
+                }
+            }
+        }
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.metrics().alive_workers, 4);
+    }
+}

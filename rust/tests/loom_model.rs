@@ -23,7 +23,20 @@
 //!    per the ROADMAP's "deques under loom" item) — the hand-rolled
 //!    Chase–Lev top/bottom index protocol delivers every element
 //!    exactly once when a `steal_batch_and_pop` loop races the
-//!    owner's LIFO pops.
+//!    owner's LIFO pops;
+//! 6. the **grow/retire (buffer reclamation) protocol** (PR 6,
+//!    closing ROADMAP loom debt (2)) — an owner push that outgrows
+//!    the buffer copies into a double-size buffer, publishes it with
+//!    a Release store, and *retires* (does not free) the old one;
+//!    a thief that read the stale buffer pointer still delivers its
+//!    element exactly once, because the copy preserved `[top, bottom)`
+//!    and the SeqCst CAS on `top` validates the claim;
+//! 7. the **cancel-flag vs. completion-handshake race** (PR 6) — the
+//!    per-run abort cause raced against the dispatch-boundary check
+//!    and the final `remaining` decrement: the run always drains to
+//!    `completed = gen` exactly once, skipped nodes imply the cause
+//!    was set, and a cancel that observed completion (the
+//!    `RunHandle::cancel` guard) never aborts anything.
 //!
 //! These are *models*: each test re-states the protocol in miniature
 //! with loom types (the production code uses `std` atomics and real
@@ -674,5 +687,277 @@ fn done_flag_eventcount_handshake_loses_no_wakeup() {
         assert_eq!(st.done.load(Ordering::SeqCst), 1);
 
         producer.join().unwrap();
+    });
+}
+
+/// Model 7: the deque's grow/retire (buffer reclamation) path (PR 6;
+/// ROADMAP loom debt (2) — "model the grow path, not just the
+/// fixed-capacity miniature").
+///
+/// A miniature of `pool/deque.rs`'s `Worker::push` grow branch with
+/// the production orders: the owner, finding `bottom - top >= cap`,
+/// copies `[top, bottom)` into a double-size buffer (plain per-slot
+/// copies — the new buffer is still private), publishes it with a
+/// **Release** store of the buffer pointer (here: a buffer index),
+/// pushes the old buffer onto the `retired` list (it is NOT freed
+/// until `Drop` — that is the whole reclamation scheme), and only
+/// then stores the new element and bumps `bottom`. The thief runs the
+/// production order `top SeqCst → bottom SeqCst → buffer Acquire →
+/// speculative slot read → CAS top SeqCst`.
+///
+/// The race this exhausts: a thief that loaded the buffer pointer
+/// *before* the grow reads its slot from the retired buffer while the
+/// owner concurrently publishes (and pushes into) the new one. The
+/// claim is exactly-once delivery regardless: the copy preserved every
+/// unstolen index, the retired buffer still holds valid contents for
+/// indices below the old capacity, and the CAS on `top` arbitrates
+/// which reader keeps the element. A freed-too-early buffer has no
+/// loom equivalent (no raw memory here) — what the model pins down is
+/// that *correctness never requires the old buffer to be gone*, i.e.
+/// readers of the stale pointer are benign, which is exactly the
+/// property that makes retire-until-drop a sound reclamation policy.
+#[test]
+fn deque_grow_retires_old_buffer_and_loses_no_element() {
+    loom::model(|| {
+        const CAPS: [usize; 2] = [2, 4]; // buffer 0 grows into buffer 1
+        struct Deque {
+            top: AtomicI64,
+            bottom: AtomicI64,
+            /// Index into `bufs` — the production `buffer` pointer.
+            buf: AtomicUsize,
+            bufs: [[AtomicU64; 4]; 2],
+            /// Retired buffer indices (production: `Mutex<Vec<Box<..>>>`
+            /// freed only in Drop).
+            retired: Mutex<Vec<usize>>,
+        }
+        impl Deque {
+            // Worker::push, including the grow branch.
+            fn push(&self, v: u64) {
+                let b = self.bottom.load(Ordering::Relaxed); // owner-private
+                let t = self.top.load(Ordering::Acquire);
+                let mut bi = self.buf.load(Ordering::Relaxed); // owner owns it
+                if (b - t) as usize >= CAPS[bi] {
+                    // Grow: copy [top, bottom) into the bigger buffer,
+                    // publish Release, retire the old buffer.
+                    let ni = bi + 1;
+                    for i in t..b {
+                        let val = self.bufs[bi][i as usize & (CAPS[bi] - 1)].load(Ordering::Relaxed);
+                        self.bufs[ni][i as usize & (CAPS[ni] - 1)].store(val, Ordering::Relaxed);
+                    }
+                    self.buf.store(ni, Ordering::Release);
+                    self.retired.lock().unwrap().push(bi);
+                    bi = ni;
+                }
+                self.bufs[bi][b as usize & (CAPS[bi] - 1)].store(v, Ordering::Relaxed);
+                self.bottom.store(b + 1, Ordering::Release);
+            }
+            // Worker::pop (owner). Reads through the current buffer.
+            fn pop(&self) -> Option<u64> {
+                let b = self.bottom.load(Ordering::Relaxed);
+                let t_approx = self.top.load(Ordering::Relaxed);
+                if t_approx >= b {
+                    return None;
+                }
+                let b = self.bottom.fetch_sub(1, Ordering::SeqCst) - 1;
+                let t = self.top.load(Ordering::SeqCst);
+                let bi = self.buf.load(Ordering::Relaxed);
+                let result = if t < b {
+                    Some(self.bufs[bi][b as usize & (CAPS[bi] - 1)].load(Ordering::Relaxed))
+                } else if t == b {
+                    let value = self.bufs[bi][b as usize & (CAPS[bi] - 1)].load(Ordering::Relaxed);
+                    if self
+                        .top
+                        .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        Some(value)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                self.bottom.store(b + 1, Ordering::SeqCst);
+                result
+            }
+            // Stealer::steal — the production order, including the
+            // Acquire buffer load *after* the index loads.
+            fn steal(&self) -> Result<Option<u64>, ()> {
+                let t = self.top.load(Ordering::SeqCst);
+                let b = self.bottom.load(Ordering::SeqCst);
+                if t >= b {
+                    return Ok(None);
+                }
+                let bi = self.buf.load(Ordering::Acquire);
+                let value = self.bufs[bi][t as usize & (CAPS[bi] - 1)].load(Ordering::Relaxed);
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    Ok(Some(value))
+                } else {
+                    Err(())
+                }
+            }
+        }
+
+        let mk_buf = || {
+            [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ]
+        };
+        let dq = Arc::new(Deque {
+            top: AtomicI64::new(0),
+            bottom: AtomicI64::new(0),
+            buf: AtomicUsize::new(0),
+            bufs: [mk_buf(), mk_buf()],
+            retired: Mutex::new(Vec::new()),
+        });
+        // Pre-fill to capacity: the next push must grow.
+        dq.push(1);
+        dq.push(2);
+
+        // Thief: steal until it has one element or sees Empty twice
+        // (retries re-loop — they mean the other side made progress).
+        let thief = {
+            let dq = dq.clone();
+            thread::spawn(move || {
+                let mut empties = 0;
+                loop {
+                    match dq.steal() {
+                        Ok(Some(v)) => return Some(v),
+                        Ok(None) => {
+                            empties += 1;
+                            if empties == 2 {
+                                return None;
+                            }
+                        }
+                        Err(()) => {}
+                    }
+                }
+            })
+        };
+
+        // Owner: the growing push, racing the thief, then drain.
+        dq.push(3);
+        let mut popped = Vec::new();
+        loop {
+            match dq.pop() {
+                Some(v) => popped.push(v),
+                None => {
+                    if dq.top.load(Ordering::SeqCst) >= dq.bottom.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+        }
+
+        // The grow always happened (cap 2, third push) and the old
+        // buffer was retired, not reused.
+        assert_eq!(*dq.retired.lock().unwrap(), vec![0], "old buffer retired exactly once");
+        let mut all: Vec<u64> = popped;
+        all.extend(thief.join().unwrap());
+        all.sort_unstable();
+        assert_eq!(all, vec![1, 2, 3], "every element exactly once across the grow");
+    });
+}
+
+/// Model 8: the cancel-flag vs. completion-handshake race (PR 6).
+///
+/// Mirrors executor.rs: each task loads the per-run abort cause
+/// (SeqCst) at its dispatch boundary and runs its closure only when
+/// the cause is unset; the *last* `remaining` decrement (AcqRel)
+/// publishes `completed = gen` (SeqCst) whether or not the run was
+/// aborted. The canceller is `RunHandle::cancel` verbatim: guard on
+/// `is_complete` (SeqCst load of `completed`), then a first-wins CAS
+/// on the cause. Loom exhausts the schedules; the assertions pin the
+/// three lifecycle invariants:
+///
+/// * the run **always drains** — `completed` reaches the generation
+///   exactly once, cancelled or not (quiescence/generation exactness);
+/// * a skipped node implies the cause was set (skips never happen
+///   spontaneously), and every node runs at most once;
+/// * a cancel whose guard observed completion aborts nothing — the
+///   cause stays unset and every node ran (cancel-after-done is a
+///   no-op, so a harvested `Ok` can never coexist with a skip).
+#[test]
+fn cancel_flag_vs_completion_handshake_keeps_quiescence_exact() {
+    loom::model(|| {
+        struct State {
+            cancelled: AtomicU64, // CAUSE_NONE = 0, CAUSE_CANCEL = 1
+            remaining: AtomicUsize,
+            completed: AtomicU64,
+            executed: [AtomicUsize; 2],
+        }
+        let st = Arc::new(State {
+            cancelled: AtomicU64::new(0),
+            remaining: AtomicUsize::new(2),
+            completed: AtomicU64::new(0),
+            executed: [AtomicUsize::new(0), AtomicUsize::new(0)],
+        });
+
+        // Two workers, one task each — execute_node's dispatch check
+        // followed by the remaining-counter cascade.
+        let workers: Vec<_> = (0..2)
+            .map(|i| {
+                let st = st.clone();
+                thread::spawn(move || {
+                    let aborted = st.cancelled.load(Ordering::SeqCst) != 0;
+                    if !aborted {
+                        st.executed[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Skipped or not, the task flows through the same
+                    // decrement — that is what keeps quiescence exact.
+                    if st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        st.completed.store(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+
+        // Canceller: RunHandle::cancel — is_complete guard, then the
+        // first-wins CAS (RunState::abort).
+        let canceller = {
+            let st = st.clone();
+            thread::spawn(move || {
+                let saw_done = st.completed.load(Ordering::SeqCst) >= 1;
+                if !saw_done {
+                    let _ = st.cancelled.compare_exchange(
+                        0,
+                        1,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                }
+                saw_done
+            })
+        };
+
+        for w in workers {
+            w.join().unwrap();
+        }
+        let saw_done = canceller.join().unwrap();
+
+        // Invariant 1: the run drained exactly — cancelled or not.
+        assert_eq!(st.completed.load(Ordering::SeqCst), 1, "run must reach completion");
+        assert_eq!(st.remaining.load(Ordering::SeqCst), 0);
+
+        let cause = st.cancelled.load(Ordering::SeqCst);
+        for i in 0..2 {
+            let runs = st.executed[i].load(Ordering::Relaxed);
+            // Invariant 2: at-most-once, and skips only under a cause.
+            assert!(runs <= 1, "node {i} ran twice");
+            assert!(runs == 1 || cause != 0, "node {i} skipped without a cause");
+        }
+        // Invariant 3: cancel-after-done is a no-op.
+        if saw_done {
+            assert_eq!(cause, 0, "cancel observed completion yet set the cause");
+            assert_eq!(st.executed[0].load(Ordering::Relaxed), 1);
+            assert_eq!(st.executed[1].load(Ordering::Relaxed), 1);
+        }
     });
 }
