@@ -1,6 +1,6 @@
 //! CANCEL / OVERLOAD — run-lifecycle robustness benches (PR 6).
 //!
-//! Two reports land in the ledger (`BENCH_pr6.json`):
+//! Two reports land in the ledger (`BENCH_pr7.json` as of PR 7):
 //!
 //! * **CANCEL time-to-cancel (PR 6)** — a sealed 10 000-node diamond
 //!   chain: run to completion, aborted at launch by a pre-cancelled

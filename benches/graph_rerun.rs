@@ -9,7 +9,7 @@
 //! burst + caller-assisted draining, with zero heap allocations
 //! (asserted by `rust/tests/graph_alloc.rs`).
 //!
-//! Three reports land in the ledger (`BENCH_pr6.json` as of PR 6):
+//! Three reports land in the ledger (`BENCH_pr7.json` as of PR 7):
 //!
 //! * **GR graph re-run latency** — the default configuration on the
 //!   diamond chain and on a 1024-node linear chain, tracked from PR 2

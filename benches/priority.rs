@@ -2,7 +2,7 @@
 //! critical-path-first dispatch vs the shape-oblivious FIFO rule, plus
 //! a mixed-priority async fleet.
 //!
-//! Three reports land in the ledger (`BENCH_pr6.json` as of PR 6):
+//! Three reports land in the ledger (`BENCH_pr7.json` as of PR 7):
 //!
 //! * **PRIO skewed-DAG makespan** — a weighted `Dag::skewed_diamond`
 //!   (many light branches + one heavy spine, spine head buried

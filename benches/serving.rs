@@ -1,0 +1,273 @@
+//! SERVING — open-loop multi-tenant latency/goodput sweep (PR 7).
+//!
+//! One report per arrival-rate point lands in the ledger
+//! (`BENCH_pr7.json`): a three-tenant mix — **gold** (weight 4, High
+//! class), **silver** (weight 2, Normal), and a **storming** tenant
+//! (weight 1, Low) submitting at 3× its weight share — drives a
+//! [`scheduling::serve::GraphService`] with Poisson (open-loop)
+//! arrivals at a sweep of offered rates around the pool's measured
+//! solo capacity.
+//!
+//! Open-loop means latency is measured from each request's *scheduled
+//! arrival time* (drawn from the exponential-gap schedule up front),
+//! not from when a client thread got around to submitting it — so
+//! queueing delay during saturation shows up in the tail instead of
+//! silently throttling the load, the textbook coordinated-omission
+//! fix. Each tenant's schedule is split across a small crew of client
+//! threads that sleep until each arrival is due.
+//!
+//! Ledger series per rate point (`param = rate0.5x`, `rate1x`, ...):
+//!
+//! * `<tenant>-p50|p99|p999` — request latency percentiles (scheduled
+//!   arrival → completion), recorded as single-sample rows whose
+//!   `median_ns` is the percentile value;
+//! * `<tenant>-goodput` — mean interval between *successful*
+//!   completions over the window (ns per op; lower = more goodput);
+//! * `fairness-minmax-ppm` — min/max ratio across tenants of
+//!   (per-tenant goodput share ÷ DRR weight), scaled to parts-per-
+//!   million and stored in `median_ns` (1 000 000 = perfectly
+//!   weight-proportional service). The acceptance signal: a storm
+//!   must not drive this toward 0.
+//!
+//! Knobs: `THREADS` (default 2), `WINDOW_MS` (per-rate window, default
+//! 2500), `BENCH_FAST=1` (2 rate points, 800 ms windows), `SEED`
+//! (Poisson schedule seed, default 42).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use scheduling::bench_harness::{record_json, Report, Summary};
+use scheduling::graph::RunPriority;
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::serve::{GraphService, RetryPolicy, ServiceConfig, TenantSpec};
+use scheduling::util::Pcg32;
+use scheduling::workloads::Dag;
+
+/// Nodes per request graph (4 diamonds) and busy-work steps per node.
+const DIAMONDS: usize = 4;
+const WORK_STEPS: u32 = 256;
+/// Client threads per tenant — enough to keep the open loop open at
+/// the sweep's top rate without a thread per request.
+const CREW: usize = 8;
+
+fn point(d: Duration) -> Summary {
+    Summary { n: 1, mean: d, median: d, stddev: Duration::ZERO, min: d, max: d }
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct TenantOutcome {
+    name: &'static str,
+    weight: u32,
+    latencies: Vec<Duration>,
+    completed: u64,
+    shed: u64,
+    failed: u64,
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let window_ms: u64 = std::env::var("WINDOW_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 800 } else { 2500 });
+    let seed: u64 = std::env::var("SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(42);
+    let window = Duration::from_millis(window_ms);
+    let rate_multipliers: &[f64] = if fast { &[0.5, 2.0] } else { &[0.5, 1.0, 1.5, 3.0] };
+
+    // ---- capacity probe: solo ops/sec of one request graph ---------
+    let probe_pool = ThreadPool::with_config(PoolConfig {
+        num_threads: threads,
+        ..PoolConfig::default()
+    });
+    let (mut probe, _) = Dag::diamond_chain(DIAMONDS).to_task_graph(WORK_STEPS);
+    probe.run(&probe_pool).unwrap(); // warm + seal
+    let probe_rounds = 200;
+    let t0 = Instant::now();
+    for _ in 0..probe_rounds {
+        probe.run(&probe_pool).unwrap();
+    }
+    let per_op = t0.elapsed() / probe_rounds;
+    drop(probe_pool);
+    // Optimistic pool capacity: solo runs already use caller assist +
+    // workers, so ops/sec_solo ~ saturation; the sweep straddles it.
+    let capacity_rps = 1.0 / per_op.as_secs_f64().max(1e-9);
+    eprintln!(
+        "capacity probe: {per_op:?}/op solo -> ~{capacity_rps:.0} rps; \
+         sweep x{rate_multipliers:?}, {window_ms} ms windows, {threads} threads"
+    );
+
+    // Tenant mix: weights 4/2/1; offered arrival shares 4/2/3 — the
+    // storm submits at 3x its weight share.
+    let tenant_defs: [(&'static str, u32, RunPriority, f64); 3] = [
+        ("gold", 4, RunPriority::High, 4.0 / 9.0),
+        ("silver", 2, RunPriority::Normal, 2.0 / 9.0),
+        ("storm", 1, RunPriority::Low, 3.0 / 9.0),
+    ];
+
+    for (ri, &mult) in rate_multipliers.iter().enumerate() {
+        let total_rate = capacity_rps * mult;
+        let param = format!("rate{mult}x");
+
+        let svc = Arc::new(GraphService::new(
+            ThreadPool::with_config(PoolConfig {
+                num_threads: threads,
+                ..PoolConfig::default()
+            }),
+            ServiceConfig {
+                max_inflight: (2 * threads).max(4),
+                retry: RetryPolicy::default(),
+                ..ServiceConfig::default()
+            },
+        ));
+
+        let start = Instant::now() + Duration::from_millis(50); // sync'd epoch
+        let mut crews = Vec::new();
+        let mut tenant_handles = Vec::new();
+        for (ti, &(name, weight, class, share)) in tenant_defs.iter().enumerate() {
+            let id = svc.register_tenant(
+                TenantSpec::new(name).weight(weight).class(class).max_inflight(threads.max(2)),
+            );
+            let rate = total_rate * share;
+            // Pre-draw the Poisson schedule, then deal arrivals to the
+            // crew round-robin (each client sees every CREW-th gap, so
+            // per-client order is preserved).
+            let mut rng = Pcg32::new(seed, (ri * 8 + ti) as u64);
+            let mut schedule: Vec<Duration> = Vec::new();
+            let mut t = 0.0f64;
+            loop {
+                let u = (1.0 - rng.next_f64()).max(1e-12); // (0,1]
+                t += -u.ln() / rate.max(1.0);
+                if t >= window.as_secs_f64() {
+                    break;
+                }
+                schedule.push(Duration::from_secs_f64(t));
+            }
+            let completed = Arc::new(AtomicU64::new(0));
+            let shed = Arc::new(AtomicU64::new(0));
+            let failed = Arc::new(AtomicU64::new(0));
+            tenant_handles.push((name, weight, completed.clone(), shed.clone(), failed.clone()));
+            for c in 0..CREW {
+                let svc = svc.clone();
+                let mine: Vec<Duration> =
+                    schedule.iter().skip(c).step_by(CREW).copied().collect();
+                let (completed, shed, failed) = (completed.clone(), shed.clone(), failed.clone());
+                crews.push(thread::spawn(move || -> Vec<Duration> {
+                    let (mut g, _) = Dag::diamond_chain(DIAMONDS).to_task_graph(WORK_STEPS);
+                    let mut latencies = Vec::with_capacity(mine.len());
+                    for at in mine {
+                        let due = start + at;
+                        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                            thread::sleep(wait);
+                        }
+                        match svc.run(id, &mut g) {
+                            Ok(()) => {
+                                latencies.push(due.elapsed());
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(scheduling::serve::ServeError::Shed(_)) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    latencies
+                }));
+            }
+        }
+
+        // Crews are grouped per tenant in spawn order: CREW threads per
+        // tenant, tenant order matching tenant_defs/tenant_handles.
+        let mut outcomes: Vec<TenantOutcome> = Vec::new();
+        let mut crew_iter = crews.into_iter();
+        for (name, weight, completed, shed, failed) in tenant_handles {
+            let mut latencies = Vec::new();
+            for _ in 0..CREW {
+                latencies.extend(crew_iter.next().unwrap().join().unwrap());
+            }
+            latencies.sort_unstable();
+            outcomes.push(TenantOutcome {
+                name,
+                weight,
+                latencies,
+                completed: completed.load(Ordering::Relaxed),
+                shed: shed.load(Ordering::Relaxed),
+                failed: failed.load(Ordering::Relaxed),
+            });
+        }
+
+        let mut report = Report::new(
+            "SERVING open-loop tenant sweep (PR 7)",
+            format!(
+                "Poisson arrivals at {mult}x probed capacity ({total_rate:.0} rps offered) for \
+                 {window_ms} ms, {threads} threads; tenants gold(w4,High)/silver(w2,Normal)/\
+                 storm(w1,Low at 3x weight share), {CREW} clients each, 16-node graphs, \
+                 default retry policy; latency measured from scheduled arrival \
+                 (coordinated-omission-safe); goodput = window/completions (ns per op); \
+                 fairness-minmax-ppm = min/max of weight-normalized goodput shares x1e6"
+            ),
+        );
+
+        // Per-tenant weight-normalized goodput shares for fairness.
+        let mut norm_shares: Vec<f64> = Vec::new();
+        for o in &outcomes {
+            for (suffix, p) in [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)] {
+                report.push(
+                    param.clone(),
+                    format!("{}-{suffix}", o.name),
+                    point(percentile(&o.latencies, p)),
+                );
+            }
+            let goodput_ns = if o.completed > 0 {
+                Duration::from_nanos((window.as_nanos() as u64) / o.completed)
+            } else {
+                window // zero completions: floor at one op per window
+            };
+            report.push(param.clone(), format!("{}-goodput", o.name), point(goodput_ns));
+            norm_shares.push(o.completed as f64 / f64::from(o.weight).max(1.0));
+            eprintln!(
+                "  {param} {}: completed={} shed={} failed={}",
+                o.name, o.completed, o.shed, o.failed
+            );
+        }
+        let (lo, hi) = norm_shares
+            .iter()
+            .fold((f64::MAX, 0.0f64), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+        let fairness_ppm = if hi > 0.0 { (lo / hi * 1e6) as u64 } else { 0 };
+        report.push(
+            param.clone(),
+            "fairness-minmax-ppm",
+            point(Duration::from_nanos(fairness_ppm.max(1))),
+        );
+
+        report.print();
+        record_json("serving", "wall", threads, &report);
+
+        // SHAPE verdicts: under saturation the weighted split must not
+        // collapse (storm starving gold would drive the ratio to ~0),
+        // and gold must keep completing work at every rate point.
+        println!(
+            "SHAPE fairness-floor@{param}: {:.2} {}",
+            fairness_ppm as f64 / 1e6,
+            if fairness_ppm >= 100_000 { "PASS" } else { "CHECK" }
+        );
+        let gold = &outcomes[0];
+        println!(
+            "SHAPE gold-served@{param}: {} {}",
+            gold.completed,
+            if gold.completed > 0 { "PASS" } else { "CHECK" }
+        );
+        eprintln!("  pool after {param}:\n{}", svc.pool().metrics());
+    }
+}

@@ -64,6 +64,15 @@ pub enum GraphError {
     /// [`TaskGraph::try_run`] refuses new runs instead of growing the
     /// queues without bound, and `Low`-class runs are shed first.
     Overloaded,
+    /// The run's [`RunOptions::deadline`](crate::graph::RunOptions::deadline)
+    /// cannot be met even before launch (PR 7): the pool's observed
+    /// dispatch-queue delay ([`crate::pool::ThreadPool::queue_delay_ewma`])
+    /// already exceeds the whole deadline, so admitting the run would
+    /// only burn budget on work guaranteed to be aborted. Rejected at
+    /// the admission seam **without** consuming an inflight slot — the
+    /// serving tier's brownout policy (`serve/brownout.rs`) documents
+    /// where this sits in the shed order.
+    WouldMissDeadline,
     /// [`TaskGraph::run`] was called from inside a task of the pool it
     /// targets — whether that task was picked up by a worker thread or
     /// by a caller-assist helper. The run would need that very
@@ -90,6 +99,11 @@ impl std::fmt::Display for GraphError {
                 f,
                 "pool admission budget exhausted (max_inflight_runs / max_queued_tasks); \
                  retry later or raise the budget"
+            ),
+            GraphError::WouldMissDeadline => write!(
+                f,
+                "run rejected at admission: the pool's queue delay already exceeds \
+                 the run's deadline (it would be aborted before finishing)"
             ),
             GraphError::RunFromWorker => write!(
                 f,

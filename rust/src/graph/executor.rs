@@ -845,6 +845,7 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
             });
             // SAFETY: exclusive access per the module-level protocol.
             let func = unsafe { &mut *node.func.get() };
+            chaos_maybe_spike();
             let outcome = if chaos_should_panic(&state) {
                 catch_unwind(|| panic!("chaos: injected node panic"))
             } else {
@@ -965,12 +966,59 @@ fn chaos_should_panic(_state: &RunState) -> bool {
     false
 }
 
+/// Chaos node-latency spike (PR 7, `--features chaos`): with
+/// probability `CHAOS_SPIKE_RATE`/1000 per dispatch, busy-holds the
+/// worker for `CHAOS_SPIKE_US` µs (default 100) before the node's
+/// closure runs — the "one slow node" failure mode a serving tier must
+/// absorb without blowing its tail latencies.
+#[cfg(feature = "chaos")]
+fn chaos_maybe_spike() {
+    let (per_mille, us) = chaos::spike_params();
+    if chaos::roll(per_mille) {
+        let until = Instant::now() + Duration::from_micros(us as u64);
+        while Instant::now() < until {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+fn chaos_maybe_spike() {}
+
+/// Chaos `Overloaded` injection at the serving dispatch boundary
+/// (PR 7, `--features chaos`): with probability `CHAOS_OVERLOAD_RATE`
+/// /1000 per dispatch, `serve::GraphService` treats the launch as if
+/// the pool's admission budget were exhausted, exercising its
+/// retry/backoff path. Inert without the feature (or with the rate
+/// unset/zero).
+#[cfg(feature = "chaos")]
+pub(crate) fn chaos_inject_overload() -> bool {
+    chaos::roll(chaos::overload_per_mille())
+}
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub(crate) fn chaos_inject_overload() -> bool {
+    false
+}
+
+/// Runtime override of the chaos serving knobs (PR 7): lets the
+/// chaos-storm soak test turn injection on mid-process and then **off**
+/// again to assert the service converges back to steady-state goodput —
+/// something the read-once env knobs cannot express. Env values seed
+/// these on first use; the setters overwrite them.
+#[cfg(feature = "chaos")]
+pub fn chaos_set_serving_rates(overload_per_mille: u32, spike_per_mille: u32, spike_us: u32) {
+    chaos::set_serving_rates(overload_per_mille, spike_per_mille, spike_us);
+}
+
 /// Runtime-gated fault injection for the CI chaos job (PR 6). Only
 /// compiled under `--features chaos`; with the env rates unset the
 /// hooks are inert, so the full suite still passes under the feature.
 #[cfg(feature = "chaos")]
 mod chaos {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
     use std::sync::OnceLock;
 
     pub(super) struct Config {
@@ -980,6 +1028,16 @@ mod chaos {
 
     static CONFIG: OnceLock<Config> = OnceLock::new();
     static RNG: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+    /// Serving-boundary knobs (PR 7). Unlike the panic/cancel rates
+    /// these live in plain atomics, env-seeded on first use and
+    /// overridable at runtime (`set_serving_rates`), because the
+    /// chaos-storm soak test must be able to stop injection
+    /// mid-process and watch the service recover.
+    static OVERLOAD_PER_MILLE: AtomicU32 = AtomicU32::new(0);
+    static SPIKE_PER_MILLE: AtomicU32 = AtomicU32::new(0);
+    static SPIKE_US: AtomicU32 = AtomicU32::new(100);
+    static SERVING_SEEDED: OnceLock<()> = OnceLock::new();
 
     pub(super) fn config() -> &'static Config {
         CONFIG.get_or_init(|| {
@@ -997,6 +1055,35 @@ mod chaos {
                 cancel_per_mille: rate("CHAOS_CANCEL_RATE"),
             }
         })
+    }
+
+    fn seed_serving() {
+        SERVING_SEEDED.get_or_init(|| {
+            config(); // make sure CHAOS_SEED has been applied
+            let rate = |key: &str, default: u32| {
+                std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+            };
+            OVERLOAD_PER_MILLE.store(rate("CHAOS_OVERLOAD_RATE", 0), Ordering::Relaxed);
+            SPIKE_PER_MILLE.store(rate("CHAOS_SPIKE_RATE", 0), Ordering::Relaxed);
+            SPIKE_US.store(rate("CHAOS_SPIKE_US", 100), Ordering::Relaxed);
+        });
+    }
+
+    pub(super) fn overload_per_mille() -> u32 {
+        seed_serving();
+        OVERLOAD_PER_MILLE.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn spike_params() -> (u32, u32) {
+        seed_serving();
+        (SPIKE_PER_MILLE.load(Ordering::Relaxed), SPIKE_US.load(Ordering::Relaxed))
+    }
+
+    pub(super) fn set_serving_rates(overload: u32, spike: u32, spike_us: u32) {
+        seed_serving(); // later env reads must not clobber the override
+        OVERLOAD_PER_MILLE.store(overload, Ordering::Relaxed);
+        SPIKE_PER_MILLE.store(spike, Ordering::Relaxed);
+        SPIKE_US.store(spike_us, Ordering::Relaxed);
     }
 
     /// One splitmix64 step on a process-shared counter per roll;
@@ -1242,12 +1329,29 @@ enum Admission {
 /// existing behaviour is untouched). Low-class runs are shed first:
 /// they see a reduced slot limit and never block, even in
 /// [`Admission::Block`] mode.
+///
+/// PR 7 adds the deadline-infeasibility check **in front of** the
+/// budget: a run whose whole deadline is already shorter than the
+/// pool's observed dispatch-queue delay
+/// ([`ThreadPool::queue_delay_ewma`]) is rejected with
+/// [`GraphError::WouldMissDeadline`] *before* an inflight slot is
+/// taken — admitting it would burn budget on work guaranteed to be
+/// aborted, displacing runs that could still meet their deadlines.
+/// Inert (the EWMA is zero) unless a serving front-end feeds
+/// [`ThreadPool::note_queue_delay`].
 fn admit_run(
     pool: &ThreadPool,
     n_tasks: usize,
     class: RunPriority,
+    deadline: Option<Duration>,
     mode: Admission,
 ) -> Result<bool, GraphError> {
+    if let Some(d) = deadline {
+        let ewma = pool.inner().queue_delay_ewma();
+        if !ewma.is_zero() && d <= ewma {
+            return Err(GraphError::WouldMissDeadline);
+        }
+    }
     let low = matches!(class, RunPriority::Low);
     let block = mode == Admission::Block && !low;
     pool.inner().admit_run(n_tasks, low, block).map_err(|()| GraphError::Overloaded)
@@ -1284,7 +1388,8 @@ fn run_graph_admitted(
     if graph.nodes.is_empty() {
         return Ok(());
     }
-    let admitted = admit_run(pool, graph.nodes.len(), options.priority, admission)?;
+    let admitted =
+        admit_run(pool, graph.nodes.len(), options.priority, options.deadline, admission)?;
     let caller_assist = !options.no_caller_assist;
     let wake_mode = if caller_assist { WAKE_EC } else { WAKE_CONDVAR };
     let (state, generation) = launch_run(graph, pool, options, wake_mode, admitted)?;
@@ -1332,7 +1437,8 @@ pub(crate) fn run_graph_async<'g>(
             finished: true,
         });
     }
-    let admitted = admit_run(pool, graph.nodes.len(), options.priority, Admission::Block)?;
+    let admitted =
+        admit_run(pool, graph.nodes.len(), options.priority, options.deadline, Admission::Block)?;
     let (state, generation) = launch_run(graph, pool, options, WAKE_RUN_EC, admitted)?;
     Ok(RunHandle {
         graph,
@@ -1524,9 +1630,12 @@ impl Drop for RunHandle<'_> {
 /// This is the fleet combinator for `run_async` (PR 3 follow-up): the
 /// waiter parks on the run eventcount of the first still-pending
 /// handle's pool instead of spin-polling `is_done()`. Fleets spanning
-/// several pools stay live through the eventcount's 1 ms re-check
-/// backstop (see `PoolInner::wait_run`), so a completion on another
-/// pool is observed at most one backstop tick late.
+/// several pools stay live through a timer-parked re-check chain
+/// (PR 7, see `PoolInner::wait_run_backstopped`): a completion on
+/// another pool never notifies this pool's eventcount, so the
+/// `pool/timer.rs` min-heap thread re-wakes the waiter at 1, 2, 4, …,
+/// 8 ms until the fleet drains — replacing the retired per-waiter 1 ms
+/// timeout poll.
 ///
 /// Called from inside a task of a pool that any handle targets, this
 /// returns [`GraphError::RunFromWorker`] deterministically, exactly
@@ -1540,7 +1649,17 @@ pub fn wait_all(handles: &mut [RunHandle<'_>]) -> Result<(), GraphError> {
     }
     if let Some(pending) = handles.iter().position(|h| !h.is_done()) {
         let pool = handles[pending].pool.clone();
-        pool.wait_run(|| handles.iter().all(|h| h.is_done()));
+        if handles.iter().any(|h| !Arc::ptr_eq(&h.pool, &pool)) {
+            // Multi-pool fleet: other pools' completions cannot notify
+            // this pool's run eventcount — the 1 ms timer chain is the
+            // functional re-check, not just a defensive backstop.
+            pool.wait_run_backstopped(
+                || handles.iter().all(|h| h.is_done()),
+                Duration::from_millis(1),
+            );
+        } else {
+            pool.wait_run(|| handles.iter().all(|h| h.is_done()));
+        }
     }
     let mut result = Ok(());
     for h in handles.iter_mut() {
@@ -1562,8 +1681,8 @@ pub fn wait_all(handles: &mut [RunHandle<'_>]) -> Result<(), GraphError> {
 /// result.
 ///
 /// Parks on the first handle's pool run eventcount instead of
-/// spin-polling; multi-pool fleets ride the same 1 ms backstop as
-/// [`wait_all`]. On a thread already executing a task of that pool the
+/// spin-polling; multi-pool fleets ride the same timer-parked re-check
+/// chain as [`wait_all`]. On a thread already executing a task of that pool the
 /// wait *drains* pool tasks instead of parking (see
 /// `PoolInner::wait_run`), so it cannot deadlock a single-worker pool.
 ///
@@ -1576,7 +1695,14 @@ pub fn wait_any(handles: &mut [RunHandle<'_>]) -> usize {
         return done;
     }
     let pool = handles[0].pool.clone();
-    pool.wait_run(|| handles.iter().any(|h| h.is_done()));
+    if handles.iter().any(|h| !Arc::ptr_eq(&h.pool, &pool)) {
+        pool.wait_run_backstopped(
+            || handles.iter().any(|h| h.is_done()),
+            Duration::from_millis(1),
+        );
+    } else {
+        pool.wait_run(|| handles.iter().any(|h| h.is_done()));
+    }
     handles
         .iter()
         .position(|h| h.is_done())

@@ -59,4 +59,10 @@ pub use executor::{wait_all, wait_any, CancelToken, RunHandle, RunOptions};
 pub use schedule::RunPriority;
 pub use trace::{ShardDepthSample, SpanGuard, TraceEvent, Tracer};
 
-pub(crate) use executor::{execute_node, NodeRun};
+pub(crate) use executor::{chaos_inject_overload, execute_node, NodeRun};
+
+/// Runtime override for the chaos serving knobs (PR 7) — re-exported
+/// for the chaos-storm soak test; see
+/// `executor::chaos_set_serving_rates`.
+#[cfg(feature = "chaos")]
+pub use executor::chaos_set_serving_rates;

@@ -379,6 +379,7 @@ mod tests {
                 },
                 ShardSnapshot::default(),
             ],
+            ..PoolSnapshot::default()
         };
         t.sample_shard_depths(&snap);
         let samples = t.shard_depth_samples();

@@ -15,6 +15,8 @@
 //!   counters, inline continuation of the first ready successor.
 //! * [`baseline`] — comparator executors (centralized mutex queue,
 //!   thread-per-task, Taskflow-like fence-based work stealer).
+//! * [`serve`] — graph-as-a-service front-end: tenant-fair DRR
+//!   admission, budgeted retry with backoff, and brownout shedding.
 //! * [`runtime`] — PJRT client + artifact registry for AOT-compiled
 //!   HLO produced by `python/compile/aot.py`.
 //! * [`workloads`] — benchmark workload generators (fibonacci, linear
@@ -47,5 +49,6 @@ pub mod cli;
 pub mod graph;
 pub mod pool;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workloads;

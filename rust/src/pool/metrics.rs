@@ -194,6 +194,51 @@ pub struct PoolSnapshot {
     /// Low-class runs rejected by admission control (PR 6's shed-first
     /// overload policy).
     pub shed_runs: u64,
+    /// Dispatch-queue-delay EWMA in nanoseconds (PR 7): how long run
+    /// requests waited at a serving front-end before dispatch, as fed
+    /// by [`crate::pool::ThreadPool::note_queue_delay`]. Zero until a
+    /// front-end reports. The brownout controller and the
+    /// deadline-infeasibility admission check both key off this.
+    pub queue_delay_ewma_ns: u64,
+}
+
+/// Point-in-time view of one serving tenant (PR 7), produced by
+/// `serve::GraphService::tenant_snapshots`. Lives here rather than in
+/// `serve/` so the pool- and tenant-level metrics share one vocabulary
+/// (and one import) in benches and dashboards.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// Registry index of the tenant.
+    pub id: usize,
+    /// Human-readable tenant name.
+    pub name: String,
+    /// DRR weight — the tenant's share of dispatch grants under
+    /// contention.
+    pub weight: u32,
+    /// Requests currently granted and not yet completed.
+    pub inflight: usize,
+    /// Requests accepted into the dispatch queue.
+    pub submitted: u64,
+    /// Requests that completed successfully (goodput).
+    pub completed: u64,
+    /// Launch attempts beyond each request's first (retry traffic).
+    pub retries: u64,
+    /// Requests shed by brownout because the tenant's class is `Low`.
+    pub shed_low: u64,
+    /// Requests shed by brownout because the tenant was over quota.
+    pub shed_over_quota: u64,
+    /// Requests rejected as deadline-infeasible at admission.
+    pub shed_deadline: u64,
+    /// Requests that ultimately failed (retries exhausted or a
+    /// non-retryable error).
+    pub failed: u64,
+}
+
+impl TenantSnapshot {
+    /// Total requests shed or rejected before reaching the pool.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_low + self.shed_over_quota + self.shed_deadline
+    }
 }
 
 impl PoolSnapshot {
@@ -258,8 +303,8 @@ impl std::fmt::Display for PoolSnapshot {
         )?;
         writeln!(
             f,
-            "  lifecycle: alive_workers={} worker_revivals={} shed_runs={}",
-            self.alive_workers, self.worker_revivals, self.shed_runs
+            "  lifecycle: alive_workers={} worker_revivals={} shed_runs={} queue_delay_ewma={}ns",
+            self.alive_workers, self.worker_revivals, self.shed_runs, self.queue_delay_ewma_ns
         )?;
         for (i, w) in self.workers.iter().enumerate() {
             writeln!(

@@ -66,7 +66,7 @@ pub use event_count::EventCount;
 pub use fence_deque::{fence_deque, FenceStealer, FenceWorker};
 pub use injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_LANE, NUM_LANES};
 pub use handle::{JoinError, TaskHandle};
-pub use metrics::{PoolSnapshot, ShardSnapshot, WorkerMetrics, WorkerSnapshot};
+pub use metrics::{PoolSnapshot, ShardSnapshot, TenantSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use scope::Scope;
 pub use thread_pool::{InjectorKind, PoolConfig, ThreadPool};
 pub use topology::{PoolTopology, DEFAULT_SHARD_WORKERS};

@@ -113,9 +113,11 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+use super::timer;
 
 use super::deque::{deque, Steal, Stealer, Worker};
 use super::event_count::EventCount;
@@ -376,6 +378,15 @@ pub(crate) struct PoolInner {
     budget_ec: EventCount,
     /// Low-class runs rejected by admission (shed-first policy).
     shed_runs: AtomicU64,
+    /// Dispatch-queue-delay EWMA in nanoseconds (PR 7): how long a run
+    /// waited between arriving at a serving front-end and being
+    /// dispatched to the pool. Fed by [`ThreadPool::note_queue_delay`]
+    /// (the `serve::GraphService` gate reports every grant); consumed
+    /// by the deadline-infeasibility check at the admission seam and by
+    /// the serving tier's brownout controller. α = 1/8, relaxed
+    /// read-modify-write — a racy lost update just weights one sample
+    /// differently, which a load-level signal tolerates.
+    queue_delay_ewma_ns: AtomicU64,
     /// Workers currently inside `worker_loop` (PR 6): incremented at
     /// entry, decremented at exit. `metrics()` reports it so tests can
     /// assert the pool never silently shrinks after a panic.
@@ -460,6 +471,7 @@ impl ThreadPool {
             inflight_runs: AtomicUsize::new(0),
             budget_ec: EventCount::new(),
             shed_runs: AtomicU64::new(0),
+            queue_delay_ewma_ns: AtomicU64::new(0),
             alive_workers: AtomicUsize::new(0),
             worker_revivals: AtomicU64::new(0),
         });
@@ -575,7 +587,28 @@ impl ThreadPool {
             alive_workers: inner.alive_workers.load(Ordering::SeqCst),
             worker_revivals: inner.worker_revivals.load(Ordering::Relaxed),
             shed_runs: inner.shed_runs.load(Ordering::Relaxed),
+            queue_delay_ewma_ns: inner.queue_delay_ewma_ns.load(Ordering::Relaxed),
         }
+    }
+
+    /// Reports one observed dispatch-queue delay — how long a run
+    /// request waited between arriving at a front-end and being
+    /// dispatched to this pool (PR 7). Feeds the pool's queue-delay
+    /// EWMA, which backs [`ThreadPool::queue_delay_ewma`], the
+    /// deadline-infeasibility check at the graph admission seam
+    /// ([`crate::graph::GraphError::WouldMissDeadline`]), and the
+    /// serving tier's brownout controller. `serve::GraphService`
+    /// reports every grant automatically; call this directly only if
+    /// you run your own front-end.
+    pub fn note_queue_delay(&self, delay: Duration) {
+        self.inner.observe_queue_delay(delay);
+    }
+
+    /// The pool's dispatch-queue-delay EWMA (α = 1/8) over every
+    /// [`ThreadPool::note_queue_delay`] observation; zero until the
+    /// first one. The serving tier's load signal (PR 7).
+    pub fn queue_delay_ewma(&self) -> Duration {
+        self.inner.queue_delay_ewma()
     }
 
     /// Number of shards the pool's workers are grouped into (PR 5);
@@ -1061,7 +1094,7 @@ impl PoolInner {
             && self.pending_estimate().saturating_add(n_tasks) > self.max_queued_tasks
         {
             // Give the slot back; a waiter refused while we held it
-            // re-checks on the notify (or its 1 ms backstop).
+            // re-checks on the notify (or its timer-parked backstop).
             self.inflight_runs.fetch_sub(1, Ordering::SeqCst);
             self.budget_ec.notify_all();
             return false;
@@ -1077,7 +1110,7 @@ impl PoolInner {
     /// eventcount until a slot frees instead of failing; the graph
     /// layer never blocks Low-class runs (shed-first policy).
     pub(crate) fn admit_run(
-        &self,
+        self: &Arc<Self>,
         n_tasks: usize,
         low_class: bool,
         block: bool,
@@ -1085,25 +1118,43 @@ impl PoolInner {
         if self.max_inflight_runs == 0 && self.max_queued_tasks == 0 {
             return Ok(false);
         }
+        if self.try_take_slot(n_tasks, low_class) {
+            return Ok(true);
+        }
+        if !block {
+            if low_class {
+                self.shed_runs.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(());
+        }
+        // Park until a slot is released. Slot releases broadcast on
+        // budget_ec, but queue-pressure admission (`max_queued_tasks`)
+        // frees capacity through task completions that do **not**
+        // notify it — so a timer-parked backstop chain re-wakes the
+        // waiters with exponentially decaying urgency (1 → 5 ms)
+        // instead of the retired per-waiter 1 ms timeout poll: one
+        // timer-heap entry for the whole park, no periodic syscall
+        // wakeups on each blocked submitter (PR 7).
+        let live = Arc::new(AtomicBool::new(true));
+        spawn_backstop_chain(
+            Arc::downgrade(self),
+            live.clone(),
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            Backstop::Budget,
+        );
         loop {
             if self.try_take_slot(n_tasks, low_class) {
+                live.store(false, Ordering::SeqCst);
                 return Ok(true);
             }
-            if !block {
-                if low_class {
-                    self.shed_runs.fetch_add(1, Ordering::Relaxed);
-                }
-                return Err(());
-            }
-            // Park until a slot is released. The 1 ms backstop also
-            // covers queue-pressure admission, where capacity frees
-            // through task completions that do not notify budget_ec.
             let token = self.budget_ec.prepare_wait();
             if self.try_take_slot(n_tasks, low_class) {
                 self.budget_ec.cancel_wait(token);
+                live.store(false, Ordering::SeqCst);
                 return Ok(true);
             }
-            self.budget_ec.commit_wait_timeout(token, Duration::from_millis(1));
+            self.budget_ec.commit_wait(token);
         }
     }
 
@@ -1113,6 +1164,26 @@ impl PoolInner {
     pub(crate) fn release_run_slot(&self) {
         self.inflight_runs.fetch_sub(1, Ordering::SeqCst);
         self.budget_ec.notify_all();
+    }
+
+    /// Folds one observed dispatch-queue delay into the pool's EWMA
+    /// (PR 7): `ewma += (sample - ewma) / 8`. See the field docs for
+    /// why the racy read-modify-write is acceptable.
+    pub(crate) fn observe_queue_delay(&self, delay: Duration) {
+        let sample = delay.as_nanos().min(u64::MAX as u128) as u64;
+        let cur = self.queue_delay_ewma_ns.load(Ordering::Relaxed);
+        let next = if cur == 0 {
+            sample // first observation seeds the average
+        } else {
+            cur.wrapping_add((sample / 8).wrapping_sub(cur / 8))
+        };
+        self.queue_delay_ewma_ns.store(next, Ordering::Relaxed);
+    }
+
+    /// Current dispatch-queue-delay EWMA (PR 7); zero until the first
+    /// [`PoolInner::observe_queue_delay`].
+    pub(crate) fn queue_delay_ewma(&self) -> Duration {
+        Duration::from_nanos(self.queue_delay_ewma_ns.load(Ordering::Relaxed))
     }
 
     /// One random-start batched-steal sweep over the victim deques in
@@ -1271,8 +1342,9 @@ impl PoolInner {
     /// never swallowed; `is_done` must become true through pool task
     /// execution followed by [`PoolInner::notify_run_waiters`] (the
     /// SeqCst store/load pair plus the eventcount's prepare/re-check
-    /// protocol then guarantee a parked waiter observes it, and a 1 ms
-    /// timeout backstop makes liveness independent of that reasoning).
+    /// protocol then guarantee a parked waiter observes it, and a
+    /// timer-parked backstop chain makes liveness independent of that
+    /// reasoning — see [`PoolInner::wait_run_backstopped`]).
     ///
     /// On a thread that is already executing a task of this pool (a
     /// worker, or a caller-assist helper mid-task), parking could
@@ -1281,6 +1353,27 @@ impl PoolInner {
     /// *drains* instead: it executes pool tasks (every worker deque is
     /// reachable through its stealer) until `is_done` flips.
     pub(crate) fn wait_run(self: &Arc<Self>, is_done: impl Fn() -> bool) {
+        // Completions on this pool always notify run_ec, so the
+        // backstop here is purely defensive; start it late and let it
+        // decay so an idle waiter costs the timer heap almost nothing.
+        self.wait_run_backstopped(is_done, Duration::from_millis(25));
+    }
+
+    /// [`PoolInner::wait_run`] with an explicit first-backstop delay
+    /// (PR 7). Instead of the retired per-waiter 1 ms timeout poll,
+    /// each park schedules one self-rescheduling entry on the
+    /// `pool/timer.rs` min-heap that pokes `run_ec` at `initial`,
+    /// `2·initial`, … up to `8·initial`, and defuses the moment the
+    /// wait completes. Single-pool waits use a long defensive delay;
+    /// the multi-pool fleet combinators (`graph::wait_all` /
+    /// `wait_any`) pass 1 ms, because a completion on *another* pool
+    /// never notifies this pool's run eventcount and the chain is what
+    /// keeps the fleet wait live.
+    pub(crate) fn wait_run_backstopped(
+        self: &Arc<Self>,
+        is_done: impl Fn() -> bool,
+        initial: Duration,
+    ) {
         if self.on_worker_thread() || self.on_assisting_thread() {
             let mut rng = XorShift64Star::from_entropy();
             while !is_done() {
@@ -1296,17 +1389,29 @@ impl PoolInner {
             }
             return;
         }
+        if is_done() {
+            return;
+        }
+        let live = Arc::new(AtomicBool::new(true));
+        spawn_backstop_chain(
+            Arc::downgrade(self),
+            live.clone(),
+            initial,
+            initial.saturating_mul(8),
+            Backstop::RunWaiters,
+        );
         loop {
             if is_done() {
-                return;
+                break;
             }
             let token = self.run_ec.prepare_wait();
             if is_done() {
                 self.run_ec.cancel_wait(token);
-                return;
+                break;
             }
-            self.run_ec.commit_wait_timeout(token, Duration::from_millis(1));
+            self.run_ec.commit_wait(token);
         }
+        live.store(false, Ordering::SeqCst);
     }
 
     /// One find-task attempt for a caller-assist helper: home-shard
@@ -1439,6 +1544,50 @@ impl PoolInner {
         let _finish = FinishGuard { pool: self, index };
         job.run(self, index);
     }
+}
+
+/// Which eventcount a timer-parked wait backstop pokes (PR 7).
+#[derive(Clone, Copy)]
+enum Backstop {
+    /// `budget_ec` — blocked admission (`PoolInner::admit_run`).
+    Budget,
+    /// `run_ec` — run-completion waiters (`PoolInner::wait_run`).
+    RunWaiters,
+}
+
+/// Schedules one self-rescheduling backstop entry on the
+/// `pool/timer.rs` min-heap: at `delay` it re-wakes the parked waiters
+/// of `which`, then re-arms with the delay doubled (capped at `max`)
+/// while `live` stays set. This replaces the retired per-waiter 1 ms
+/// `commit_wait_timeout` polls (PR 7): a blocked thread now parks
+/// indefinitely on its eventcount and the timer thread carries the
+/// liveness guarantee — one heap entry per parked wait instead of a
+/// thousand timed wakeups per waiter-second. The chain self-defuses
+/// when `live` clears or the pool is dropped (`Weak` upgrade fails),
+/// so a stale entry after the wait completes is a no-op.
+fn spawn_backstop_chain(
+    weak: Weak<PoolInner>,
+    live: Arc<AtomicBool>,
+    delay: Duration,
+    max: Duration,
+    which: Backstop,
+) {
+    timer::schedule_after(
+        delay,
+        Box::new(move || {
+            if !live.load(Ordering::SeqCst) {
+                return;
+            }
+            if let Some(pool) = weak.upgrade() {
+                match which {
+                    Backstop::Budget => pool.budget_ec.notify_all(),
+                    Backstop::RunWaiters => pool.run_ec.notify_all(),
+                }
+                let next = delay.saturating_mul(2).min(max);
+                spawn_backstop_chain(Arc::downgrade(&pool), live, next, max, which);
+            }
+        }),
+    );
 }
 
 fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
@@ -1817,7 +1966,8 @@ mod tests {
     fn wait_run_parks_until_predicate_flips() {
         // The non-assisting run-completion wait: the caller parks on
         // the dedicated run eventcount and is released by
-        // notify_run_waiters (with the 1 ms backstop behind it).
+        // notify_run_waiters (with the timer-parked backstop chain
+        // behind it).
         let pool = ThreadPool::new(2);
         let done = Arc::new(AtomicUsize::new(0));
         let d = done.clone();

@@ -132,6 +132,14 @@ pub(crate) fn schedule_at(at: Instant, fire: Box<dyn FnOnce() + Send>) {
     }
 }
 
+/// [`schedule_at`] with a relative delay — the common case for retry
+/// backoff (PR 7, `serve/retry.rs`) and the parked wait backstops
+/// (`thread_pool.rs`), where callers think in "this long from now"
+/// rather than absolute instants.
+pub(crate) fn schedule_after(delay: std::time::Duration, fire: Box<dyn FnOnce() + Send>) {
+    schedule_at(Instant::now() + delay, fire);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,309 @@
+//! Brownout: graceful degradation driven by queue delay (PR 7).
+//!
+//! A service that accepts everything under sustained overload serves
+//! *nobody* well — queues grow without bound and every request misses
+//! its deadline. The brownout controller instead watches the one signal
+//! that directly measures how far behind the pool is (**queue delay**:
+//! time from a request's grant to its launch actually being accepted,
+//! folded into an EWMA) and, when it stays high, starts shedding load
+//! in a documented order:
+//!
+//! 1. [`BrownoutLevel::ShedLow`] — requests from `Low`-class tenants
+//!    are rejected at the dispatch gate ([`crate::serve::ShedReason::Low`]).
+//!    This mirrors PR 6's pool-side Low-shed-first budget policy, one
+//!    layer earlier.
+//! 2. [`BrownoutLevel::ShedOverQuota`] — additionally, tenants holding
+//!    more than their fair share of the service's inflight slots (their
+//!    DRR-weight proportion) get their *excess* queue rejected
+//!    ([`crate::serve::ShedReason::OverQuota`]). Well-behaved tenants
+//!    within quota are untouched.
+//!
+//! Deadline-infeasible requests (deadline ≤ current queue-delay EWMA)
+//! are rejected with [`crate::graph::GraphError::WouldMissDeadline`] at
+//! *every* level, including `Normal` — there is no point admitting work
+//! that is already guaranteed to be aborted.
+//!
+//! Recovery is **hysteretic** in both directions so the controller
+//! cannot flap: escalation requires `enter_after` *consecutive*
+//! over-threshold observations (one bad sample does not brown the
+//! service out), and de-escalation steps down one level at a time only
+//! after `exit_hold` has elapsed without an over-threshold observation
+//! (a clean spell must be sustained, and a two-level brownout takes two
+//! holds to fully clear).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+/// Current degradation level, in shedding order. Levels are cumulative:
+/// `ShedOverQuota` implies `ShedLow`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutLevel {
+    /// No shedding; all admission decisions are fairness + deadline
+    /// feasibility only.
+    Normal,
+    /// Requests from `Low`-class tenants are shed at the gate.
+    ShedLow,
+    /// Additionally, queued requests of tenants over their fair
+    /// inflight share are shed.
+    ShedOverQuota,
+}
+
+impl BrownoutLevel {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => Self::Normal,
+            1 => Self::ShedLow,
+            _ => Self::ShedOverQuota,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Self::Normal => 0,
+            Self::ShedLow => 1,
+            Self::ShedOverQuota => 2,
+        }
+    }
+}
+
+/// Thresholds and hysteresis of the [`BrownoutController`].
+#[derive(Debug, Clone)]
+pub struct BrownoutConfig {
+    /// Queue-delay EWMA above which an observation counts as
+    /// over-threshold.
+    pub enter: Duration,
+    /// Consecutive over-threshold observations required to escalate
+    /// one level (clamped to ≥ 1).
+    pub enter_after: u32,
+    /// Quiet time (no over-threshold observation) required to step
+    /// *down* one level.
+    pub exit_hold: Duration,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        Self {
+            enter: Duration::from_millis(5),
+            enter_after: 8,
+            exit_hold: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Hysteretic queue-delay → shedding-level state machine.
+///
+/// `observe` is called with each fresh queue-delay sample (the service
+/// samples on every dispatch grant); `level` is called at each gate
+/// decision and lazily applies time-based decay. All state is atomic —
+/// both methods are safe to call concurrently from many client
+/// threads, and the worst a race can do is delay an escalation or
+/// decay by one observation.
+#[derive(Debug)]
+pub struct BrownoutController {
+    cfg: BrownoutConfig,
+    /// Base instant for the monotonic nanosecond clock stored in
+    /// `last_high_ns` (an `Instant` cannot live in an atomic).
+    epoch: Instant,
+    /// Queue-delay EWMA, α = 1/8; 0 = no samples yet.
+    ewma_ns: AtomicU64,
+    /// Consecutive over-threshold observations since the last reset.
+    high_streak: AtomicU32,
+    /// Current `BrownoutLevel` as u8.
+    level: AtomicU8,
+    /// Nanoseconds since `epoch` of the most recent over-threshold
+    /// observation — the hold timer that gates decay.
+    last_high_ns: AtomicU64,
+}
+
+impl BrownoutController {
+    /// Creates a controller at [`BrownoutLevel::Normal`].
+    pub fn new(cfg: BrownoutConfig) -> Self {
+        Self {
+            cfg,
+            epoch: Instant::now(),
+            ewma_ns: AtomicU64::new(0),
+            high_streak: AtomicU32::new(0),
+            level: AtomicU8::new(0),
+            last_high_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Folds one queue-delay sample into the EWMA and updates the
+    /// escalation state machine.
+    pub fn observe(&self, delay: Duration) {
+        let sample = delay.as_nanos() as u64;
+        let cur = self.ewma_ns.load(Ordering::Relaxed);
+        let next = if cur == 0 {
+            sample
+        } else {
+            // cur + sample/8 - cur/8; exact value is non-critical
+            // (racy RMW is fine — this is a smoothing filter).
+            cur.wrapping_add(sample / 8).wrapping_sub(cur / 8)
+        };
+        self.ewma_ns.store(next.max(1), Ordering::Relaxed);
+
+        if Duration::from_nanos(next) > self.cfg.enter {
+            self.last_high_ns.store(self.now_ns(), Ordering::Relaxed);
+            let streak = self.high_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= self.cfg.enter_after.max(1) {
+                self.high_streak.store(0, Ordering::Relaxed);
+                // Escalate one level, saturating at ShedOverQuota.
+                let _ = self.level.fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |l| if l < 2 { Some(l + 1) } else { None },
+                );
+            }
+        } else {
+            self.high_streak.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Current level, after applying hold-based decay: each full
+    /// `exit_hold` of quiet (no over-threshold observation) steps the
+    /// level down once, restarting the hold so a deep brownout unwinds
+    /// gradually rather than all at once.
+    pub fn level(&self) -> BrownoutLevel {
+        let mut lvl = self.level.load(Ordering::Relaxed);
+        if lvl == 0 {
+            return BrownoutLevel::Normal;
+        }
+        let hold = self.cfg.exit_hold.as_nanos() as u64;
+        let now = self.now_ns();
+        loop {
+            let last = self.last_high_ns.load(Ordering::Relaxed);
+            if lvl == 0 || now.saturating_sub(last) < hold.max(1) {
+                break;
+            }
+            // One hold elapsed quietly: step down and restart the hold
+            // (advance last_high so the next step needs another full
+            // hold). CAS on level so concurrent callers decay once.
+            match self.level.compare_exchange(
+                lvl,
+                lvl - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    let _ = self.last_high_ns.compare_exchange(
+                        last,
+                        last + hold.max(1),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    );
+                    lvl -= 1;
+                }
+                Err(actual) => lvl = actual,
+            }
+        }
+        BrownoutLevel::from_u8(lvl)
+    }
+
+    /// Current queue-delay EWMA (zero until the first sample).
+    pub fn ewma(&self) -> Duration {
+        Duration::from_nanos(self.ewma_ns.load(Ordering::Relaxed))
+    }
+
+    /// Test-only: force the controller to a level with the hold timer
+    /// freshly armed, so shed behavior can be exercised without
+    /// synthesizing sample streams.
+    #[cfg(test)]
+    pub(crate) fn force_level(&self, level: BrownoutLevel) {
+        self.level.store(level.as_u8(), Ordering::Relaxed);
+        self.last_high_ns.store(self.now_ns(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(enter_ms: u64, enter_after: u32, hold_ms: u64) -> BrownoutConfig {
+        BrownoutConfig {
+            enter: Duration::from_millis(enter_ms),
+            enter_after,
+            exit_hold: Duration::from_millis(hold_ms),
+        }
+    }
+
+    #[test]
+    fn starts_normal_and_ignores_single_spikes() {
+        let c = BrownoutController::new(cfg(1, 4, 1000));
+        assert_eq!(c.level(), BrownoutLevel::Normal);
+        // 3 high observations < enter_after=4: no escalation, and a
+        // low observation resets the streak.
+        for _ in 0..3 {
+            c.observe(Duration::from_millis(50));
+        }
+        assert_eq!(c.level(), BrownoutLevel::Normal);
+        for _ in 0..64 {
+            c.observe(Duration::ZERO); // drive EWMA back under enter
+        }
+        for _ in 0..3 {
+            c.observe(Duration::from_millis(50));
+        }
+        assert_eq!(c.level(), BrownoutLevel::Normal, "streak must reset on quiet samples");
+    }
+
+    #[test]
+    fn sustained_overload_escalates_one_level_at_a_time() {
+        let c = BrownoutController::new(cfg(1, 4, 10_000));
+        for _ in 0..4 {
+            c.observe(Duration::from_millis(50));
+        }
+        assert_eq!(c.level(), BrownoutLevel::ShedLow);
+        for _ in 0..3 {
+            c.observe(Duration::from_millis(50));
+        }
+        assert_eq!(c.level(), BrownoutLevel::ShedLow, "second escalation needs a full streak");
+        c.observe(Duration::from_millis(50));
+        assert_eq!(c.level(), BrownoutLevel::ShedOverQuota);
+        for _ in 0..16 {
+            c.observe(Duration::from_millis(50));
+        }
+        assert_eq!(c.level(), BrownoutLevel::ShedOverQuota, "saturates at the top level");
+    }
+
+    #[test]
+    fn recovery_is_hysteretic_and_stepwise() {
+        // Tiny hold so the test can actually wait it out.
+        let c = BrownoutController::new(cfg(1, 1, 20));
+        c.observe(Duration::from_millis(50));
+        c.observe(Duration::from_millis(50));
+        assert_eq!(c.level(), BrownoutLevel::ShedOverQuota);
+        // Immediately after the last high observation: no decay yet.
+        assert_eq!(c.level(), BrownoutLevel::ShedOverQuota);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(c.level(), BrownoutLevel::ShedLow, "one hold unwinds one level");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(c.level(), BrownoutLevel::Normal, "second hold fully recovers");
+    }
+
+    #[test]
+    fn high_traffic_resets_the_hold() {
+        let c = BrownoutController::new(cfg(1, 1, 40));
+        c.observe(Duration::from_millis(50));
+        assert_eq!(c.level(), BrownoutLevel::ShedLow);
+        // Keep observing high before the hold elapses: never decays.
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(10));
+            c.observe(Duration::from_millis(50));
+        }
+        assert!(c.level() >= BrownoutLevel::ShedLow, "ongoing overload must hold the level");
+    }
+
+    #[test]
+    fn ewma_seeds_and_tracks() {
+        let c = BrownoutController::new(BrownoutConfig::default());
+        assert_eq!(c.ewma(), Duration::ZERO);
+        c.observe(Duration::from_millis(8));
+        assert_eq!(c.ewma(), Duration::from_millis(8), "first sample seeds the filter");
+        c.observe(Duration::ZERO);
+        assert!(c.ewma() < Duration::from_millis(8));
+        assert!(c.ewma() > Duration::ZERO);
+    }
+}

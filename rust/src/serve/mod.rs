@@ -1,0 +1,59 @@
+//! Graph-as-a-service: the in-process serving front-end (PR 7).
+//!
+//! Everything below `serve/` turns the pool + graph executor into
+//! something that can face sustained, adversarial traffic: many
+//! concurrent clients, tenants with very different importance, storms,
+//! transient overload, and deadline-carrying requests. The pieces:
+//!
+//! * [`GraphService`] (`service.rs`) — the front-end. Clients call
+//!   [`GraphService::run`] from any number of threads; each request is
+//!   parked in a per-tenant dispatch queue and granted in
+//!   **deficit-round-robin** order weighted by tenant, so one tenant's
+//!   storm cannot starve another. Granted requests launch on the pool
+//!   with the tenant's PR-4 run class and PR-5 shard pin, under the
+//!   tenant's own inflight cap — enforced *before* the pool-wide PR-6
+//!   admission budget ever sees the run.
+//! * [`TenantSpec`] / [`TenantId`] (`tenant.rs`) — the tenant registry:
+//!   DRR weight, run class, shard pin, inflight cap, default deadline.
+//! * [`RetryPolicy`] (`retry.rs`) — retry with exponential backoff and
+//!   jitter for `Overloaded` / `DeadlineExceeded` outcomes, bounded by
+//!   a **retry budget** replenished as a fraction of goodput so retries
+//!   can never amplify an overload. Backoff timers park on the
+//!   `pool/timer.rs` min-heap thread.
+//! * [`BrownoutController`] (`brownout.rs`) — graceful degradation: a
+//!   queue-delay EWMA drives a small state machine that sheds work in
+//!   documented order (Low-class tenants first, then over-quota
+//!   backlogs, while deadline-infeasible requests are always rejected
+//!   at admission) and recovers hysteretically.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//! client thread                    service gate                 pool
+//! ------------- enqueue ---------> per-tenant DRR queue
+//!      (parks on its ticket)          | pump(): weighted grants,
+//!                                     | brownout sheds, deadline
+//!                                     | feasibility
+//! <------------ grant/shed ----------'
+//!   grant: queue-delay sample -> pool EWMA + brownout
+//!   try_run(class, shard, remaining deadline) ----------------> run
+//! <------------------- Ok | Overloaded | DeadlineExceeded | ... ----
+//!   Ok        -> goodput, retry budget refill
+//!   retryable -> backoff timer (pool/timer.rs) -> re-enqueue
+//!   otherwise -> ServeError::Failed
+//! ```
+//!
+//! The service is deliberately **in-process**: the ROADMAP's follow-up
+//! direction (a small TCP/HTTP binary in `rust/src/bin/`) can wrap
+//! [`GraphService`] without touching the fairness or degradation
+//! machinery.
+
+mod brownout;
+mod retry;
+mod service;
+mod tenant;
+
+pub use brownout::{BrownoutConfig, BrownoutController, BrownoutLevel};
+pub use retry::RetryPolicy;
+pub use service::{GraphService, ServeError, ServiceConfig, ShedReason};
+pub use tenant::{TenantId, TenantSpec};

@@ -1,0 +1,226 @@
+//! Retry with backoff, bounded by a goodput-coupled budget (PR 7).
+//!
+//! Two halves. [`RetryPolicy`] is the per-request schedule: which
+//! outcomes are retryable, how many attempts, and an exponential
+//! backoff with downward jitter (full-jitter style — the deterministic
+//! upper envelope doubles per attempt, the actual delay is drawn
+//! uniformly below it, so synchronized clients decorrelate instead of
+//! re-storming in lockstep). [`RetryBudget`] is the service-wide
+//! brake: a token bucket that refills **as a fraction of goodput**
+//! (each success deposits `budget_ratio` of a token), so under
+//! *transient* overload there is headroom to retry, while under
+//! *permanent* overload successes stop, the bucket drains, and retry
+//! amplification is capped at the initial allowance — the classic
+//! defense against retry storms turning an overload into an outage.
+//!
+//! Backoff delays are parked on the `pool/timer.rs` min-heap thread
+//! (`GraphService` schedules the wake and the client thread sleeps on
+//! a condvar), so a thousand backing-off requests cost a thousand heap
+//! entries, not a thousand spinning threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::graph::GraphError;
+
+/// Retry schedule applied by [`crate::serve::GraphService`] to
+/// `Overloaded` and `DeadlineExceeded` outcomes.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total launch attempts per request, including the first
+    /// (clamped to ≥ 1; `1` disables retries).
+    pub max_attempts: u32,
+    /// Backoff envelope before the first retry; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Cap on the backoff envelope.
+    pub max_backoff: Duration,
+    /// Fraction of the envelope randomized away (0.0 = deterministic,
+    /// 1.0 = full jitter drawing uniformly from (0, envelope]).
+    pub jitter: f64,
+    /// Retry-budget refill per successful request, in tokens (a retry
+    /// spends one token). `0.1` means sustained retry traffic is
+    /// capped at 10% of goodput.
+    pub budget_ratio: f64,
+    /// Tokens available before any success — the allowance that covers
+    /// cold-start and transient blips.
+    pub initial_budget: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(64),
+            jitter: 0.5,
+            budget_ratio: 0.1,
+            initial_budget: 8,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: every request gets exactly one launch attempt.
+    pub fn disabled() -> Self {
+        Self {
+            max_attempts: 1,
+            initial_budget: 0,
+            budget_ratio: 0.0,
+            ..Self::default()
+        }
+    }
+
+    /// Whether `error` is worth retrying: overload and blown deadlines
+    /// are load conditions that backoff can outwait; everything else
+    /// (cycle, panic, cancel, worker-context misuse) is deterministic
+    /// and would fail identically again.
+    pub fn retryable(error: &GraphError) -> bool {
+        matches!(error, GraphError::Overloaded | GraphError::DeadlineExceeded)
+    }
+
+    /// Backoff before retry number `attempt` (1-based: `1` = the delay
+    /// between the first failure and the second attempt). `rng_bits`
+    /// supplies the jitter draw — pass fresh random bits per call.
+    pub fn backoff(&self, attempt: u32, rng_bits: u64) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16);
+        let envelope = self
+            .base_backoff
+            .saturating_mul(1u32 << exp)
+            .min(self.max_backoff)
+            .max(Duration::from_micros(1));
+        // Uniform draw in [0, 1) from the top 53 bits.
+        let u = (rng_bits >> 11) as f64 / (1u64 << 53) as f64;
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        envelope.mul_f64(1.0 - jitter * u)
+    }
+}
+
+/// Milli-token bucket behind the retry budget. Tokens are stored
+/// ×1000 so fractional `budget_ratio` refills accumulate exactly.
+#[derive(Debug)]
+pub(crate) struct RetryBudget {
+    tokens_milli: AtomicU64,
+    refill_milli: u64,
+    cap_milli: u64,
+}
+
+impl RetryBudget {
+    pub(crate) fn new(policy: &RetryPolicy) -> Self {
+        let initial = u64::from(policy.initial_budget) * 1000;
+        Self {
+            tokens_milli: AtomicU64::new(initial),
+            refill_milli: (policy.budget_ratio.clamp(0.0, 1000.0) * 1000.0) as u64,
+            // Room to bank a burst allowance beyond the starting
+            // tokens, but never unbounded accrual during long calm
+            // stretches.
+            cap_milli: (initial * 2).max(16_000),
+        }
+    }
+
+    /// Deposits the per-success refill, saturating at the cap. The
+    /// load/store clamp races with concurrent deposits; the budget is
+    /// a brake, not a ledger, so losing a fraction of a token to a
+    /// race is fine.
+    pub(crate) fn on_success(&self) {
+        let after = self.tokens_milli.fetch_add(self.refill_milli, Ordering::Relaxed)
+            + self.refill_milli;
+        if after > self.cap_milli {
+            self.tokens_milli.store(self.cap_milli, Ordering::Relaxed);
+        }
+    }
+
+    /// Takes one whole token if available — the gate each retry must
+    /// pass. CAS loop so concurrent takers cannot double-spend.
+    pub(crate) fn try_take(&self) -> bool {
+        let mut cur = self.tokens_milli.load(Ordering::Relaxed);
+        loop {
+            if cur < 1000 {
+                return false;
+            }
+            match self.tokens_milli.compare_exchange_weak(
+                cur,
+                cur - 1000,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Whole tokens currently available (diagnostics).
+    pub(crate) fn tokens(&self) -> u64 {
+        self.tokens_milli.load(Ordering::Relaxed) / 1000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_envelope_doubles_and_caps() {
+        let p = RetryPolicy {
+            jitter: 0.0,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(4),
+            ..RetryPolicy::default()
+        };
+        assert_eq!(p.backoff(1, 0), Duration::from_millis(1));
+        assert_eq!(p.backoff(2, 0), Duration::from_millis(2));
+        assert_eq!(p.backoff(3, 0), Duration::from_millis(4));
+        assert_eq!(p.backoff(9, 0), Duration::from_millis(4), "caps at max_backoff");
+    }
+
+    #[test]
+    fn jitter_only_shrinks_and_stays_positive() {
+        let p = RetryPolicy { jitter: 1.0, ..RetryPolicy::default() };
+        let envelope = p.backoff(3, 0); // u = 0 -> full envelope
+        for bits in [1u64, u64::MAX, 0x1234_5678_9ABC_DEF0] {
+            let d = p.backoff(3, bits);
+            assert!(d <= envelope, "jitter must not exceed the envelope");
+            assert!(d > Duration::ZERO, "jitter must not reach zero");
+        }
+    }
+
+    #[test]
+    fn retryable_is_load_conditions_only() {
+        assert!(RetryPolicy::retryable(&GraphError::Overloaded));
+        assert!(RetryPolicy::retryable(&GraphError::DeadlineExceeded));
+        assert!(!RetryPolicy::retryable(&GraphError::Cancelled));
+        assert!(!RetryPolicy::retryable(&GraphError::RunFromWorker));
+        assert!(!RetryPolicy::retryable(&GraphError::WouldMissDeadline));
+    }
+
+    #[test]
+    fn budget_drains_without_successes_and_refills_with_them() {
+        let p = RetryPolicy {
+            initial_budget: 2,
+            budget_ratio: 0.5,
+            ..RetryPolicy::default()
+        };
+        let b = RetryBudget::new(&p);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "initial allowance exhausted");
+        b.on_success(); // +0.5 token
+        assert!(!b.try_take(), "half a token is not a token");
+        b.on_success();
+        assert!(b.try_take(), "two successes at ratio 0.5 buy one retry");
+    }
+
+    #[test]
+    fn budget_caps_accrual() {
+        let p = RetryPolicy {
+            initial_budget: 1,
+            budget_ratio: 1.0,
+            ..RetryPolicy::default()
+        };
+        let b = RetryBudget::new(&p);
+        for _ in 0..100_000 {
+            b.on_success();
+        }
+        assert!(b.tokens() <= 16, "bucket must not accrue unboundedly");
+    }
+}

@@ -1,0 +1,650 @@
+//! The graph-serving front-end (PR 7): tenant-fair admission, retry
+//! with a bounded budget, and brownout shedding, in front of the pool.
+//!
+//! # Design: an admission gate, not a dispatcher
+//!
+//! [`crate::graph::RunHandle`] borrows its graph (`RunHandle<'g>`), so
+//! a queue of *graphs* owned by a dispatcher thread is impossible
+//! without giving up the zero-copy borrow model. Instead the service
+//! queues **callers**: each [`GraphService::run`] parks its thread on a
+//! ticket in a per-tenant FIFO; a pump (run under the gate lock by
+//! whichever thread last changed state — enqueue or completion) grants
+//! tickets in deficit-round-robin order, and the granted caller then
+//! launches its own graph on the pool. The graph never changes hands,
+//! so everything from PR 2's zero-alloc re-runs to PR 6's lifecycle
+//! keeps working unchanged underneath the service.
+//!
+//! Admission is layered, cheapest rejection first:
+//!
+//! 1. **Deadline feasibility** — if the request's remaining deadline is
+//!    already ≤ the queue-delay EWMA, it is rejected with
+//!    [`GraphError::WouldMissDeadline`] before holding any slot.
+//! 2. **Brownout shedding** — at [`BrownoutLevel::ShedLow`] the gate
+//!    sheds Low-class tenants' queues; at
+//!    [`BrownoutLevel::ShedOverQuota`] also the queues of tenants
+//!    holding ≥ their weight-proportional share of inflight slots.
+//! 3. **DRR grant** — remaining queued tickets are granted in
+//!    weight-proportional order, bounded by each tenant's
+//!    `max_inflight` and the service-wide [`ServiceConfig::max_inflight`].
+//! 4. **Pool budget** — the launch itself uses the non-blocking
+//!    [`crate::graph::TaskGraph::try_run_with_options`] path, so PR 6's
+//!    pool-wide budget stays the final authority; its `Overloaded` is
+//!    what the retry machinery absorbs.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::graph::{chaos_inject_overload, GraphError, RunOptions, RunPriority, TaskGraph};
+use crate::pool::{TenantSnapshot, ThreadPool};
+use crate::util::XorShift64Star;
+
+use super::brownout::{BrownoutConfig, BrownoutController, BrownoutLevel};
+use super::retry::{RetryBudget, RetryPolicy};
+use super::tenant::{TenantId, TenantSpec, TenantState};
+
+/// Why the gate refused a request without launching it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Brownout at [`BrownoutLevel::ShedLow`] or worse and the tenant's
+    /// class is `Low`.
+    Low,
+    /// Brownout at [`BrownoutLevel::ShedOverQuota`] and the tenant held
+    /// at least its weight-proportional share of inflight slots.
+    OverQuota,
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Low => write!(f, "brownout shed (low-class tenant)"),
+            Self::OverQuota => write!(f, "brownout shed (tenant over its inflight quota)"),
+        }
+    }
+}
+
+/// Terminal outcome of a [`GraphService::run`] request.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The [`TenantId`] was not issued by this service.
+    UnknownTenant,
+    /// The brownout controller shed the request at the gate; the graph
+    /// was never launched.
+    Shed(ShedReason),
+    /// The run failed with a non-retryable error (including
+    /// [`GraphError::WouldMissDeadline`] from the feasibility check).
+    Failed(GraphError),
+    /// Every allowed attempt failed with a retryable error (or the
+    /// retry budget ran dry first). `last` is the final attempt's
+    /// error.
+    RetriesExhausted {
+        /// Launch attempts actually made (≥ 1).
+        attempts: u32,
+        /// Error of the last attempt.
+        last: GraphError,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::UnknownTenant => write!(f, "tenant id was not issued by this service"),
+            Self::Shed(r) => write!(f, "request shed at admission: {r}"),
+            Self::Failed(e) => write!(f, "run failed: {e}"),
+            Self::RetriesExhausted { attempts, last } => {
+                write!(f, "retries exhausted after {attempts} attempts; last error: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Service-wide knobs. Per-tenant knobs live in [`TenantSpec`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Total requests granted (launched or launching) at once across
+    /// all tenants — the service's own concurrency ceiling, enforced
+    /// before the pool-wide PR 6 budget. Clamped to ≥ 1.
+    pub max_inflight: usize,
+    /// Retry schedule and budget for `Overloaded` /
+    /// `DeadlineExceeded` outcomes.
+    pub retry: RetryPolicy,
+    /// Brownout thresholds and hysteresis.
+    pub brownout: BrownoutConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_inflight: 32,
+            retry: RetryPolicy::default(),
+            brownout: BrownoutConfig::default(),
+        }
+    }
+}
+
+/// Ticket states. `WAITING → GRANTED | SHED_* | INFEASIBLE`, written
+/// only by the pump (under the gate lock), read by the parked caller.
+const WAITING: u8 = 0;
+const GRANTED: u8 = 1;
+const SHED_LOW: u8 = 2;
+const SHED_OVER_QUOTA: u8 = 3;
+const INFEASIBLE: u8 = 4;
+
+/// One parked request: the caller thread waits on the gate condvar
+/// until the pump resolves its ticket.
+struct Ticket {
+    state: AtomicU8,
+    enqueued: Instant,
+    deadline_at: Option<Instant>,
+}
+
+/// Everything the DRR pump mutates, under one mutex. `queues[i]`,
+/// `deficits[i]` and `tenants[i]` are parallel arrays indexed by
+/// [`TenantId`].
+struct GateState {
+    tenants: Vec<Arc<TenantState>>,
+    queues: Vec<VecDeque<Arc<Ticket>>>,
+    /// DRR deficit counters, in milli-grants (one grant costs
+    /// [`DRR_COST`]).
+    deficits: Vec<u64>,
+    /// Round-robin position of the pump across tenants.
+    cursor: usize,
+    /// Requests granted and not yet finished, service-wide.
+    inflight: usize,
+}
+
+/// DRR cost of one grant; a tenant's per-visit deposit is
+/// `weight × DRR_COST`, so weights divide grants proportionally.
+const DRR_COST: u64 = 1000;
+/// Deficit cap in multiples of a tenant's per-visit deposit — bounds
+/// how large a burst an idle-then-capped tenant can bank.
+const DRR_BURST: u64 = 8;
+
+/// Multi-tenant serving front-end over one [`ThreadPool`]. See the
+/// [module docs](self) for the admission pipeline and
+/// [`crate::serve`] for the whole serving tier.
+///
+/// The service is `Sync`: any number of client threads call
+/// [`GraphService::run`] concurrently, each bringing its own
+/// [`TaskGraph`].
+pub struct GraphService {
+    pool: ThreadPool,
+    cfg: ServiceConfig,
+    gate: Mutex<GateState>,
+    gate_cv: Condvar,
+    pub(crate) brownout: BrownoutController,
+    budget: RetryBudget,
+}
+
+impl GraphService {
+    /// Wraps `pool` in a serving front-end. The pool is owned by the
+    /// service ([`GraphService::pool`] lends it back for direct use —
+    /// runs launched directly on the pool simply bypass the gate).
+    pub fn new(pool: ThreadPool, cfg: ServiceConfig) -> Self {
+        let brownout = BrownoutController::new(cfg.brownout.clone());
+        let budget = RetryBudget::new(&cfg.retry);
+        Self {
+            pool,
+            cfg: ServiceConfig {
+                max_inflight: cfg.max_inflight.max(1),
+                ..cfg
+            },
+            gate: Mutex::new(GateState {
+                tenants: Vec::new(),
+                queues: Vec::new(),
+                deficits: Vec::new(),
+                cursor: 0,
+                inflight: 0,
+            }),
+            gate_cv: Condvar::new(),
+            brownout,
+            budget,
+        }
+    }
+
+    /// The pool behind the service.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Registers a tenant; the returned [`TenantId`] keys every
+    /// subsequent [`GraphService::run`] call. Tenants cannot be
+    /// unregistered (a serving roster is static per deployment).
+    pub fn register_tenant(&self, spec: TenantSpec) -> TenantId {
+        let mut st = self.gate.lock().unwrap();
+        st.tenants.push(Arc::new(TenantState::new(spec)));
+        st.queues.push(VecDeque::new());
+        st.deficits.push(0);
+        TenantId(st.tenants.len() - 1)
+    }
+
+    /// Per-tenant counter snapshots, in registration order.
+    pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        let st = self.gate.lock().unwrap();
+        st.tenants.iter().enumerate().map(|(i, t)| t.snapshot(i)).collect()
+    }
+
+    /// Current brownout level (degradation state of the gate).
+    pub fn brownout_level(&self) -> BrownoutLevel {
+        self.brownout.level()
+    }
+
+    /// Queue-delay EWMA observed by the gate (grant latency of
+    /// recently admitted requests). Zero until the first grant.
+    pub fn queue_delay_ewma(&self) -> Duration {
+        self.brownout.ewma()
+    }
+
+    /// Whole retry-budget tokens currently available. Diagnostics —
+    /// the amplification-cap test asserts this drains under permanent
+    /// overload.
+    pub fn retry_tokens(&self) -> u64 {
+        self.budget.tokens()
+    }
+
+    /// Runs `graph` on behalf of `tenant` with the tenant's default
+    /// deadline, blocking until the run completes, is shed, or fails
+    /// terminally. See [`GraphService::run_with`].
+    pub fn run(&self, tenant: TenantId, graph: &mut TaskGraph) -> Result<(), ServeError> {
+        self.run_with(tenant, graph, None)
+    }
+
+    /// [`GraphService::run`] with an explicit per-request deadline
+    /// (overriding the tenant default; measured from *arrival at the
+    /// service*, so time spent queued and backing off counts against
+    /// it).
+    ///
+    /// The full lifecycle: enqueue → DRR grant (or shed) → launch with
+    /// the tenant's class/shard and the remaining deadline → on
+    /// retryable failure, exponential-backoff park on the timer thread
+    /// and re-enqueue (spending a retry-budget token) → terminal
+    /// outcome.
+    pub fn run_with(
+        &self,
+        tenant: TenantId,
+        graph: &mut TaskGraph,
+        deadline: Option<Duration>,
+    ) -> Result<(), ServeError> {
+        let state = {
+            let st = self.gate.lock().unwrap();
+            st.tenants.get(tenant.0).cloned().ok_or(ServeError::UnknownTenant)?
+        };
+        let spec = state.spec.clone();
+        let arrival = Instant::now();
+        let deadline_at = deadline.or(spec.deadline).map(|d| arrival + d);
+        state.submitted.fetch_add(1, Ordering::Relaxed);
+
+        let mut rng = XorShift64Star::from_entropy();
+        let max_attempts = self.cfg.retry.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            // --- park at the gate until granted or shed -------------
+            match self.await_grant(tenant.0, deadline_at) {
+                GRANTED => {}
+                SHED_LOW => return Err(ServeError::Shed(ShedReason::Low)),
+                SHED_OVER_QUOTA => return Err(ServeError::Shed(ShedReason::OverQuota)),
+                _ => {
+                    state.failed.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Failed(GraphError::WouldMissDeadline));
+                }
+            }
+
+            // --- launch (the grant is held until release) -----------
+            let outcome = self.launch(&spec, graph, deadline_at);
+            self.release(tenant.0, &state);
+
+            let err = match outcome {
+                Ok(()) => {
+                    state.completed.fetch_add(1, Ordering::Relaxed);
+                    self.budget.on_success();
+                    return Ok(());
+                }
+                Err(e) => e,
+            };
+            if matches!(err, GraphError::WouldMissDeadline) {
+                state.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                state.failed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Failed(err));
+            }
+            if !RetryPolicy::retryable(&err) {
+                state.failed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Failed(err));
+            }
+            // A fixed deadline makes further attempts pointless once
+            // it has passed.
+            let expired = deadline_at.is_some_and(|at| Instant::now() >= at);
+            if attempt >= max_attempts || expired || !self.budget.try_take() {
+                state.failed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::RetriesExhausted { attempts: attempt, last: err });
+            }
+            state.retries.fetch_add(1, Ordering::Relaxed);
+            self.backoff_park(self.cfg.retry.backoff(attempt, rng.next_u64()));
+        }
+    }
+
+    /// Enqueues a ticket for `tenant` and parks until the pump
+    /// resolves it. Returns the ticket's terminal state.
+    fn await_grant(&self, tenant: usize, deadline_at: Option<Instant>) -> u8 {
+        let ticket = Arc::new(Ticket {
+            state: AtomicU8::new(WAITING),
+            enqueued: Instant::now(),
+            deadline_at,
+        });
+        let mut st = self.gate.lock().unwrap();
+        st.queues[tenant].push_back(ticket.clone());
+        self.pump(&mut st);
+        while ticket.state.load(Ordering::Acquire) == WAITING {
+            st = self.gate_cv.wait(st).unwrap();
+        }
+        drop(st);
+        let resolved = ticket.state.load(Ordering::Acquire);
+        if resolved == GRANTED {
+            // Grant latency is the service's queue-delay signal: it
+            // feeds both the brownout controller and the pool's
+            // EWMA-based `WouldMissDeadline` admission seam.
+            let delay = ticket.enqueued.elapsed();
+            self.brownout.observe(delay);
+            self.pool.note_queue_delay(delay);
+        }
+        resolved
+    }
+
+    /// One granted launch attempt: chaos overload injection, deadline
+    /// bookkeeping, then the non-blocking pool run.
+    fn launch(
+        &self,
+        spec: &TenantSpec,
+        graph: &mut TaskGraph,
+        deadline_at: Option<Instant>,
+    ) -> Result<(), GraphError> {
+        if chaos_inject_overload() {
+            return Err(GraphError::Overloaded);
+        }
+        let mut opts = RunOptions::new().priority(spec.class);
+        if let Some(shard) = spec.shard {
+            opts = opts.on_shard(shard);
+        }
+        if let Some(at) = deadline_at {
+            let remaining = at.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(GraphError::DeadlineExceeded);
+            }
+            opts = opts.deadline(remaining);
+        }
+        graph.try_run_with_options(&self.pool, opts)
+    }
+
+    /// Returns a grant: one service slot and one tenant slot, then
+    /// re-pumps so a queued ticket can take the freed capacity.
+    fn release(&self, tenant: usize, state: &TenantState) {
+        let mut st = self.gate.lock().unwrap();
+        st.inflight = st.inflight.saturating_sub(1);
+        state.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.pump(&mut st);
+        drop(st);
+        self.gate_cv.notify_all();
+    }
+
+    /// The admission pump: sheds per the brownout level and deadline
+    /// feasibility, then grants in DRR order. Runs under the gate lock;
+    /// callers notify the condvar after dropping it.
+    fn pump(&self, st: &mut GateState) {
+        let level = self.brownout.level();
+        let ewma = self.brownout.ewma();
+        let now = Instant::now();
+
+        // --- shed pass ------------------------------------------------
+        let total_weight: u64 = st.tenants.iter().map(|t| u64::from(t.spec.weight)).sum();
+        let max_inflight = self.cfg.max_inflight;
+        let tenants = &st.tenants;
+        let queues = &mut st.queues;
+        for (i, t) in tenants.iter().enumerate() {
+            if queues[i].is_empty() {
+                continue;
+            }
+            // Deadline feasibility applies at every level: work that
+            // cannot finish in time must not consume a slot.
+            if !ewma.is_zero() {
+                queues[i].retain(|ticket| {
+                    let infeasible = ticket
+                        .deadline_at
+                        .is_some_and(|at| at.saturating_duration_since(now) <= ewma);
+                    if infeasible {
+                        ticket.state.store(INFEASIBLE, Ordering::Release);
+                        t.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    }
+                    !infeasible
+                });
+            }
+            if level >= BrownoutLevel::ShedLow && matches!(t.spec.class, RunPriority::Low) {
+                for ticket in queues[i].drain(..) {
+                    ticket.state.store(SHED_LOW, Ordering::Release);
+                    t.shed_low.fetch_add(1, Ordering::Relaxed);
+                }
+                continue;
+            }
+            if level >= BrownoutLevel::ShedOverQuota {
+                let share = (max_inflight as u64 * u64::from(t.spec.weight)
+                    / total_weight.max(1))
+                .max(1) as usize;
+                if t.inflight.load(Ordering::Relaxed) >= share {
+                    for ticket in queues[i].drain(..) {
+                        ticket.state.store(SHED_OVER_QUOTA, Ordering::Release);
+                        t.shed_over_quota.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+
+        // --- grant pass (deficit round-robin) -------------------------
+        //
+        // Deficits persist across pump invocations and are replenished
+        // only when a full sweep finds no grantable deficit (the start
+        // of a new DRR round). That detail matters: grants usually
+        // trickle out one slot at a time (each completion re-pumps), and
+        // depositing on every visit would let every tenant afford every
+        // grant, collapsing weighted DRR into unweighted round-robin.
+        // With per-round deposits, a weight-3 tenant banks 3 grants per
+        // round to a weight-1 tenant's 1, no matter how the grants are
+        // spread over pump invocations.
+        let n = st.tenants.len();
+        if n == 0 {
+            return;
+        }
+        'grants: while st.inflight < self.cfg.max_inflight {
+            let mut granted_any = false;
+            for _ in 0..n {
+                let i = st.cursor % n;
+                if st.queues[i].is_empty() {
+                    // Classic DRR: an empty queue forfeits its deficit,
+                    // so idle tenants cannot bank credit for bursts.
+                    st.deficits[i] = 0;
+                    st.cursor = (st.cursor + 1) % n;
+                    continue;
+                }
+                let cap = st.tenants[i].spec.max_inflight;
+                while st.deficits[i] >= DRR_COST
+                    && !st.queues[i].is_empty()
+                    && st.tenants[i].inflight.load(Ordering::Relaxed) < cap
+                {
+                    if st.inflight >= self.cfg.max_inflight {
+                        break 'grants;
+                    }
+                    let ticket = st.queues[i].pop_front().unwrap();
+                    ticket.state.store(GRANTED, Ordering::Release);
+                    st.tenants[i].inflight.fetch_add(1, Ordering::Relaxed);
+                    st.inflight += 1;
+                    st.deficits[i] -= DRR_COST;
+                    granted_any = true;
+                }
+                st.cursor = (st.cursor + 1) % n;
+            }
+            if !granted_any {
+                // New round: replenish every tenant that could actually
+                // use a grant (backlogged and below its inflight cap).
+                // If none qualifies, nothing can be granted right now.
+                let mut any_eligible = false;
+                for i in 0..n {
+                    if st.queues[i].is_empty()
+                        || st.tenants[i].inflight.load(Ordering::Relaxed)
+                            >= st.tenants[i].spec.max_inflight
+                    {
+                        continue;
+                    }
+                    let deposit = u64::from(st.tenants[i].spec.weight) * DRR_COST;
+                    st.deficits[i] = (st.deficits[i] + deposit).min(deposit * DRR_BURST);
+                    any_eligible = true;
+                }
+                if !any_eligible {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Parks the calling thread for `delay` using the pool's timer
+    /// thread: one min-heap entry wakes one condvar, so a crowd of
+    /// backing-off requests costs heap entries, not spinning threads.
+    fn backoff_park(&self, delay: Duration) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let fire = gate.clone();
+        crate::pool::timer::schedule_after(
+            delay,
+            Box::new(move || {
+                let (lock, cv) = &*fire;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }),
+        );
+        let (lock, cv) = &*gate;
+        let mut fired = lock.lock().unwrap();
+        while !*fired {
+            fired = cv.wait(fired).unwrap();
+        }
+    }
+}
+
+impl fmt::Debug for GraphService {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.gate.lock().unwrap();
+        f.debug_struct("GraphService")
+            .field("tenants", &st.tenants.len())
+            .field("inflight", &st.inflight)
+            .field("max_inflight", &self.cfg.max_inflight)
+            .field("brownout", &self.brownout.level())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Dag;
+    use std::sync::atomic::AtomicUsize;
+
+    fn service(workers: usize) -> GraphService {
+        GraphService::new(ThreadPool::new(workers), ServiceConfig::default())
+    }
+
+    #[test]
+    fn runs_a_graph_end_to_end_and_counts_it() {
+        let svc = service(2);
+        let t = svc.register_tenant(TenantSpec::new("solo"));
+        let (mut graph, counter) = Dag::diamond_chain(4).to_task_graph(64);
+        svc.run(t, &mut graph).unwrap();
+        svc.run(t, &mut graph).unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 2 * 4 * 4);
+        let snap = &svc.tenant_snapshots()[0];
+        assert_eq!((snap.submitted, snap.completed, snap.failed), (2, 2, 0));
+        assert_eq!(snap.inflight, 0, "grant must be released");
+        assert!(svc.queue_delay_ewma() > Duration::ZERO, "grants must feed the EWMA");
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected() {
+        let svc = service(1);
+        let other = service(1);
+        let foreign = other.register_tenant(TenantSpec::new("x"));
+        let (mut graph, _) = Dag::diamond_chain(1).to_task_graph(8);
+        assert!(matches!(svc.run(foreign, &mut graph), Err(ServeError::UnknownTenant)));
+    }
+
+    #[test]
+    fn forced_brownout_sheds_low_but_not_normal() {
+        let svc = service(2);
+        let low = svc.register_tenant(TenantSpec::new("low").class(RunPriority::Low));
+        let normal = svc.register_tenant(TenantSpec::new("normal"));
+        svc.brownout.force_level(BrownoutLevel::ShedLow);
+        let (mut graph, _) = Dag::diamond_chain(2).to_task_graph(16);
+        assert!(matches!(
+            svc.run(low, &mut graph),
+            Err(ServeError::Shed(ShedReason::Low))
+        ));
+        svc.brownout.force_level(BrownoutLevel::ShedLow);
+        svc.run(normal, &mut graph).unwrap();
+        let snaps = svc.tenant_snapshots();
+        assert_eq!(snaps[0].shed_low, 1);
+        assert_eq!(snaps[1].completed, 1);
+    }
+
+    #[test]
+    fn many_concurrent_clients_respect_the_tenant_cap() {
+        let svc = Arc::new(GraphService::new(
+            ThreadPool::new(4),
+            ServiceConfig { max_inflight: 64, ..ServiceConfig::default() },
+        ));
+        let t = svc.register_tenant(TenantSpec::new("capped").max_inflight(2));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let mut clients = Vec::new();
+        for _ in 0..8 {
+            let svc = svc.clone();
+            let (peak, cur) = (peak.clone(), cur.clone());
+            clients.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    let c = cur.clone();
+                    let p = peak.clone();
+                    let mut g = TaskGraph::new();
+                    g.add(move || {
+                        let now = c.fetch_add(1, Ordering::SeqCst) + 1;
+                        p.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_micros(200));
+                        c.fetch_sub(1, Ordering::SeqCst);
+                    });
+                    svc.run(t, &mut g).unwrap();
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "per-tenant inflight cap must bound concurrency, saw {}",
+            peak.load(Ordering::SeqCst)
+        );
+        assert_eq!(svc.tenant_snapshots()[0].completed, 32);
+    }
+
+    #[test]
+    fn infeasible_deadline_is_rejected_up_front() {
+        let svc = service(2);
+        let t = svc.register_tenant(TenantSpec::new("dl"));
+        // Heat the gate's EWMA well past the deadline we'll request.
+        for _ in 0..8 {
+            svc.brownout.observe(Duration::from_millis(50));
+        }
+        let (mut graph, counter) = Dag::diamond_chain(2).to_task_graph(16);
+        let err = svc.run_with(t, &mut graph, Some(Duration::from_millis(1))).unwrap_err();
+        assert!(matches!(err, ServeError::Failed(GraphError::WouldMissDeadline)));
+        assert_eq!(counter.load(Ordering::Relaxed), 0, "graph must never launch");
+        let snap = &svc.tenant_snapshots()[0];
+        assert_eq!(snap.shed_deadline, 1);
+        assert_eq!(snap.inflight, 0, "rejection must not consume a slot");
+    }
+}

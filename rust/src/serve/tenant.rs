@@ -1,0 +1,182 @@
+//! Tenant registry types (PR 7): who is allowed to submit, with what
+//! weight, onto which slice of the pool.
+//!
+//! A tenant is the serving tier's unit of isolation. Its [`TenantSpec`]
+//! maps service-level intent onto the scheduler features of earlier
+//! PRs: the DRR `weight` divides dispatch grants under contention, the
+//! `class` rides PR 4's priority lanes (and PR 6's Low-shed-first
+//! overload policy), the `shard` pin rides PR 5's locality routing, and
+//! `max_inflight` caps the tenant *before* the pool-wide PR 6 budget —
+//! so a storming tenant exhausts its own cap, not the pool.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::graph::RunPriority;
+use crate::pool::TenantSnapshot;
+
+/// Opaque handle to a registered tenant, returned by
+/// [`crate::serve::GraphService::register_tenant`]. Indexes the
+/// service's registry; cheap to copy into every request site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TenantId(pub(crate) usize);
+
+impl TenantId {
+    /// Registry index of this tenant (matches
+    /// [`TenantSnapshot::id`]).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Static configuration of one tenant. Built with the fluent setters;
+/// the defaults describe a modest, well-behaved tenant.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Human-readable name (diagnostics and snapshots only).
+    pub name: String,
+    /// Deficit-round-robin weight: under contention, dispatch grants
+    /// divide proportionally to weight. Clamped to at least 1.
+    pub weight: u32,
+    /// Run class for every launch of this tenant (PR 4 lanes; `Low`
+    /// additionally opts into PR 6 / brownout shed-first policy).
+    pub class: RunPriority,
+    /// Shard pin for every launch (PR 5 locality routing); `None`
+    /// routes through the pool's default striping.
+    pub shard: Option<usize>,
+    /// Maximum runs of this tenant in flight at once — the per-tenant
+    /// cap enforced by the service gate before the pool-wide budget.
+    /// Clamped to at least 1.
+    pub max_inflight: usize,
+    /// Default deadline applied to every request (measured from
+    /// arrival at the service), unless the request overrides it.
+    /// `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl TenantSpec {
+    /// A weight-1, Normal-class, unpinned tenant with 4 inflight slots
+    /// and no deadline.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1,
+            class: RunPriority::Normal,
+            shard: None,
+            max_inflight: 4,
+            deadline: None,
+        }
+    }
+
+    /// Sets the DRR weight (clamped to ≥ 1).
+    pub fn weight(mut self, weight: u32) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    /// Sets the run class.
+    pub fn class(mut self, class: RunPriority) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Pins every launch to one pool shard.
+    pub fn shard(mut self, shard: usize) -> Self {
+        self.shard = Some(shard);
+        self
+    }
+
+    /// Sets the per-tenant inflight cap (clamped to ≥ 1).
+    pub fn max_inflight(mut self, cap: usize) -> Self {
+        self.max_inflight = cap.max(1);
+        self
+    }
+
+    /// Sets the default per-request deadline.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Runtime state of one tenant: the spec plus lifecycle counters. The
+/// counters are relaxed atomics — they are read by snapshots and
+/// tests, never used for control decisions (those happen under the
+/// service gate lock, where `inflight` is written).
+#[derive(Debug)]
+pub(crate) struct TenantState {
+    pub(crate) spec: TenantSpec,
+    /// Requests granted and not yet completed. Written under the gate
+    /// lock (grant) and on the completion path (release).
+    pub(crate) inflight: AtomicUsize,
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) retries: AtomicU64,
+    pub(crate) shed_low: AtomicU64,
+    pub(crate) shed_over_quota: AtomicU64,
+    pub(crate) shed_deadline: AtomicU64,
+    pub(crate) failed: AtomicU64,
+}
+
+impl TenantState {
+    pub(crate) fn new(spec: TenantSpec) -> Self {
+        Self {
+            spec,
+            inflight: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            shed_low: AtomicU64::new(0),
+            shed_over_quota: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn snapshot(&self, id: usize) -> TenantSnapshot {
+        TenantSnapshot {
+            id,
+            name: self.spec.name.clone(),
+            weight: self.spec.weight,
+            inflight: self.inflight.load(Ordering::Relaxed),
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            shed_low: self.shed_low.load(Ordering::Relaxed),
+            shed_over_quota: self.shed_over_quota.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builder_clamps_and_sets() {
+        let s = TenantSpec::new("gold")
+            .weight(0)
+            .class(RunPriority::High)
+            .shard(3)
+            .max_inflight(0)
+            .deadline(Duration::from_millis(5));
+        assert_eq!(s.weight, 1, "weight clamps to 1");
+        assert_eq!(s.max_inflight, 1, "cap clamps to 1");
+        assert_eq!(s.shard, Some(3));
+        assert!(matches!(s.class, RunPriority::High));
+        assert_eq!(s.deadline, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let t = TenantState::new(TenantSpec::new("x").weight(7));
+        t.submitted.fetch_add(3, Ordering::Relaxed);
+        t.completed.fetch_add(2, Ordering::Relaxed);
+        t.shed_low.fetch_add(1, Ordering::Relaxed);
+        let s = t.snapshot(4);
+        assert_eq!((s.id, s.weight, s.submitted, s.completed), (4, 7, 3, 2));
+        assert_eq!(s.shed_total(), 1);
+    }
+}

@@ -675,7 +675,7 @@ fn done_flag_eventcount_handshake_loses_no_wakeup() {
         };
 
         // Consumer: one iteration of wait_run's park loop (without the
-        // 1 ms backstop — the model must be live without it).
+        // timer backstop — the model must be live without it).
         if st.done.load(Ordering::SeqCst) < 1 {
             let epoch = st.ec.prepare_wait();
             if st.done.load(Ordering::SeqCst) >= 1 {

@@ -1,0 +1,467 @@
+//! Serving-tier integration tests (PR 7): the `serve/` subsystem's
+//! contract under adversarial traffic.
+//!
+//! * tenant fairness — a storming tenant cannot starve a quiet tenant,
+//!   and DRR weights divide throughput roughly proportionally;
+//! * retry budget — under *permanent* overload, total retry attempts
+//!   are capped by the initial allowance (no amplification);
+//! * brownout — hysteretic escalation/recovery, and end-to-end Low
+//!   shedding through the service gate;
+//! * deadline feasibility — infeasible requests are rejected with
+//!   `WouldMissDeadline` before consuming any slot, at both the
+//!   service gate and the pool-EWMA admission seam;
+//! * exactly-once — a request that is retried after pool-budget
+//!   rejections executes its graph exactly once on success.
+//!
+//! The `chaos_storms` module at the bottom only builds with
+//! `--features chaos`: it storms the service with injected `Overloaded`
+//! and latency spikes, then stops injection and asserts goodput
+//! converges back to clean.
+
+use scheduling::graph::{GraphError, RunPriority, TaskGraph};
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::serve::{
+    BrownoutConfig, BrownoutController, BrownoutLevel, GraphService, RetryPolicy, ServeError,
+    ServiceConfig, TenantSpec,
+};
+use scheduling::workloads::Dag;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn small_pool(workers: usize) -> ThreadPool {
+    ThreadPool::with_config(PoolConfig { num_threads: workers, ..PoolConfig::default() })
+}
+
+/// A storming tenant saturating the gate must not starve a quiet
+/// heavier-weight tenant: every one of the quiet tenant's requests
+/// completes while the storm is still running.
+#[test]
+fn storm_cannot_starve_quiet_tenant() {
+    let svc = Arc::new(GraphService::new(
+        small_pool(2),
+        ServiceConfig {
+            max_inflight: 2,
+            retry: RetryPolicy::disabled(),
+            ..ServiceConfig::default()
+        },
+    ));
+    let gold = svc.register_tenant(TenantSpec::new("gold").weight(4).max_inflight(1));
+    let storm = svc.register_tenant(TenantSpec::new("storm").weight(1).max_inflight(2));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stormers: Vec<_> = (0..4)
+        .map(|_| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                let (mut g, _) = Dag::diamond_chain(2).to_task_graph(256);
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = svc.run(storm, &mut g);
+                }
+            })
+        })
+        .collect();
+
+    // Quiet tenant: 50 sequential requests while the storm rages.
+    let (mut g, counter) = Dag::diamond_chain(2).to_task_graph(256);
+    for _ in 0..50 {
+        svc.run(gold, &mut g).expect("quiet tenant must be served during the storm");
+    }
+    stop.store(true, Ordering::Relaxed);
+    for s in stormers {
+        s.join().unwrap();
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 50 * 8, "all quiet-tenant work ran");
+    let snaps = svc.tenant_snapshots();
+    assert_eq!(snaps[gold.index()].completed, 50);
+    assert!(
+        snaps[storm.index()].completed > 0,
+        "the storm must actually have contended for the gate"
+    );
+}
+
+/// With both tenants permanently backlogged, DRR weights divide grants
+/// proportionally: a weight-3 tenant completes clearly more than a
+/// weight-1 tenant (loose 1.5x bound to absorb scheduler noise).
+#[test]
+fn drr_weights_divide_throughput() {
+    let svc = Arc::new(GraphService::new(
+        small_pool(2),
+        ServiceConfig {
+            max_inflight: 2,
+            retry: RetryPolicy::disabled(),
+            ..ServiceConfig::default()
+        },
+    ));
+    let heavy = svc.register_tenant(TenantSpec::new("heavy").weight(3).max_inflight(2));
+    let light = svc.register_tenant(TenantSpec::new("light").weight(1).max_inflight(2));
+
+    // 4 closed-loop clients per tenant against 2 tenant slots keep
+    // both queues backlogged, so DRR deficits (not client pacing)
+    // decide the split.
+    let total = Arc::new(AtomicUsize::new(0));
+    let mut clients = Vec::new();
+    for (tenant, _) in [(heavy, "heavy"), (light, "light")] {
+        for _ in 0..4 {
+            let svc = svc.clone();
+            let total = total.clone();
+            clients.push(thread::spawn(move || {
+                let (mut g, _) = Dag::diamond_chain(2).to_task_graph(512);
+                while total.load(Ordering::Relaxed) < 400 {
+                    if svc.run(tenant, &mut g).is_ok() {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let snaps = svc.tenant_snapshots();
+    let (h, l) = (snaps[heavy.index()].completed, snaps[light.index()].completed);
+    assert!(
+        h as f64 >= l as f64 * 1.5,
+        "weight-3 tenant should out-complete weight-1 by ~3x, got {h} vs {l}"
+    );
+}
+
+/// Under *permanent* overload (the pool's single run slot held by a
+/// parked run), the retry budget caps total retries at the initial
+/// allowance — retry traffic cannot amplify the overload — and the
+/// service recovers once the blocker finishes.
+#[test]
+fn retry_budget_caps_amplification_under_permanent_overload() {
+    let pool = ThreadPool::with_config(PoolConfig {
+        num_threads: 2,
+        max_inflight_runs: 1,
+        ..PoolConfig::default()
+    });
+    const INITIAL_BUDGET: u32 = 5;
+    let svc = GraphService::new(
+        pool,
+        ServiceConfig {
+            max_inflight: 8,
+            retry: RetryPolicy {
+                max_attempts: 100,
+                base_backoff: Duration::from_micros(100),
+                max_backoff: Duration::from_micros(400),
+                jitter: 0.0,
+                budget_ratio: 0.0, // no refill: the allowance is all there is
+                initial_budget: INITIAL_BUDGET,
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let t = svc.register_tenant(TenantSpec::new("victim").max_inflight(4));
+
+    // Occupy the pool's only admission slot with a flag-blocked run.
+    let release = Arc::new(AtomicBool::new(false));
+    let r = release.clone();
+    let mut blocker = TaskGraph::new();
+    blocker.add(move || {
+        while !r.load(Ordering::Relaxed) {
+            thread::sleep(Duration::from_micros(50));
+        }
+    });
+    let handle = blocker.run_async(svc.pool()).unwrap();
+
+    let (mut g, counter) = Dag::diamond_chain(1).to_task_graph(64);
+    let mut failures = 0;
+    for _ in 0..10 {
+        match svc.run(t, &mut g) {
+            Err(ServeError::RetriesExhausted { last: GraphError::Overloaded, .. }) => {
+                failures += 1
+            }
+            other => panic!("expected overload exhaustion, got {other:?}"),
+        }
+    }
+    let snap = &svc.tenant_snapshots()[t.index()];
+    assert_eq!(failures, 10);
+    assert_eq!(counter.load(Ordering::Relaxed), 0, "nothing may execute while blocked");
+    assert!(
+        snap.retries <= u64::from(INITIAL_BUDGET),
+        "10 overloaded requests made {} retries; the budget allows at most {}",
+        snap.retries,
+        INITIAL_BUDGET
+    );
+    assert_eq!(svc.retry_tokens(), 0, "permanent overload must drain the budget");
+
+    release.store(true, Ordering::Relaxed);
+    handle.wait().unwrap();
+    svc.run(t, &mut g).expect("service must recover once the blocker finishes");
+    assert_eq!(counter.load(Ordering::Relaxed), 4);
+}
+
+/// The brownout controller escalates only on sustained overload and
+/// recovers one level per quiet hold — never all at once.
+#[test]
+fn brownout_escalates_and_recovers_hysteretically() {
+    let ctl = BrownoutController::new(BrownoutConfig {
+        enter: Duration::from_millis(1),
+        enter_after: 4,
+        exit_hold: Duration::from_millis(30),
+    });
+    // 3 high observations: below enter_after, still Normal.
+    for _ in 0..3 {
+        ctl.observe(Duration::from_millis(40));
+    }
+    assert_eq!(ctl.level(), BrownoutLevel::Normal);
+    // Sustained overload: one level per full streak.
+    ctl.observe(Duration::from_millis(40));
+    assert_eq!(ctl.level(), BrownoutLevel::ShedLow);
+    for _ in 0..4 {
+        ctl.observe(Duration::from_millis(40));
+    }
+    assert_eq!(ctl.level(), BrownoutLevel::ShedOverQuota);
+    // Recovery: one step per quiet exit_hold.
+    thread::sleep(Duration::from_millis(40));
+    assert_eq!(ctl.level(), BrownoutLevel::ShedLow, "first hold unwinds one level only");
+    thread::sleep(Duration::from_millis(40));
+    assert_eq!(ctl.level(), BrownoutLevel::Normal, "second hold completes recovery");
+}
+
+/// End-to-end brownout through the service gate: with a hair-trigger
+/// threshold, real grant delays push the gate into `ShedLow`, Low-class
+/// requests are shed at admission (their graphs never run), and
+/// Normal-class requests keep being served.
+#[test]
+fn brownout_sheds_low_tenants_at_the_gate() {
+    let svc = GraphService::new(
+        small_pool(2),
+        ServiceConfig {
+            retry: RetryPolicy::disabled(),
+            brownout: BrownoutConfig {
+                enter: Duration::from_nanos(1), // any real grant delay trips it
+                enter_after: 3,
+                exit_hold: Duration::from_secs(3600),
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let normal = svc.register_tenant(TenantSpec::new("normal"));
+    let low = svc.register_tenant(TenantSpec::new("batch").class(RunPriority::Low));
+
+    let (mut g, _) = Dag::diamond_chain(2).to_task_graph(64);
+    for _ in 0..4 {
+        svc.run(normal, &mut g).unwrap(); // each grant observes delay > 1ns
+    }
+    assert!(svc.brownout_level() >= BrownoutLevel::ShedLow);
+
+    let (mut lg, low_counter) = Dag::diamond_chain(2).to_task_graph(64);
+    for _ in 0..3 {
+        match svc.run(low, &mut lg) {
+            Err(ServeError::Shed(_)) => {}
+            other => panic!("low-class request must be shed in brownout, got {other:?}"),
+        }
+    }
+    assert_eq!(low_counter.load(Ordering::Relaxed), 0, "shed graphs must never launch");
+    svc.run(normal, &mut g).expect("normal-class tenants keep being served");
+    let snaps = svc.tenant_snapshots();
+    assert_eq!(snaps[low.index()].shed_low, 3);
+    assert_eq!(snaps[normal.index()].completed, 5);
+}
+
+/// A request whose deadline is already infeasible (≤ the queue-delay
+/// EWMA) is rejected with `WouldMissDeadline` at the gate, before it
+/// consumes a service slot, a pool budget slot, or any execution.
+#[test]
+fn infeasible_deadline_rejected_before_consuming_budget() {
+    let svc = GraphService::new(
+        small_pool(2),
+        ServiceConfig { retry: RetryPolicy::disabled(), ..ServiceConfig::default() },
+    );
+    let t = svc.register_tenant(TenantSpec::new("dl"));
+    let (mut g, counter) = Dag::diamond_chain(2).to_task_graph(64);
+    svc.run(t, &mut g).unwrap(); // warm-up grant seeds the gate's EWMA
+    assert!(svc.queue_delay_ewma() > Duration::ZERO);
+
+    let err = svc.run_with(t, &mut g, Some(Duration::from_nanos(1))).unwrap_err();
+    assert!(
+        matches!(err, ServeError::Failed(GraphError::WouldMissDeadline)),
+        "got {err:?}"
+    );
+    let snap = &svc.tenant_snapshots()[t.index()];
+    assert_eq!(snap.shed_deadline, 1);
+    assert_eq!(snap.inflight, 0, "rejection must not hold a slot");
+    assert_eq!(counter.load(Ordering::Relaxed), 8, "only the warm-up ran");
+}
+
+/// The same feasibility seam exists one layer down, at the pool-EWMA
+/// admission check in the graph executor: a heated pool EWMA rejects a
+/// short-deadline run before the PR 6 budget is consulted.
+#[test]
+fn pool_ewma_seam_rejects_infeasible_runs() {
+    use scheduling::graph::RunOptions;
+    let pool = small_pool(2);
+    for _ in 0..8 {
+        pool.note_queue_delay(Duration::from_millis(50));
+    }
+    assert!(pool.queue_delay_ewma() >= Duration::from_millis(40));
+    let (mut g, counter) = Dag::diamond_chain(2).to_task_graph(64);
+    let err = g
+        .try_run_with_options(&pool, RunOptions::new().deadline(Duration::from_millis(1)))
+        .unwrap_err();
+    assert!(matches!(err, GraphError::WouldMissDeadline), "got {err:?}");
+    assert_eq!(counter.load(Ordering::Relaxed), 0);
+    // A feasible (no-deadline) run on the same pool still works.
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), 8);
+}
+
+/// A request that retries after pool-budget rejections runs its graph
+/// exactly once when it finally succeeds: rejected attempts never
+/// execute any node.
+#[test]
+fn retried_request_executes_exactly_once() {
+    let pool = ThreadPool::with_config(PoolConfig {
+        num_threads: 2,
+        max_inflight_runs: 1,
+        ..PoolConfig::default()
+    });
+    let svc = Arc::new(GraphService::new(
+        pool,
+        ServiceConfig {
+            retry: RetryPolicy {
+                max_attempts: 1000,
+                base_backoff: Duration::from_micros(200),
+                max_backoff: Duration::from_millis(2),
+                jitter: 0.5,
+                budget_ratio: 1.0,
+                initial_budget: 1000,
+            },
+            ..ServiceConfig::default()
+        },
+    ));
+    let t = svc.register_tenant(TenantSpec::new("persistent"));
+
+    let release = Arc::new(AtomicBool::new(false));
+    let r = release.clone();
+    let mut blocker = TaskGraph::new();
+    blocker.add(move || {
+        while !r.load(Ordering::Relaxed) {
+            thread::sleep(Duration::from_micros(50));
+        }
+    });
+    let handle = blocker.run_async(svc.pool()).unwrap();
+
+    let client = {
+        let svc = svc.clone();
+        thread::spawn(move || {
+            let (mut g, counter) = Dag::diamond_chain(3).to_task_graph(64);
+            svc.run(t, &mut g).unwrap();
+            counter.load(Ordering::Relaxed)
+        })
+    };
+    // Hold the pool shut long enough for at least one rejected attempt,
+    // then release and let the client's retry land.
+    thread::sleep(Duration::from_millis(10));
+    release.store(true, Ordering::Relaxed);
+    handle.wait().unwrap();
+    let executed = client.join().unwrap();
+    assert_eq!(executed, 12, "exactly one execution of the 12-node graph");
+    let snap = &svc.tenant_snapshots()[t.index()];
+    assert_eq!(snap.completed, 1);
+    assert!(snap.retries >= 1, "the blocker must have forced at least one retry");
+}
+
+/// Requests queued and backing off concurrently still each execute
+/// exactly once — M clients × one graph each == M×n node executions.
+#[test]
+fn fleet_of_retrying_clients_each_execute_once() {
+    let svc = Arc::new(GraphService::new(
+        small_pool(2),
+        ServiceConfig { max_inflight: 3, ..ServiceConfig::default() },
+    ));
+    let t = svc.register_tenant(TenantSpec::new("fleet").max_inflight(3));
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 5;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let svc = svc.clone();
+            let counter = counter.clone();
+            thread::spawn(move || {
+                let c = counter.clone();
+                let mut g = TaskGraph::new();
+                let a = g.add({
+                    let c = c.clone();
+                    move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                let b = g.add(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+                g.precede(a, &[b]);
+                for _ in 0..ROUNDS {
+                    svc.run(t, &mut g).unwrap();
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), CLIENTS * ROUNDS * 2);
+    assert_eq!(svc.tenant_snapshots()[t.index()].completed, (CLIENTS * ROUNDS) as u64);
+}
+
+/// Chaos soak (only with `--features chaos`): storm the serving
+/// boundary with injected `Overloaded` and node-latency spikes, then
+/// stop injection and assert goodput converges back to 100% clean.
+#[cfg(feature = "chaos")]
+mod chaos_storms {
+    use super::*;
+    use scheduling::graph::chaos_set_serving_rates;
+
+    #[test]
+    fn chaos_storm_goodput_converges_after_injection_stops() {
+        let svc = Arc::new(GraphService::new(
+            small_pool(2),
+            ServiceConfig {
+                max_inflight: 4,
+                retry: RetryPolicy {
+                    max_attempts: 6,
+                    base_backoff: Duration::from_micros(100),
+                    max_backoff: Duration::from_millis(1),
+                    jitter: 0.5,
+                    budget_ratio: 0.5,
+                    initial_budget: 32,
+                    // generous budget: the storm is transient by design
+                },
+                ..ServiceConfig::default()
+            },
+        ));
+        let t = svc.register_tenant(TenantSpec::new("soak").weight(2).max_inflight(4));
+
+        // Storm: 15% of launches rejected Overloaded, 10% of nodes
+        // spiked by ~200us.
+        chaos_set_serving_rates(150, 100, 200);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let (mut ok, mut total) = (0u64, 0u64);
+        let (mut g, _) = Dag::diamond_chain(2).to_task_graph(64);
+        while Instant::now() < deadline && total < 400 {
+            total += 1;
+            if svc.run(t, &mut g).is_ok() {
+                ok += 1;
+            }
+        }
+        assert!(total > 50, "soak must actually run requests");
+        assert!(
+            ok * 2 >= total,
+            "retries should absorb most of the storm: {ok}/{total} succeeded"
+        );
+
+        // Injection off: goodput must converge back to 100%.
+        chaos_set_serving_rates(0, 0, 0);
+        for _ in 0..50 {
+            svc.run(t, &mut g).expect("post-storm requests must all succeed");
+        }
+        let snap = &svc.tenant_snapshots()[t.index()];
+        assert!(snap.retries > 0, "the storm must have exercised the retry path");
+        assert_eq!(svc.brownout_level(), BrownoutLevel::Normal, "gate recovers post-storm");
+    }
+}
