@@ -2,7 +2,7 @@
 //! critical-path-first dispatch vs the shape-oblivious FIFO rule, plus
 //! a mixed-priority async fleet.
 //!
-//! Three reports land in the ledger (`BENCH_pr7.json` as of PR 7):
+//! Three reports land in the ledger (`BENCH_pr8.json` as of PR 8):
 //!
 //! * **PRIO skewed-DAG makespan** — a weighted `Dag::skewed_diamond`
 //!   (many light branches + one heavy spine, spine head buried
@@ -12,7 +12,11 @@
 //!   `critical-path` should beat `fifo` whenever threads < branches.
 //! * **ABL-7 priority toggles** — the PR 4 toggle sweep: all-on /
 //!   `no_critical_path` / `no_priority_lanes` / all-off (the all-off
-//!   arm is the pre-PR 4 FIFO path, scheduling-identical by design).
+//!   arm is the pre-PR 4 FIFO path, scheduling-identical by design),
+//!   plus the PR 8 `no-dynamic-rank` arm. This workload's declared
+//!   weights are truthful (work is proportional to weight), so the
+//!   all-on vs `no-dynamic-rank` delta isolates the *overhead* of
+//!   duration sampling + drift checking, not any scheduling change.
 //! * **PRIO mixed-priority fleet** — 9 sealed diamond-chain graphs in
 //!   flight from one thread (`MultiRun` shape) tagged High/Normal/Low
 //!   in thirds; per-class completion latency is measured by polling the
@@ -90,14 +94,17 @@ fn main() {
         format!(
             "same skewed weighted DAG, {reruns} re-runs per sample, {threads} threads; \
              critical-path dispatch and injector priority lanes disabled one at a time \
-             (all-off = the pre-PR 4 FIFO scheduling path)"
+             (all-off = the pre-PR 4 FIFO scheduling path); no-dynamic-rank (PR 8) turns \
+             off duration sampling + re-ranking — truthful declared weights make it an \
+             overhead probe, not a scheduling change"
         ),
     );
-    let ablations: [(&str, RunOptions); 4] = [
+    let ablations: [(&str, RunOptions); 5] = [
         ("all-on", RunOptions::new()),
         ("no-critical-path", RunOptions::new().critical_path(false)),
         ("no-priority-lanes", RunOptions::new().priority_lanes(false)),
         ("all-off", RunOptions::new().critical_path(false).priority_lanes(false)),
+        ("no-dynamic-rank", RunOptions::new().dynamic_rank(false)),
     ];
     for (label, options) in &ablations {
         let (mut g, _counter) = dag.to_task_graph(steps);

@@ -1,7 +1,7 @@
 //! SERVING — open-loop multi-tenant latency/goodput sweep (PR 7).
 //!
 //! One report per arrival-rate point lands in the ledger
-//! (`BENCH_pr7.json`): a three-tenant mix — **gold** (weight 4, High
+//! (`BENCH_pr8.json`): a three-tenant mix — **gold** (weight 4, High
 //! class), **silver** (weight 2, Normal), and a **storming** tenant
 //! (weight 1, Low) submitting at 3× its weight share — drives a
 //! [`scheduling::serve::GraphService`] with Poisson (open-loop)
@@ -29,9 +29,23 @@
 //!   weight-proportional service). The acceptance signal: a storm
 //!   must not drive this toward 0.
 //!
+//! PR 8 additions:
+//!
+//! * **Stale-weight makespan series** (after the sweep): a graph whose
+//!   declared weights are wrong by 10× is run three ways —
+//!   `static-true` (truthful weights, dynamic re-rank off),
+//!   `static-wrong` (inverted weights, re-rank off), and
+//!   `dynamic-rerank` (inverted weights, duration feedback on). The
+//!   `SHAPE stale-weight-recovery` verdict is the fraction of the
+//!   wrong→true makespan gap the dynamic variant claws back (PASS
+//!   ≥ 0.8).
+//! * **`WIRE=1` cross-process mode**: instead of the in-process sweep,
+//!   spawn the `graph_serve` binary and measure framed round-trip
+//!   latency through the TCP front-end, then scrape its counters.
+//!
 //! Knobs: `THREADS` (default 2), `WINDOW_MS` (per-rate window, default
 //! 2500), `BENCH_FAST=1` (2 rate points, 800 ms windows), `SEED`
-//! (Poisson schedule seed, default 42).
+//! (Poisson schedule seed, default 42), `WIRE=1` (cross-process mode).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -76,6 +90,10 @@ struct TenantOutcome {
 fn main() {
     let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    if std::env::var("WIRE").map(|v| v == "1").unwrap_or(false) {
+        wire_bench(threads, fast);
+        return;
+    }
     let window_ms: u64 = std::env::var("WINDOW_MS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -270,4 +288,184 @@ fn main() {
         );
         eprintln!("  pool after {param}:\n{}", svc.pool().metrics());
     }
+
+    stale_weight_bench(threads, fast);
+}
+
+/// PR 8 tentpole acceptance: when declared weights are wrong by 10×,
+/// duration-feedback re-ranking must recover ≥80% of the makespan gap
+/// between scheduling on the wrong weights and scheduling on the true
+/// ones.
+///
+/// The workload makes stale weights maximally harmful: a serial chain
+/// carries half the total work (so starting it late directly extends
+/// the makespan), while a wide layer of independent light nodes
+/// carries the other half (so there is always something "attractive"
+/// for a misled scheduler to run first). Truthful weights mark the
+/// chain heavy; the wrong variant inverts them 10×, making every light
+/// node out-rank the chain head.
+fn stale_weight_bench(threads: usize, fast: bool) {
+    use scheduling::graph::{RunOptions, TaskGraph};
+    use scheduling::workloads::dag::busy_work;
+
+    const CHAIN: usize = 8;
+    const WIDE: usize = 16;
+    const HEAVY_STEPS: u32 = 40_000;
+    const LIGHT_STEPS: u32 = 20_000;
+
+    let pool =
+        ThreadPool::with_config(PoolConfig { num_threads: threads, ..PoolConfig::default() });
+
+    let build = |truthful: bool| -> TaskGraph {
+        let (chain_w, light_w) = if truthful { (10u32, 1u32) } else { (1u32, 10u32) };
+        let mut g = TaskGraph::new();
+        let src = g.add(|| {});
+        let sink = g.add(|| {});
+        let mut prev = src;
+        for k in 0..CHAIN {
+            let n = g.add_weighted(chain_w, move || {
+                std::hint::black_box(busy_work(k as u64, HEAVY_STEPS));
+            });
+            g.precede(prev, &[n]);
+            prev = n;
+        }
+        g.precede(prev, &[sink]);
+        for k in 0..WIDE {
+            let n = g.add_weighted(light_w, move || {
+                std::hint::black_box(busy_work(100 + k as u64, LIGHT_STEPS));
+            });
+            g.precede(src, &[n]);
+            g.precede(n, &[sink]);
+        }
+        g.seal().unwrap();
+        g
+    };
+
+    let rounds = if fast { 7 } else { 21 };
+    let mut report = Report::new(
+        "SERVING stale-weight re-ranking (PR 8)",
+        format!(
+            "makespan of one run, median of {rounds} after 3 warmups, {threads} threads; \
+             {CHAIN}-node serial chain ({HEAVY_STEPS} steps/node) + {WIDE} independent light \
+             nodes ({LIGHT_STEPS} steps); static-true = truthful declared weights with \
+             dynamic re-rank off, static-wrong = 10x-inverted weights with re-rank off, \
+             dynamic-rerank = inverted weights with duration feedback on (the default)"
+        ),
+    );
+    let variants: [(&str, bool, bool); 3] = [
+        ("static-true", true, false),
+        ("static-wrong", false, false),
+        ("dynamic-rerank", false, true),
+    ];
+    let mut medians = Vec::new();
+    for (name, truthful, dynamic) in variants {
+        let mut g = build(truthful);
+        let opts =
+            if dynamic { RunOptions::new() } else { RunOptions::new().dynamic_rank(false) };
+        for _ in 0..3 {
+            g.run_with_options(&pool, opts.clone()).unwrap();
+        }
+        let mut samples = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            g.run_with_options(&pool, opts.clone()).unwrap();
+            samples.push(t0.elapsed());
+        }
+        let summary = Summary::from_samples(&samples);
+        if dynamic {
+            eprintln!("  stale-weight: dynamic variant re-ranked {} time(s)", g.reranks());
+        }
+        medians.push(summary.median);
+        report.push("makespan", name, summary);
+    }
+    report.print();
+    record_json("serving_stale_weight", "wall", threads, &report);
+
+    let (true_m, wrong_m, dyn_m) =
+        (medians[0].as_secs_f64(), medians[1].as_secs_f64(), medians[2].as_secs_f64());
+    let gap = wrong_m - true_m;
+    let recovery = if gap > 1e-9 { (wrong_m - dyn_m) / gap } else { 1.0 };
+    println!(
+        "SHAPE stale-weight-recovery: {recovery:.2} {}",
+        if recovery >= 0.8 { "PASS" } else { "CHECK" }
+    );
+}
+
+/// `WIRE=1` cross-process mode: spawn the `graph_serve` binary, drive
+/// framed round-trips through one persistent connection (so the
+/// server-side template instance stays sealed), and report RTT
+/// percentiles. The deltas against the in-process sweep's latencies
+/// are the cost of the wire: frame codec + TCP round-trip.
+fn wire_bench(threads: usize, fast: bool) {
+    use scheduling::serve::{WireClient, WireStatus};
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    let n = if fast { 200 } else { 2000 };
+    let mut child = Command::new(env!("CARGO_BIN_EXE_graph_serve"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--metrics-addr",
+            "127.0.0.1:0",
+            "--threads",
+            &threads.to_string(),
+            "--work-steps",
+            "256",
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn graph_serve");
+    // Readiness line: "graph_serve listening on ADDR (metrics on MADDR)".
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    let addr = line
+        .split_whitespace()
+        .nth(3)
+        .unwrap_or_else(|| panic!("bad readiness line {line:?}"))
+        .to_string();
+    eprintln!("wire bench against {addr}: {n} round-trips of diamond4 as gold");
+
+    let mut c = WireClient::connect(addr.as_str()).expect("connect to spawned graph_serve");
+    for _ in 0..20 {
+        let (status, msg) = c.run("gold", "diamond4", None).unwrap();
+        assert_eq!(status, WireStatus::Ok, "{msg}");
+    }
+    let mut rtts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let (status, msg) = c.run("gold", "diamond4", None).unwrap();
+        assert_eq!(status, WireStatus::Ok, "{msg}");
+        rtts.push(t0.elapsed());
+    }
+    rtts.sort_unstable();
+
+    let mut report = Report::new(
+        "SERVING wire RTT (PR 8)",
+        format!(
+            "framed TCP round-trip (request frame -> run -> response frame) against a spawned \
+             graph_serve with {threads} worker threads; one persistent connection, {n} \
+             round-trips after 20 warmups; template diamond4 (16 nodes x 256 steps), tenant \
+             gold(w4,High)"
+        ),
+    );
+    report.push("diamond4", "rtt", Summary::from_samples(&rtts));
+    report.push("diamond4", "rtt-p99", point(percentile(&rtts, 0.99)));
+    report.print();
+    record_json("serving_wire", "wall", threads, &report);
+
+    let scrape = c.scrape().expect("scrape after bench");
+    eprintln!("server counters after bench:\n{scrape}");
+    println!(
+        "SHAPE wire-all-ok: {} {}",
+        rtts.len(),
+        if scrape.contains(&format!("tenant_completed{{tenant=\"gold\"}} {}", n + 20)) {
+            "PASS"
+        } else {
+            "CHECK"
+        }
+    );
+    let _ = child.kill();
+    let _ = child.wait();
 }

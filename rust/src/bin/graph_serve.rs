@@ -1,0 +1,171 @@
+//! `graph_serve` — standalone TCP serving front-end (PR 8).
+//!
+//! Wraps [`scheduling::serve::WireServer`] into a process: a server
+//! mode hosting a fixed demo tenant/template registry, plus `client`
+//! and `scrape` subcommands speaking the wire protocol, so the CI
+//! smoke step and `benches/serving.rs` `WIRE=1` mode can exercise the
+//! full cross-process path with nothing but this binary.
+//!
+//! ```text
+//! graph_serve serve  [--addr A] [--metrics-addr A] [--threads N]
+//!                    [--max-inflight N] [--work-steps N]
+//! graph_serve client --addr A [--token T] [--template NAME]
+//!                    [--deadline-micros D] [--count N]
+//! graph_serve scrape --addr A
+//! ```
+//!
+//! The server registers tenants `gold` (weight 4, High), `silver`
+//! (weight 2, Normal), and `storm` (weight 1, Low) — token = name —
+//! and templates `diamond4`, `diamond16`, `chain64`, `wavefront8`.
+
+use std::process;
+use std::time::{Duration, Instant};
+
+use scheduling::graph::RunPriority;
+use scheduling::pool::ThreadPool;
+use scheduling::serve::{
+    wire_scrape, GraphService, ServiceConfig, TenantSpec, WireClient, WireServer, WireStatus,
+};
+use scheduling::workloads::Dag;
+use std::sync::Arc;
+
+const USAGE: &str = "usage:
+  graph_serve serve  [--addr A] [--metrics-addr A] [--threads N] [--max-inflight N] [--work-steps N]
+  graph_serve client --addr A [--token T] [--template NAME] [--deadline-micros D] [--count N]
+  graph_serve scrape --addr A";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("serve") => serve(&args[1..]),
+        Some("client") => client(&args[1..]),
+        Some("scrape") => scrape(&args[1..]),
+        _ => {
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    process::exit(code);
+}
+
+/// Looks up `--name value` in `args`; exits with usage on a flag
+/// missing its value.
+fn flag(args: &[String], name: &str) -> Option<String> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == name {
+            match it.next() {
+                Some(v) => return Some(v.clone()),
+                None => {
+                    eprintln!("{name} needs a value\n{USAGE}");
+                    process::exit(2);
+                }
+            }
+        }
+    }
+    None
+}
+
+fn parse<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> T {
+    match flag(args, name) {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for {name}: {v:?}\n{USAGE}");
+            process::exit(2);
+        }),
+    }
+}
+
+fn serve(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7450".to_string());
+    let metrics_addr = flag(args, "--metrics-addr").unwrap_or_else(|| "127.0.0.1:7451".to_string());
+    let default_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let threads = parse(args, "--threads", default_threads);
+    let max_inflight = parse(args, "--max-inflight", 32usize);
+    let work_steps = parse(args, "--work-steps", 256u32);
+
+    let svc = Arc::new(GraphService::new(
+        ThreadPool::new(threads),
+        ServiceConfig { max_inflight, ..ServiceConfig::default() },
+    ));
+    let gold = svc.register_tenant(TenantSpec::new("gold").weight(4).class(RunPriority::High));
+    let silver = svc.register_tenant(TenantSpec::new("silver").weight(2));
+    let storm = svc.register_tenant(TenantSpec::new("storm").weight(1).class(RunPriority::Low));
+
+    let handle = WireServer::new(svc)
+        .tenant("gold", gold)
+        .tenant("silver", silver)
+        .tenant("storm", storm)
+        .template("diamond4", move || Dag::diamond_chain(4).to_task_graph(work_steps).0)
+        .template("diamond16", move || Dag::diamond_chain(16).to_task_graph(work_steps).0)
+        .template("chain64", move || Dag::linear_chain(64).to_task_graph(work_steps).0)
+        .template("wavefront8", move || Dag::wavefront(8).to_task_graph(work_steps).0)
+        .serve_with_metrics(&addr, &metrics_addr);
+    let handle = match handle {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("graph_serve: bind failed: {e}");
+            return 1;
+        }
+    };
+    // The readiness line the CI smoke step and the wire bench wait for.
+    println!("graph_serve listening on {} (metrics on {})", handle.frame_addr(), handle.metrics_addr().unwrap());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn client(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--addr") else {
+        eprintln!("client needs --addr\n{USAGE}");
+        return 2;
+    };
+    let token = flag(args, "--token").unwrap_or_else(|| "gold".to_string());
+    let template = flag(args, "--template").unwrap_or_else(|| "diamond4".to_string());
+    let deadline_micros = parse(args, "--deadline-micros", 0u64);
+    let deadline = (deadline_micros > 0).then(|| Duration::from_micros(deadline_micros));
+    let count = parse(args, "--count", 1usize);
+
+    let mut conn = match WireClient::connect(addr.as_str()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("graph_serve client: connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let mut failures = 0usize;
+    for i in 1..=count {
+        let start = Instant::now();
+        match conn.run(&token, &template, deadline) {
+            Ok((WireStatus::Ok, _)) => {
+                println!("run {i}/{count}: Ok ({:.1}us)", start.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok((status, msg)) => {
+                println!("run {i}/{count}: {status:?} ({msg})");
+                failures += 1;
+            }
+            Err(e) => {
+                eprintln!("run {i}/{count}: transport error: {e}");
+                failures += 1;
+            }
+        }
+    }
+    i32::from(failures > 0)
+}
+
+fn scrape(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--addr") else {
+        eprintln!("scrape needs --addr\n{USAGE}");
+        return 2;
+    };
+    match wire_scrape(addr.as_str()) {
+        Ok(body) => {
+            print!("{body}");
+            0
+        }
+        Err(e) => {
+            eprintln!("graph_serve scrape: {addr}: {e}");
+            1
+        }
+    }
+}

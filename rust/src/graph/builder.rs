@@ -9,8 +9,9 @@
 //! the cached cycle-check result.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::pool::ThreadPool;
 use crate::util::CachePadded;
@@ -146,6 +147,21 @@ unsafe impl Sync for Node {}
 /// (closures, names, successor `Vec` headers).
 const PENDING_PER_LINE: usize = 32;
 
+/// Observed-duration EWMA cells per 128-byte [`CachePadded`] block
+/// (8-byte cells). Written once per node completion — far colder than
+/// the pending counters, but still on the completion path, so they get
+/// the same false-sharing isolation from the cold node fields.
+const OBSERVED_PER_LINE: usize = 16;
+
+/// Re-rank trigger (PR 8): a sealed graph's ranks are recomputed from
+/// observed durations when some node's *share* of total observed time
+/// differs from its share under the current rank weights by at least
+/// this factor (in either direction). 2× is deliberately coarse —
+/// scheduling is threshold-like (what matters is which arm looks
+/// critical, not the exact ratio), and a coarse trigger keeps timing
+/// jitter on micro-nodes from re-sorting the schedule every launch.
+const RERANK_DRIFT_RATIO: f64 = 2.0;
+
 /// The sealed, run-ready form of a graph's dependency structure
 /// (PR 2 tentpole): a CSR successor arena plus dense pending counters.
 ///
@@ -178,6 +194,16 @@ pub(crate) struct Topology {
     /// dense companion to `pending`, dropped with the topology on any
     /// mutation (see `graph/schedule.rs`).
     sched: Schedule,
+    /// Per-node observed-duration EWMAs in nanoseconds (PR 8), 0 =
+    /// never sampled. Written by the worker completing the node (one
+    /// writer per node per run — runs of one graph are serialized, so
+    /// a plain read-modify-write store is exact, atomics only for
+    /// cross-run visibility) and folded into the ranks by
+    /// [`Topology::maybe_rerank`] in the launch quiescent window.
+    observed_ns: Vec<CachePadded<[AtomicU64; OBSERVED_PER_LINE]>>,
+    /// Completed re-rank sweeps — diagnostics for tests, ablations,
+    /// and the wire scrape endpoint.
+    reranks: AtomicU64,
 }
 
 impl Topology {
@@ -211,6 +237,10 @@ impl Topology {
                 .map(|_| CachePadded::new(std::array::from_fn(|_| AtomicU32::new(0))))
                 .collect(),
             sched,
+            observed_ns: (0..n.div_ceil(OBSERVED_PER_LINE))
+                .map(|_| CachePadded::new(std::array::from_fn(|_| AtomicU64::new(0))))
+                .collect(),
+            reranks: AtomicU64::new(0),
         }
     }
 
@@ -247,6 +277,78 @@ impl Topology {
     #[allow(dead_code)]
     pub(crate) fn node_count(&self) -> usize {
         self.init_pending.len()
+    }
+
+    /// Observed-duration EWMA cell of node `i` (nanoseconds; 0 = no
+    /// sample yet).
+    #[inline]
+    pub(crate) fn observed(&self, i: usize) -> &AtomicU64 {
+        &(*self.observed_ns[i / OBSERVED_PER_LINE])[i % OBSERVED_PER_LINE]
+    }
+
+    /// Folds one observed node duration into the EWMA (α = 1/4 — fast
+    /// enough that two skewed re-runs dominate a wrong seal-time
+    /// estimate, slow enough to shrug off a single preemption blip).
+    /// First sample seeds; samples floor at 1 ns so "observed" is
+    /// distinguishable from "never ran".
+    #[inline]
+    pub(crate) fn note_duration(&self, i: usize, ns: u64) {
+        let cell = self.observed(i);
+        let cur = cell.load(Ordering::Relaxed);
+        let next = if cur == 0 { ns } else { cur - cur / 4 + ns / 4 };
+        cell.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Re-rank sweeps completed so far.
+    #[inline]
+    pub(crate) fn rerank_count(&self) -> u64 {
+        self.reranks.load(Ordering::Relaxed)
+    }
+
+    /// Duration-feedback re-rank check (PR 8), called from the launch
+    /// path's quiescent window (`&mut self` proves no run is reading
+    /// the schedule). Skips until every node has at least one sample;
+    /// then compares each node's share of total observed time against
+    /// its share under the weights the current ranks encode, and when
+    /// the worst-case ratio reaches [`RERANK_DRIFT_RATIO`] recomputes
+    /// ranks, buckets, and the source order in place (allocation-free,
+    /// so sealed re-runs stay zero-alloc). Returns whether a re-rank
+    /// happened.
+    pub(crate) fn maybe_rerank(&mut self) -> bool {
+        let n = self.init_pending.len();
+        if n == 0 {
+            return false;
+        }
+        let weights = self.sched.rank_weights();
+        let mut sum_obs = 0.0f64;
+        let mut sum_cur = 0.0f64;
+        for i in 0..n {
+            let o = self.observed(i).load(Ordering::Relaxed);
+            if o == 0 {
+                return false; // e.g. last run was cancelled mid-flight
+            }
+            sum_obs += o as f64;
+            sum_cur += weights[i] as f64;
+        }
+        if sum_cur <= 0.0 || sum_obs <= 0.0 {
+            return false;
+        }
+        let mut drift = 1.0f64;
+        for i in 0..n {
+            let obs_share = self.observed(i).load(Ordering::Relaxed) as f64 / sum_obs;
+            let cur_share = weights[i] as f64 / sum_cur;
+            let ratio = obs_share / cur_share.max(f64::MIN_POSITIVE);
+            drift = drift.max(ratio.max(1.0 / ratio.max(f64::MIN_POSITIVE)));
+        }
+        if drift < RERANK_DRIFT_RATIO {
+            return false;
+        }
+        let Topology { sched, offsets, succ_arena, observed_ns, .. } = self;
+        sched.rerank_from(offsets, succ_arena, &|i: usize| {
+            (*observed_ns[i / OBSERVED_PER_LINE])[i % OBSERVED_PER_LINE].load(Ordering::Relaxed)
+        });
+        self.reranks.fetch_add(1, Ordering::Relaxed);
+        true
     }
 }
 
@@ -394,12 +496,37 @@ impl TaskGraph {
     /// A node's critical-path rank — its weighted longest-path-to-sink
     /// (own weight included) — or `None` while the graph is unsealed
     /// (ranks are computed at seal time; see `graph/schedule.rs`).
+    /// After a duration-feedback re-rank (PR 8) this reflects observed
+    /// rather than declared weights; see [`TaskGraph::reranks`].
     ///
     /// # Panics
     /// If `id` is out of bounds (an id from another graph).
     pub fn rank(&self, id: NodeId) -> Option<u64> {
         assert!(id.0 < self.nodes.len(), "NodeId out of range");
         self.topology.as_ref().map(|t| t.sched().ranks[id.0])
+    }
+
+    /// How many duration-feedback re-ranks this sealed graph has
+    /// performed (PR 8): launches recompute critical-path ranks from
+    /// observed node durations when they drift ≥2× from the weights
+    /// the current ranks encode
+    /// ([`RunOptions::dynamic_rank`](crate::graph::RunOptions::dynamic_rank)
+    /// opts a run out). Resets to 0 when a mutation drops the sealed
+    /// topology.
+    pub fn reranks(&self) -> u64 {
+        self.topology.as_ref().map(|t| t.rerank_count()).unwrap_or(0)
+    }
+
+    /// The observed-duration EWMA of a node (PR 8) — the executor's
+    /// measured execution time, smoothed across re-runs — or `None`
+    /// while the graph is unsealed or the node has never completed.
+    ///
+    /// # Panics
+    /// If `id` is out of bounds (an id from another graph).
+    pub fn observed_duration(&self, id: NodeId) -> Option<Duration> {
+        assert!(id.0 < self.nodes.len(), "NodeId out of range");
+        let ns = self.topology.as_ref()?.observed(id.0).load(Ordering::Relaxed);
+        (ns > 0).then(|| Duration::from_nanos(ns))
     }
 
     /// Declares that `task` runs after every task in `deps`

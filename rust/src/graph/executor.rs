@@ -318,6 +318,15 @@ pub struct RunOptions {
     /// arming it allocates one timer entry, so deadline runs are
     /// excluded from the zero-alloc re-run guarantee.
     pub deadline: Option<Duration>,
+    /// Disable duration-feedback re-ranking for this run (PR 8): the
+    /// executor stops sampling per-node durations and the launch-time
+    /// drift check is skipped, freezing the ranks at their current
+    /// values (seal-time declared weights, or whatever the last
+    /// re-rank computed). The ablation arm for measuring what observed
+    /// ranks buy on stale-weight graphs. No effect while
+    /// `no_topology_cache` or `no_critical_path` is set (no rank
+    /// consumer).
+    pub no_dynamic_rank: bool,
 }
 
 impl RunOptions {
@@ -396,6 +405,13 @@ impl RunOptions {
     /// [`RunOptions::deadline`].
     pub fn deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Toggles duration-feedback re-ranking (PR 8) — see
+    /// [`RunOptions::no_dynamic_rank`].
+    pub fn dynamic_rank(mut self, on: bool) -> Self {
+        self.no_dynamic_rank = !on;
         self
     }
 }
@@ -846,11 +862,21 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
             // SAFETY: exclusive access per the module-level protocol.
             let func = unsafe { &mut *node.func.get() };
             chaos_maybe_spike();
+            // Duration sampling for dynamic re-ranking (PR 8): one
+            // `Instant` pair per node, folded into the topology's
+            // observed-EWMA cells. Only this run's worker touches node
+            // `current`'s cell (runs of a graph are serialized), so
+            // the relaxed read-modify-write is exact.
+            let sample_at =
+                (topo.is_some() && !header.options.no_dynamic_rank).then(Instant::now);
             let outcome = if chaos_should_panic(&state) {
                 catch_unwind(|| panic!("chaos: injected node panic"))
             } else {
                 catch_unwind(AssertUnwindSafe(func))
             };
+            if let (Some(at), Some(t)) = (sample_at, topo) {
+                t.note_duration(current, at.elapsed().as_nanos() as u64);
+            }
             if let Err(payload) = outcome {
                 let msg = payload
                     .downcast_ref::<&str>()
@@ -1013,6 +1039,30 @@ pub fn chaos_set_serving_rates(overload_per_mille: u32, spike_per_mille: u32, sp
     chaos::set_serving_rates(overload_per_mille, spike_per_mille, spike_us);
 }
 
+/// Chaos panic injection *inside the serving launch path* (PR 8,
+/// `--features chaos`): with probability `CHAOS_LAUNCH_PANIC_RATE`
+/// /1000 per launch, `serve::GraphService` panics between taking a
+/// grant and releasing it — the failure mode the grant RAII guard
+/// exists for. Returns whether to panic; the caller supplies the
+/// actual `panic!` so the message names its own boundary.
+#[cfg(feature = "chaos")]
+pub(crate) fn chaos_inject_launch_panic() -> bool {
+    chaos::roll(chaos::launch_panic_per_mille())
+}
+
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub(crate) fn chaos_inject_launch_panic() -> bool {
+    false
+}
+
+/// Runtime override of the launch-panic rate (PR 8) — same
+/// storm-then-recover contract as [`chaos_set_serving_rates`].
+#[cfg(feature = "chaos")]
+pub fn chaos_set_launch_panic_rate(per_mille: u32) {
+    chaos::set_launch_panic_rate(per_mille);
+}
+
 /// Runtime-gated fault injection for the CI chaos job (PR 6). Only
 /// compiled under `--features chaos`; with the env rates unset the
 /// hooks are inert, so the full suite still passes under the feature.
@@ -1037,6 +1087,7 @@ mod chaos {
     static OVERLOAD_PER_MILLE: AtomicU32 = AtomicU32::new(0);
     static SPIKE_PER_MILLE: AtomicU32 = AtomicU32::new(0);
     static SPIKE_US: AtomicU32 = AtomicU32::new(100);
+    static LAUNCH_PANIC_PER_MILLE: AtomicU32 = AtomicU32::new(0);
     static SERVING_SEEDED: OnceLock<()> = OnceLock::new();
 
     pub(super) fn config() -> &'static Config {
@@ -1066,6 +1117,7 @@ mod chaos {
             OVERLOAD_PER_MILLE.store(rate("CHAOS_OVERLOAD_RATE", 0), Ordering::Relaxed);
             SPIKE_PER_MILLE.store(rate("CHAOS_SPIKE_RATE", 0), Ordering::Relaxed);
             SPIKE_US.store(rate("CHAOS_SPIKE_US", 100), Ordering::Relaxed);
+            LAUNCH_PANIC_PER_MILLE.store(rate("CHAOS_LAUNCH_PANIC_RATE", 0), Ordering::Relaxed);
         });
     }
 
@@ -1084,6 +1136,16 @@ mod chaos {
         OVERLOAD_PER_MILLE.store(overload, Ordering::Relaxed);
         SPIKE_PER_MILLE.store(spike, Ordering::Relaxed);
         SPIKE_US.store(spike_us, Ordering::Relaxed);
+    }
+
+    pub(super) fn launch_panic_per_mille() -> u32 {
+        seed_serving();
+        LAUNCH_PANIC_PER_MILLE.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn set_launch_panic_rate(per_mille: u32) {
+        seed_serving();
+        LAUNCH_PANIC_PER_MILLE.store(per_mille, Ordering::Relaxed);
     }
 
     /// One splitmix64 step on a process-shared counter per roll;
@@ -1150,6 +1212,17 @@ fn launch_run(
         for node in &graph.nodes {
             node.pending.store(node.num_predecessors, Ordering::Relaxed);
         }
+    }
+
+    // (2b) Duration-feedback re-rank (PR 8): still inside the
+    //      quiescent window — no task of any run can be reading the
+    //      schedule, and `&mut TaskGraph` proves no other launch races
+    //      us — fold the observed-duration EWMAs back into the
+    //      critical-path ranks when they have drifted far enough from
+    //      the weights the current ranks encode. Allocation-free, so
+    //      sealed re-runs keep the zero-alloc guarantee.
+    if use_topo && !options.no_dynamic_rank && !options.no_critical_path {
+        graph.topology.as_mut().unwrap().maybe_rerank();
     }
 
     // (3) Run state: re-arm the graph-owned slot (zero allocations on

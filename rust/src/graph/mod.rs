@@ -25,6 +25,15 @@
 //! and whole runs carry a [`RunPriority`] class so concurrent fleets
 //! can express tenant tiers — all toggleable via [`RunOptions`].
 //!
+//! Ranks are **self-correcting** (PR 8): the executor records each
+//! node's observed duration into a per-node EWMA beside the CSR
+//! arena, and a launch recomputes the critical-path ranks from those
+//! observations — in place, allocation-free — once they drift ≥2×
+//! from the weights the current ranks encode. Declared weights that
+//! are wrong by orders of magnitude stop mattering after a couple of
+//! re-runs ([`RunOptions::dynamic_rank`] opts out;
+//! [`TaskGraph::reranks`] / [`TaskGraph::observed_duration`] observe).
+//!
 //! Submission is **shard-aware** (PR 5): a run's cross-thread bursts
 //! route through the pool's per-shard injectors (striped round-robin
 //! by default), and [`RunOptions::shard`] pins a run to one shard so a
@@ -59,10 +68,18 @@ pub use executor::{wait_all, wait_any, CancelToken, RunHandle, RunOptions};
 pub use schedule::RunPriority;
 pub use trace::{ShardDepthSample, SpanGuard, TraceEvent, Tracer};
 
-pub(crate) use executor::{chaos_inject_overload, execute_node, NodeRun};
+pub(crate) use executor::{
+    chaos_inject_launch_panic, chaos_inject_overload, execute_node, NodeRun,
+};
 
 /// Runtime override for the chaos serving knobs (PR 7) — re-exported
 /// for the chaos-storm soak test; see
 /// `executor::chaos_set_serving_rates`.
 #[cfg(feature = "chaos")]
 pub use executor::chaos_set_serving_rates;
+
+/// Runtime override for the chaos launch-panic rate (PR 8) —
+/// re-exported for the grant-leak chaos test; see
+/// `executor::chaos_set_launch_panic_rate`.
+#[cfg(feature = "chaos")]
+pub use executor::chaos_set_launch_panic_rate;

@@ -121,6 +121,20 @@ pub(crate) struct Schedule {
     /// breaks ties, so the order is deterministic) — the
     /// critical-path-first source burst.
     pub(crate) sources_desc: Vec<usize>,
+    /// Kahn visitation order, cached at seal time. The CSR topology is
+    /// immutable while sealed, so the same order stays valid for every
+    /// duration-feedback re-rank (PR 8) — re-deriving it per re-rank
+    /// would cost another O(n + e) pass and a scratch in-degree copy.
+    topo_order: Vec<u32>,
+    /// The effective per-node weights the *current* `ranks` encode:
+    /// the declared weights at seal, then a snapshot of the observed
+    /// durations after each re-rank. Drift detection compares fresh
+    /// observations against these, so one re-rank quiets the trigger
+    /// until behavior shifts again.
+    rank_weights: Vec<u64>,
+    /// Preallocated scratch for the bucket-threshold sort, retained at
+    /// capacity so re-ranks stay allocation-free on sealed re-runs.
+    scratch: Vec<u64>,
 }
 
 impl Schedule {
@@ -157,41 +171,79 @@ impl Schedule {
         }
         debug_assert_eq!(order.len(), n, "Schedule::build requires an acyclic graph");
 
+        let sources_desc = sources.clone();
+        let mut sched = Schedule {
+            ranks: vec![0u64; n],
+            buckets: vec![0u8; n],
+            sources,
+            sources_desc,
+            topo_order: order,
+            rank_weights: weights.iter().map(|&w| u64::from(w)).collect(),
+            scratch: Vec::with_capacity(n),
+        };
+        sched.recompute(offsets, succ);
+        sched
+    }
+
+    /// The effective weights the current ranks were computed from —
+    /// the baseline for the topology's drift check (PR 8).
+    #[inline]
+    pub(crate) fn rank_weights(&self) -> &[u64] {
+        &self.rank_weights
+    }
+
+    /// Re-derives ranks from observed per-node durations (PR 8). The
+    /// caller supplies `weight_of(i)` — the topology's observed-EWMA
+    /// accessor — and guarantees the run is quiescent (no worker can be
+    /// reading ranks/buckets). Allocation-free: the sweep reuses the
+    /// cached Kahn order and every output vector is updated in place.
+    pub(crate) fn rerank_from(
+        &mut self,
+        offsets: &[u32],
+        succ: &[u32],
+        weight_of: &dyn Fn(usize) -> u64,
+    ) {
+        for (i, w) in self.rank_weights.iter_mut().enumerate() {
+            *w = weight_of(i).max(1);
+        }
+        self.recompute(offsets, succ);
+    }
+
+    /// The shared rank sweep: reverse-topological rank pass over the
+    /// cached Kahn order, quartile re-bucketing, and the descending
+    /// source re-sort — used by both the seal-time build and re-ranks.
+    fn recompute(&mut self, offsets: &[u32], succ: &[u32]) {
+        let n = self.rank_weights.len();
+
         // Reverse-topological sweep: every successor's rank is final
         // before its predecessors are visited.
-        let mut ranks = vec![0u64; n];
-        for &i in order.iter().rev() {
+        for &i in self.topo_order.iter().rev() {
             let i = i as usize;
             let tail = succ[offsets[i] as usize..offsets[i + 1] as usize]
                 .iter()
-                .map(|&s| ranks[s as usize])
+                .map(|&s| self.ranks[s as usize])
                 .max()
                 .unwrap_or(0);
-            ranks[i] = weights[i] as u64 + tail;
+            self.ranks[i] = self.rank_weights[i] + tail;
         }
 
-        // Quartile thresholds from a descending-sorted copy. The
-        // boundaries are approximate for tiny graphs (ties all land in
-        // the more critical bucket), which errs on the side of not
-        // demoting work — only the top/bottom-half split feeds lanes.
-        let buckets = if n == 0 {
-            Vec::new()
-        } else {
-            let mut sorted = ranks.clone();
-            sorted.sort_unstable_by_key(|&r| Reverse(r));
-            let th: [u64; 3] = [1usize, 2, 3].map(|k| sorted[(n * k / 4).min(n - 1)]);
-            ranks.iter().map(|&r| th.iter().filter(|&&t| r < t).count() as u8).collect()
-        };
-
-        let mut sources_desc = sources.clone();
-        sources_desc.sort_unstable_by_key(|&i| (Reverse(ranks[i]), i));
-
-        Schedule {
-            ranks,
-            buckets,
-            sources,
-            sources_desc,
+        // Quartile thresholds from a descending-sorted copy (the
+        // retained scratch vector). The boundaries are approximate for
+        // tiny graphs (ties all land in the more critical bucket),
+        // which errs on the side of not demoting work — only the
+        // top/bottom-half split feeds lanes.
+        if n > 0 {
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&self.ranks);
+            self.scratch.sort_unstable_by_key(|&r| Reverse(r));
+            let th: [u64; 3] = [1usize, 2, 3].map(|k| self.scratch[(n * k / 4).min(n - 1)]);
+            for (b, &r) in self.buckets.iter_mut().zip(self.ranks.iter()) {
+                *b = th.iter().filter(|&&t| r < t).count() as u8;
+            }
         }
+
+        let ranks = &self.ranks;
+        self.sources_desc.sort_unstable_by_key(|&i| (Reverse(ranks[i]), i));
     }
 }
 
@@ -285,6 +337,37 @@ mod tests {
             assert_eq!(lane_compose(class, None), top, "{class:?} unranked");
         }
         assert_eq!(DEFAULT_LANE, 1, "untagged submissions share the Normal-critical lane");
+    }
+
+    #[test]
+    fn rerank_flips_the_critical_arm_in_place() {
+        // 0 -> {1 (declared 10), 2 (declared 1)} -> 3; observation says
+        // the light arm is actually the heavy one.
+        let adj = vec![vec![1, 2], vec![3], vec![3], vec![]];
+        let (o, s, d) = csr(&adj);
+        let mut sched = Schedule::build(&o, &s, &d, &[1, 10, 1, 2]);
+        assert!(sched.ranks[1] > sched.ranks[2]);
+        let observed = [1u64, 1, 40, 2];
+        sched.rerank_from(&o, &s, &|i| observed[i]);
+        assert_eq!(sched.ranks[2], 42);
+        assert_eq!(sched.ranks[1], 3);
+        assert_eq!(sched.ranks[0], 43);
+        assert_eq!(sched.rank_weights(), &observed[..]);
+        // Buckets follow the new ranks: node 2 is now top-quartile.
+        assert!(sched.buckets[2] < sched.buckets[1]);
+    }
+
+    #[test]
+    fn rerank_reorders_independent_sources() {
+        // Two independent chains: 0->2 and 1->3, equal declared
+        // weights; observation makes chain 1 heavier.
+        let adj = vec![vec![2], vec![3], vec![], vec![]];
+        let (o, s, d) = csr(&adj);
+        let mut sched = Schedule::build(&o, &s, &d, &[1; 4]);
+        assert_eq!(sched.sources_desc, vec![0, 1]);
+        sched.rerank_from(&o, &s, &|i| if i == 1 || i == 3 { 50 } else { 1 });
+        assert_eq!(sched.sources_desc, vec![1, 0]);
+        assert_eq!(sched.sources, vec![0, 1], "insertion-order sources untouched");
     }
 
     #[test]

@@ -232,6 +232,14 @@ pub struct TenantSnapshot {
     /// Requests that ultimately failed (retries exhausted or a
     /// non-retryable error).
     pub failed: u64,
+    /// Per-tenant service-time EWMA in nanoseconds (PR 8): grant →
+    /// successful completion. Zero until the tenant's first
+    /// completion. Feeds deadline feasibility and slow-tenant
+    /// demotion in the serving gate.
+    pub service_ewma_ns: u64,
+    /// Launches demoted off the tenant's declared class because this
+    /// EWMA exceeded `ServiceConfig::demote_slow_after` (PR 8).
+    pub demotions: u64,
 }
 
 impl TenantSnapshot {

@@ -29,7 +29,11 @@
 //! service out), and de-escalation steps down one level at a time only
 //! after `exit_hold` has elapsed without an over-threshold observation
 //! (a clean spell must be sustained, and a two-level brownout takes two
-//! holds to fully clear).
+//! holds to fully clear). "Over-threshold" is judged on each **fresh
+//! sample**, not the smoothed EWMA — the EWMA exists for deadline
+//! feasibility; using it to arm the hold timer would let a single
+//! spike storm pin the level high for the filter's whole decay tail
+//! (~8 holds) after the queue is already empty.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::time::{Duration, Instant};
@@ -146,7 +150,14 @@ impl BrownoutController {
         };
         self.ewma_ns.store(next.max(1), Ordering::Relaxed);
 
-        if Duration::from_nanos(next) > self.cfg.enter {
+        // The *fresh sample* drives the escalation state machine; the
+        // EWMA above only feeds deadline feasibility. Gating the
+        // streak/hold on the decayed EWMA (the pre-PR 8 bug) meant one
+        // spike storm kept re-arming the hold timer on every later
+        // zero-delay sample until the filter drifted back under
+        // `enter` — recovery took ~8× `exit_hold` instead of one hold
+        // per level.
+        if delay > self.cfg.enter {
             self.last_high_ns.store(self.now_ns(), Ordering::Relaxed);
             let streak = self.high_streak.fetch_add(1, Ordering::Relaxed) + 1;
             if streak >= self.cfg.enter_after.max(1) {
@@ -294,6 +305,44 @@ mod tests {
             c.observe(Duration::from_millis(50));
         }
         assert!(c.level() >= BrownoutLevel::ShedLow, "ongoing overload must hold the level");
+    }
+
+    #[test]
+    fn spike_then_quiet_recovers_in_one_hold_per_level() {
+        // Regression (PR 8): two huge spikes escalate to the top level
+        // and saturate the EWMA far above `enter` — exactly the state
+        // that used to wedge recovery, because every later zero-delay
+        // sample re-armed the hold timer off the still-high EWMA.
+        let c = BrownoutController::new(cfg(1, 1, 60));
+        c.observe(Duration::from_secs(2));
+        c.observe(Duration::from_secs(2));
+        assert_eq!(c.level(), BrownoutLevel::ShedOverQuota);
+
+        // Stream zero-delay samples; with sample-driven holds these
+        // never re-arm the timer, so each elapsed exit_hold steps down
+        // one level even while the EWMA is still way over `enter`.
+        let quiet_from = Instant::now();
+        while quiet_from.elapsed() < Duration::from_millis(95) {
+            c.observe(Duration::ZERO);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            c.ewma() > c.cfg.enter,
+            "test premise: the EWMA must still be over-threshold while recovery runs"
+        );
+        assert!(
+            c.level() <= BrownoutLevel::ShedLow,
+            "one quiet hold must unwind one level, high EWMA or not"
+        );
+        while quiet_from.elapsed() < Duration::from_millis(220) {
+            c.observe(Duration::ZERO);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            c.level(),
+            BrownoutLevel::Normal,
+            "recovery is bounded at ~one exit_hold per level, not the EWMA decay tail"
+        );
     }
 
     #[test]

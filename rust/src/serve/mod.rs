@@ -43,17 +43,36 @@
 //!   otherwise -> ServeError::Failed
 //! ```
 //!
-//! The service is deliberately **in-process**: the ROADMAP's follow-up
-//! direction (a small TCP/HTTP binary in `rust/src/bin/`) can wrap
-//! [`GraphService`] without touching the fairness or degradation
-//! machinery.
+//! The service core stays in-process; PR 8 adds the promised network
+//! skin on top:
+//!
+//! * [`WireServer`] / [`WireClient`] (`wire.rs`) — a std-only TCP
+//!   front-end speaking length-prefixed frames that name a
+//!   pre-registered graph template, a tenant token, and an optional
+//!   deadline. Requests launch through the untouched [`GraphService`]
+//!   gate, and a plaintext scrape endpoint exports the tenant /
+//!   brownout / retry / re-rank counters. The `graph_serve` binary
+//!   (`rust/src/bin/graph_serve.rs`) wraps it into a standalone server
+//!   and client CLI.
+//!
+//! PR 8 also teaches admission two latency-feedback tricks: each
+//! tenant carries a grant→completion **service-time EWMA**, used both
+//! as a deadline-feasibility floor at the gate (a request whose
+//! remaining budget is below the tenant's own typical service time is
+//! rejected before queueing) and to **demote chronically slow
+//! tenants** off the High priority lanes
+//! ([`ServiceConfig::demote_slow_after`]).
 
 mod brownout;
 mod retry;
 mod service;
 mod tenant;
+mod wire;
 
 pub use brownout::{BrownoutConfig, BrownoutController, BrownoutLevel};
 pub use retry::RetryPolicy;
 pub use service::{GraphService, ServeError, ServiceConfig, ShedReason};
 pub use tenant::{TenantId, TenantSpec};
+pub use wire::{
+    wire_run, wire_scrape, WireClient, WireHandle, WireServer, WireStatus, MAX_FRAME, WIRE_VERSION,
+};

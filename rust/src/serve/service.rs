@@ -16,9 +16,13 @@
 //!
 //! Admission is layered, cheapest rejection first:
 //!
-//! 1. **Deadline feasibility** — if the request's remaining deadline is
-//!    already ≤ the queue-delay EWMA, it is rejected with
-//!    [`GraphError::WouldMissDeadline`] before holding any slot.
+//! 1. **Deadline feasibility** — a request is rejected with
+//!    [`GraphError::WouldMissDeadline`] before holding any slot when
+//!    its deadline has already passed (checked unconditionally, even
+//!    on a cold gate), or its remaining deadline is ≤ the pool-wide
+//!    queue-delay EWMA, or ≤ the *tenant's own* service-time EWMA
+//!    (PR 8 — a tenant whose graphs take 40 ms cannot make a 5 ms
+//!    deadline no matter how idle the gate is).
 //! 2. **Brownout shedding** — at [`BrownoutLevel::ShedLow`] the gate
 //!    sheds Low-class tenants' queues; at
 //!    [`BrownoutLevel::ShedOverQuota`] also the queues of tenants
@@ -37,7 +41,10 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::graph::{chaos_inject_overload, GraphError, RunOptions, RunPriority, TaskGraph};
+use crate::graph::{
+    chaos_inject_launch_panic, chaos_inject_overload, GraphError, RunOptions, RunPriority,
+    TaskGraph,
+};
 use crate::pool::{TenantSnapshot, ThreadPool};
 use crate::util::XorShift64Star;
 
@@ -114,6 +121,15 @@ pub struct ServiceConfig {
     pub retry: RetryPolicy,
     /// Brownout thresholds and hysteresis.
     pub brownout: BrownoutConfig,
+    /// Slow-tenant demotion threshold (PR 8): once a tenant's
+    /// service-time EWMA (grant → successful completion) exceeds this,
+    /// its `High`-class launches are demoted to `Normal` and, when the
+    /// tenant has no shard pin, routed onto the pool's last shard (the
+    /// "quarantine shard") — chronically slow work stops occupying the
+    /// express lanes and stops polluting every cache domain. `None`
+    /// disables demotion. The tenant's declared class is untouched;
+    /// the EWMA recovering below the threshold restores it.
+    pub demote_slow_after: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -122,6 +138,7 @@ impl Default for ServiceConfig {
             max_inflight: 32,
             retry: RetryPolicy::default(),
             brownout: BrownoutConfig::default(),
+            demote_slow_after: Some(Duration::from_millis(50)),
         }
     }
 }
@@ -273,9 +290,8 @@ impl GraphService {
             let st = self.gate.lock().unwrap();
             st.tenants.get(tenant.0).cloned().ok_or(ServeError::UnknownTenant)?
         };
-        let spec = state.spec.clone();
         let arrival = Instant::now();
-        let deadline_at = deadline.or(spec.deadline).map(|d| arrival + d);
+        let deadline_at = deadline.or(state.spec.deadline).map(|d| arrival + d);
         state.submitted.fetch_add(1, Ordering::Relaxed);
 
         let mut rng = XorShift64Star::from_entropy();
@@ -295,11 +311,22 @@ impl GraphService {
             }
 
             // --- launch (the grant is held until release) -----------
-            let outcome = self.launch(&spec, graph, deadline_at);
-            self.release(tenant.0, &state);
+            // The grant is returned by an RAII guard, not a plain call
+            // after `launch` (PR 8 bugfix): a panic anywhere in the
+            // launch path — a chaos injection, a bug in option
+            // plumbing, a poisoned pool mutex — used to leak one
+            // service-wide and one tenant inflight slot permanently,
+            // silently shrinking `max_inflight` for the life of the
+            // process.
+            let granted_at = Instant::now();
+            let outcome = {
+                let _grant = GrantGuard { svc: self, state: &state };
+                self.launch(&state, graph, deadline_at)
+            };
 
             let err = match outcome {
                 Ok(()) => {
+                    state.note_service_time(granted_at.elapsed());
                     state.completed.fetch_add(1, Ordering::Relaxed);
                     self.budget.on_success();
                     return Ok(());
@@ -337,7 +364,15 @@ impl GraphService {
         });
         let mut st = self.gate.lock().unwrap();
         st.queues[tenant].push_back(ticket.clone());
-        self.pump(&mut st);
+        // An enqueue-pump can resolve *other* callers' tickets too —
+        // e.g. shed a parked tenant's whole queue after a brownout
+        // escalation — so it must notify like the release path does
+        // (PR 8 bugfix). Without this, a ticket resolved here stayed
+        // parked until some unrelated release happened to pump again;
+        // with zero inflight runs, indefinitely.
+        if self.pump(&mut st) {
+            self.gate_cv.notify_all();
+        }
         while ticket.state.load(Ordering::Acquire) == WAITING {
             st = self.gate_cv.wait(st).unwrap();
         }
@@ -354,19 +389,42 @@ impl GraphService {
         resolved
     }
 
-    /// One granted launch attempt: chaos overload injection, deadline
-    /// bookkeeping, then the non-blocking pool run.
+    /// One granted launch attempt: chaos injection, slow-tenant
+    /// demotion (PR 8), deadline bookkeeping, then the non-blocking
+    /// pool run.
     fn launch(
         &self,
-        spec: &TenantSpec,
+        state: &TenantState,
         graph: &mut TaskGraph,
         deadline_at: Option<Instant>,
     ) -> Result<(), GraphError> {
         if chaos_inject_overload() {
             return Err(GraphError::Overloaded);
         }
-        let mut opts = RunOptions::new().priority(spec.class);
-        if let Some(shard) = spec.shard {
+        if chaos_inject_launch_panic() {
+            panic!("chaos: injected launch panic");
+        }
+        let spec = &state.spec;
+        // Slow-tenant demotion (PR 8): a tenant whose own service-time
+        // EWMA says its graphs are chronically slow stops riding the
+        // High lanes (where it would delay every fast tenant's
+        // critical work) and, when unpinned, is routed onto the pool's
+        // last shard so its working set stops washing through every
+        // cache domain. Keyed off the live EWMA, so a tenant that
+        // speeds back up is restored automatically.
+        let mut class = spec.class;
+        let mut shard = spec.shard;
+        if let Some(limit) = self.cfg.demote_slow_after {
+            if class == RunPriority::High && state.service_ewma() > limit {
+                class = RunPriority::Normal;
+                if shard.is_none() {
+                    shard = Some(self.pool.num_shards().saturating_sub(1));
+                }
+                state.demotions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let mut opts = RunOptions::new().priority(class);
+        if let Some(shard) = shard {
             opts = opts.on_shard(shard);
         }
         if let Some(at) = deadline_at {
@@ -381,7 +439,7 @@ impl GraphService {
 
     /// Returns a grant: one service slot and one tenant slot, then
     /// re-pumps so a queued ticket can take the freed capacity.
-    fn release(&self, tenant: usize, state: &TenantState) {
+    fn release(&self, state: &TenantState) {
         let mut st = self.gate.lock().unwrap();
         st.inflight = st.inflight.saturating_sub(1);
         state.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -391,12 +449,16 @@ impl GraphService {
     }
 
     /// The admission pump: sheds per the brownout level and deadline
-    /// feasibility, then grants in DRR order. Runs under the gate lock;
-    /// callers notify the condvar after dropping it.
-    fn pump(&self, st: &mut GateState) {
+    /// feasibility, then grants in DRR order. Runs under the gate lock.
+    /// Returns whether any ticket was resolved (granted or shed) —
+    /// **every** caller that sees `true` must notify `gate_cv` after
+    /// (or while) holding the lock, because the resolved tickets may
+    /// belong to other parked callers (PR 8 bugfix; see `await_grant`).
+    fn pump(&self, st: &mut GateState) -> bool {
         let level = self.brownout.level();
         let ewma = self.brownout.ewma();
         let now = Instant::now();
+        let mut resolved = false;
 
         // --- shed pass ------------------------------------------------
         let total_weight: u64 = st.tenants.iter().map(|t| u64::from(t.spec.weight)).sum();
@@ -408,23 +470,36 @@ impl GraphService {
                 continue;
             }
             // Deadline feasibility applies at every level: work that
-            // cannot finish in time must not consume a slot.
-            if !ewma.is_zero() {
-                queues[i].retain(|ticket| {
-                    let infeasible = ticket
-                        .deadline_at
-                        .is_some_and(|at| at.saturating_duration_since(now) <= ewma);
-                    if infeasible {
-                        ticket.state.store(INFEASIBLE, Ordering::Release);
-                        t.shed_deadline.fetch_add(1, Ordering::Relaxed);
-                    }
-                    !infeasible
+            // cannot finish in time must not consume a slot. An
+            // already-expired deadline is infeasible *unconditionally*
+            // — gating the whole check on a warmed-up EWMA (the
+            // pre-PR 8 bug) let a cold gate grant expired requests,
+            // which then burned a pool admission slot, failed with
+            // `DeadlineExceeded`, and spun through retry backoff on a
+            // deadline that could never be met. A nonzero pool EWMA or
+            // per-tenant service EWMA (PR 8) additionally rejects
+            // deadlines that are nominally in the future but closer
+            // than the work could possibly finish.
+            let floor = t.service_ewma();
+            queues[i].retain(|ticket| {
+                let infeasible = ticket.deadline_at.is_some_and(|at| {
+                    let remaining = at.saturating_duration_since(now);
+                    remaining.is_zero()
+                        || (!ewma.is_zero() && remaining <= ewma)
+                        || (!floor.is_zero() && remaining <= floor)
                 });
-            }
+                if infeasible {
+                    ticket.state.store(INFEASIBLE, Ordering::Release);
+                    t.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    resolved = true;
+                }
+                !infeasible
+            });
             if level >= BrownoutLevel::ShedLow && matches!(t.spec.class, RunPriority::Low) {
                 for ticket in queues[i].drain(..) {
                     ticket.state.store(SHED_LOW, Ordering::Release);
                     t.shed_low.fetch_add(1, Ordering::Relaxed);
+                    resolved = true;
                 }
                 continue;
             }
@@ -436,6 +511,7 @@ impl GraphService {
                     for ticket in queues[i].drain(..) {
                         ticket.state.store(SHED_OVER_QUOTA, Ordering::Release);
                         t.shed_over_quota.fetch_add(1, Ordering::Relaxed);
+                        resolved = true;
                     }
                 }
             }
@@ -454,7 +530,7 @@ impl GraphService {
         // spread over pump invocations.
         let n = st.tenants.len();
         if n == 0 {
-            return;
+            return resolved;
         }
         'grants: while st.inflight < self.cfg.max_inflight {
             let mut granted_any = false;
@@ -481,6 +557,7 @@ impl GraphService {
                     st.inflight += 1;
                     st.deficits[i] -= DRR_COST;
                     granted_any = true;
+                    resolved = true;
                 }
                 st.cursor = (st.cursor + 1) % n;
             }
@@ -505,6 +582,7 @@ impl GraphService {
                 }
             }
         }
+        resolved
     }
 
     /// Parks the calling thread for `delay` using the pool's timer
@@ -526,6 +604,23 @@ impl GraphService {
         while !*fired {
             fired = cv.wait(fired).unwrap();
         }
+    }
+}
+
+/// RAII return of a dispatch grant (PR 8): constructed the moment a
+/// ticket is granted, dropped when the launch attempt finishes —
+/// normally *or by unwinding*. Panics in the launch path therefore
+/// give back their service-wide and tenant inflight slots (and re-pump
+/// the gate) instead of leaking them; the chaos launch-panic test
+/// proves it.
+struct GrantGuard<'a> {
+    svc: &'a GraphService,
+    state: &'a TenantState,
+}
+
+impl Drop for GrantGuard<'_> {
+    fn drop(&mut self) {
+        self.svc.release(self.state);
     }
 }
 
@@ -629,6 +724,82 @@ mod tests {
             peak.load(Ordering::SeqCst)
         );
         assert_eq!(svc.tenant_snapshots()[0].completed, 32);
+    }
+
+    #[test]
+    fn enqueue_pump_wakes_tickets_it_resolves() {
+        use std::sync::mpsc;
+
+        // Regression for the PR 8 lost-wakeup fix. One service slot,
+        // held for the whole test; nothing completes, so no release
+        // ever pumps — the only thing that can resolve (and must wake)
+        // a parked ticket is another caller's enqueue-pump.
+        let svc = Arc::new(GraphService::new(
+            ThreadPool::new(2),
+            ServiceConfig { max_inflight: 1, ..ServiceConfig::default() },
+        ));
+        let holder = svc.register_tenant(TenantSpec::new("holder"));
+        let low = svc.register_tenant(TenantSpec::new("background").class(RunPriority::Low));
+        let normal = svc.register_tenant(TenantSpec::new("interactive"));
+
+        // Occupy the single slot with a run parked on a flag.
+        let block = Arc::new((Mutex::new(false), Condvar::new()));
+        let h = {
+            let svc = svc.clone();
+            let block = block.clone();
+            std::thread::spawn(move || {
+                let mut g = TaskGraph::new();
+                g.add(move || {
+                    let (lock, cv) = &*block;
+                    let mut released = lock.lock().unwrap();
+                    while !*released {
+                        released = cv.wait(released).unwrap();
+                    }
+                });
+                svc.run(holder, &mut g).unwrap();
+            })
+        };
+        while svc.tenant_snapshots()[holder.index()].inflight == 0 {
+            std::thread::yield_now();
+        }
+
+        // Park the Low tenant behind the held slot.
+        let (tx, rx) = mpsc::channel();
+        let _b = {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let (mut g, _) = Dag::diamond_chain(1).to_task_graph(8);
+                tx.send(svc.run(low, &mut g)).unwrap();
+            })
+        };
+        std::thread::sleep(Duration::from_millis(100)); // let it reach the condvar
+
+        // Escalate, then let an unrelated tenant's *enqueue* shed the
+        // parked queue. Only the enqueue-pump's notify can wake the
+        // Low caller — before the fix this timed out.
+        svc.brownout.force_level(BrownoutLevel::ShedLow);
+        let a = {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let (mut g, _) = Dag::diamond_chain(1).to_task_graph(8);
+                svc.run(normal, &mut g)
+            })
+        };
+
+        let shed = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("ticket resolved by another caller's enqueue-pump must wake promptly");
+        assert!(matches!(shed, Err(ServeError::Shed(ShedReason::Low))), "got {shed:?}");
+
+        // Release the held slot; the Normal tenant then completes.
+        {
+            let (lock, cv) = &*block;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        h.join().unwrap();
+        a.join().unwrap().unwrap();
+        assert_eq!(svc.tenant_snapshots()[low.index()].shed_low, 1);
     }
 
     #[test]

@@ -116,6 +116,16 @@ pub(crate) struct TenantState {
     pub(crate) shed_over_quota: AtomicU64,
     pub(crate) shed_deadline: AtomicU64,
     pub(crate) failed: AtomicU64,
+    /// Per-tenant service-time EWMA in nanoseconds (PR 8): grant →
+    /// successful completion, α = 1/8; 0 = no completions yet. This is
+    /// the tenant's own latency signal — the gate uses it alongside
+    /// the pool-wide queue-delay EWMA for deadline feasibility, and
+    /// the launch path uses it to demote chronically slow tenants off
+    /// the High lanes (see `serve/service.rs`).
+    pub(crate) service_ewma_ns: AtomicU64,
+    /// Launches demoted off the tenant's declared class because its
+    /// service EWMA exceeded [`crate::serve::ServiceConfig::demote_slow_after`].
+    pub(crate) demotions: AtomicU64,
 }
 
 impl TenantState {
@@ -130,7 +140,24 @@ impl TenantState {
             shed_over_quota: AtomicU64::new(0),
             shed_deadline: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            service_ewma_ns: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
         }
+    }
+
+    /// Folds one grant→completion latency into the service-time EWMA
+    /// (first sample seeds; stored value floors at 1 ns so "has
+    /// completed" is distinguishable from "never completed").
+    pub(crate) fn note_service_time(&self, took: Duration) {
+        let sample = took.as_nanos() as u64;
+        let cur = self.service_ewma_ns.load(Ordering::Relaxed);
+        let next = if cur == 0 { sample } else { cur - cur / 8 + sample / 8 };
+        self.service_ewma_ns.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Current service-time EWMA (zero until the first completion).
+    pub(crate) fn service_ewma(&self) -> Duration {
+        Duration::from_nanos(self.service_ewma_ns.load(Ordering::Relaxed))
     }
 
     pub(crate) fn snapshot(&self, id: usize) -> TenantSnapshot {
@@ -146,6 +173,8 @@ impl TenantState {
             shed_over_quota: self.shed_over_quota.load(Ordering::Relaxed),
             shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            service_ewma_ns: self.service_ewma_ns.load(Ordering::Relaxed),
+            demotions: self.demotions.load(Ordering::Relaxed),
         }
     }
 }

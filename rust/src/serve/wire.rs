@@ -1,0 +1,691 @@
+//! TCP wire front-end for [`GraphService`] (PR 8).
+//!
+//! PR 7 built the serving tier deliberately in-process; this module is
+//! the promised network skin over it. It adds **no** scheduling policy
+//! of its own — every request funnels through the untouched
+//! [`GraphService`] gate (DRR fairness, brownout, deadline
+//! feasibility, retry budget), so a remote caller gets exactly the
+//! same treatment as an in-process one.
+//!
+//! # Protocol
+//!
+//! Std-only, length-prefixed binary frames over TCP. Every frame is a
+//! big-endian `u32` payload length (≤ [`MAX_FRAME`]) followed by the
+//! payload. Request payloads:
+//!
+//! ```text
+//! RUN:   u8 version=1 | u8 kind=1 | u16 token_len | token bytes
+//!        | u16 template_len | template bytes | u64 deadline_micros
+//!        (deadline_micros = 0 means "tenant default")
+//! STATS: u8 version=1 | u8 kind=2
+//! ```
+//!
+//! Response payloads:
+//!
+//! ```text
+//! u8 version=1 | u8 status (WireStatus) | u16 msg_len | msg bytes
+//! ```
+//!
+//! For `RUN`, `msg` carries the error description (empty on OK); for
+//! `STATS`, `msg` carries the same plaintext counter dump the metrics
+//! listener serves. Graphs are named, not shipped: a request names a
+//! **pre-registered template**, and each connection keeps one built
+//! [`TaskGraph`] instance per template, so a client issuing the same
+//! template repeatedly gets the sealed zero-alloc re-run path
+//! end-to-end — the wire adds a frame parse and one syscall pair, not
+//! a graph rebuild.
+//!
+//! An optional second listener answers any HTTP request with a
+//! `text/plain` counter dump (tenant lifecycle counters including the
+//! PR 8 `service_ewma_ns` / `demotions`, brownout level and
+//! queue-delay EWMA, retry tokens, and total observed-rank
+//! recomputations) — enough for a scrape target without an HTTP
+//! dependency.
+//!
+//! The `graph_serve` binary (`rust/src/bin/graph_serve.rs`) wraps this
+//! module into a standalone server + client CLI; `benches/serving.rs`
+//! `WIRE=1` mode and the CI smoke step drive it cross-process.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::graph::TaskGraph;
+
+use super::brownout::BrownoutLevel;
+use super::service::{GraphService, ServeError};
+use super::tenant::TenantId;
+
+/// Hard cap on a frame payload (request or response). Large enough for
+/// any stats dump we produce, small enough that a garbage length
+/// prefix cannot make the server allocate unboundedly.
+pub const MAX_FRAME: usize = 64 * 1024;
+
+/// Wire protocol version carried in every payload.
+pub const WIRE_VERSION: u8 = 1;
+
+const KIND_RUN: u8 = 1;
+const KIND_STATS: u8 = 2;
+
+/// Poll granularity for server-side reads: blocked reads wake this
+/// often to check the stop flag, so [`WireHandle::stop`] never hangs
+/// on an idle connection.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Outcome of one wire request, mirroring [`ServeError`] plus the
+/// wire-only failure modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireStatus {
+    /// The run completed; all nodes executed exactly once.
+    Ok = 0,
+    /// Shed at the gate by brownout policy ([`ServeError::Shed`]).
+    Shed = 1,
+    /// Non-retryable failure ([`ServeError::Failed`]).
+    Failed = 2,
+    /// Retry budget or attempts exhausted
+    /// ([`ServeError::RetriesExhausted`]).
+    RetriesExhausted = 3,
+    /// The token does not name a registered tenant.
+    UnknownTenant = 4,
+    /// The request names a template the server does not host.
+    UnknownTemplate = 5,
+    /// The frame failed to parse (bad version, kind, length, UTF-8).
+    BadFrame = 6,
+}
+
+impl WireStatus {
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => Self::Ok,
+            1 => Self::Shed,
+            2 => Self::Failed,
+            3 => Self::RetriesExhausted,
+            4 => Self::UnknownTenant,
+            5 => Self::UnknownTemplate,
+            6 => Self::BadFrame,
+            _ => return None,
+        })
+    }
+}
+
+type Template = Arc<dyn Fn() -> TaskGraph + Send + Sync>;
+
+/// Builder for the wire front-end: a [`GraphService`] plus the static
+/// routing tables (token → tenant, template name → graph factory).
+pub struct WireServer {
+    svc: Arc<GraphService>,
+    tokens: HashMap<String, TenantId>,
+    templates: HashMap<String, Template>,
+}
+
+impl WireServer {
+    /// Starts a builder over `svc`. Tenants must already be registered
+    /// with the service; [`WireServer::tenant`] only binds tokens.
+    pub fn new(svc: Arc<GraphService>) -> Self {
+        Self { svc, tokens: HashMap::new(), templates: HashMap::new() }
+    }
+
+    /// Binds an authentication token to a registered tenant.
+    pub fn tenant(mut self, token: impl Into<String>, id: TenantId) -> Self {
+        self.tokens.insert(token.into(), id);
+        self
+    }
+
+    /// Registers a graph template. Each connection builds (and then
+    /// re-runs, sealed) its own instance on first use.
+    pub fn template(
+        mut self,
+        name: impl Into<String>,
+        build: impl Fn() -> TaskGraph + Send + Sync + 'static,
+    ) -> Self {
+        self.templates.insert(name.into(), Arc::new(build));
+        self
+    }
+
+    /// Binds the frame listener on `addr` (e.g. `"127.0.0.1:0"`) and
+    /// starts accepting. Returns once the socket is listening.
+    pub fn serve(self, addr: &str) -> io::Result<WireHandle> {
+        self.launch(addr, None)
+    }
+
+    /// [`WireServer::serve`] plus a plaintext HTTP metrics listener on
+    /// `metrics_addr`.
+    pub fn serve_with_metrics(self, addr: &str, metrics_addr: &str) -> io::Result<WireHandle> {
+        self.launch(addr, Some(metrics_addr))
+    }
+
+    fn launch(self, addr: &str, metrics_addr: Option<&str>) -> io::Result<WireHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let frame_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            svc: self.svc,
+            tokens: self.tokens,
+            templates: self.templates,
+            stop: AtomicBool::new(false),
+            reranks: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+
+        let mut accepts = Vec::new();
+        {
+            let shared = shared.clone();
+            accepts.push(thread::spawn(move || accept_loop(&shared, &listener)));
+        }
+
+        let metrics = match metrics_addr {
+            Some(maddr) => {
+                let listener = TcpListener::bind(maddr)?;
+                let local = listener.local_addr()?;
+                let shared = shared.clone();
+                accepts.push(thread::spawn(move || metrics_loop(&shared, &listener)));
+                Some(local)
+            }
+            None => None,
+        };
+
+        Ok(WireHandle { shared, frame_addr, metrics_addr: metrics, accepts })
+    }
+}
+
+/// A running wire front-end. Dropping the handle leaves the server
+/// running detached; call [`WireHandle::stop`] for an orderly
+/// shutdown.
+pub struct WireHandle {
+    shared: Arc<Shared>,
+    frame_addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
+    accepts: Vec<thread::JoinHandle<()>>,
+}
+
+impl WireHandle {
+    /// Address the frame listener is bound to (resolves `:0` binds).
+    pub fn frame_addr(&self) -> SocketAddr {
+        self.frame_addr
+    }
+
+    /// Address of the metrics listener, when one was requested.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// Stops accepting, wakes every parked connection reader, and
+    /// joins all server threads. Open connections are closed at the
+    /// next frame boundary (in-flight requests finish first).
+    pub fn stop(mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        // Poke the accept loops out of their blocking accept().
+        let _ = TcpStream::connect(self.frame_addr);
+        if let Some(maddr) = self.metrics_addr {
+            let _ = TcpStream::connect(maddr);
+        }
+        for h in self.accepts.drain(..) {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Shared {
+    svc: Arc<GraphService>,
+    tokens: HashMap<String, TenantId>,
+    templates: HashMap<String, Template>,
+    stop: AtomicBool,
+    /// Total observed-rank recomputations across every connection's
+    /// template instances (connections fold their per-graph deltas in
+    /// after each run).
+    reranks: AtomicU64,
+    conns: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared2 = shared.clone();
+        let h = thread::spawn(move || handle_conn(&shared2, stream));
+        shared.conns.lock().unwrap().push(h);
+    }
+}
+
+fn metrics_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(mut stream) = stream else { continue };
+        // Consume whatever request line arrived (contents ignored: any
+        // method/path gets the dump), then answer and close.
+        let _ = stream.set_read_timeout(Some(READ_POLL));
+        let mut scratch = [0u8; 1024];
+        let _ = stream.read(&mut scratch);
+        let body = render_metrics(shared);
+        let head = format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let _ = stream.write_all(head.as_bytes());
+        let _ = stream.write_all(body.as_bytes());
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+}
+
+/// One connection: a frame loop plus this connection's template
+/// instance cache (template name → built graph + last-seen rerank
+/// count, so repeated requests hit the sealed re-run path).
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    let mut instances: HashMap<String, (TaskGraph, u64)> = HashMap::new();
+    loop {
+        let payload = match read_frame(&mut stream, &shared.stop) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean close or shutdown
+            Err(_) => {
+                // Oversized or truncated frame: the stream can no
+                // longer be trusted to be at a boundary — answer once
+                // and close.
+                let resp = encode_response(WireStatus::BadFrame, "bad frame");
+                let _ = write_frame(&mut stream, &resp);
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        let (status, msg) = match decode_request(&payload) {
+            None => (WireStatus::BadFrame, "malformed request frame".to_string()),
+            Some(WireRequest::Stats) => (WireStatus::Ok, render_metrics(shared)),
+            Some(WireRequest::Run { token, template, deadline_micros }) => {
+                serve_run(shared, &mut instances, &token, &template, deadline_micros)
+            }
+        };
+        let resp = encode_response(status, &msg);
+        if write_frame(&mut stream, &resp).is_err() {
+            return;
+        }
+        if status == WireStatus::BadFrame {
+            // The stream may be desynchronized; don't try to re-frame.
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+fn serve_run(
+    shared: &Shared,
+    instances: &mut HashMap<String, (TaskGraph, u64)>,
+    token: &str,
+    template: &str,
+    deadline_micros: u64,
+) -> (WireStatus, String) {
+    let Some(&tenant) = shared.tokens.get(token) else {
+        return (WireStatus::UnknownTenant, format!("unknown tenant token {token:?}"));
+    };
+    if !instances.contains_key(template) {
+        let Some(build) = shared.templates.get(template) else {
+            return (WireStatus::UnknownTemplate, format!("unknown template {template:?}"));
+        };
+        instances.insert(template.to_string(), (build(), 0));
+    }
+    let (graph, seen_reranks) = instances.get_mut(template).unwrap();
+    let deadline = (deadline_micros > 0).then(|| Duration::from_micros(deadline_micros));
+    let outcome = shared.svc.run_with(tenant, graph, deadline);
+    let now = graph.reranks();
+    shared.reranks.fetch_add(now - *seen_reranks, Ordering::Relaxed);
+    *seen_reranks = now;
+    match outcome {
+        Ok(()) => (WireStatus::Ok, String::new()),
+        Err(e @ ServeError::Shed(_)) => (WireStatus::Shed, e.to_string()),
+        Err(e @ ServeError::RetriesExhausted { .. }) => (WireStatus::RetriesExhausted, e.to_string()),
+        Err(e @ ServeError::UnknownTenant) => (WireStatus::UnknownTenant, e.to_string()),
+        Err(e @ ServeError::Failed(_)) => (WireStatus::Failed, e.to_string()),
+    }
+}
+
+/// Renders the plaintext counter dump served by both the `STATS` frame
+/// kind and the HTTP metrics listener.
+fn render_metrics(shared: &Shared) -> String {
+    let svc = &shared.svc;
+    let mut out = String::new();
+    let _ = writeln!(out, "pool_threads {}", svc.pool().num_threads());
+    let _ = writeln!(out, "pool_shards {}", svc.pool().num_shards());
+    let level = match svc.brownout_level() {
+        BrownoutLevel::Normal => 0,
+        BrownoutLevel::ShedLow => 1,
+        BrownoutLevel::ShedOverQuota => 2,
+    };
+    let _ = writeln!(out, "brownout_level {level}");
+    let _ = writeln!(out, "queue_delay_ewma_ns {}", svc.queue_delay_ewma().as_nanos());
+    let _ = writeln!(out, "retry_tokens {}", svc.retry_tokens());
+    let _ = writeln!(out, "graph_reranks_total {}", shared.reranks.load(Ordering::Relaxed));
+    for t in svc.tenant_snapshots() {
+        let n = &t.name;
+        let _ = writeln!(out, "tenant_inflight{{tenant=\"{n}\"}} {}", t.inflight);
+        let _ = writeln!(out, "tenant_submitted{{tenant=\"{n}\"}} {}", t.submitted);
+        let _ = writeln!(out, "tenant_completed{{tenant=\"{n}\"}} {}", t.completed);
+        let _ = writeln!(out, "tenant_retries{{tenant=\"{n}\"}} {}", t.retries);
+        let _ = writeln!(out, "tenant_shed_low{{tenant=\"{n}\"}} {}", t.shed_low);
+        let _ = writeln!(out, "tenant_shed_over_quota{{tenant=\"{n}\"}} {}", t.shed_over_quota);
+        let _ = writeln!(out, "tenant_shed_deadline{{tenant=\"{n}\"}} {}", t.shed_deadline);
+        let _ = writeln!(out, "tenant_failed{{tenant=\"{n}\"}} {}", t.failed);
+        let _ = writeln!(out, "tenant_service_ewma_ns{{tenant=\"{n}\"}} {}", t.service_ewma_ns);
+        let _ = writeln!(out, "tenant_demotions{{tenant=\"{n}\"}} {}", t.demotions);
+    }
+    out
+}
+
+// --- framing ------------------------------------------------------------
+
+/// Reads exactly `buf.len()` bytes, riding out read-timeout polls.
+/// Returns the count actually read: short only on EOF or a raised stop
+/// flag.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::Acquire) {
+            return Ok(got);
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Ok(got),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Server-side frame read. `Ok(None)` = clean close (EOF at a frame
+/// boundary) or stop-flag shutdown; `Err` = garbage (partial frame,
+/// oversized length, transport error).
+fn read_frame(stream: &mut TcpStream, stop: &AtomicBool) -> io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match read_full(stream, &mut len_buf, stop)? {
+        0 => return Ok(None),
+        4 => {}
+        _ => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "partial frame header")),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    }
+    let mut payload = vec![0u8; len];
+    if read_full(stream, &mut payload, stop)? != len {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "partial frame payload"));
+    }
+    Ok(Some(payload))
+}
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    stream.write_all(&(payload.len() as u32).to_be_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+// --- payload codec ------------------------------------------------------
+
+pub(crate) enum WireRequest {
+    Run { token: String, template: String, deadline_micros: u64 },
+    Stats,
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn u8(&mut self) -> Option<u8> {
+        let v = *self.b.get(self.p)?;
+        self.p += 1;
+        Some(v)
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        let s = self.b.get(self.p..self.p + 2)?;
+        self.p += 2;
+        Some(u16::from_be_bytes([s[0], s[1]]))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        let s = self.b.get(self.p..self.p + 8)?;
+        self.p += 8;
+        Some(u64::from_be_bytes(s.try_into().ok()?))
+    }
+
+    fn str(&mut self) -> Option<&'a str> {
+        let len = self.u16()? as usize;
+        let s = self.b.get(self.p..self.p + len)?;
+        self.p += len;
+        std::str::from_utf8(s).ok()
+    }
+
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+pub(crate) fn encode_run(token: &str, template: &str, deadline_micros: u64) -> Vec<u8> {
+    assert!(token.len() <= u16::MAX as usize && template.len() <= u16::MAX as usize);
+    let mut p = Vec::with_capacity(14 + token.len() + template.len());
+    p.push(WIRE_VERSION);
+    p.push(KIND_RUN);
+    p.extend_from_slice(&(token.len() as u16).to_be_bytes());
+    p.extend_from_slice(token.as_bytes());
+    p.extend_from_slice(&(template.len() as u16).to_be_bytes());
+    p.extend_from_slice(template.as_bytes());
+    p.extend_from_slice(&deadline_micros.to_be_bytes());
+    p
+}
+
+pub(crate) fn encode_stats() -> Vec<u8> {
+    vec![WIRE_VERSION, KIND_STATS]
+}
+
+pub(crate) fn decode_request(payload: &[u8]) -> Option<WireRequest> {
+    let mut c = Cur { b: payload, p: 0 };
+    if c.u8()? != WIRE_VERSION {
+        return None;
+    }
+    match c.u8()? {
+        KIND_RUN => {
+            let token = c.str()?.to_string();
+            let template = c.str()?.to_string();
+            let deadline_micros = c.u64()?;
+            c.done().then_some(WireRequest::Run { token, template, deadline_micros })
+        }
+        KIND_STATS => c.done().then_some(WireRequest::Stats),
+        _ => None,
+    }
+}
+
+pub(crate) fn encode_response(status: WireStatus, msg: &str) -> Vec<u8> {
+    let msg = &msg.as_bytes()[..msg.len().min(MAX_FRAME - 4)];
+    let mut p = Vec::with_capacity(4 + msg.len());
+    p.push(WIRE_VERSION);
+    p.push(status as u8);
+    p.extend_from_slice(&(msg.len() as u16).to_be_bytes());
+    p.extend_from_slice(msg);
+    p
+}
+
+pub(crate) fn decode_response(payload: &[u8]) -> Option<(WireStatus, String)> {
+    let mut c = Cur { b: payload, p: 0 };
+    if c.u8()? != WIRE_VERSION {
+        return None;
+    }
+    let status = WireStatus::from_u8(c.u8()?)?;
+    let msg = c.str()?.to_string();
+    c.done().then_some((status, msg))
+}
+
+// --- client -------------------------------------------------------------
+
+/// A persistent client connection. Reuse one across requests to keep
+/// the server-side template instance (and its sealed re-run path)
+/// warm.
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    /// Connects to a wire front-end's frame listener.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream })
+    }
+
+    fn round_trip(&mut self, request: &[u8]) -> io::Result<(WireStatus, String)> {
+        write_frame(&mut self.stream, request)?;
+        let never = AtomicBool::new(false);
+        let payload = read_frame(&mut self.stream, &never)?
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "server closed"))?;
+        decode_response(&payload)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "malformed response"))
+    }
+
+    /// Runs `template` as the tenant named by `token`. `deadline` of
+    /// `None` defers to the tenant's default. Transport problems are
+    /// `Err`; service-level refusals come back as a [`WireStatus`].
+    pub fn run(
+        &mut self,
+        token: &str,
+        template: &str,
+        deadline: Option<Duration>,
+    ) -> io::Result<(WireStatus, String)> {
+        let micros = deadline.map_or(0, |d| d.as_micros().min(u64::MAX as u128) as u64);
+        self.round_trip(&encode_run(token, template, micros))
+    }
+
+    /// Fetches the plaintext counter dump over the frame protocol.
+    pub fn scrape(&mut self) -> io::Result<String> {
+        let (status, body) = self.round_trip(&encode_stats())?;
+        if status != WireStatus::Ok {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, format!("stats: {status:?}")));
+        }
+        Ok(body)
+    }
+}
+
+/// One-shot [`WireClient::run`] on a fresh connection.
+pub fn wire_run(
+    addr: impl ToSocketAddrs,
+    token: &str,
+    template: &str,
+    deadline: Option<Duration>,
+) -> io::Result<(WireStatus, String)> {
+    WireClient::connect(addr)?.run(token, template, deadline)
+}
+
+/// One-shot [`WireClient::scrape`] on a fresh connection.
+pub fn wire_scrape(addr: impl ToSocketAddrs) -> io::Result<String> {
+    WireClient::connect(addr)?.scrape()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::ThreadPool;
+    use crate::serve::{GraphService, ServiceConfig, TenantSpec};
+    use crate::workloads::Dag;
+
+    #[test]
+    fn payload_codec_roundtrips_and_rejects_garbage() {
+        let req = encode_run("tok", "diamond", 1234);
+        match decode_request(&req) {
+            Some(WireRequest::Run { token, template, deadline_micros }) => {
+                assert_eq!((token.as_str(), template.as_str(), deadline_micros), ("tok", "diamond", 1234));
+            }
+            _ => panic!("RUN did not decode"),
+        }
+        assert!(matches!(decode_request(&encode_stats()), Some(WireRequest::Stats)));
+
+        let resp = encode_response(WireStatus::Shed, "brownout");
+        assert_eq!(decode_response(&resp), Some((WireStatus::Shed, "brownout".to_string())));
+
+        assert!(decode_request(&[]).is_none(), "empty payload");
+        assert!(decode_request(&[99, KIND_RUN]).is_none(), "bad version");
+        assert!(decode_request(&[WIRE_VERSION, 77]).is_none(), "bad kind");
+        let mut trailing = encode_run("a", "b", 0);
+        trailing.push(0);
+        assert!(decode_request(&trailing).is_none(), "trailing bytes");
+        assert!(decode_response(&[WIRE_VERSION, 200, 0, 0]).is_none(), "bad status");
+    }
+
+    #[test]
+    fn wire_roundtrip_end_to_end() {
+        let svc = Arc::new(GraphService::new(ThreadPool::new(2), ServiceConfig::default()));
+        let gold = svc.register_tenant(TenantSpec::new("gold"));
+        let handle = WireServer::new(svc.clone())
+            .tenant("gold-token", gold)
+            .template("diamond", || Dag::diamond_chain(2).to_task_graph(64).0)
+            .serve("127.0.0.1:0")
+            .unwrap();
+        let addr = handle.frame_addr();
+
+        let mut c = WireClient::connect(addr).unwrap();
+        for _ in 0..3 {
+            let (status, msg) = c.run("gold-token", "diamond", None).unwrap();
+            assert_eq!(status, WireStatus::Ok, "{msg}");
+        }
+        let (status, _) = c.run("gold-token", "no-such-template", None).unwrap();
+        assert_eq!(status, WireStatus::UnknownTemplate);
+        let (status, _) = c.run("bad-token", "diamond", None).unwrap();
+        assert_eq!(status, WireStatus::UnknownTenant);
+
+        let stats = c.scrape().unwrap();
+        assert!(stats.contains("tenant_completed{tenant=\"gold\"} 3"), "{stats}");
+        assert!(stats.contains("graph_reranks_total "), "{stats}");
+        drop(c);
+
+        // Oversized length prefix: server answers BadFrame, then closes.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&((MAX_FRAME + 1) as u32).to_be_bytes()).unwrap();
+        let never = AtomicBool::new(false);
+        let resp = read_frame(&mut raw, &never).unwrap().expect("BadFrame response");
+        assert_eq!(decode_response(&resp).unwrap().0, WireStatus::BadFrame);
+        assert!(read_frame(&mut raw, &never).unwrap().is_none(), "closed after BadFrame");
+        drop(raw);
+
+        handle.stop();
+        assert_eq!(svc.tenant_snapshots()[gold.index()].completed, 3);
+    }
+
+    #[test]
+    fn metrics_listener_speaks_plaintext_http() {
+        let svc = Arc::new(GraphService::new(ThreadPool::new(2), ServiceConfig::default()));
+        let gold = svc.register_tenant(TenantSpec::new("gold"));
+        let handle = WireServer::new(svc)
+            .tenant("gold", gold)
+            .template("d", || Dag::diamond_chain(1).to_task_graph(32).0)
+            .serve_with_metrics("127.0.0.1:0", "127.0.0.1:0")
+            .unwrap();
+        let (status, msg) = wire_run(handle.frame_addr(), "gold", "d", None).unwrap();
+        assert_eq!(status, WireStatus::Ok, "{msg}");
+
+        let mut s = TcpStream::connect(handle.metrics_addr().unwrap()).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut body = String::new();
+        s.read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "{body}");
+        assert!(body.contains("pool_threads "), "{body}");
+        assert!(body.contains("tenant_completed{tenant=\"gold\"} 1"), "{body}");
+        drop(s);
+        handle.stop();
+    }
+}

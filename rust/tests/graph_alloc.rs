@@ -165,6 +165,55 @@ fn sealed_rerun_makes_zero_heap_allocations() {
     );
     assert_eq!(counter.load(Ordering::Relaxed), expected, "abort-recover: node executions");
 
+    // PR 8: duration-feedback re-ranking must stay inside the
+    // zero-alloc envelope. Equal *declared* weights but heavily skewed
+    // *actual* work force an observed-weight drift ≥ the 2x re-rank
+    // threshold, so the warmup runs provably exercise the re-rank path
+    // (asserted via `reranks()`); the measured window then re-runs —
+    // including any further EWMA recording and drift checks — without
+    // a single allocation (ranks, buckets, source order, and the
+    // bucket-sort scratch are all seal-time arrays recomputed in
+    // place).
+    use scheduling::workloads::dag::busy_work;
+    let mut rg = scheduling::graph::TaskGraph::new();
+    let src = rg.add_weighted(1, || {
+        std::hint::black_box(busy_work(1, 64));
+    });
+    let heavy = rg.add_weighted(1, || {
+        std::hint::black_box(busy_work(2, 8192));
+    });
+    let light = rg.add_weighted(1, || {
+        std::hint::black_box(busy_work(3, 64));
+    });
+    let sink = rg.add_weighted(1, || {
+        std::hint::black_box(busy_work(4, 64));
+    });
+    rg.precede(src, &[heavy, light]);
+    rg.precede(heavy, &[sink]);
+    rg.precede(light, &[sink]);
+    rg.seal().unwrap();
+    for _ in 0..5 {
+        rg.run_with_options(&pool, RunOptions::new()).unwrap();
+    }
+    assert!(
+        rg.reranks() >= 1,
+        "premise: skewed observed durations must have triggered a re-rank in warmup"
+    );
+    assert!(
+        rg.observed_duration(heavy).unwrap() > rg.observed_duration(light).unwrap(),
+        "premise: the heavy arm must dominate the observed EWMAs"
+    );
+    pool.wait_idle();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        rg.run_with_options(&pool, RunOptions::new()).unwrap();
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        allocs, 0,
+        "dynamic-rerank: sealed re-runs with duration feedback must not allocate (saw {allocs})"
+    );
+
     // Sanity: the machinery is actually counting.
     let before = ALLOCS.load(Ordering::SeqCst);
     drop(std::hint::black_box(Box::new([0u8; 64])));

@@ -690,7 +690,11 @@ fn single_worker_executes_ready_set_in_descending_rank_order() {
     expect.sort_by_key(|&(rank, _)| std::cmp::Reverse(rank));
     let expect: Vec<usize> = expect.into_iter().map(|(_, i)| i).collect();
 
-    let options = RunOptions::new().caller_assist(false);
+    // Dynamic re-ranking off (PR 8): this test pins the *declared*
+    // weight order across re-runs, but the branch bodies are all
+    // near-instant, so observed durations would legitimately erase the
+    // declared skew and re-rank rep 2+ onto noise.
+    let options = RunOptions::new().caller_assist(false).dynamic_rank(false);
     for rep in 0..3 {
         order.lock().unwrap().clear();
         g.run_with_options(&pool, options.clone()).unwrap();
@@ -725,4 +729,65 @@ fn mutex_protected_state_needs_no_atomics() {
     g.succeed(third, &[second]);
     g.run(&pool).unwrap();
     assert_eq!(&*log.lock().unwrap(), "abc");
+}
+
+#[test]
+fn rerank_redirects_single_worker_onto_observed_critical_arm() {
+    // PR 8 determinism check: equal *declared* weights give the
+    // scheduler no reason to prefer any branch, but the branches'
+    // actual durations are wildly skewed. After the warmup runs feed
+    // the observed-duration EWMAs and a launch re-ranks, a single
+    // worker (caller assist off — fully deterministic schedule) must
+    // drain the ready set in descending *observed* duration order:
+    // slowest branch first, exactly the makespan-optimal choice the
+    // declared weights failed to encode.
+    let pool = ThreadPool::new(1);
+    let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut g = TaskGraph::new();
+    let mk = |i: usize, sleep_ms: u64, order: &Arc<Mutex<Vec<usize>>>| {
+        let order = order.clone();
+        move || {
+            order.lock().unwrap().push(i);
+            if sleep_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+            }
+        }
+    };
+    let src = g.add(mk(0, 0, &order));
+    // Discovery order a, b, c — but c is the slow arm.
+    let a = g.add(mk(1, 1, &order));
+    let b = g.add(mk(2, 4, &order));
+    let c = g.add(mk(3, 12, &order));
+    let sink = g.add(mk(4, 0, &order));
+    g.precede(src, &[a, b, c]);
+    g.succeed(sink, &[a, b, c]);
+    g.seal().unwrap();
+    let base_rank_a = g.rank(a).unwrap();
+    assert_eq!(base_rank_a, g.rank(c).unwrap(), "premise: declared ranks tie");
+
+    let options = RunOptions::new().caller_assist(false);
+    // Run 1 seeds the EWMAs; a later launch re-ranks once the drift
+    // threshold trips. Three warmups leave plenty of margin.
+    for _ in 0..3 {
+        g.run_with_options(&pool, options.clone()).unwrap();
+    }
+    assert!(g.reranks() >= 1, "skewed observed durations must trigger a re-rank");
+    assert!(
+        g.rank(c).unwrap() > g.rank(b).unwrap() && g.rank(b).unwrap() > g.rank(a).unwrap(),
+        "ranks must now follow observed durations: a={:?} b={:?} c={:?}",
+        g.rank(a),
+        g.rank(b),
+        g.rank(c)
+    );
+
+    for rep in 0..2 {
+        order.lock().unwrap().clear();
+        g.run_with_options(&pool, options.clone()).unwrap();
+        let seen = order.lock().unwrap().clone();
+        assert_eq!(
+            seen,
+            vec![0, 3, 2, 1, 4],
+            "rep {rep}: slowest observed arm must be scheduled first"
+        );
+    }
 }

@@ -409,6 +409,127 @@ fn fleet_of_retrying_clients_each_execute_once() {
     assert_eq!(svc.tenant_snapshots()[t.index()].completed, (CLIENTS * ROUNDS) as u64);
 }
 
+/// PR 8 regression (cold-gate deadline hole): an already-expired
+/// deadline must be rejected even when the service is *cold* — no
+/// completions yet, queue-delay EWMA still zero. Before the fix the
+/// feasibility check only ran once the EWMA was nonzero, so the very
+/// first requests could sail past their deadlines into the pool.
+#[test]
+fn cold_gate_rejects_already_expired_deadline() {
+    let svc = GraphService::new(
+        small_pool(2),
+        ServiceConfig { retry: RetryPolicy::disabled(), ..ServiceConfig::default() },
+    );
+    let t = svc.register_tenant(TenantSpec::new("cold"));
+    assert_eq!(svc.queue_delay_ewma(), Duration::ZERO, "premise: gate is cold");
+
+    let (mut g, counter) = Dag::diamond_chain(2).to_task_graph(64);
+    let err = svc.run_with(t, &mut g, Some(Duration::ZERO)).unwrap_err();
+    assert!(
+        matches!(err, ServeError::Failed(GraphError::WouldMissDeadline)),
+        "got {err:?}"
+    );
+    let snap = &svc.tenant_snapshots()[t.index()];
+    assert_eq!(snap.shed_deadline, 1);
+    assert_eq!(snap.retries, 0, "infeasible is terminal, not retryable");
+    assert_eq!(snap.inflight, 0);
+    assert_eq!(counter.load(Ordering::Relaxed), 0, "expired request must never launch");
+}
+
+/// SLO feedback (PR 8): a `High`-class tenant whose observed service
+/// time blows through `demote_slow_after` gets its launches demoted to
+/// `Normal` — the express lanes are earned by behavior, not just
+/// declared. The declared spec is untouched and completions keep
+/// flowing.
+#[test]
+fn slow_tenant_stops_being_high() {
+    let svc = GraphService::new(
+        small_pool(2),
+        ServiceConfig {
+            retry: RetryPolicy::disabled(),
+            demote_slow_after: Some(Duration::from_millis(1)),
+            ..ServiceConfig::default()
+        },
+    );
+    let hog = svc.register_tenant(TenantSpec::new("hog").class(RunPriority::High));
+
+    let mut g = TaskGraph::new();
+    g.add(|| thread::sleep(Duration::from_millis(4)));
+    const RUNS: u64 = 4;
+    for _ in 0..RUNS {
+        svc.run(hog, &mut g).unwrap();
+    }
+    let snap = &svc.tenant_snapshots()[hog.index()];
+    assert_eq!(snap.completed, RUNS, "demotion must not drop work");
+    assert!(
+        snap.service_ewma_ns > 1_000_000,
+        "premise: observed service time above the 1ms threshold, got {}ns",
+        snap.service_ewma_ns
+    );
+    // Run 1 launches with a cold (zero) EWMA at its declared class;
+    // every later run sees the blown EWMA and is demoted.
+    assert!(
+        snap.demotions >= RUNS - 1,
+        "expected ≥{} demotions, got {}",
+        RUNS - 1,
+        snap.demotions
+    );
+}
+
+/// End-to-end wire front-end, cross-process: spawn the `graph_serve`
+/// binary, speak the framed protocol to it from this process, and
+/// scrape its counters. This is the satellite guarding the whole
+/// PR 8 wire stack (bin arg parsing, template registry, framing,
+/// service integration) rather than the in-process loopback the unit
+/// tests cover.
+#[test]
+fn wire_round_trip_against_spawned_server() {
+    use scheduling::serve::{WireClient, WireStatus};
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_graph_serve"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--metrics-addr",
+            "127.0.0.1:0",
+            "--threads",
+            "2",
+            "--work-steps",
+            "64",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn graph_serve");
+
+    // Readiness line: "graph_serve listening on ADDR (metrics on MADDR)".
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let addr = parts.get(3).copied().unwrap_or_else(|| panic!("bad readiness line {line:?}"));
+
+    let outcome = std::panic::catch_unwind(|| {
+        let mut c = WireClient::connect(addr).expect("connect to spawned server");
+        for _ in 0..3 {
+            let (status, msg) = c.run("gold", "diamond4", None).unwrap();
+            assert_eq!(status, WireStatus::Ok, "{msg}");
+        }
+        let (status, _) = c.run("storm", "no-such-template", None).unwrap();
+        assert_eq!(status, WireStatus::UnknownTemplate);
+        let stats = c.scrape().unwrap();
+        assert!(stats.contains("tenant_completed{tenant=\"gold\"} 3"), "{stats}");
+        assert!(stats.contains("pool_threads 2"), "{stats}");
+    });
+    let _ = child.kill();
+    let _ = child.wait();
+    if let Err(p) = outcome {
+        std::panic::resume_unwind(p);
+    }
+}
+
 /// Chaos soak (only with `--features chaos`): storm the serving
 /// boundary with injected `Overloaded` and node-latency spikes, then
 /// stop injection and assert goodput converges back to 100% clean.
@@ -463,5 +584,56 @@ mod chaos_storms {
         let snap = &svc.tenant_snapshots()[t.index()];
         assert!(snap.retries > 0, "the storm must have exercised the retry path");
         assert_eq!(svc.brownout_level(), BrownoutLevel::Normal, "gate recovers post-storm");
+    }
+
+    /// PR 8 regression (grant-slot leak): a panic between GRANTED and
+    /// release — injected here on the launch path itself — must still
+    /// release the tenant's and the service's inflight slots (the
+    /// `GrantGuard` RAII fix). Before the fix each panic leaked one
+    /// slot, and with `max_inflight: 1` the service wedged after the
+    /// first one. Runs under `--test-threads=1` in CI because the
+    /// chaos rates are process-global (shared with the soak above).
+    #[test]
+    fn chaos_launch_panic_does_not_leak_grant_slots() {
+        use scheduling::graph::chaos_set_launch_panic_rate;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let svc = Arc::new(GraphService::new(
+            small_pool(2),
+            ServiceConfig {
+                max_inflight: 1,
+                retry: RetryPolicy::disabled(),
+                ..ServiceConfig::default()
+            },
+        ));
+        let t = svc.register_tenant(TenantSpec::new("unlucky").max_inflight(1));
+        chaos_set_serving_rates(0, 0, 0); // isolate: launch panics only
+        chaos_set_launch_panic_rate(1000);
+
+        let (mut g, counter) = Dag::diamond_chain(1).to_task_graph(64);
+        for i in 0..4 {
+            let r = catch_unwind(AssertUnwindSafe(|| svc.run(t, &mut g)));
+            assert!(r.is_err(), "attempt {i}: injected launch panic must unwind out");
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 0, "panicked launches ran nothing");
+        assert_eq!(
+            svc.tenant_snapshots()[t.index()].inflight,
+            0,
+            "every panicked grant must have been released"
+        );
+
+        // Injection off: with max_inflight 1, any leaked slot would
+        // wedge this run forever — do it on a watchdog'd thread.
+        chaos_set_launch_panic_rate(0);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let svc2 = svc.clone();
+        thread::spawn(move || {
+            let (mut g, _) = Dag::diamond_chain(1).to_task_graph(64);
+            tx.send(svc2.run(t, &mut g)).unwrap();
+        });
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("post-panic run must be granted (no leaked slots)")
+            .expect("post-panic run must succeed");
+        assert_eq!(svc.tenant_snapshots()[t.index()].completed, 1);
     }
 }
