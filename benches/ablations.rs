@@ -26,6 +26,12 @@
 //!    pool vs sharded pools under a many-producer submission storm —
 //!    the workload the per-shard injector lanes exist for — plus a
 //!    shard-imbalance probe from the per-shard depth snapshot.
+//! 8. **Observability cost (PR 9, "ABL-9")**: the default
+//!    configuration (flight recorder + histograms on, recording task
+//!    start/end events, duration samples, and profile spans on every
+//!    node) against a pool with both toggled off — the claim under
+//!    test is that always-on telemetry costs a few ns per node, so
+//!    the two arms must be near parity.
 //!
 //! Knobs: `BENCH_FAST=1`, `THREADS`.
 
@@ -46,6 +52,72 @@ fn main() {
     spin_ablation(&opts);
     hot_path_ablation(&opts);
     sharding_ablation(&opts);
+    obs_ablation(&opts);
+}
+
+/// ABL-9: cost of always-on observability (PR 9). The default pool
+/// records two flight events, one histogram sample, and three span
+/// stores per node; the off arm strips the recorder and the
+/// histograms (profiles still ride the dynamic-rank sampling, which
+/// both arms share). Fine-grained graphs maximize the per-node record
+/// overhead relative to useful work — the worst case for the claim.
+fn obs_ablation(opts: &BenchOptions) {
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let mut report = Report::new(
+        "ABL-9 observability cost (PR 9)",
+        format!(
+            "flight recorder + histograms on (default) vs both off; \
+             per-node record path under fine-grained graphs; {threads} threads"
+        ),
+    );
+
+    let variants: [(&str, PoolConfig); 2] = [
+        ("obs-on", PoolConfig::default()),
+        (
+            "obs-off",
+            PoolConfig { flight_recorder: false, histograms: false, ..PoolConfig::default() },
+        ),
+    ];
+
+    for (label, config) in variants {
+        let pool = ThreadPool::with_config(PoolConfig { num_threads: threads, ..config.clone() });
+
+        // Fan-out: many tiny nodes in parallel — record-path pressure
+        // from every worker at once.
+        let (mut g, _c) = Dag::binary_tree(13).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("btree(d=13)", label, summary);
+
+        // Chain: the inline-continuation path, one record pair per
+        // link, serialized — per-event cost with no parallel slack.
+        let (mut g, _c) = Dag::linear_chain(16_384).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("chain(16384)", label, summary);
+
+        // Wavefront: the steady mixed steal/submit regime.
+        let (mut g, _c) = Dag::wavefront(48).to_task_graph(0);
+        let summary = bench_wall(opts, || {
+            g.run(&pool).unwrap();
+        });
+        report.push("wf(48x48)", label, summary);
+        eprintln!("  obs variant {label} done");
+    }
+
+    report.print();
+    record_json("ablations_obs", "wall", threads, &report);
+
+    for param in ["btree(d=13)", "chain(16384)", "wf(48x48)"] {
+        if let Some(r) = report.speedup(param, "obs-on", "obs-off") {
+            println!(
+                "SHAPE obs-near-parity@{param}: {r:.2}x {}",
+                if (0.8..=1.25).contains(&r) { "PASS" } else { "CHECK" }
+            );
+        }
+    }
 }
 
 /// ABL-8: sharded submission & locality-aware stealing (PR 5). A

@@ -7,12 +7,21 @@
 //! full cross-process path with nothing but this binary.
 //!
 //! ```text
-//! graph_serve serve  [--addr A] [--metrics-addr A] [--threads N]
-//!                    [--max-inflight N] [--work-steps N]
-//! graph_serve client --addr A [--token T] [--template NAME]
-//!                    [--deadline-micros D] [--count N]
-//! graph_serve scrape --addr A
+//! graph_serve serve    [--addr A] [--metrics-addr A] [--threads N]
+//!                      [--max-inflight N] [--work-steps N]
+//! graph_serve client   --addr A [--token T] [--template NAME]
+//!                      [--deadline-micros D] [--count N]
+//! graph_serve scrape   --addr A [--v2]
+//! graph_serve dump     --addr A [--out FILE]
+//! graph_serve validate --addr A
 //! ```
+//!
+//! `scrape --v2` fetches the STATS v2 frame (exposition + quantile
+//! summary gauges), `dump` fetches the server's flight recorder as
+//! Chrome-trace JSON (PR 9), and `validate` strictly checks both the
+//! STATS and STATS v2 expositions with
+//! [`scheduling::obs::validate`] — the CI smoke step runs it
+//! cross-process so a malformed exposition fails the build.
 //!
 //! The server registers tenants `gold` (weight 4, High), `silver`
 //! (weight 2, Normal), and `storm` (weight 1, Low) — token = name —
@@ -30,9 +39,11 @@ use scheduling::workloads::Dag;
 use std::sync::Arc;
 
 const USAGE: &str = "usage:
-  graph_serve serve  [--addr A] [--metrics-addr A] [--threads N] [--max-inflight N] [--work-steps N]
-  graph_serve client --addr A [--token T] [--template NAME] [--deadline-micros D] [--count N]
-  graph_serve scrape --addr A";
+  graph_serve serve    [--addr A] [--metrics-addr A] [--threads N] [--max-inflight N] [--work-steps N]
+  graph_serve client   --addr A [--token T] [--template NAME] [--deadline-micros D] [--count N]
+  graph_serve scrape   --addr A [--v2]
+  graph_serve dump     --addr A [--out FILE]
+  graph_serve validate --addr A";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +51,8 @@ fn main() {
         Some("serve") => serve(&args[1..]),
         Some("client") => client(&args[1..]),
         Some("scrape") => scrape(&args[1..]),
+        Some("dump") => dump(&args[1..]),
+        Some("validate") => validate(&args[1..]),
         _ => {
             eprintln!("{USAGE}");
             2
@@ -158,7 +171,13 @@ fn scrape(args: &[String]) -> i32 {
         eprintln!("scrape needs --addr\n{USAGE}");
         return 2;
     };
-    match wire_scrape(addr.as_str()) {
+    let v2 = args.iter().any(|a| a == "--v2");
+    let body = if v2 {
+        WireClient::connect(addr.as_str()).and_then(|mut c| c.scrape_v2())
+    } else {
+        wire_scrape(addr.as_str())
+    };
+    match body {
         Ok(body) => {
             print!("{body}");
             0
@@ -168,4 +187,71 @@ fn scrape(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// Fetches the server's flight recorder as Chrome-trace JSON and
+/// prints it (or writes `--out FILE` for loading into Perfetto /
+/// `chrome://tracing`).
+fn dump(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--addr") else {
+        eprintln!("dump needs --addr\n{USAGE}");
+        return 2;
+    };
+    let json = match WireClient::connect(addr.as_str()).and_then(|mut c| c.dump()) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("graph_serve dump: {addr}: {e}");
+            return 1;
+        }
+    };
+    match flag(args, "--out") {
+        None => {
+            println!("{json}");
+            0
+        }
+        Some(path) => match std::fs::write(&path, &json) {
+            Ok(()) => {
+                eprintln!("graph_serve dump: wrote {} bytes to {path}", json.len());
+                0
+            }
+            Err(e) => {
+                eprintln!("graph_serve dump: write {path}: {e}");
+                1
+            }
+        },
+    }
+}
+
+/// Scrapes both STATS and STATS v2 over the frame protocol and runs
+/// the strict exposition validator on each — exit 0 only when both
+/// parse cleanly.
+fn validate(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--addr") else {
+        eprintln!("validate needs --addr\n{USAGE}");
+        return 2;
+    };
+    let mut conn = match WireClient::connect(addr.as_str()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("graph_serve validate: connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let mut code = 0;
+    for (name, body) in [("STATS", conn.scrape()), ("STATS2", conn.scrape_v2())] {
+        match body {
+            Ok(text) => match scheduling::obs::validate(&text) {
+                Ok(()) => println!("{name}: valid exposition ({} lines)", text.lines().count()),
+                Err(e) => {
+                    eprintln!("{name}: INVALID exposition: {e}");
+                    code = 1;
+                }
+            },
+            Err(e) => {
+                eprintln!("{name}: transport error: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
 }

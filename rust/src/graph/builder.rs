@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::obs::RunProfile;
 use crate::pool::ThreadPool;
 use crate::util::CachePadded;
 
@@ -204,6 +205,21 @@ pub(crate) struct Topology {
     /// Completed re-rank sweeps — diagnostics for tests, ablations,
     /// and the wire scrape endpoint.
     reranks: AtomicU64,
+    /// Per-node execution spans of the most recent run (PR 9):
+    /// start/end nanoseconds on the pool's observability epoch (0 =
+    /// not executed this run) plus the executing worker lane. One
+    /// writer per node per run (same argument as `observed_ns`);
+    /// swept to zero in the launch quiescent window and folded into a
+    /// [`crate::obs::RunProfile`] on demand. Plain dense arrays — the
+    /// two stores per node ride the completion path that already
+    /// writes `observed_ns`, and profile reads happen off-run.
+    span_start: Vec<AtomicU64>,
+    span_end: Vec<AtomicU64>,
+    span_worker: Vec<AtomicU32>,
+    /// Worker count of the pool that ran this graph last (PR 9): the
+    /// denominator of the profile's scheduling efficiency. 0 until the
+    /// first timed run.
+    last_workers: AtomicUsize,
 }
 
 impl Topology {
@@ -241,6 +257,10 @@ impl Topology {
                 .map(|_| CachePadded::new(std::array::from_fn(|_| AtomicU64::new(0))))
                 .collect(),
             reranks: AtomicU64::new(0),
+            span_start: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            span_end: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            span_worker: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            last_workers: AtomicUsize::new(0),
         }
     }
 
@@ -349,6 +369,67 @@ impl Topology {
         });
         self.reranks.fetch_add(1, Ordering::Relaxed);
         true
+    }
+
+    /// Records the execution span of node `i` for the current run
+    /// (PR 9): start/end in nanoseconds on the pool epoch (caller
+    /// guarantees `start_ns >= 1`) and the executing worker lane.
+    /// Relaxed stores — one writer per node per run, read only after
+    /// the run completes.
+    #[inline]
+    pub(crate) fn record_span(&self, i: usize, start_ns: u64, end_ns: u64, worker: u32) {
+        self.span_start[i].store(start_ns, Ordering::Relaxed);
+        self.span_end[i].store(end_ns, Ordering::Relaxed);
+        self.span_worker[i].store(worker, Ordering::Relaxed);
+    }
+
+    /// Clears all spans and stashes the worker count for the run about
+    /// to launch. Called from the launch path's quiescent window (one
+    /// linear sweep, allocation-free, so sealed re-runs stay
+    /// zero-alloc).
+    pub(crate) fn reset_spans(&self, workers: usize) {
+        for s in &self.span_start {
+            s.store(0, Ordering::Relaxed);
+        }
+        for e in &self.span_end {
+            e.store(0, Ordering::Relaxed);
+        }
+        self.last_workers.store(workers, Ordering::Relaxed);
+    }
+
+    /// Folds the most recent run's spans into a [`RunProfile`], or
+    /// `None` when no timed run has completed (spans are only written
+    /// when the pool's histograms, flight recorder, or duration
+    /// sampling are active).
+    pub(crate) fn profile(&self) -> Option<RunProfile> {
+        let workers = self.last_workers.load(Ordering::Relaxed);
+        if workers == 0 {
+            return None;
+        }
+        let starts: Vec<u64> = self.span_start.iter().map(|s| s.load(Ordering::Relaxed)).collect();
+        let ends: Vec<u64> = self.span_end.iter().map(|e| e.load(Ordering::Relaxed)).collect();
+        let lanes: Vec<u32> =
+            self.span_worker.iter().map(|w| w.load(Ordering::Relaxed)).collect();
+        RunProfile::compute(
+            &starts,
+            &ends,
+            &lanes,
+            |i| self.successors(i).iter().map(|&s| s as usize).collect(),
+            &self.sched.ranks,
+            workers,
+        )
+    }
+
+    /// All graph edges as `(source, successor)` pairs — the flight
+    /// dump's Chrome-trace converter uses these to draw flow arrows.
+    pub(crate) fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut edges = Vec::with_capacity(self.succ_arena.len());
+        for i in 0..self.init_pending.len() {
+            for &s in self.successors(i) {
+                edges.push((i as u32, s));
+            }
+        }
+        edges
     }
 }
 
@@ -527,6 +608,20 @@ impl TaskGraph {
         assert!(id.0 < self.nodes.len(), "NodeId out of range");
         let ns = self.topology.as_ref()?.observed(id.0).load(Ordering::Relaxed);
         (ns > 0).then(|| Duration::from_nanos(ns))
+    }
+
+    /// Scheduling profile of the most recent completed run (PR 9):
+    /// observed critical path vs declared ranks, busy/idle makespan
+    /// breakdown, and scheduling efficiency. `None` while the graph is
+    /// unsealed, before any run, or when the pool that ran it had both
+    /// its flight recorder and histograms disabled *and* the run
+    /// opted out of duration sampling (no spans were recorded).
+    ///
+    /// Prefer [`RunHandle::profile`](crate::graph::RunHandle::profile)
+    /// when you hold the handle — it is the same data without the
+    /// borrow of the graph.
+    pub fn last_profile(&self) -> Option<crate::obs::RunProfile> {
+        self.topology.as_ref()?.profile()
     }
 
     /// Declares that `task` runs after every task in `deps`

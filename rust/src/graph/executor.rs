@@ -207,6 +207,7 @@ use std::time::{Duration, Instant};
 
 use super::builder::{GraphError, Node, TaskGraph, Topology};
 use super::schedule::{lane_compose, RunPriority, Schedule};
+use crate::obs::{EventKind, RunProfile};
 use crate::pool::injector::DEFAULT_LANE;
 use crate::pool::task::RawTask;
 use crate::pool::thread_pool::PoolInner;
@@ -563,6 +564,23 @@ impl RunState {
             .is_ok()
     }
 
+    /// [`RunState::abort`] plus a flight-recorder `Abort` event (PR 9)
+    /// when this call actually set the cause — so a dump shows exactly
+    /// one abort per run, attributed to the lane that raised it
+    /// (worker, caller thread, or the timer via the external lane).
+    fn abort_observed(&self, cause: u8, pool: &PoolInner) -> bool {
+        let set = self.abort(cause);
+        if set {
+            pool.record_flight(
+                pool.flight_lane_of_caller(),
+                EventKind::Abort,
+                cause as u32,
+                self.generation.load(Ordering::Relaxed),
+            );
+        }
+        set
+    }
+
     /// Completion path: records run `generation` as done and wakes
     /// every waiter kind this run may have. Called exactly once per
     /// run, by the task that decrements `remaining` to zero; after the
@@ -835,7 +853,7 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
                 // the rest of the cascade (and the final result) need
                 // only the run-local atomic.
                 Some(token) if token.is_cancelled() => {
-                    state.abort(CAUSE_CANCEL);
+                    state.abort_observed(CAUSE_CANCEL, pool);
                     true
                 }
                 _ => false,
@@ -862,20 +880,45 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
             // SAFETY: exclusive access per the module-level protocol.
             let func = unsafe { &mut *node.func.get() };
             chaos_maybe_spike();
-            // Duration sampling for dynamic re-ranking (PR 8): one
-            // `Instant` pair per node, folded into the topology's
-            // observed-EWMA cells. Only this run's worker touches node
-            // `current`'s cell (runs of a graph are serialized), so
-            // the relaxed read-modify-write is exact.
-            let sample_at =
-                (topo.is_some() && !header.options.no_dynamic_rank).then(Instant::now);
+            // Duration sampling (PR 8 + PR 9): one timestamp pair per
+            // node on the pool's observability epoch, shared by the
+            // dynamic-rank EWMA cells, the node-duration histogram,
+            // the flight recorder's TaskStart/TaskEnd events, and the
+            // topology's span arrays (the run-profile input). Only
+            // this run's worker touches node `current`'s cells (runs
+            // of a graph are serialized), so the relaxed stores are
+            // exact. All four sinks are allocation-free atomics.
+            let want_rank_sample = topo.is_some() && !header.options.no_dynamic_rank;
+            let start_ns = (want_rank_sample || pool.hists().is_some() || pool.flight().is_some())
+                .then(|| pool.now_ns());
+            if start_ns.is_some() {
+                pool.record_flight(
+                    worker_index,
+                    EventKind::TaskStart,
+                    current as u32,
+                    state.generation.load(Ordering::Relaxed),
+                );
+            }
             let outcome = if chaos_should_panic(&state) {
                 catch_unwind(|| panic!("chaos: injected node panic"))
             } else {
                 catch_unwind(AssertUnwindSafe(func))
             };
-            if let (Some(at), Some(t)) = (sample_at, topo) {
-                t.note_duration(current, at.elapsed().as_nanos() as u64);
+            if let Some(t0) = start_ns {
+                let t1 = pool.now_ns().max(t0);
+                let dur = t1 - t0;
+                if want_rank_sample {
+                    if let Some(t) = topo {
+                        t.note_duration(current, dur);
+                    }
+                }
+                if let Some(h) = pool.hists() {
+                    h.node_duration.record(dur);
+                }
+                pool.record_flight(worker_index, EventKind::TaskEnd, current as u32, dur);
+                if let Some(t) = topo {
+                    t.record_span(current, t0, t1, worker_index as u32);
+                }
             }
             if let Err(payload) = outcome {
                 let msg = payload
@@ -888,7 +931,7 @@ pub(crate) fn execute_node(pool: &Arc<PoolInner>, worker_index: usize, run: Node
                     *p = Some((current, msg));
                 }
                 drop(p);
-                state.abort(CAUSE_PANIC);
+                state.abort_observed(CAUSE_PANIC, pool);
             }
             drop(span); // record the span before scheduling successors
         }
@@ -1225,6 +1268,15 @@ fn launch_run(
         graph.topology.as_mut().unwrap().maybe_rerank();
     }
 
+    // (2c) Observability spans (PR 9): clear the previous run's
+    //      per-node span cells and stash the worker count for the
+    //      profile's efficiency denominator — still in the quiescent
+    //      window, one allocation-free linear sweep like the counter
+    //      reset above.
+    if use_topo {
+        graph.topology.as_ref().unwrap().reset_spans(pool.num_threads());
+    }
+
     // (3) Run state: re-arm the graph-owned slot (zero allocations on
     //     re-run), or allocate fresh for the ablation arm. Async runs
     //     always use the slot: the generation check and the forget
@@ -1294,7 +1346,16 @@ fn launch_run(
                     if state.generation.load(Ordering::SeqCst) == generation
                         && !state.is_complete(generation)
                     {
-                        state.abort(CAUSE_DEADLINE);
+                        // The timer thread is not a pool worker, so
+                        // the Abort event lands on the external lane.
+                        match state.pool.lock().unwrap().upgrade() {
+                            Some(pool) => {
+                                state.abort_observed(CAUSE_DEADLINE, &pool);
+                            }
+                            None => {
+                                state.abort(CAUSE_DEADLINE);
+                            }
+                        }
                     }
                 }
             }),
@@ -1374,6 +1435,7 @@ fn reject_run_from_worker(pool: &ThreadPool) -> Result<(), GraphError> {
 /// cause, else success. The cause itself is reset by the next launch.
 fn take_result(graph: &TaskGraph, state: &RunState) -> Result<(), GraphError> {
     if let Some((node, payload)) = state.panic.lock().unwrap().take() {
+        auto_flight_dump(graph, state);
         return Err(GraphError::NodePanicked {
             node,
             name: graph.nodes[node].name.clone(),
@@ -1381,10 +1443,45 @@ fn take_result(graph: &TaskGraph, state: &RunState) -> Result<(), GraphError> {
         });
     }
     match state.cancelled.load(Ordering::SeqCst) {
-        CAUSE_DEADLINE => Err(GraphError::DeadlineExceeded),
+        CAUSE_DEADLINE => {
+            auto_flight_dump(graph, state);
+            Err(GraphError::DeadlineExceeded)
+        }
         CAUSE_CANCEL => Err(GraphError::Cancelled),
         _ => Ok(()),
     }
+}
+
+/// Automatic flight dump on run failure (PR 9): when a run surfaces
+/// `NodePanicked` or `DeadlineExceeded`, snapshot the pool's flight
+/// recorder so the scheduler events leading up to the failure are
+/// preserved before the rings overwrite them. The dump is stashed on
+/// the pool (`ThreadPool::last_flight_dump`) and — when the
+/// `FLIGHT_DUMP_DIR` environment variable names a directory, as the CI
+/// chaos job sets it — also written there as Chrome-trace JSON with
+/// flow arrows along this graph's edges. Failure-path only; the
+/// success path stays allocation-free.
+fn auto_flight_dump(graph: &TaskGraph, state: &RunState) {
+    let Some(pool) = state.pool.lock().unwrap().upgrade() else {
+        return;
+    };
+    let Some(flight) = pool.flight() else {
+        return;
+    };
+    let dump = flight.dump();
+    if let Ok(dir) = std::env::var("FLIGHT_DUMP_DIR") {
+        if !dir.is_empty() {
+            let edges = graph.topology.as_ref().map(|t| t.edge_list()).unwrap_or_default();
+            let json = dump.to_chrome_trace_with_edges(&edges);
+            let gen = state.generation.load(Ordering::Relaxed);
+            let name = format!(
+                "flight-{}-gen{gen}.json",
+                std::process::id(),
+            );
+            let _ = std::fs::write(std::path::Path::new(&dir).join(name), json);
+        }
+    }
+    pool.stash_flight_dump(dump);
 }
 
 /// Admission mode of one launch (PR 6): fail fast
@@ -1420,8 +1517,20 @@ fn admit_run(
     mode: Admission,
 ) -> Result<bool, GraphError> {
     if let Some(d) = deadline {
-        let ewma = pool.inner().queue_delay_ewma();
-        if !ewma.is_zero() && d <= ewma {
+        // PR 9: once the pool's queue-delay histogram has enough
+        // samples its p99 drives the feasibility check — a tail
+        // estimate, which is what a deadline actually competes with —
+        // with the EWMA kept as the cold-start fallback.
+        let delay = pool.inner().queue_delay_p99().unwrap_or_else(|| {
+            pool.inner().queue_delay_ewma()
+        });
+        if !delay.is_zero() && d <= delay {
+            pool.inner().record_flight(
+                pool.inner().flight_lane_of_caller(),
+                EventKind::AdmitDeadline,
+                class as u32,
+                d.as_nanos() as u64,
+            );
             return Err(GraphError::WouldMissDeadline);
         }
     }
@@ -1585,7 +1694,23 @@ impl RunHandle<'_> {
         if self.finished || self.state.is_complete(self.generation) {
             return;
         }
-        self.state.abort(CAUSE_CANCEL);
+        self.state.abort_observed(CAUSE_CANCEL, &self.pool);
+    }
+
+    /// Scheduling profile of this handle's run (PR 9): observed
+    /// critical path vs declared ranks, busy/idle makespan breakdown,
+    /// and scheduling efficiency, computed from the per-node spans the
+    /// workers recorded. `None` while the run is still in flight (the
+    /// spans are not yet stable), or when no spans were recorded — the
+    /// pool had both its flight recorder and histograms disabled and
+    /// the run opted out of duration sampling, or the topology cache
+    /// was off. Non-consuming: call it after [`RunHandle::try_wait`]
+    /// (or any other wait surface) reports completion.
+    pub fn profile(&self) -> Option<RunProfile> {
+        if !self.finished && !self.state.is_complete(self.generation) {
+            return None;
+        }
+        self.graph.topology.as_ref()?.profile()
     }
 
     /// Bounded wait (PR 6): blocks until the run completes or

@@ -9,9 +9,15 @@
 //!   one row per worker, one slice per task;
 //! * [`Tracer::ascii_gantt`] — quick terminal Gantt for examples/CI.
 //!
-//! Recording is two `Instant::now()` calls plus one mutex-free vec
-//! push into a per-worker buffer, so tracing a run costs nanoseconds
-//! per task — it can stay on in examples.
+//! Recording is two `Instant::now()` calls plus one vec push into a
+//! **per-thread buffer** (PR 9): each recording thread owns its own
+//! event vec behind its own lock, cached in a thread-local keyed by
+//! tracer id, so concurrent workers never contend on a shared mutex —
+//! the lock each worker takes is its own, touched by the export side
+//! only when a snapshot is taken. Export merges the per-thread
+//! buffers and sorts by start time. (Earlier revisions funnelled every
+//! span through one global `Mutex<Vec>`, serializing all workers on a
+//! single lock; the docs promised per-worker buffers — now they exist.)
 //!
 //! Besides task spans, a tracer can record **shard-depth samples**
 //! (PR 5): [`Tracer::sample_shard_depths`] snapshots each shard's
@@ -20,7 +26,9 @@
 //! slices — so a storm run shows not just *what* executed where but
 //! how evenly the shards' queues were loaded while it did.
 
-use std::sync::Mutex;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::schedule::RunPriority;
@@ -60,13 +68,41 @@ pub struct ShardDepthSample {
     pub deque_depth: usize,
 }
 
+/// Monotone source of tracer identities, used as the thread-local
+/// cache key so one thread can record into many tracers over its
+/// lifetime without the caches aliasing.
+static TRACER_IDS: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// This thread's cached buffer: `(tracer id, buffer)`. One-entry
+    /// cache — a thread alternating between two live tracers re-looks
+    /// itself up (registering a fresh buffer per switch, which the
+    /// merge-at-export handles); the common case of one tracer per
+    /// run hits the cache every time.
+    static THREAD_BUF: RefCell<Option<(u64, Arc<ThreadBuffer>)>> = const { RefCell::new(None) };
+}
+
+/// One recording thread's private event buffer. The lock is
+/// *nominally* shared but only its owning thread pushes into it;
+/// export (`events`/`len`/`clear`) takes it briefly for snapshots, so
+/// worker-vs-worker contention — the cost the old global
+/// `Mutex<Vec>` design paid on every span — is gone by construction.
+#[derive(Debug, Default)]
+struct ThreadBuffer {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
 /// Collects [`TraceEvent`]s across a run. Shareable (`&Tracer` is
-/// `Sync`); per-event cost is one mutex'd push (uncontended in
-/// practice: events are pushed at task granularity).
+/// `Sync`); per-event cost is one push into the recording thread's own
+/// buffer (see [`ThreadBuffer`] — no cross-thread lock contention).
 #[derive(Debug)]
 pub struct Tracer {
+    id: u64,
     epoch: Instant,
-    events: Mutex<Vec<TraceEvent>>,
+    /// Registry of every thread buffer that has recorded into this
+    /// tracer; export merges them. Locked only on a thread's *first*
+    /// span into this tracer and on export, never per event.
+    buffers: Mutex<Vec<Arc<ThreadBuffer>>>,
     depth_samples: Mutex<Vec<ShardDepthSample>>,
 }
 
@@ -80,8 +116,9 @@ impl Tracer {
     /// Creates an empty tracer; its creation time is the timeline zero.
     pub fn new() -> Self {
         Self {
+            id: TRACER_IDS.fetch_add(1, Ordering::Relaxed),
             epoch: Instant::now(),
-            events: Mutex::new(Vec::new()),
+            buffers: Mutex::new(Vec::new()),
             depth_samples: Mutex::new(Vec::new()),
         }
     }
@@ -136,10 +173,31 @@ impl Tracer {
         }
     }
 
+    /// This thread's buffer for this tracer: thread-local cache hit in
+    /// the steady state; a miss (first span from this thread, or the
+    /// thread switched tracers) registers a fresh buffer under the
+    /// registry lock — the only cross-thread lock on the record path,
+    /// taken once per thread, not per event.
+    fn thread_buffer(&self) -> Arc<ThreadBuffer> {
+        THREAD_BUF.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if let Some((id, buf)) = slot.as_ref() {
+                if *id == self.id {
+                    return buf.clone();
+                }
+            }
+            let buf = Arc::new(ThreadBuffer::default());
+            self.buffers.lock().unwrap().push(buf.clone());
+            *slot = Some((self.id, buf.clone()));
+            buf
+        })
+    }
+
     fn record(&self, worker: usize, name: String, start: Instant, end: Instant, rank: u64, class: RunPriority) {
         let start_us = start.duration_since(self.epoch).as_micros() as u64;
         let dur_us = end.duration_since(start).as_micros() as u64;
-        self.events.lock().unwrap().push(TraceEvent {
+        let buf = self.thread_buffer();
+        buf.events.lock().unwrap().push(TraceEvent {
             worker,
             name,
             start_us,
@@ -151,7 +209,7 @@ impl Tracer {
 
     /// Number of recorded events.
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.buffers.lock().unwrap().iter().map(|b| b.events.lock().unwrap().len()).sum()
     }
 
     /// True if nothing was recorded.
@@ -159,16 +217,28 @@ impl Tracer {
         self.len() == 0
     }
 
-    /// Snapshot of the recorded events, ordered by start time.
+    /// Snapshot of the recorded events: the per-thread buffers merged
+    /// and ordered by start time. Each buffer's lock gives the
+    /// happens-before edge to its recording thread, so every span
+    /// whose guard finished before this call is included.
     pub fn events(&self) -> Vec<TraceEvent> {
-        let mut evs = self.events.lock().unwrap().clone();
+        let buffers = self.buffers.lock().unwrap();
+        let mut evs: Vec<TraceEvent> = Vec::new();
+        for buf in buffers.iter() {
+            evs.extend(buf.events.lock().unwrap().iter().cloned());
+        }
+        drop(buffers);
         evs.sort_by_key(|e| e.start_us);
         evs
     }
 
     /// Clears recorded events and depth samples (reuse between runs).
+    /// The thread buffers themselves stay registered — threads keep
+    /// their cached handles and simply start refilling them.
     pub fn clear(&self) {
-        self.events.lock().unwrap().clear();
+        for buf in self.buffers.lock().unwrap().iter() {
+            buf.events.lock().unwrap().clear();
+        }
         self.depth_samples.lock().unwrap().clear();
     }
 
@@ -363,6 +433,45 @@ mod tests {
         assert!(t.is_empty());
         assert!(t.shard_depth_samples().is_empty());
         assert_eq!(t.ascii_gantt(10), "(no events)\n");
+    }
+
+    #[test]
+    fn per_thread_buffers_merge_across_threads() {
+        let t = Arc::new(Tracer::new());
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..8 {
+                        t.span(w, format!("w{w}e{i}")).finish();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 32);
+        let evs = t.events();
+        assert_eq!(evs.len(), 32);
+        assert!(evs.windows(2).all(|p| p[0].start_us <= p[1].start_us));
+        t.clear();
+        assert!(t.is_empty());
+        // Buffers stay registered after clear; refilling still works.
+        t.span(0, "again").finish();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn one_thread_can_switch_between_tracers() {
+        let a = Tracer::new();
+        let b = Tracer::new();
+        a.span(0, "a1").finish();
+        b.span(0, "b1").finish(); // evicts a's cached buffer
+        a.span(0, "a2").finish(); // re-registers with a
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 1);
+        assert_eq!(a.events().iter().map(|e| e.name.as_str()).collect::<Vec<_>>(), ["a1", "a2"]);
     }
 
     #[test]

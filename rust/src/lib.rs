@@ -17,6 +17,9 @@
 //!   thread-per-task, Taskflow-like fence-based work stealer).
 //! * [`serve`] — graph-as-a-service front-end: tenant-fair DRR
 //!   admission, budgeted retry with backoff, and brownout shedding.
+//! * [`obs`] — observability: per-worker flight-recorder rings,
+//!   log-bucketed atomic histograms, post-run scheduling profiles,
+//!   and Prometheus text exposition.
 //! * [`runtime`] — PJRT client + artifact registry for AOT-compiled
 //!   HLO produced by `python/compile/aot.py`.
 //! * [`workloads`] — benchmark workload generators (fibonacci, linear
@@ -47,6 +50,7 @@ pub mod baseline;
 pub mod bench_harness;
 pub mod cli;
 pub mod graph;
+pub mod obs;
 pub mod pool;
 pub mod runtime;
 pub mod serve;

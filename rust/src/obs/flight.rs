@@ -1,0 +1,447 @@
+//! The flight recorder: per-worker lock-free event rings.
+//!
+//! Every worker owns a fixed-capacity ring of compact binary events
+//! (3 × `u64` words each); recording is one relaxed head bump plus
+//! three relaxed stores and a monotonic clock read — a few
+//! nanoseconds, **zero allocation** (proven by the `obs_alloc` test
+//! tier), and no synchronization with other workers. Two extra lanes
+//! follow the worker lanes: the caller-assist helper lane (mirroring
+//! the pool's metrics layout) and an *external* lane shared by
+//! non-worker threads (admission callers, the serving gate, the timer
+//! thread), whose multi-writer head bump is a relaxed `fetch_add`.
+//!
+//! ## Overwrite semantics
+//!
+//! A ring keeps the **most recent `capacity` events per lane** and
+//! silently overwrites the oldest beyond that — a flight recorder,
+//! not a log: after an incident the dump answers "what were the last
+//! few thousand things each worker did", never "everything since
+//! boot". Lane head counters keep counting past capacity, so a dump
+//! reports exactly how many events were overwritten. A dump taken
+//! while workers are still recording is a best-effort snapshot: each
+//! word of an event is individually untorn (they are plain atomics),
+//! but an event racing the reader at the ring head may pair the
+//! timestamp of one write with the payload of another. Dumps taken at
+//! a quiescent point (test assertions, post-failure post-mortems) are
+//! exact.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// What happened. Encoded in the high byte of an event's second word;
+/// `0` is reserved for "slot never written".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A graph node began executing (`a` = node id, `b` = run
+    /// generation).
+    TaskStart = 1,
+    /// A graph node finished (`a` = node id, `b` = duration in ns).
+    TaskEnd = 2,
+    /// A steal succeeded (`a` = victim worker, `b` = extra tasks moved
+    /// by the batched variant).
+    Steal = 3,
+    /// A steal attempt found the victim empty or lost the race
+    /// (`a` = victim worker).
+    StealFail = 4,
+    /// The worker parked on its eventcount (start of an idle spell).
+    Park = 5,
+    /// The worker woke from a park.
+    Wake = 6,
+    /// Admission granted a run slot (`a` = priority class code,
+    /// `b` = inflight runs after the grant).
+    AdmitOk = 7,
+    /// Admission blocked the caller until a slot freed (`a` = class
+    /// code).
+    AdmitBlocked = 8,
+    /// Admission shed the run (`a` = class code).
+    AdmitShed = 9,
+    /// Admission rejected the run as deadline-infeasible (`b` =
+    /// remaining budget in ns).
+    AdmitDeadline = 10,
+    /// A run aborted (`a` = cause code: 1 cancel, 2 deadline,
+    /// 3 panic; `b` = run generation).
+    Abort = 11,
+    /// The serving gate scheduled a retry (`a` = tenant id, `b` =
+    /// backoff in ns).
+    RetrySched = 12,
+    /// The brownout controller changed level (`a` = new level, `b` =
+    /// previous level).
+    Brownout = 13,
+}
+
+impl EventKind {
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => Self::TaskStart,
+            2 => Self::TaskEnd,
+            3 => Self::Steal,
+            4 => Self::StealFail,
+            5 => Self::Park,
+            6 => Self::Wake,
+            7 => Self::AdmitOk,
+            8 => Self::AdmitBlocked,
+            9 => Self::AdmitShed,
+            10 => Self::AdmitDeadline,
+            11 => Self::Abort,
+            12 => Self::RetrySched,
+            13 => Self::Brownout,
+            _ => return None,
+        })
+    }
+
+    /// Short name used by the Chrome-trace converter and tests.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::TaskStart => "task_start",
+            Self::TaskEnd => "task_end",
+            Self::Steal => "steal",
+            Self::StealFail => "steal_fail",
+            Self::Park => "park",
+            Self::Wake => "wake",
+            Self::AdmitOk => "admit_ok",
+            Self::AdmitBlocked => "admit_blocked",
+            Self::AdmitShed => "admit_shed",
+            Self::AdmitDeadline => "admit_deadline",
+            Self::Abort => "abort",
+            Self::RetrySched => "retry_sched",
+            Self::Brownout => "brownout",
+        }
+    }
+}
+
+/// One decoded event, as surfaced by [`FlightDump`].
+#[derive(Debug, Clone, Copy)]
+pub struct FlightEvent {
+    /// Nanoseconds since the recorder's epoch (pool construction).
+    pub t_ns: u64,
+    /// Originating lane: worker index, the helper lane, or the
+    /// external lane (see [`FlightRecorder::external_lane`]).
+    pub lane: u16,
+    /// What happened.
+    pub kind: EventKind,
+    /// First payload word (meaning depends on `kind`).
+    pub a: u32,
+    /// Second payload word (meaning depends on `kind`).
+    pub b: u64,
+}
+
+/// One ring slot: three plain atomic words. `w0` (the timestamp,
+/// written last / read first) doubles as the "slot is live" flag —
+/// timestamps are clamped to ≥ 1 so a zero means "never written".
+struct Slot {
+    w0: AtomicU64,
+    w1: AtomicU64,
+    w2: AtomicU64,
+}
+
+struct Ring {
+    /// Monotone event counter for this lane; slot = `head & mask`.
+    head: AtomicUsize,
+    slots: Box<[Slot]>,
+    mask: usize,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(2);
+        Self {
+            head: AtomicUsize::new(0),
+            slots: (0..cap)
+                .map(|_| Slot {
+                    w0: AtomicU64::new(0),
+                    w1: AtomicU64::new(0),
+                    w2: AtomicU64::new(0),
+                })
+                .collect(),
+            mask: cap - 1,
+        }
+    }
+}
+
+/// The per-pool flight recorder. Owned (behind `Arc`) by the pool;
+/// serve-layer components hold clones to record into the external
+/// lane. See the module docs for the overwrite and torn-read
+/// semantics.
+pub struct FlightRecorder {
+    epoch: Instant,
+    lanes: Vec<Ring>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("lanes", &self.lanes.len())
+            .field("capacity", &(self.lanes.first().map_or(0, |r| r.mask + 1)))
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    /// Creates a recorder with `worker_lanes` single-writer lanes
+    /// (workers plus the helper lane, matching the pool's metrics
+    /// layout) plus one shared external lane, each holding
+    /// `capacity_per_lane` events (rounded up to a power of two).
+    /// `epoch` anchors every timestamp — pass the pool's construction
+    /// instant so flight timestamps align with run-profile spans.
+    pub fn new(worker_lanes: usize, capacity_per_lane: usize, epoch: Instant) -> Self {
+        Self {
+            epoch,
+            lanes: (0..worker_lanes + 1).map(|_| Ring::new(capacity_per_lane)).collect(),
+        }
+    }
+
+    /// Index of the shared multi-writer lane for non-worker threads.
+    pub fn external_lane(&self) -> usize {
+        self.lanes.len() - 1
+    }
+
+    /// Records one event into `lane`. Lock-free, allocation-free; a
+    /// few relaxed atomics plus one monotonic clock read. Out-of-range
+    /// lanes clamp to the external lane rather than panic — the record
+    /// path must never be able to take a worker down.
+    #[inline]
+    pub fn record(&self, lane: usize, kind: EventKind, a: u32, b: u64) {
+        let lane = lane.min(self.lanes.len() - 1);
+        let ring = &self.lanes[lane];
+        let idx = ring.head.fetch_add(1, Ordering::Relaxed) & ring.mask;
+        let slot = &ring.slots[idx];
+        let t = (self.epoch.elapsed().as_nanos() as u64).max(1);
+        slot.w1.store(((kind as u64) << 56) | ((lane as u64 & 0xffff) << 32) | a as u64, Ordering::Relaxed);
+        slot.w2.store(b, Ordering::Relaxed);
+        // Timestamp last with Release: a reader that observes w0 sees
+        // the matching payload words (absent a ring-wrap race, which
+        // the module docs call out as best-effort).
+        slot.w0.store(t, Ordering::Release);
+    }
+
+    /// Convenience: records into the external lane.
+    #[inline]
+    pub fn record_external(&self, kind: EventKind, a: u32, b: u64) {
+        self.record(self.external_lane(), kind, a, b);
+    }
+
+    /// Snapshots every lane into a time-sorted [`FlightDump`]. This
+    /// allocates (it is the *dump* path, not the record path) and may
+    /// observe torn events at a live ring head — see the module docs.
+    pub fn dump(&self) -> FlightDump {
+        let mut events = Vec::new();
+        let mut recorded = 0u64;
+        let mut overwritten = 0u64;
+        for ring in &self.lanes {
+            let head = ring.head.load(Ordering::Relaxed);
+            recorded += head as u64;
+            overwritten += head.saturating_sub(ring.mask + 1) as u64;
+            for slot in ring.slots.iter() {
+                let t = slot.w0.load(Ordering::Acquire);
+                if t == 0 {
+                    continue;
+                }
+                let w1 = slot.w1.load(Ordering::Relaxed);
+                let b = slot.w2.load(Ordering::Relaxed);
+                let Some(kind) = EventKind::from_u8((w1 >> 56) as u8) else {
+                    continue;
+                };
+                events.push(FlightEvent {
+                    t_ns: t,
+                    lane: ((w1 >> 32) & 0xffff) as u16,
+                    kind,
+                    a: w1 as u32,
+                    b,
+                });
+            }
+        }
+        events.sort_by_key(|e| e.t_ns);
+        FlightDump { events, recorded, overwritten }
+    }
+}
+
+/// A decoded, time-sorted snapshot of every lane's ring.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// All live events, sorted by timestamp.
+    pub events: Vec<FlightEvent>,
+    /// Total events ever recorded (including overwritten ones).
+    pub recorded: u64,
+    /// Events lost to ring overwrite (`recorded - retained`).
+    pub overwritten: u64,
+}
+
+fn push_json_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+impl FlightDump {
+    /// Converts the dump to Chrome-trace JSON (load in
+    /// `chrome://tracing` or Perfetto). Task start/end pairs become
+    /// duration (`ph:"X"`) events on the originating lane's track;
+    /// everything else becomes an instant (`ph:"i"`) event.
+    pub fn to_chrome_trace(&self) -> String {
+        self.to_chrome_trace_with_edges(&[])
+    }
+
+    /// Like [`FlightDump::to_chrome_trace`], additionally emitting
+    /// flow arrows (`ph:"s"`/`ph:"f"`) along the given graph edges
+    /// `(pred, succ)`: each completed predecessor span points at each
+    /// successor span of the same run generation, so the dependency
+    /// structure is visible on the timeline.
+    pub fn to_chrome_trace_with_edges(&self, edges: &[(u32, u32)]) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut sep = |out: &mut String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+        };
+        // Open spans per (lane, node): TaskStart awaiting its TaskEnd.
+        let mut open: Vec<(u16, u32, u64, u64)> = Vec::new(); // (lane, node, start_ns, gen)
+        // Completed spans for flow binding: (node, gen) -> (start, end, lane).
+        let mut spans: Vec<(u32, u64, u64, u64, u16)> = Vec::new();
+        for e in &self.events {
+            match e.kind {
+                EventKind::TaskStart => open.push((e.lane, e.a, e.t_ns, e.b)),
+                EventKind::TaskEnd => {
+                    let found = open
+                        .iter()
+                        .rposition(|&(lane, node, _, _)| lane == e.lane && node == e.a);
+                    if let Some(i) = found {
+                        let (lane, node, start, gen) = open.swap_remove(i);
+                        // TaskEnd.b is the duration; the recorded start
+                        // timestamp wins for placement.
+                        let end = start + e.b.max(e.t_ns.saturating_sub(start));
+                        sep(&mut out);
+                        out.push_str(&format!(
+                            "{{\"name\":\"n{node}\",\"cat\":\"task\",\"ph\":\"X\",\"ts\":{}.{:03},\"dur\":{}.{:03},\"pid\":0,\"tid\":{lane},\"args\":{{\"node\":{node},\"gen\":{gen}}}}}",
+                            start / 1000,
+                            start % 1000,
+                            (end - start) / 1000,
+                            (end - start) % 1000,
+                        ));
+                        spans.push((node, gen, start, end, lane));
+                    }
+                }
+                _ => {
+                    sep(&mut out);
+                    let mut name = String::new();
+                    push_json_escaped(&mut name, e.kind.name());
+                    out.push_str(&format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"sched\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{}.{:03},\"pid\":0,\"tid\":{},\"args\":{{\"a\":{},\"b\":{}}}}}",
+                        e.t_ns / 1000,
+                        e.t_ns % 1000,
+                        e.lane,
+                        e.a,
+                        e.b,
+                    ));
+                }
+            }
+        }
+        // Flow arrows along graph edges, per generation.
+        let mut flow_id = 0u64;
+        for &(pred, succ) in edges {
+            for &(n1, g1, _, end1, lane1) in spans.iter().filter(|s| s.0 == pred) {
+                for &(n2, g2, start2, _, lane2) in spans.iter().filter(|s| s.0 == succ) {
+                    if g1 != g2 {
+                        continue;
+                    }
+                    flow_id += 1;
+                    let ts_s = end1.min(start2);
+                    sep(&mut out);
+                    out.push_str(&format!(
+                        "{{\"name\":\"edge\",\"cat\":\"dep\",\"ph\":\"s\",\"id\":{flow_id},\"ts\":{}.{:03},\"pid\":0,\"tid\":{lane1},\"args\":{{\"from\":{n1}}}}}",
+                        ts_s / 1000,
+                        ts_s % 1000,
+                    ));
+                    sep(&mut out);
+                    out.push_str(&format!(
+                        "{{\"name\":\"edge\",\"cat\":\"dep\",\"ph\":\"f\",\"bp\":\"e\",\"id\":{flow_id},\"ts\":{}.{:03},\"pid\":0,\"tid\":{lane2},\"args\":{{\"to\":{n2}}}}}",
+                        start2 / 1000,
+                        start2 % 1000,
+                    ));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "],\"otherData\":{{\"recorded\":{},\"overwritten\":{}}}}}",
+            self.recorded, self.overwritten
+        ));
+        out
+    }
+
+    /// Events of one kind (test/tooling convenience).
+    pub fn of_kind(&self, kind: EventKind) -> impl Iterator<Item = &FlightEvent> {
+        self.events.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_decode_round_trip() {
+        let r = FlightRecorder::new(2, 8, Instant::now());
+        r.record(0, EventKind::TaskStart, 7, 42);
+        r.record(0, EventKind::TaskEnd, 7, 1500);
+        r.record(1, EventKind::Steal, 0, 3);
+        r.record_external(EventKind::Brownout, 1, 0);
+        let d = r.dump();
+        assert_eq!(d.events.len(), 4);
+        assert_eq!(d.recorded, 4);
+        assert_eq!(d.overwritten, 0);
+        let start = d.of_kind(EventKind::TaskStart).next().unwrap();
+        assert_eq!((start.lane, start.a, start.b), (0, 7, 42));
+        let brown = d.of_kind(EventKind::Brownout).next().unwrap();
+        assert_eq!(brown.lane as usize, r.external_lane());
+        // Sorted by time.
+        assert!(d.events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_losses() {
+        let r = FlightRecorder::new(1, 4, Instant::now());
+        for i in 0..10u32 {
+            r.record(0, EventKind::Park, i, 0);
+        }
+        let d = r.dump();
+        // Capacity 4: only the 4 newest survive; 6 overwritten.
+        let parks: Vec<u32> = d.of_kind(EventKind::Park).map(|e| e.a).collect();
+        assert_eq!(parks.len(), 4);
+        assert!(parks.iter().all(|&a| a >= 6), "oldest events must be gone: {parks:?}");
+        assert_eq!(d.recorded, 10);
+        assert_eq!(d.overwritten, 6);
+    }
+
+    #[test]
+    fn chrome_trace_pairs_spans_and_draws_flows() {
+        let r = FlightRecorder::new(1, 16, Instant::now());
+        r.record(0, EventKind::TaskStart, 0, 1);
+        r.record(0, EventKind::TaskEnd, 0, 1000);
+        r.record(0, EventKind::TaskStart, 1, 1);
+        r.record(0, EventKind::TaskEnd, 1, 1000);
+        r.record(0, EventKind::Park, 0, 0);
+        let json = r.dump().to_chrome_trace_with_edges(&[(0, 1)]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with('}'));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 2, "{json}");
+        assert_eq!(json.matches("\"ph\":\"i\"").count(), 1);
+        // One edge, both spans present → one s/f flow pair.
+        assert_eq!(json.matches("\"ph\":\"s\"").count(), 1);
+        assert_eq!(json.matches("\"ph\":\"f\"").count(), 1);
+        assert!(json.contains("\"overwritten\":0"));
+    }
+
+    #[test]
+    fn out_of_range_lane_clamps_to_external() {
+        let r = FlightRecorder::new(1, 8, Instant::now());
+        r.record(999, EventKind::Wake, 0, 0);
+        let d = r.dump();
+        assert_eq!(d.events.len(), 1);
+    }
+}

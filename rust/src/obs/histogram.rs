@@ -1,0 +1,219 @@
+//! Log-bucketed atomic histograms.
+//!
+//! One series is a fixed array of [`BUCKETS`] `AtomicU64` counters
+//! plus a running count and sum — no locks, no allocation after
+//! construction, and recording is two relaxed RMWs (bucket + count)
+//! plus one relaxed add for the sum, so a series can stay on in
+//! release builds next to the PR-1 worker counters.
+//!
+//! Buckets are powers of two: bucket `i` (for `i > 0`) holds values
+//! `v` with `2^(i-1) <= v < 2^i`, bucket 0 holds exactly `v == 0`,
+//! and the last bucket absorbs everything from `2^(BUCKETS-2)` up.
+//! Quantile queries return the *inclusive upper bound* of the bucket
+//! containing the requested rank — a conservative (never
+//! under-reporting) estimate with ≤ 2× resolution error, which is
+//! exactly what the serve layer's p99 deadline-feasibility check
+//! wants: better to reject a request a little early than to admit one
+//! that will miss.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets per series (2^6 — covers 1 ns to ~146 years at
+/// power-of-two resolution when values are nanoseconds).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index of `v`: 0 for 0, otherwise `floor(log2(v)) + 1`
+/// clamped into the array.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (the value a quantile query
+/// reports when the rank lands in that bucket).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A lock-free log-bucketed histogram. All methods take `&self`; any
+/// thread may record concurrently (relaxed atomics — counts are exact,
+/// cross-counter consistency is only approximate under concurrent
+/// writes, which is fine for telemetry).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Box<[AtomicU64; BUCKETS]>,
+    total: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Creates an empty series (the only allocation this type ever
+    /// performs).
+    pub fn new() -> Self {
+        Self {
+            counts: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Records one value (relaxed; never allocates).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far (relaxed).
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Takes a point-in-time copy of the series. Relaxed loads: under
+    /// concurrent recording the copy is a consistent-enough view for
+    /// telemetry (per-bucket counts are each exact as of their load).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            count: self.total.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned, mergeable copy of one histogram series.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (see the module docs for bounds).
+    pub counts: [u64; BUCKETS],
+    /// Total samples (sum of `counts` as of the snapshot).
+    pub count: u64,
+    /// Sum of all recorded values.
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Folds another snapshot into this one (bucket-wise add) — how
+    /// per-worker or per-tenant series aggregate into pool totals.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// True if no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The value at quantile `q` (0.0–1.0): the inclusive upper bound
+    /// of the bucket containing the `ceil(q * count)`-th sample.
+    /// Returns 0 for an empty series.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    /// Arithmetic mean of recorded values (0 for an empty series).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // v always <= bucket_upper(bucket_of(v)).
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, 1 << 40, u64::MAX] {
+            assert!(v <= bucket_upper(bucket_of(v)), "v={v}");
+        }
+    }
+
+    #[test]
+    fn quantile_is_conservative_upper_bound() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1100);
+        // p50 lands in the bucket of 30 ([16,32) → upper 31).
+        assert_eq!(s.quantile(0.5), 31);
+        // p99 lands in the bucket of 1000 ([512,1024) → upper 1023).
+        assert_eq!(s.quantile(0.99), 1023);
+        assert!(s.quantile(0.99) >= 1000);
+        assert_eq!(s.mean(), 220);
+    }
+
+    #[test]
+    fn empty_series_report_zero() {
+        let s = Histogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.99), 0);
+        assert_eq!(s.mean(), 0);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(5);
+        a.record(100);
+        b.record(5);
+        b.record(1 << 20);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 4);
+        assert_eq!(m.sum, 5 + 100 + 5 + (1 << 20));
+        assert_eq!(m.counts[bucket_of(5)], 2);
+        // The merged p99 must cover the largest contributor.
+        assert!(m.quantile(0.99) >= (1 << 20));
+    }
+}

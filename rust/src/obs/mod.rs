@@ -1,0 +1,46 @@
+//! Unified observability layer (PR 9).
+//!
+//! Three pillars, all built on the crate's cache-padded relaxed-atomic
+//! discipline so they can stay **on in release builds**:
+//!
+//! * [`FlightRecorder`] — per-worker fixed-capacity lock-free ring
+//!   buffers of compact binary scheduler events (task start/end,
+//!   steal, park/wake, admission verdicts, aborts, retries, brownout
+//!   transitions). Recording is a few nanoseconds and allocation-free;
+//!   rings overwrite their oldest events (see `flight.rs` for the
+//!   exact overwrite/torn-read semantics). Dump on demand via
+//!   `ThreadPool::flight_dump()`, over the wire with the `DUMP` frame,
+//!   or automatically when a run fails with `NodePanicked` /
+//!   `DeadlineExceeded`; dumps convert to Chrome-trace JSON (with flow
+//!   arrows along graph edges).
+//! * [`Histogram`] — log-bucketed (2^k buckets) atomic histograms with
+//!   mergeable [`HistogramSnapshot`]s, used for queue delay, gate
+//!   wait, node duration, and per-tenant run latency. The serve
+//!   layer's SLO checks read p99 from these (EWMAs remain the
+//!   cold-start fallback).
+//! * [`RunProfile`] — post-run scheduling profiles (observed critical
+//!   path vs declared ranks, busy/idle makespan breakdown, scheduling
+//!   efficiency), surfaced through `RunHandle::profile()` and
+//!   `TaskGraph::last_profile()`; plus [`PromWriter`]/[`validate`]
+//!   for standards-compliant Prometheus text exposition on the wire
+//!   metrics listener and STATS v2 frame.
+//!
+//! Both the recorder and the histograms can be disabled per pool via
+//! `PoolConfig::flight_recorder` / `PoolConfig::histograms`; the
+//! ABL-9 ablation arm measures the cost of leaving them on.
+
+pub mod flight;
+pub mod histogram;
+pub mod profile;
+pub mod prometheus;
+
+pub use flight::{EventKind, FlightDump, FlightEvent, FlightRecorder};
+pub use histogram::{bucket_upper, Histogram, HistogramSnapshot, BUCKETS};
+pub use profile::RunProfile;
+pub use prometheus::{validate, PromWriter};
+
+/// Minimum samples a histogram needs before its p99 supersedes the
+/// EWMA in SLO decisions (deadline feasibility, tenant demotion):
+/// below this the bucket quantile is too coarse to trust and the
+/// serve layer stays on its cold-start EWMA path.
+pub const HIST_MIN_SAMPLES: u64 = 32;

@@ -1,0 +1,207 @@
+//! Post-run profiles: what a completed graph run actually did.
+//!
+//! The executor stamps per-node start/end timestamps (and the
+//! executing worker) into seal-time arrays beside the CSR arena;
+//! after a run completes, [`RunProfile::compute`] folds them into the
+//! numbers a scheduling post-mortem needs: the **observed critical
+//! path** (longest end-to-end chain along real dependency edges,
+//! using measured durations — compare against the declared seal-time
+//! rank to see how wrong the weights were), the **makespan
+//! breakdown** (busy vs idle worker-time inside the run window), and
+//! **scheduling efficiency** (busy-time ÷ workers × makespan — 1.0
+//! means every worker was executing nodes for the whole run).
+
+use std::time::Duration;
+
+/// A profile of one completed graph run. Obtained from
+/// `RunHandle::profile()` or `TaskGraph::last_profile()`; `None`
+/// there means the run recorded no timing (timing rides the
+/// `PoolConfig::histograms` toggle, or the run never executed a
+/// node).
+#[derive(Debug, Clone)]
+pub struct RunProfile {
+    /// Nodes that executed (and were timed) in the run.
+    pub nodes: usize,
+    /// Wall-clock span from the first node start to the last node end.
+    pub makespan: Duration,
+    /// Sum of all node execution spans (total busy worker-time).
+    pub busy: Duration,
+    /// `workers × makespan − busy`: worker-time inside the run window
+    /// not spent executing nodes (stealing, parking, idling).
+    pub idle: Duration,
+    /// Workers the pool ran with (the denominator of efficiency).
+    pub workers: usize,
+    /// `busy ÷ (workers × makespan)`, in 0.0–1.0.
+    pub scheduling_efficiency: f64,
+    /// Observed critical path: the heaviest measured-duration chain
+    /// along the graph's dependency edges.
+    pub critical_path: Duration,
+    /// Node ids along the observed critical path, in execution order.
+    pub critical_path_nodes: Vec<usize>,
+    /// The declared seal-time critical-path rank (weight units, not
+    /// time) of the run's heaviest chain — what the scheduler
+    /// *believed* the critical path was when it prioritized.
+    pub declared_critical_rank: u64,
+    /// Busy time per worker lane (index = worker; the last entry is
+    /// the caller-assist helper lane).
+    pub per_worker_busy: Vec<Duration>,
+}
+
+impl RunProfile {
+    /// Builds a profile from per-node spans. `starts`/`ends` are
+    /// nanosecond timestamps on a common epoch (0 = node never
+    /// executed), `node_workers[i]` is the lane that executed node
+    /// `i`, `successors(i)` yields the dependency edges, `ranks` the
+    /// declared seal-time ranks, and `workers` the pool size
+    /// (excluding the helper lane). Returns `None` when no node was
+    /// timed.
+    pub fn compute(
+        starts: &[u64],
+        ends: &[u64],
+        node_workers: &[u32],
+        successors: impl Fn(usize) -> Vec<usize>,
+        ranks: &[u64],
+        workers: usize,
+    ) -> Option<RunProfile> {
+        let n = starts.len();
+        let executed: Vec<usize> =
+            (0..n).filter(|&i| starts[i] > 0 && ends[i] >= starts[i]).collect();
+        if executed.is_empty() {
+            return None;
+        }
+        let first = executed.iter().map(|&i| starts[i]).min().unwrap();
+        let last = executed.iter().map(|&i| ends[i]).max().unwrap();
+        let makespan_ns = last - first;
+        let mut busy_ns = 0u64;
+        let mut per_worker = vec![0u64; workers + 1];
+        for &i in &executed {
+            let span = ends[i] - starts[i];
+            busy_ns += span;
+            let w = (node_workers[i] as usize).min(workers);
+            per_worker[w] += span;
+        }
+        // Observed critical path: longest chain by measured duration,
+        // over the DAG (memoized iterative DFS — an explicit stack, so
+        // a 100k-node chain cannot overflow the thread stack).
+        let mut best = vec![u64::MAX; n]; // MAX = unvisited
+        let mut best_next = vec![usize::MAX; n];
+        let span_of = |i: usize| {
+            if starts[i] > 0 && ends[i] >= starts[i] {
+                ends[i] - starts[i]
+            } else {
+                0
+            }
+        };
+        let mut stack: Vec<(usize, bool)> = Vec::new();
+        for &root in &executed {
+            if best[root] != u64::MAX {
+                continue;
+            }
+            stack.push((root, false));
+            while let Some((i, expanded)) = stack.pop() {
+                if best[i] != u64::MAX {
+                    continue;
+                }
+                if expanded {
+                    let mut down = 0u64;
+                    let mut next = usize::MAX;
+                    for s in successors(i) {
+                        let d = best[s];
+                        debug_assert_ne!(d, u64::MAX, "successor resolved before parent");
+                        if d > down {
+                            down = d;
+                            next = s;
+                        }
+                    }
+                    best[i] = span_of(i) + down;
+                    best_next[i] = next;
+                } else {
+                    stack.push((i, true));
+                    for s in successors(i) {
+                        if best[s] == u64::MAX {
+                            stack.push((s, false));
+                        }
+                    }
+                }
+            }
+        }
+        let mut cp_head = executed[0];
+        let mut cp_ns = 0u64;
+        for &i in &executed {
+            if best[i] != u64::MAX && best[i] > cp_ns {
+                cp_ns = best[i];
+                cp_head = i;
+            }
+        }
+        let mut critical_path_nodes = Vec::new();
+        let mut cur = cp_head;
+        while cur != usize::MAX {
+            critical_path_nodes.push(cur);
+            cur = best_next[cur];
+        }
+        let denom = (workers as u64).max(1) * makespan_ns;
+        let efficiency = if denom == 0 { 1.0 } else { busy_ns as f64 / denom as f64 };
+        Some(RunProfile {
+            nodes: executed.len(),
+            makespan: Duration::from_nanos(makespan_ns),
+            busy: Duration::from_nanos(busy_ns),
+            idle: Duration::from_nanos(denom.saturating_sub(busy_ns)),
+            workers,
+            scheduling_efficiency: efficiency,
+            critical_path: Duration::from_nanos(cp_ns),
+            critical_path_nodes,
+            declared_critical_rank: ranks.iter().copied().max().unwrap_or(0),
+            per_worker_busy: per_worker.into_iter().map(Duration::from_nanos).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond_profile_numbers() {
+        // 0 -> {1, 2} -> 3; node 2 is the heavy arm.
+        let starts = [100u64, 200, 200, 1300];
+        let ends = [200u64, 400, 1200, 1400];
+        let workers_of = [0u32, 0, 1, 0];
+        let succ = |i: usize| -> Vec<usize> {
+            match i {
+                0 => vec![1, 2],
+                1 | 2 => vec![3],
+                _ => vec![],
+            }
+        };
+        let ranks = [30u64, 20, 20, 10];
+        let p = RunProfile::compute(&starts, &ends, &workers_of, succ, &ranks, 2).unwrap();
+        assert_eq!(p.nodes, 4);
+        assert_eq!(p.makespan, Duration::from_nanos(1300));
+        // busy = 100 + 200 + 1000 + 100.
+        assert_eq!(p.busy, Duration::from_nanos(1400));
+        assert_eq!(p.idle, Duration::from_nanos(2 * 1300 - 1400));
+        // Critical path runs through the heavy arm: 0 -> 2 -> 3.
+        assert_eq!(p.critical_path_nodes, vec![0, 2, 3]);
+        assert_eq!(p.critical_path, Duration::from_nanos(100 + 1000 + 100));
+        assert_eq!(p.declared_critical_rank, 30);
+        let eff = 1400.0 / (2.0 * 1300.0);
+        assert!((p.scheduling_efficiency - eff).abs() < 1e-9);
+        assert_eq!(p.per_worker_busy[0], Duration::from_nanos(400));
+        assert_eq!(p.per_worker_busy[1], Duration::from_nanos(1000));
+    }
+
+    #[test]
+    fn unexecuted_nodes_are_skipped() {
+        // Node 1 never ran (cancelled mid-flight).
+        let starts = [10u64, 0];
+        let ends = [20u64, 0];
+        let p = RunProfile::compute(&starts, &ends, &[0, 0], |_| vec![], &[1, 1], 1).unwrap();
+        assert_eq!(p.nodes, 1);
+        assert_eq!(p.makespan, Duration::from_nanos(10));
+    }
+
+    #[test]
+    fn no_timing_yields_none() {
+        assert!(RunProfile::compute(&[0, 0], &[0, 0], &[0, 0], |_| vec![], &[1, 1], 1).is_none());
+    }
+}

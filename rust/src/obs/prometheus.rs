@@ -1,0 +1,350 @@
+//! Prometheus text exposition: writer and strict validator.
+//!
+//! The writer produces the [text-based exposition format]: every
+//! metric family gets `# HELP` and `# TYPE` lines before its samples,
+//! histograms expand to cumulative `_bucket{le="..."}` samples ending
+//! in `le="+Inf"` plus `_sum`/`_count`, and label values are escaped.
+//! The validator re-checks all of that *strictly* — it is run in CI
+//! against both the HTTP `/metrics` scrape and the in-band STATS v2
+//! frame, so a malformed exposition can never ship silently.
+//!
+//! [text-based exposition format]:
+//!     https://prometheus.io/docs/instrumenting/exposition_formats/
+
+use super::histogram::{bucket_upper, HistogramSnapshot};
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+impl PromWriter {
+    /// Starts an empty document.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Emits an unlabelled counter family with one sample.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    /// Emits a counter family with one sample per label set. Labels
+    /// are `(key, value)` pairs; values are escaped.
+    pub fn counter_labeled(&mut self, name: &str, help: &str, samples: &[(&[(&str, &str)], u64)]) {
+        self.header(name, help, "counter");
+        for (labels, value) in samples {
+            self.out.push_str(&format!("{name}{} {value}\n", render_labels(labels)));
+        }
+    }
+
+    /// Emits an unlabelled gauge family with one sample.
+    pub fn gauge(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    /// Emits a gauge family with one sample per label set.
+    pub fn gauge_labeled(&mut self, name: &str, help: &str, samples: &[(&[(&str, &str)], u64)]) {
+        self.header(name, help, "gauge");
+        for (labels, value) in samples {
+            self.out.push_str(&format!("{name}{} {value}\n", render_labels(labels)));
+        }
+    }
+
+    /// Emits one histogram family from a snapshot: cumulative
+    /// `_bucket` samples (only buckets up to the highest occupied one,
+    /// then `+Inf` — the cumulative property holds regardless), plus
+    /// `_sum` and `_count`. Extra labels apply to every sample.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        snap: &HistogramSnapshot,
+    ) {
+        self.header(name, help, "histogram");
+        self.histogram_samples(name, labels, snap);
+    }
+
+    /// Emits the samples of one histogram label set *without* the
+    /// family header — for families with several label sets (e.g. one
+    /// per tenant): call [`PromWriter::histogram`] for the first and
+    /// this for the rest.
+    pub fn histogram_samples(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        snap: &HistogramSnapshot,
+    ) {
+        let highest = snap
+            .counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0);
+        let mut cum = 0u64;
+        for (i, &c) in snap.counts.iter().enumerate().take(highest + 1) {
+            cum += c;
+            let mut ls: Vec<(&str, String)> =
+                labels.iter().map(|&(k, v)| (k, v.to_string())).collect();
+            ls.push(("le", bucket_upper(i).to_string()));
+            self.out.push_str(&format!("{name}_bucket{} {cum}\n", render_owned_labels(&ls)));
+        }
+        let mut inf: Vec<(&str, String)> =
+            labels.iter().map(|&(k, v)| (k, v.to_string())).collect();
+        inf.push(("le", "+Inf".to_string()));
+        self.out
+            .push_str(&format!("{name}_bucket{} {}\n", render_owned_labels(&inf), snap.count));
+        self.out
+            .push_str(&format!("{name}_sum{} {}\n", render_labels(labels), snap.sum));
+        self.out
+            .push_str(&format!("{name}_count{} {}\n", render_labels(labels), snap.count));
+    }
+
+    /// Finishes the document.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    render_owned_labels(
+        &labels.iter().map(|&(k, v)| (k, v.to_string())).collect::<Vec<_>>(),
+    )
+}
+
+fn render_owned_labels(labels: &[(&str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Strictly validates an exposition document. Returns the first
+/// violation found:
+///
+/// * every sample's metric family must have a preceding `# TYPE`;
+/// * histogram `_bucket` series must be cumulative (non-decreasing in
+///   `le` order) and end in `le="+Inf"`;
+/// * every histogram must carry `_sum` and `_count`, with the `+Inf`
+///   bucket equal to `_count`;
+/// * sample lines must parse as `name{labels} value`.
+pub fn validate(text: &str) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut types: HashMap<String, String> = HashMap::new();
+    // family -> label-set(minus le) -> (buckets in order, inf, sum, count)
+    #[derive(Default)]
+    struct HistState {
+        buckets: Vec<u64>,
+        inf: Option<u64>,
+        sum: Option<u64>,
+        count: Option<u64>,
+    }
+    let mut hists: HashMap<(String, String), HistState> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("line {}: bare # TYPE", lineno + 1))?;
+            let kind = it.next().ok_or_else(|| format!("line {}: # TYPE without kind", lineno + 1))?;
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        // Sample line: name[{labels}] value
+        let (name_and_labels, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value: {line:?}", lineno + 1))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: unparsable value: {line:?}", lineno + 1))?;
+        let (name, labels) = match name_and_labels.split_once('{') {
+            Some((n, rest)) => {
+                let rest = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {}: unterminated labels: {line:?}", lineno + 1))?;
+                (n, rest.to_string())
+            }
+            None => (name_and_labels, String::new()),
+        };
+        // Resolve the family: histogram samples use suffixed names.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf)
+                    .filter(|base| types.get(*base).is_some_and(|t| t == "histogram"))
+                    .map(|base| (base, *suf))
+            });
+        match family {
+            Some((base, suffix)) => {
+                // Labels minus `le` identify the series.
+                let mut le = None;
+                let others: Vec<&str> = labels
+                    .split(',')
+                    .filter(|p| !p.is_empty())
+                    .filter(|p| {
+                        if let Some(v) = p.strip_prefix("le=") {
+                            le = Some(v.trim_matches('"').to_string());
+                            false
+                        } else {
+                            true
+                        }
+                    })
+                    .collect();
+                let key = (base.to_string(), others.join(","));
+                let st = hists.entry(key).or_default();
+                match suffix {
+                    "_bucket" => {
+                        let le = le.ok_or_else(|| {
+                            format!("line {}: _bucket without le label", lineno + 1)
+                        })?;
+                        if le == "+Inf" {
+                            st.inf = Some(value as u64);
+                        } else {
+                            if st.inf.is_some() {
+                                return Err(format!(
+                                    "line {}: bucket after le=\"+Inf\" in {base}",
+                                    lineno + 1
+                                ));
+                            }
+                            st.buckets.push(value as u64);
+                        }
+                    }
+                    "_sum" => st.sum = Some(value as u64),
+                    "_count" => st.count = Some(value as u64),
+                    _ => unreachable!(),
+                }
+            }
+            None => {
+                if !types.contains_key(name) {
+                    return Err(format!(
+                        "line {}: sample {name:?} has no preceding # TYPE",
+                        lineno + 1
+                    ));
+                }
+            }
+        }
+    }
+    for ((family, labels), st) in &hists {
+        let what = if labels.is_empty() {
+            family.clone()
+        } else {
+            format!("{family}{{{labels}}}")
+        };
+        let inf = st.inf.ok_or_else(|| format!("{what}: no le=\"+Inf\" bucket"))?;
+        let count = st.count.ok_or_else(|| format!("{what}: missing _count"))?;
+        st.sum.ok_or_else(|| format!("{what}: missing _sum"))?;
+        if !st.buckets.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(format!("{what}: buckets not cumulative: {:?}", st.buckets));
+        }
+        if let Some(&last) = st.buckets.last() {
+            if last > inf {
+                return Err(format!("{what}: bucket {last} exceeds +Inf {inf}"));
+            }
+        }
+        if inf != count {
+            return Err(format!("{what}: le=\"+Inf\" ({inf}) != _count ({count})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    #[test]
+    fn writer_output_validates() {
+        let h = Histogram::new();
+        for v in [100u64, 2000, 2000, 50_000] {
+            h.record(v);
+        }
+        let mut w = PromWriter::new();
+        w.counter("pool_tasks_total", "Tasks executed.", 42);
+        w.gauge("brownout_level", "Current brownout level.", 1);
+        w.counter_labeled(
+            "tenant_completed",
+            "Completed runs per tenant.",
+            &[(&[("tenant", "gold")], 3), (&[("tenant", "silver")], 1)],
+        );
+        w.histogram("pool_queue_delay_ns", "Dispatch queue delay.", &[], &h.snapshot());
+        let text = w.finish();
+        assert!(text.contains("# TYPE pool_tasks_total counter"));
+        assert!(text.contains("tenant_completed{tenant=\"gold\"} 3"));
+        assert!(text.contains("le=\"+Inf\"} 4"));
+        assert!(text.contains("pool_queue_delay_ns_count 4"));
+        validate(&text).expect("writer output must be valid");
+    }
+
+    #[test]
+    fn validator_rejects_untyped_samples() {
+        let err = validate("orphan_metric 1\n").unwrap_err();
+        assert!(err.contains("no preceding # TYPE"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_noncumulative_buckets() {
+        let text = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"2\"} 3
+h_bucket{le=\"+Inf\"} 5
+h_sum 9
+h_count 5
+";
+        let err = validate(text).unwrap_err();
+        assert!(err.contains("not cumulative"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_inf_and_count_mismatch() {
+        let no_inf = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_sum 9
+h_count 5
+";
+        assert!(validate(no_inf).unwrap_err().contains("+Inf"));
+        let mismatch = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"+Inf\"} 5
+h_sum 9
+h_count 6
+";
+        assert!(validate(mismatch).unwrap_err().contains("!= _count"));
+    }
+
+    #[test]
+    fn labeled_histograms_validate_per_series() {
+        let a = Histogram::new();
+        a.record(10);
+        let b = Histogram::new();
+        b.record(999);
+        b.record(5);
+        let mut w = PromWriter::new();
+        w.histogram("tenant_latency_ns", "Per-tenant run latency.", &[("tenant", "gold")], &a.snapshot());
+        w.histogram_samples("tenant_latency_ns", &[("tenant", "silver")], &b.snapshot());
+        validate(&w.finish()).expect("multi-series histogram must validate");
+    }
+}

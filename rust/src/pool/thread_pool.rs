@@ -115,7 +115,7 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::timer;
 
@@ -125,6 +125,7 @@ use super::injector::{Injector, LaneInjector, MutexInjector, SegQueue, DEFAULT_L
 use super::metrics::{PaddedMetrics, PoolSnapshot, ShardSnapshot, WorkerMetrics};
 use super::task::RawTask;
 use super::topology::PoolTopology;
+use crate::obs::{EventKind, FlightDump, FlightRecorder, Histogram, HistogramSnapshot};
 use crate::util::{CachePadded, XorShift64Star};
 
 /// Timeout backstop for multi-shard worker parks: with per-shard
@@ -195,6 +196,22 @@ pub struct PoolConfig {
     /// backpressure heuristic (precise counting would put a shared RMW
     /// back on the submit path sharding just removed).
     pub max_queued_tasks: usize,
+    /// Keep the flight recorder on (PR 9): per-worker lock-free ring
+    /// buffers of scheduler events (task start/end, steal, park/wake,
+    /// admission verdicts, aborts, brownout transitions), dumpable via
+    /// [`ThreadPool::flight_dump`] and automatically on run failures.
+    /// Recording is a few ns per event with zero allocation; the
+    /// ABL-9 ablation arm measures the cost. Default on.
+    pub flight_recorder: bool,
+    /// Events retained per flight-recorder lane (rounded up to a power
+    /// of two); older events are overwritten — see
+    /// [`crate::obs::flight`] for the exact semantics.
+    pub flight_capacity: usize,
+    /// Keep the pool-level histograms on (PR 9): log-bucketed atomic
+    /// series for dispatch queue delay and node duration, plus the
+    /// per-node run-profile timestamps behind
+    /// `RunHandle::profile()`. Default on.
+    pub histograms: bool,
 }
 
 impl Default for PoolConfig {
@@ -210,8 +227,20 @@ impl Default for PoolConfig {
             shard_size: 0,
             max_inflight_runs: 0,
             max_queued_tasks: 0,
+            flight_recorder: true,
+            flight_capacity: 4096,
+            histograms: true,
         }
     }
+}
+
+/// Pool-level histogram series (PR 9), allocated once at pool
+/// construction when [`PoolConfig::histograms`] is on.
+pub(crate) struct PoolHists {
+    /// Dispatch-queue delay (same samples as the EWMA).
+    pub(crate) queue_delay: Histogram,
+    /// Per-node execution duration across all graph runs.
+    pub(crate) node_duration: Histogram,
 }
 
 /// Thread-local identity of a worker: which pool it belongs to and a
@@ -396,6 +425,21 @@ pub(crate) struct PoolInner {
     /// vtable and `execute_node` contain all panics — so a nonzero
     /// value is a loud signal that containment regressed.
     worker_revivals: AtomicU64,
+    /// Timestamp epoch for the observability layer (PR 9): flight
+    /// events and run-profile spans are nanoseconds since this
+    /// instant, so the two can be cross-referenced on one timeline.
+    epoch: Instant,
+    /// Flight recorder (PR 9); `None` when disabled by config. Behind
+    /// `Arc` so serve-layer components (brownout controller, retry
+    /// scheduler) can hold a handle and record into the external lane.
+    flight: Option<Arc<FlightRecorder>>,
+    /// Pool-level histograms (PR 9); `None` when disabled by config.
+    hists: Option<PoolHists>,
+    /// The most recent automatic flight dump (PR 9): stashed by the
+    /// executor when a run fails with `NodePanicked` or
+    /// `DeadlineExceeded`, retrievable via
+    /// [`ThreadPool::last_flight_dump`] for post-mortems.
+    last_dump: Mutex<Option<FlightDump>>,
 }
 
 /// The work-stealing thread pool (see module docs).
@@ -426,6 +470,7 @@ impl ThreadPool {
     /// Creates a pool from a full [`PoolConfig`].
     pub fn with_config(config: PoolConfig) -> Self {
         let n = config.num_threads.max(1);
+        let epoch = Instant::now();
         let mut owners = Vec::with_capacity(n);
         let mut stealers = Vec::with_capacity(n);
         for _ in 0..n {
@@ -474,6 +519,18 @@ impl ThreadPool {
             queue_delay_ewma_ns: AtomicU64::new(0),
             alive_workers: AtomicUsize::new(0),
             worker_revivals: AtomicU64::new(0),
+            epoch,
+            // `n + 1` single-writer lanes (workers + the caller-assist
+            // helper lane, mirroring `metrics`) plus the recorder's own
+            // shared external lane for non-worker threads.
+            flight: config
+                .flight_recorder
+                .then(|| Arc::new(FlightRecorder::new(n + 1, config.flight_capacity.max(2), epoch))),
+            hists: config.histograms.then(|| PoolHists {
+                queue_delay: Histogram::new(),
+                node_duration: Histogram::new(),
+            }),
+            last_dump: Mutex::new(None),
         });
         let threads = owners
             .into_iter()
@@ -609,6 +666,48 @@ impl ThreadPool {
     /// first one. The serving tier's load signal (PR 7).
     pub fn queue_delay_ewma(&self) -> Duration {
         self.inner.queue_delay_ewma()
+    }
+
+    /// Snapshots the flight recorder (PR 9) — every lane's ring,
+    /// decoded and time-sorted — or `None` when the recorder is
+    /// disabled ([`PoolConfig::flight_recorder`]). Convert with
+    /// [`crate::obs::FlightDump::to_chrome_trace`] for
+    /// `chrome://tracing` / Perfetto.
+    pub fn flight_dump(&self) -> Option<FlightDump> {
+        self.inner.flight().map(|f| f.dump())
+    }
+
+    /// The most recent *automatic* flight dump (PR 9): the executor
+    /// stashes one whenever a run fails with
+    /// [`crate::graph::GraphError::NodePanicked`] or
+    /// [`crate::graph::GraphError::DeadlineExceeded`], so the moments
+    /// leading up to the failure survive ring overwrite. `None` until
+    /// the first such failure (or with the recorder disabled).
+    pub fn last_flight_dump(&self) -> Option<FlightDump> {
+        self.inner.take_last_flight_dump()
+    }
+
+    /// Handle to the flight recorder (PR 9) for components that record
+    /// their own events into the shared external lane (the serve
+    /// layer's brownout and retry machinery does this); `None` when
+    /// disabled.
+    pub fn flight_recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.inner.flight().cloned()
+    }
+
+    /// Snapshot of the dispatch-queue-delay histogram (PR 9) — the
+    /// same samples as [`ThreadPool::queue_delay_ewma`], log-bucketed
+    /// so tails are visible; `None` when histograms are disabled
+    /// ([`PoolConfig::histograms`]).
+    pub fn queue_delay_histogram(&self) -> Option<HistogramSnapshot> {
+        self.inner.hists().map(|h| h.queue_delay.snapshot())
+    }
+
+    /// Snapshot of the node-duration histogram (PR 9): execution time
+    /// of every graph node run on this pool; `None` when histograms
+    /// are disabled.
+    pub fn node_duration_histogram(&self) -> Option<HistogramSnapshot> {
+        self.inner.hists().map(|h| h.node_duration.snapshot())
     }
 
     /// Number of shards the pool's workers are grouped into (PR 5);
@@ -1118,15 +1217,24 @@ impl PoolInner {
         if self.max_inflight_runs == 0 && self.max_queued_tasks == 0 {
             return Ok(false);
         }
+        let class = low_class as u32;
         if self.try_take_slot(n_tasks, low_class) {
+            self.record_flight(
+                self.flight_lane_of_caller(),
+                EventKind::AdmitOk,
+                class,
+                self.inflight_runs.load(Ordering::Relaxed) as u64,
+            );
             return Ok(true);
         }
         if !block {
             if low_class {
                 self.shed_runs.fetch_add(1, Ordering::Relaxed);
             }
+            self.record_flight(self.flight_lane_of_caller(), EventKind::AdmitShed, class, 0);
             return Err(());
         }
+        self.record_flight(self.flight_lane_of_caller(), EventKind::AdmitBlocked, class, 0);
         // Park until a slot is released. Slot releases broadcast on
         // budget_ec, but queue-pressure admission (`max_queued_tasks`)
         // frees capacity through task completions that do **not**
@@ -1146,16 +1254,29 @@ impl PoolInner {
         loop {
             if self.try_take_slot(n_tasks, low_class) {
                 live.store(false, Ordering::SeqCst);
+                self.record_flight(self.flight_lane_of_caller(), EventKind::AdmitOk, class, 0);
                 return Ok(true);
             }
             let token = self.budget_ec.prepare_wait();
             if self.try_take_slot(n_tasks, low_class) {
                 self.budget_ec.cancel_wait(token);
                 live.store(false, Ordering::SeqCst);
+                self.record_flight(self.flight_lane_of_caller(), EventKind::AdmitOk, class, 0);
                 return Ok(true);
             }
             self.budget_ec.commit_wait(token);
         }
+    }
+
+    /// Flight lane for the current thread (PR 9): a worker of this
+    /// pool records into its own lane, everyone else into the shared
+    /// external lane.
+    #[inline]
+    pub(crate) fn flight_lane_of_caller(&self) -> usize {
+        LOCAL.with(|l| match l.get() {
+            Some(lw) if std::ptr::eq(lw.pool, self as *const PoolInner) => lw.index,
+            _ => self.flight.as_ref().map_or(0, |f| f.external_lane()),
+        })
     }
 
     /// Releases an admission slot taken by [`PoolInner::admit_run`]
@@ -1171,6 +1292,9 @@ impl PoolInner {
     /// why the racy read-modify-write is acceptable.
     pub(crate) fn observe_queue_delay(&self, delay: Duration) {
         let sample = delay.as_nanos().min(u64::MAX as u128) as u64;
+        if let Some(h) = &self.hists {
+            h.queue_delay.record(sample);
+        }
         let cur = self.queue_delay_ewma_ns.load(Ordering::Relaxed);
         let next = if cur == 0 {
             sample // first observation seeds the average
@@ -1184,6 +1308,55 @@ impl PoolInner {
     /// [`PoolInner::observe_queue_delay`].
     pub(crate) fn queue_delay_ewma(&self) -> Duration {
         Duration::from_nanos(self.queue_delay_ewma_ns.load(Ordering::Relaxed))
+    }
+
+    /// p99 of the queue-delay histogram (PR 9), once it has warmed past
+    /// [`crate::obs::HIST_MIN_SAMPLES`] samples — `None` while cold or
+    /// when histograms are disabled, in which case SLO checks fall
+    /// back to the EWMA.
+    pub(crate) fn queue_delay_p99(&self) -> Option<Duration> {
+        let h = self.hists.as_ref()?;
+        let s = h.queue_delay.snapshot();
+        (s.count >= crate::obs::HIST_MIN_SAMPLES).then(|| Duration::from_nanos(s.quantile(0.99)))
+    }
+
+    /// The flight recorder, if enabled (PR 9).
+    #[inline]
+    pub(crate) fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
+    }
+
+    /// Pool-level histograms, if enabled (PR 9).
+    #[inline]
+    pub(crate) fn hists(&self) -> Option<&PoolHists> {
+        self.hists.as_ref()
+    }
+
+    /// Nanoseconds since the pool's observability epoch, clamped to
+    /// ≥ 1 so 0 can mean "never stamped" in span arrays (PR 9).
+    #[inline]
+    pub(crate) fn now_ns(&self) -> u64 {
+        (self.epoch.elapsed().as_nanos() as u64).max(1)
+    }
+
+    /// Records one flight event into `lane` if the recorder is on
+    /// (PR 9) — the no-recorder case is one branch.
+    #[inline]
+    pub(crate) fn record_flight(&self, lane: usize, kind: EventKind, a: u32, b: u64) {
+        if let Some(f) = &self.flight {
+            f.record(lane, kind, a, b);
+        }
+    }
+
+    /// Stashes an automatic flight dump taken on a run failure (PR 9);
+    /// retrieved via [`ThreadPool::last_flight_dump`].
+    pub(crate) fn stash_flight_dump(&self, dump: FlightDump) {
+        *self.last_dump.lock().unwrap() = Some(dump);
+    }
+
+    /// Clone of the stashed auto-dump, if any (PR 9).
+    pub(crate) fn take_last_flight_dump(&self) -> Option<FlightDump> {
+        self.last_dump.lock().unwrap().clone()
     }
 
     /// One random-start batched-steal sweep over the victim deques in
@@ -1209,6 +1382,7 @@ impl PoolInner {
             if victim == index {
                 continue;
             }
+            let mut moved = 0u64;
             let result = if self.steal_batch {
                 let (result, extra) = self.stealers[victim].steal_batch_and_pop_counted(local);
                 if extra > 0 {
@@ -1217,6 +1391,7 @@ impl PoolInner {
                     // counted as pushes; their eventual pops keep
                     // executed() covering every task exactly once.
                     m.on_push_n(extra as u64);
+                    moved = extra as u64;
                 }
                 result
             } else {
@@ -1225,10 +1400,12 @@ impl PoolInner {
             match result {
                 Steal::Success(job) => {
                     m.on_steal();
+                    self.record_flight(index, EventKind::Steal, victim as u32, moved);
                     return Some(job);
                 }
                 Steal::Retry => {
                     m.on_steal_failure();
+                    self.record_flight(index, EventKind::StealFail, victim as u32, 0);
                     *saw_retry = true;
                 }
                 Steal::Empty => {}
@@ -1638,6 +1815,11 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
                 let (job, saw_retry) = inner.find_task(index, &queue, &mut rng);
                 match job {
                     Some(job) => {
+                        if counted_park {
+                            // End of an idle spell: the park event's
+                            // counterpart (PR 9).
+                            inner.record_flight(index, EventKind::Wake, 0, 0);
+                        }
                         inner.run_job(index, job);
                         spins = 0;
                         counted_park = false;
@@ -1682,6 +1864,7 @@ fn worker_loop(inner: Arc<PoolInner>, index: usize, queue: Worker<RawTask>) {
         }
         if !counted_park {
             inner.metrics[index].on_park();
+            inner.record_flight(index, EventKind::Park, 0, 0);
             counted_park = true;
         }
         if flat {

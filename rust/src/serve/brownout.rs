@@ -36,7 +36,10 @@
 //! (~8 holds) after the queue is already empty.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::obs::{EventKind, FlightRecorder};
 
 /// Current degradation level, in shedding order. Levels are cumulative:
 /// `ShedOverQuota` implies `ShedLow`.
@@ -117,6 +120,12 @@ pub struct BrownoutController {
     /// Nanoseconds since `epoch` of the most recent over-threshold
     /// observation — the hold timer that gates decay.
     last_high_ns: AtomicU64,
+    /// Flight recorder to notify on level transitions (PR 9): every
+    /// escalation and decay emits a `Brownout` event (`a` = new level,
+    /// `b` = old), so a flight dump shows exactly when the service
+    /// started and stopped shedding relative to the scheduler events
+    /// around it. `None` when the pool's recorder is disabled.
+    flight: Option<Arc<FlightRecorder>>,
 }
 
 impl BrownoutController {
@@ -129,6 +138,22 @@ impl BrownoutController {
             high_streak: AtomicU32::new(0),
             level: AtomicU8::new(0),
             last_high_ns: AtomicU64::new(0),
+            flight: None,
+        }
+    }
+
+    /// Attaches the pool's flight recorder (PR 9) so level transitions
+    /// are recorded alongside the scheduler events. Called once at
+    /// service construction, before the controller is shared.
+    pub(crate) fn attach_flight(&mut self, flight: Option<Arc<FlightRecorder>>) {
+        self.flight = flight;
+    }
+
+    /// Emits a `Brownout` transition event on the external lane (gate
+    /// callers and `level()` probes are not pool workers).
+    fn record_transition(&self, new_level: u8, old_level: u8) {
+        if let Some(f) = &self.flight {
+            f.record_external(EventKind::Brownout, u32::from(new_level), u64::from(old_level));
         }
     }
 
@@ -163,11 +188,13 @@ impl BrownoutController {
             if streak >= self.cfg.enter_after.max(1) {
                 self.high_streak.store(0, Ordering::Relaxed);
                 // Escalate one level, saturating at ShedOverQuota.
-                let _ = self.level.fetch_update(
+                if let Ok(old) = self.level.fetch_update(
                     Ordering::Relaxed,
                     Ordering::Relaxed,
                     |l| if l < 2 { Some(l + 1) } else { None },
-                );
+                ) {
+                    self.record_transition(old + 1, old);
+                }
             }
         } else {
             self.high_streak.store(0, Ordering::Relaxed);
@@ -206,6 +233,7 @@ impl BrownoutController {
                         Ordering::Relaxed,
                         Ordering::Relaxed,
                     );
+                    self.record_transition(lvl - 1, lvl);
                     lvl -= 1;
                 }
                 Err(actual) => lvl = actual,

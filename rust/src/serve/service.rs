@@ -19,10 +19,13 @@
 //! 1. **Deadline feasibility** — a request is rejected with
 //!    [`GraphError::WouldMissDeadline`] before holding any slot when
 //!    its deadline has already passed (checked unconditionally, even
-//!    on a cold gate), or its remaining deadline is ≤ the pool-wide
-//!    queue-delay EWMA, or ≤ the *tenant's own* service-time EWMA
-//!    (PR 8 — a tenant whose graphs take 40 ms cannot make a 5 ms
-//!    deadline no matter how idle the gate is).
+//!    on a cold gate), or its remaining deadline is ≤ the gate-delay
+//!    estimate, or ≤ the *tenant's own* service estimate (PR 8 — a
+//!    tenant whose graphs take 40 ms cannot make a 5 ms deadline no
+//!    matter how idle the gate is). Both estimates are tail-aware
+//!    (PR 9): the p99 of the gate-wait / tenant-latency histograms
+//!    once they hold [`crate::obs::HIST_MIN_SAMPLES`] samples, the
+//!    corresponding EWMA during cold start.
 //! 2. **Brownout shedding** — at [`BrownoutLevel::ShedLow`] the gate
 //!    sheds Low-class tenants' queues; at
 //!    [`BrownoutLevel::ShedOverQuota`] also the queues of tenants
@@ -45,6 +48,7 @@ use crate::graph::{
     chaos_inject_launch_panic, chaos_inject_overload, GraphError, RunOptions, RunPriority,
     TaskGraph,
 };
+use crate::obs::{EventKind, Histogram, HistogramSnapshot, HIST_MIN_SAMPLES};
 use crate::pool::{TenantSnapshot, ThreadPool};
 use crate::util::XorShift64Star;
 
@@ -195,6 +199,13 @@ pub struct GraphService {
     gate_cv: Condvar,
     pub(crate) brownout: BrownoutController,
     budget: RetryBudget,
+    /// Gate-wait (enqueue → grant) latency histogram (PR 9): the
+    /// distribution behind the brownout EWMA. Once warm
+    /// ([`HIST_MIN_SAMPLES`]), its p99 replaces the EWMA in the pump's
+    /// deadline-feasibility check — a request's deadline competes with
+    /// the *tail* of the gate delay, not its mean. Exported on the
+    /// metrics listener and the STATS v2 frame.
+    gate_wait: Histogram,
 }
 
 impl GraphService {
@@ -202,7 +213,11 @@ impl GraphService {
     /// service ([`GraphService::pool`] lends it back for direct use —
     /// runs launched directly on the pool simply bypass the gate).
     pub fn new(pool: ThreadPool, cfg: ServiceConfig) -> Self {
-        let brownout = BrownoutController::new(cfg.brownout.clone());
+        let mut brownout = BrownoutController::new(cfg.brownout.clone());
+        // PR 9: brownout level transitions land in the pool's flight
+        // recorder, timestamped on the same epoch as the scheduler
+        // events they explain.
+        brownout.attach_flight(pool.flight_recorder());
         let budget = RetryBudget::new(&cfg.retry);
         Self {
             pool,
@@ -220,6 +235,7 @@ impl GraphService {
             gate_cv: Condvar::new(),
             brownout,
             budget,
+            gate_wait: Histogram::new(),
         }
     }
 
@@ -254,6 +270,33 @@ impl GraphService {
     /// recently admitted requests). Zero until the first grant.
     pub fn queue_delay_ewma(&self) -> Duration {
         self.brownout.ewma()
+    }
+
+    /// Snapshot of the gate-wait (enqueue → grant) latency histogram
+    /// (PR 9). Empty until the first grant.
+    pub fn gate_wait_histogram(&self) -> HistogramSnapshot {
+        self.gate_wait.snapshot()
+    }
+
+    /// Per-tenant grant→completion latency histograms, in registration
+    /// order as `(tenant name, snapshot)` (PR 9) — the distributions
+    /// behind [`TenantSnapshot::service_ewma_ns`], exported on the
+    /// metrics listener and the STATS v2 frame.
+    pub fn tenant_latency_histograms(&self) -> Vec<(String, HistogramSnapshot)> {
+        let st = self.gate.lock().unwrap();
+        st.tenants.iter().map(|t| (t.spec.name.clone(), t.latency.snapshot())).collect()
+    }
+
+    /// The gate-delay estimate the feasibility check compares
+    /// deadlines against: gate-wait p99 once the histogram is warm
+    /// ([`HIST_MIN_SAMPLES`] grants), the brownout EWMA during cold
+    /// start. Zero until the first grant.
+    pub fn gate_delay_estimate(&self) -> Duration {
+        if self.gate_wait.count() >= HIST_MIN_SAMPLES {
+            Duration::from_nanos(self.gate_wait.snapshot().quantile(0.99))
+        } else {
+            self.brownout.ewma()
+        }
     }
 
     /// Whole retry-budget tokens currently available. Diagnostics —
@@ -350,7 +393,18 @@ impl GraphService {
                 return Err(ServeError::RetriesExhausted { attempts: attempt, last: err });
             }
             state.retries.fetch_add(1, Ordering::Relaxed);
-            self.backoff_park(self.cfg.retry.backoff(attempt, rng.next_u64()));
+            let backoff = self.cfg.retry.backoff(attempt, rng.next_u64());
+            // PR 9: the retry decision is a scheduler event too — a
+            // flight dump of an overload episode shows who was backing
+            // off, for how long, between the admission verdicts.
+            if let Some(f) = self.pool.flight_recorder() {
+                f.record_external(
+                    EventKind::RetrySched,
+                    tenant.0 as u32,
+                    backoff.as_nanos() as u64,
+                );
+            }
+            self.backoff_park(backoff);
         }
     }
 
@@ -380,11 +434,14 @@ impl GraphService {
         let resolved = ticket.state.load(Ordering::Acquire);
         if resolved == GRANTED {
             // Grant latency is the service's queue-delay signal: it
-            // feeds both the brownout controller and the pool's
-            // EWMA-based `WouldMissDeadline` admission seam.
+            // feeds the brownout controller, the pool's
+            // `WouldMissDeadline` admission seam, and (PR 9) the
+            // gate-wait histogram whose p99 the pump's feasibility
+            // check reads once warm.
             let delay = ticket.enqueued.elapsed();
             self.brownout.observe(delay);
             self.pool.note_queue_delay(delay);
+            self.gate_wait.record(delay.as_nanos() as u64);
         }
         resolved
     }
@@ -410,12 +467,15 @@ impl GraphService {
         // High lanes (where it would delay every fast tenant's
         // critical work) and, when unpinned, is routed onto the pool's
         // last shard so its working set stops washing through every
-        // cache domain. Keyed off the live EWMA, so a tenant that
-        // speeds back up is restored automatically.
+        // cache domain. Keyed off the live service estimate — the
+        // tenant's latency-histogram p99 once warm (PR 9), its EWMA
+        // during cold start — so a tenant that speeds back up is
+        // restored automatically, and a tenant whose *tail* is slow
+        // is demoted even when its mean looks healthy.
         let mut class = spec.class;
         let mut shard = spec.shard;
         if let Some(limit) = self.cfg.demote_slow_after {
-            if class == RunPriority::High && state.service_ewma() > limit {
+            if class == RunPriority::High && state.service_estimate() > limit {
                 class = RunPriority::Normal;
                 if shard.is_none() {
                     shard = Some(self.pool.num_shards().saturating_sub(1));
@@ -456,7 +516,12 @@ impl GraphService {
     /// belong to other parked callers (PR 8 bugfix; see `await_grant`).
     fn pump(&self, st: &mut GateState) -> bool {
         let level = self.brownout.level();
-        let ewma = self.brownout.ewma();
+        // Tail-aware gate-delay estimate (PR 9): p99 of the gate-wait
+        // histogram once warm, the brownout EWMA during cold start. A
+        // deadline has to clear the tail of the gate delay, not its
+        // mean — the EWMA systematically under-rejected under bursty
+        // load.
+        let delay_est = self.gate_delay_estimate();
         let now = Instant::now();
         let mut resolved = false;
 
@@ -476,16 +541,18 @@ impl GraphService {
             // pre-PR 8 bug) let a cold gate grant expired requests,
             // which then burned a pool admission slot, failed with
             // `DeadlineExceeded`, and spun through retry backoff on a
-            // deadline that could never be met. A nonzero pool EWMA or
-            // per-tenant service EWMA (PR 8) additionally rejects
-            // deadlines that are nominally in the future but closer
-            // than the work could possibly finish.
-            let floor = t.service_ewma();
+            // deadline that could never be met. A nonzero gate-delay
+            // estimate (histogram p99 once warm, EWMA before — PR 9)
+            // or per-tenant service estimate (p99 of the tenant's
+            // latency histogram, its EWMA during cold start)
+            // additionally rejects deadlines that are nominally in the
+            // future but closer than the work could possibly finish.
+            let floor = t.service_estimate();
             queues[i].retain(|ticket| {
                 let infeasible = ticket.deadline_at.is_some_and(|at| {
                     let remaining = at.saturating_duration_since(now);
                     remaining.is_zero()
-                        || (!ewma.is_zero() && remaining <= ewma)
+                        || (!delay_est.is_zero() && remaining <= delay_est)
                         || (!floor.is_zero() && remaining <= floor)
                 });
                 if infeasible {

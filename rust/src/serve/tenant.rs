@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::graph::RunPriority;
+use crate::obs::{Histogram, HIST_MIN_SAMPLES};
 use crate::pool::TenantSnapshot;
 
 /// Opaque handle to a registered tenant, returned by
@@ -126,6 +127,14 @@ pub(crate) struct TenantState {
     /// Launches demoted off the tenant's declared class because its
     /// service EWMA exceeded [`crate::serve::ServiceConfig::demote_slow_after`].
     pub(crate) demotions: AtomicU64,
+    /// Per-tenant grant→completion latency histogram (PR 9): the
+    /// distribution behind `service_ewma_ns`. Once it holds
+    /// [`HIST_MIN_SAMPLES`] completions its p99 supersedes the EWMA in
+    /// the gate's feasibility check and the launch path's slow-tenant
+    /// demotion — a tail estimate, which is what those SLO decisions
+    /// actually compare against. Exported per tenant on the metrics
+    /// listener and the STATS v2 frame.
+    pub(crate) latency: Histogram,
 }
 
 impl TenantState {
@@ -142,22 +151,40 @@ impl TenantState {
             failed: AtomicU64::new(0),
             service_ewma_ns: AtomicU64::new(0),
             demotions: AtomicU64::new(0),
+            latency: Histogram::new(),
         }
     }
 
     /// Folds one grant→completion latency into the service-time EWMA
     /// (first sample seeds; stored value floors at 1 ns so "has
-    /// completed" is distinguishable from "never completed").
+    /// completed" is distinguishable from "never completed") and into
+    /// the tenant's latency histogram (PR 9).
     pub(crate) fn note_service_time(&self, took: Duration) {
         let sample = took.as_nanos() as u64;
         let cur = self.service_ewma_ns.load(Ordering::Relaxed);
         let next = if cur == 0 { sample } else { cur - cur / 8 + sample / 8 };
         self.service_ewma_ns.store(next.max(1), Ordering::Relaxed);
+        self.latency.record(sample);
     }
 
     /// Current service-time EWMA (zero until the first completion).
     pub(crate) fn service_ewma(&self) -> Duration {
         Duration::from_nanos(self.service_ewma_ns.load(Ordering::Relaxed))
+    }
+
+    /// The tenant's tail (p99) service time once the latency histogram
+    /// is warm ([`HIST_MIN_SAMPLES`] completions); `None` during cold
+    /// start, when callers should fall back to [`TenantState::service_ewma`].
+    pub(crate) fn service_p99(&self) -> Option<Duration> {
+        (self.latency.count() >= HIST_MIN_SAMPLES)
+            .then(|| Duration::from_nanos(self.latency.snapshot().quantile(0.99)))
+    }
+
+    /// The tail-aware service estimate the SLO checks compare against:
+    /// histogram p99 when warm, EWMA otherwise (zero until the first
+    /// completion).
+    pub(crate) fn service_estimate(&self) -> Duration {
+        self.service_p99().unwrap_or_else(|| self.service_ewma())
     }
 
     pub(crate) fn snapshot(&self, id: usize) -> TenantSnapshot {

@@ -14,10 +14,12 @@
 //! payload. Request payloads:
 //!
 //! ```text
-//! RUN:   u8 version=1 | u8 kind=1 | u16 token_len | token bytes
-//!        | u16 template_len | template bytes | u64 deadline_micros
-//!        (deadline_micros = 0 means "tenant default")
-//! STATS: u8 version=1 | u8 kind=2
+//! RUN:    u8 version=1 | u8 kind=1 | u16 token_len | token bytes
+//!         | u16 template_len | template bytes | u64 deadline_micros
+//!         (deadline_micros = 0 means "tenant default")
+//! STATS:  u8 version=1 | u8 kind=2
+//! DUMP:   u8 version=1 | u8 kind=3
+//! STATS2: u8 version=1 | u8 kind=4
 //! ```
 //!
 //! Response payloads:
@@ -26,28 +28,36 @@
 //! u8 version=1 | u8 status (WireStatus) | u16 msg_len | msg bytes
 //! ```
 //!
-//! For `RUN`, `msg` carries the error description (empty on OK); for
-//! `STATS`, `msg` carries the same plaintext counter dump the metrics
-//! listener serves. Graphs are named, not shipped: a request names a
-//! **pre-registered template**, and each connection keeps one built
-//! [`TaskGraph`] instance per template, so a client issuing the same
-//! template repeatedly gets the sealed zero-alloc re-run path
-//! end-to-end — the wire adds a frame parse and one syscall pair, not
-//! a graph rebuild.
+//! For `RUN`, `msg` carries the error description (empty on OK). For
+//! `STATS`, `msg` carries the Prometheus text exposition the metrics
+//! listener serves (PR 9 — previously a bare `name value` dump; the
+//! sample lines are unchanged, the exposition adds `# HELP`/`# TYPE`
+//! headers and histogram families). `DUMP` returns the pool's flight
+//! recorder as Chrome-trace JSON — when the full trace exceeds the
+//! frame cap, the *oldest* events are halved away until it fits (the
+//! drop is accounted in the trace's `overwritten` field). `STATS2`
+//! returns the same exposition as `STATS` plus p50/p90/p99 summary
+//! gauges derived from the histograms. Graphs are named, not shipped:
+//! a request names a **pre-registered template**, and each connection
+//! keeps one built [`TaskGraph`] instance per template, so a client
+//! issuing the same template repeatedly gets the sealed zero-alloc
+//! re-run path end-to-end — the wire adds a frame parse and one
+//! syscall pair, not a graph rebuild.
 //!
 //! An optional second listener answers any HTTP request with a
-//! `text/plain` counter dump (tenant lifecycle counters including the
-//! PR 8 `service_ewma_ns` / `demotions`, brownout level and
-//! queue-delay EWMA, retry tokens, and total observed-rank
-//! recomputations) — enough for a scrape target without an HTTP
-//! dependency.
+//! `text/plain` Prometheus exposition (tenant lifecycle counters
+//! including the PR 8 `service_ewma_ns` / `demotions`, brownout level
+//! and queue-delay EWMA, retry tokens, total observed-rank
+//! recomputations, and the PR 9 latency histograms) — a real scrape
+//! target without an HTTP dependency. Both the HTTP body and the
+//! STATS/STATS2 frames pass [`crate::obs::validate`]; CI enforces
+//! this cross-process.
 //!
 //! The `graph_serve` binary (`rust/src/bin/graph_serve.rs`) wraps this
 //! module into a standalone server + client CLI; `benches/serving.rs`
 //! `WIRE=1` mode and the CI smoke step drive it cross-process.
 
 use std::collections::HashMap;
-use std::fmt::Write as _;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -56,6 +66,8 @@ use std::thread;
 use std::time::Duration;
 
 use crate::graph::TaskGraph;
+use crate::obs::{HistogramSnapshot, PromWriter};
+use crate::pool::TenantSnapshot;
 
 use super::brownout::BrownoutLevel;
 use super::service::{GraphService, ServeError};
@@ -71,6 +83,8 @@ pub const WIRE_VERSION: u8 = 1;
 
 const KIND_RUN: u8 = 1;
 const KIND_STATS: u8 = 2;
+const KIND_DUMP: u8 = 3;
+const KIND_STATS2: u8 = 4;
 
 /// Poll granularity for server-side reads: blocked reads wake this
 /// often to check the stop flag, so [`WireHandle::stop`] never hangs
@@ -304,6 +318,8 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
         let (status, msg) = match decode_request(&payload) {
             None => (WireStatus::BadFrame, "malformed request frame".to_string()),
             Some(WireRequest::Stats) => (WireStatus::Ok, render_metrics(shared)),
+            Some(WireRequest::StatsV2) => (WireStatus::Ok, render_stats_v2(shared)),
+            Some(WireRequest::Dump) => render_dump(shared),
             Some(WireRequest::Run { token, template, deadline_micros }) => {
                 serve_run(shared, &mut instances, &token, &template, deadline_micros)
             }
@@ -351,36 +367,208 @@ fn serve_run(
     }
 }
 
-/// Renders the plaintext counter dump served by both the `STATS` frame
-/// kind and the HTTP metrics listener.
+/// One labelled sample per tenant, borrowing the label arrays built in
+/// [`render_metrics`] (the writer wants `&[(&[(k, v)], value)]`).
+fn tenant_series<'a>(
+    snaps: &'a [TenantSnapshot],
+    labels: &'a [[(&'a str, &'a str); 1]],
+    pick: impl Fn(&TenantSnapshot) -> u64,
+) -> Vec<(&'a [(&'a str, &'a str)], u64)> {
+    snaps.iter().zip(labels.iter()).map(|(t, l)| (l.as_slice(), pick(t))).collect()
+}
+
+/// Renders the Prometheus text exposition served by the `STATS` frame
+/// kind and the HTTP metrics listener (PR 9). Sample lines keep the
+/// exact names and label shapes of the PR 8 plaintext dump (so
+/// `tenant_completed{tenant="gold"} 3`-style greps keep working), with
+/// `# HELP`/`# TYPE` headers and histogram families layered on top.
 fn render_metrics(shared: &Shared) -> String {
     let svc = &shared.svc;
-    let mut out = String::new();
-    let _ = writeln!(out, "pool_threads {}", svc.pool().num_threads());
-    let _ = writeln!(out, "pool_shards {}", svc.pool().num_shards());
+    let mut w = PromWriter::new();
+    w.gauge("pool_threads", "Worker threads in the pool.", svc.pool().num_threads() as u64);
+    w.gauge("pool_shards", "Worker shards (locality groups).", svc.pool().num_shards() as u64);
     let level = match svc.brownout_level() {
         BrownoutLevel::Normal => 0,
         BrownoutLevel::ShedLow => 1,
         BrownoutLevel::ShedOverQuota => 2,
     };
-    let _ = writeln!(out, "brownout_level {level}");
-    let _ = writeln!(out, "queue_delay_ewma_ns {}", svc.queue_delay_ewma().as_nanos());
-    let _ = writeln!(out, "retry_tokens {}", svc.retry_tokens());
-    let _ = writeln!(out, "graph_reranks_total {}", shared.reranks.load(Ordering::Relaxed));
-    for t in svc.tenant_snapshots() {
-        let n = &t.name;
-        let _ = writeln!(out, "tenant_inflight{{tenant=\"{n}\"}} {}", t.inflight);
-        let _ = writeln!(out, "tenant_submitted{{tenant=\"{n}\"}} {}", t.submitted);
-        let _ = writeln!(out, "tenant_completed{{tenant=\"{n}\"}} {}", t.completed);
-        let _ = writeln!(out, "tenant_retries{{tenant=\"{n}\"}} {}", t.retries);
-        let _ = writeln!(out, "tenant_shed_low{{tenant=\"{n}\"}} {}", t.shed_low);
-        let _ = writeln!(out, "tenant_shed_over_quota{{tenant=\"{n}\"}} {}", t.shed_over_quota);
-        let _ = writeln!(out, "tenant_shed_deadline{{tenant=\"{n}\"}} {}", t.shed_deadline);
-        let _ = writeln!(out, "tenant_failed{{tenant=\"{n}\"}} {}", t.failed);
-        let _ = writeln!(out, "tenant_service_ewma_ns{{tenant=\"{n}\"}} {}", t.service_ewma_ns);
-        let _ = writeln!(out, "tenant_demotions{{tenant=\"{n}\"}} {}", t.demotions);
+    w.gauge("brownout_level", "Brownout escalation level (0 = normal).", level);
+    w.gauge(
+        "queue_delay_ewma_ns",
+        "Pool dispatch queue-delay EWMA in nanoseconds.",
+        svc.queue_delay_ewma().as_nanos() as u64,
+    );
+    w.gauge("retry_tokens", "Retry-budget tokens currently available.", svc.retry_tokens() as u64);
+    w.counter(
+        "graph_reranks_total",
+        "Observed-rank recomputations across wire template instances.",
+        shared.reranks.load(Ordering::Relaxed),
+    );
+
+    let snaps = svc.tenant_snapshots();
+    if !snaps.is_empty() {
+        let labels: Vec<[(&str, &str); 1]> =
+            snaps.iter().map(|t| [("tenant", t.name.as_str())]).collect();
+        w.gauge_labeled(
+            "tenant_inflight",
+            "Runs granted and not yet completed.",
+            &tenant_series(&snaps, &labels, |t| t.inflight as u64),
+        );
+        w.counter_labeled(
+            "tenant_submitted",
+            "Requests submitted.",
+            &tenant_series(&snaps, &labels, |t| t.submitted),
+        );
+        w.counter_labeled(
+            "tenant_completed",
+            "Requests completed successfully.",
+            &tenant_series(&snaps, &labels, |t| t.completed),
+        );
+        w.counter_labeled(
+            "tenant_retries",
+            "Retry attempts.",
+            &tenant_series(&snaps, &labels, |t| t.retries),
+        );
+        w.counter_labeled(
+            "tenant_shed_low",
+            "Requests shed by brownout Low-class policy.",
+            &tenant_series(&snaps, &labels, |t| t.shed_low),
+        );
+        w.counter_labeled(
+            "tenant_shed_over_quota",
+            "Requests shed over the per-tenant inflight cap.",
+            &tenant_series(&snaps, &labels, |t| t.shed_over_quota),
+        );
+        w.counter_labeled(
+            "tenant_shed_deadline",
+            "Requests shed as deadline-infeasible.",
+            &tenant_series(&snaps, &labels, |t| t.shed_deadline),
+        );
+        w.counter_labeled(
+            "tenant_failed",
+            "Requests failed permanently.",
+            &tenant_series(&snaps, &labels, |t| t.failed),
+        );
+        w.gauge_labeled(
+            "tenant_service_ewma_ns",
+            "Grant-to-completion service-time EWMA in nanoseconds.",
+            &tenant_series(&snaps, &labels, |t| t.service_ewma_ns),
+        );
+        w.counter_labeled(
+            "tenant_demotions",
+            "Launches demoted off the tenant's declared class.",
+            &tenant_series(&snaps, &labels, |t| t.demotions),
+        );
     }
+
+    w.histogram(
+        "service_gate_wait_ns",
+        "Admission-gate wait (request arrival to dispatch grant).",
+        &[],
+        &svc.gate_wait_histogram(),
+    );
+    if let Some(h) = svc.pool().queue_delay_histogram() {
+        w.histogram("pool_queue_delay_ns", "Pool dispatch queue delay.", &[], &h);
+    }
+    if let Some(h) = svc.pool().node_duration_histogram() {
+        w.histogram("pool_node_duration_ns", "Graph node execution duration.", &[], &h);
+    }
+    for (i, (name, snap)) in svc.tenant_latency_histograms().iter().enumerate() {
+        if i == 0 {
+            w.histogram(
+                "tenant_latency_ns",
+                "Per-tenant grant-to-completion latency.",
+                &[("tenant", name.as_str())],
+                snap,
+            );
+        } else {
+            w.histogram_samples("tenant_latency_ns", &[("tenant", name.as_str())], snap);
+        }
+    }
+    w.finish()
+}
+
+/// Appends a `{q="..."}`-labelled gauge family of p50/p90/p99 bucket
+/// upper bounds for one histogram (the STATS v2 summary lines).
+fn push_quantiles(w: &mut PromWriter, name: &str, help: &str, snap: &HistogramSnapshot) {
+    w.gauge_labeled(
+        name,
+        help,
+        &[
+            (&[("q", "0.5")][..], snap.quantile(0.5)),
+            (&[("q", "0.9")][..], snap.quantile(0.9)),
+            (&[("q", "0.99")][..], snap.quantile(0.99)),
+        ],
+    );
+}
+
+/// Renders the `STATS2` frame body: the full exposition plus summary
+/// quantile gauges (conservative bucket upper bounds, see
+/// [`crate::obs::HistogramSnapshot::quantile`]) so a client gets tail
+/// numbers without re-deriving them from buckets.
+fn render_stats_v2(shared: &Shared) -> String {
+    let svc = &shared.svc;
+    let mut w = PromWriter::new();
+    push_quantiles(
+        &mut w,
+        "service_gate_wait_ns_quantile",
+        "Gate-wait quantiles in nanoseconds.",
+        &svc.gate_wait_histogram(),
+    );
+    if let Some(h) = svc.pool().queue_delay_histogram() {
+        push_quantiles(
+            &mut w,
+            "pool_queue_delay_ns_quantile",
+            "Queue-delay quantiles in nanoseconds.",
+            &h,
+        );
+    }
+    if let Some(h) = svc.pool().node_duration_histogram() {
+        push_quantiles(
+            &mut w,
+            "pool_node_duration_ns_quantile",
+            "Node-duration quantiles in nanoseconds.",
+            &h,
+        );
+    }
+    let tenant_hists = svc.tenant_latency_histograms();
+    if !tenant_hists.is_empty() {
+        let mut rows: Vec<([(&str, &str); 2], u64)> = Vec::new();
+        for (name, snap) in &tenant_hists {
+            for &(label, q) in &[("0.5", 0.5f64), ("0.9", 0.9), ("0.99", 0.99)] {
+                rows.push(([("tenant", name.as_str()), ("q", label)], snap.quantile(q)));
+            }
+        }
+        let samples: Vec<(&[(&str, &str)], u64)> =
+            rows.iter().map(|(l, v)| (l.as_slice(), *v)).collect();
+        w.gauge_labeled(
+            "tenant_latency_ns_quantile",
+            "Per-tenant latency quantiles in nanoseconds.",
+            &samples,
+        );
+    }
+    let mut out = render_metrics(shared);
+    out.push_str(&w.finish());
     out
+}
+
+/// Renders the `DUMP` frame body: the flight recorder as Chrome-trace
+/// JSON. When the full trace does not fit in one frame, the oldest
+/// half of the events is dropped (repeatedly) and accounted as
+/// `overwritten` — the newest events are the ones a failure
+/// investigation wants.
+fn render_dump(shared: &Shared) -> (WireStatus, String) {
+    let Some(mut dump) = shared.svc.pool().flight_dump() else {
+        return (WireStatus::Failed, "flight recorder disabled on this pool".to_string());
+    };
+    let mut json = dump.to_chrome_trace();
+    while json.len() > MAX_FRAME - 4 && !dump.events.is_empty() {
+        let drop_n = (dump.events.len() / 2).max(1);
+        dump.events.drain(..drop_n);
+        dump.overwritten += drop_n as u64;
+        json = dump.to_chrome_trace();
+    }
+    (WireStatus::Ok, json)
 }
 
 // --- framing ------------------------------------------------------------
@@ -441,6 +629,8 @@ fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> io::Result<()> {
 pub(crate) enum WireRequest {
     Run { token: String, template: String, deadline_micros: u64 },
     Stats,
+    Dump,
+    StatsV2,
 }
 
 struct Cur<'a> {
@@ -496,6 +686,14 @@ pub(crate) fn encode_stats() -> Vec<u8> {
     vec![WIRE_VERSION, KIND_STATS]
 }
 
+pub(crate) fn encode_dump() -> Vec<u8> {
+    vec![WIRE_VERSION, KIND_DUMP]
+}
+
+pub(crate) fn encode_stats_v2() -> Vec<u8> {
+    vec![WIRE_VERSION, KIND_STATS2]
+}
+
 pub(crate) fn decode_request(payload: &[u8]) -> Option<WireRequest> {
     let mut c = Cur { b: payload, p: 0 };
     if c.u8()? != WIRE_VERSION {
@@ -509,6 +707,8 @@ pub(crate) fn decode_request(payload: &[u8]) -> Option<WireRequest> {
             c.done().then_some(WireRequest::Run { token, template, deadline_micros })
         }
         KIND_STATS => c.done().then_some(WireRequest::Stats),
+        KIND_DUMP => c.done().then_some(WireRequest::Dump),
+        KIND_STATS2 => c.done().then_some(WireRequest::StatsV2),
         _ => None,
     }
 }
@@ -572,11 +772,32 @@ impl WireClient {
         self.round_trip(&encode_run(token, template, micros))
     }
 
-    /// Fetches the plaintext counter dump over the frame protocol.
+    /// Fetches the Prometheus exposition over the frame protocol.
     pub fn scrape(&mut self) -> io::Result<String> {
         let (status, body) = self.round_trip(&encode_stats())?;
         if status != WireStatus::Ok {
             return Err(io::Error::new(io::ErrorKind::InvalidData, format!("stats: {status:?}")));
+        }
+        Ok(body)
+    }
+
+    /// Fetches the exposition plus p50/p90/p99 summary gauges (the
+    /// `STATS2` frame kind, PR 9).
+    pub fn scrape_v2(&mut self) -> io::Result<String> {
+        let (status, body) = self.round_trip(&encode_stats_v2())?;
+        if status != WireStatus::Ok {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, format!("stats2: {status:?}")));
+        }
+        Ok(body)
+    }
+
+    /// Fetches the server pool's flight recorder as Chrome-trace JSON
+    /// (the `DUMP` frame kind, PR 9). Fails if the server pool was
+    /// built with [`crate::pool::PoolConfig::flight_recorder`] off.
+    pub fn dump(&mut self) -> io::Result<String> {
+        let (status, body) = self.round_trip(&encode_dump())?;
+        if status != WireStatus::Ok {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, format!("dump: {body}")));
         }
         Ok(body)
     }
@@ -614,6 +835,8 @@ mod tests {
             _ => panic!("RUN did not decode"),
         }
         assert!(matches!(decode_request(&encode_stats()), Some(WireRequest::Stats)));
+        assert!(matches!(decode_request(&encode_dump()), Some(WireRequest::Dump)));
+        assert!(matches!(decode_request(&encode_stats_v2()), Some(WireRequest::StatsV2)));
 
         let resp = encode_response(WireStatus::Shed, "brownout");
         assert_eq!(decode_response(&resp), Some((WireStatus::Shed, "brownout".to_string())));
@@ -651,6 +874,7 @@ mod tests {
         let stats = c.scrape().unwrap();
         assert!(stats.contains("tenant_completed{tenant=\"gold\"} 3"), "{stats}");
         assert!(stats.contains("graph_reranks_total "), "{stats}");
+        crate::obs::validate(&stats).expect("STATS body must be a valid exposition");
         drop(c);
 
         // Oversized length prefix: server answers BadFrame, then closes.
@@ -685,7 +909,39 @@ mod tests {
         assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "{body}");
         assert!(body.contains("pool_threads "), "{body}");
         assert!(body.contains("tenant_completed{tenant=\"gold\"} 1"), "{body}");
+        let text = body.split("\r\n\r\n").nth(1).expect("HTTP body after headers");
+        crate::obs::validate(text).expect("HTTP scrape must be a valid exposition");
         drop(s);
+        handle.stop();
+    }
+
+    #[test]
+    fn dump_and_stats_v2_frames() {
+        let svc = Arc::new(GraphService::new(ThreadPool::new(2), ServiceConfig::default()));
+        let gold = svc.register_tenant(TenantSpec::new("gold"));
+        let handle = WireServer::new(svc.clone())
+            .tenant("gold", gold)
+            .template("d", || Dag::diamond_chain(2).to_task_graph(64).0)
+            .serve("127.0.0.1:0")
+            .unwrap();
+        let mut c = WireClient::connect(handle.frame_addr()).unwrap();
+        for _ in 0..2 {
+            let (status, msg) = c.run("gold", "d", None).unwrap();
+            assert_eq!(status, WireStatus::Ok, "{msg}");
+        }
+
+        let json = c.dump().unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.len() <= MAX_FRAME - 4, "dump must fit one frame");
+        assert!(json.contains("\"cat\":\"task\""), "dump should contain task spans: {json}");
+        assert!(json.contains("\"overwritten\""), "{json}");
+
+        let v2 = c.scrape_v2().unwrap();
+        crate::obs::validate(&v2).expect("STATS v2 must be a valid exposition");
+        assert!(v2.contains("tenant_completed{tenant=\"gold\"} 2"), "{v2}");
+        assert!(v2.contains("tenant_latency_ns_quantile{tenant=\"gold\",q=\"0.99\"}"), "{v2}");
+        assert!(v2.contains("service_gate_wait_ns_quantile{q=\"0.5\"}"), "{v2}");
+        drop(c);
         handle.stop();
     }
 }

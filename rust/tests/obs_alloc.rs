@@ -1,0 +1,130 @@
+//! Zero-allocation guarantee for the observability record paths
+//! (PR 9 acceptance criterion).
+//!
+//! The flight recorder and the histograms are **on by default**
+//! ([`scheduling::pool::PoolConfig`]), so they live inside the PR 2
+//! zero-alloc envelope: a sealed graph's steady-state re-runs — which
+//! now record TaskStart/TaskEnd flight events, node-duration and
+//! queue-delay histogram samples, and per-node span timestamps for
+//! [`scheduling::graph::TaskGraph::last_profile`] — must still perform
+//! zero heap allocations. The direct record paths
+//! ([`scheduling::obs::Histogram::record`],
+//! [`scheduling::obs::FlightRecorder::record`]) are additionally
+//! measured in isolation, including ring wrap-around (overwrite must
+//! not allocate either).
+//!
+//! Like `graph_alloc.rs`, this binary installs a counting global
+//! allocator and therefore contains exactly ONE test: concurrent
+//! neighbouring tests would pollute the process-wide counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use scheduling::obs::{EventKind, FlightRecorder, Histogram};
+use scheduling::pool::ThreadPool;
+use scheduling::workloads::Dag;
+
+/// Counts every allocation (alloc / alloc_zeroed / realloc) made by
+/// the process; frees are not interesting here.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+#[test]
+#[cfg_attr(miri, ignore = "allocation counting is not meaningful under Miri")]
+fn observability_record_paths_do_not_allocate() {
+    // --- direct histogram record path, in isolation ------------------
+    let h = Histogram::new();
+    h.record(1); // pre-touch
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for v in 0..10_000u64 {
+        h.record(v.wrapping_mul(2654435761));
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(allocs, 0, "Histogram::record must not allocate (saw {allocs})");
+    assert_eq!(h.count(), 10_001);
+
+    // --- direct flight record path, including ring wrap --------------
+    // Capacity 64 with 10k records per lane forces >150 overwrite
+    // cycles: the overwrite path is the same two stores as the fresh
+    // path, so it must be just as silent.
+    let f = FlightRecorder::new(2, 64, Instant::now());
+    f.record(0, EventKind::Park, 0, 0); // pre-touch
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for i in 0..10_000u64 {
+        f.record((i % 3) as usize, EventKind::Steal, i as u32, i);
+        f.record_external(EventKind::Wake, i as u32, i);
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(allocs, 0, "FlightRecorder::record must not allocate (saw {allocs})");
+    let dump = f.dump();
+    assert_eq!(dump.recorded, 20_001);
+    assert!(dump.overwritten > 0, "premise: the ring must actually have wrapped");
+
+    // --- the full default-config pool path ---------------------------
+    // ThreadPool::new uses the default PoolConfig: flight recorder AND
+    // histograms on. Sealed re-runs record flight events, histogram
+    // samples, and profile spans on every node — and must still be
+    // allocation-free in the steady state (all sinks are preallocated
+    // atomics).
+    let pool = ThreadPool::new(2);
+    let (mut g, counter) = Dag::diamond_chain(16).to_task_graph(0);
+    assert!(g.is_sealed());
+    for _ in 0..5 {
+        g.run(&pool).unwrap();
+    }
+    pool.wait_idle();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        g.run(&pool).unwrap();
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        allocs, 0,
+        "sealed re-runs with observability ON must not allocate (saw {allocs} in 10 runs)"
+    );
+    assert_eq!(counter.load(Ordering::Relaxed), 15 * 64, "node executions");
+
+    // The observability sinks did observe those runs.
+    assert!(
+        pool.node_duration_histogram().is_some_and(|s| s.count >= 15 * 64),
+        "node-duration histogram must hold one sample per executed node"
+    );
+    let dump = pool.flight_dump().expect("default config has the recorder on");
+    assert!(
+        dump.of_kind(EventKind::TaskStart).next().is_some()
+            && dump.of_kind(EventKind::TaskEnd).next().is_some(),
+        "flight dump must contain task start/end events"
+    );
+    assert!(g.last_profile().is_some(), "a timed run must yield a profile");
+
+    // Sanity: the machinery is actually counting.
+    let before = ALLOCS.load(Ordering::SeqCst);
+    drop(std::hint::black_box(Box::new([0u8; 64])));
+    assert!(ALLOCS.load(Ordering::SeqCst) > before, "allocator counter is wired up");
+}

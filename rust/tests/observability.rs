@@ -1,0 +1,216 @@
+//! Observability tier (PR 9) — end-to-end behaviour of the flight
+//! recorder, the pool histograms, and run profiles on real runs:
+//!
+//! * `RunHandle::profile()` / `TaskGraph::last_profile()` report
+//!   internally-consistent numbers (busy ≤ workers × makespan, the
+//!   observed critical path fits inside the makespan, per-worker busy
+//!   sums to total busy);
+//! * the flight recorder captures task start/end pairs for every
+//!   executed node plus park/wake scheduler events, and converts to
+//!   Chrome-trace JSON (with flow arrows when edges are supplied);
+//! * failed runs (`NodePanicked`, `DeadlineExceeded`) stash an
+//!   automatic dump on the pool and, with `FLIGHT_DUMP_DIR` set, write
+//!   a Chrome-trace file — the CI chaos job's failure artifact;
+//! * `PoolConfig { flight_recorder: false, histograms: false }`
+//!   disables every accessor without disturbing runs — the ABL-9
+//!   comparison configuration;
+//! * the histograms feeding the tail-aware SLO checks accumulate one
+//!   node-duration sample per executed node.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use scheduling::graph::{GraphError, RunOptions, TaskGraph};
+use scheduling::obs::{EventKind, HIST_MIN_SAMPLES};
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::workloads::Dag;
+
+/// Two-node chain whose head spins until `gate` opens (same idiom as
+/// `graph_cancel.rs`) — a deterministic "run in flight" window.
+fn gated_chain() -> (TaskGraph, Arc<AtomicBool>) {
+    let gate = Arc::new(AtomicBool::new(false));
+    let mut g = TaskGraph::new();
+    let ga = gate.clone();
+    let head = g.add(move || {
+        while !ga.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+    });
+    let tail = g.add(|| {});
+    g.precede(head, &[tail]);
+    (g, gate)
+}
+
+#[test]
+fn run_profile_numbers_are_internally_consistent() {
+    let pool = ThreadPool::new(2);
+    // Non-trivial per-node work so spans are comfortably measurable.
+    let (mut g, counter) = Dag::diamond_chain(8).to_task_graph(2048);
+    let nodes = 32; // diamond_chain(k) builds 4k nodes
+
+    assert!(g.last_profile().is_none(), "no profile before the first run");
+    g.run(&pool).unwrap();
+    assert_eq!(counter.load(Ordering::Relaxed), nodes);
+
+    let p = g.last_profile().expect("a timed run must yield a profile");
+    assert_eq!(p.nodes, nodes, "every node executed and was timed");
+    assert_eq!(p.workers, 2);
+    assert!(p.makespan > Duration::ZERO);
+    assert!(p.busy > Duration::ZERO);
+    // busy + idle account exactly for workers × makespan.
+    assert!(p.busy <= p.makespan * (p.workers as u32 + 1), "busy bounded by worker-time");
+    // Efficiency is busy ÷ (workers × makespan); the caller-assist
+    // helper lane can push it slightly past 1.0, never past
+    // (workers + 1) / workers.
+    assert!(p.scheduling_efficiency > 0.0);
+    assert!(p.scheduling_efficiency <= (p.workers as f64 + 1.0) / p.workers as f64);
+    // The observed critical path is a chain of sequentially-executed
+    // spans, so it fits inside the run window.
+    assert!(p.critical_path > Duration::ZERO);
+    assert!(p.critical_path <= p.makespan, "critical path exceeds makespan");
+    assert!(!p.critical_path_nodes.is_empty() && p.critical_path_nodes.len() <= nodes);
+    assert!(p.declared_critical_rank > 0, "sealed ranks back the declared estimate");
+    // Per-lane busy (workers + the caller-assist helper lane) sums to
+    // the total.
+    assert_eq!(p.per_worker_busy.len(), p.workers + 1);
+    let lane_sum: Duration = p.per_worker_busy.iter().sum();
+    assert_eq!(lane_sum, p.busy, "per-worker busy must sum to total busy");
+
+    // The async surface: profile through the handle once finished.
+    let mut h = g.run_async(&pool).unwrap();
+    loop {
+        if let Some(r) = h.try_wait() {
+            r.unwrap();
+            break;
+        }
+        std::thread::yield_now();
+    }
+    let hp = h.profile().expect("finished handle must expose the run's profile");
+    assert_eq!(hp.nodes, nodes);
+    drop(h);
+    // The profile also lands on the graph once the handle is gone.
+    assert_eq!(g.last_profile().unwrap().nodes, nodes);
+}
+
+#[test]
+fn flight_recorder_captures_runs_and_renders_chrome_trace() {
+    let pool = ThreadPool::new(2);
+    let n = 16;
+    let (mut g, _) = Dag::linear_chain(n).to_task_graph(512);
+    for _ in 0..3 {
+        g.run(&pool).unwrap();
+    }
+    pool.wait_idle();
+    // Give the workers a moment to run out of spin rounds and park, so
+    // the dump demonstrably holds scheduler events, not just tasks.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let dump = pool.flight_dump().expect("flight recorder is on by default");
+    assert!(dump.recorded > 0);
+    let starts = dump.of_kind(EventKind::TaskStart).count();
+    let ends = dump.of_kind(EventKind::TaskEnd).count();
+    assert!(starts >= 3 * n, "one TaskStart per executed node (saw {starts})");
+    assert!(ends >= 3 * n, "one TaskEnd per executed node (saw {ends})");
+    assert!(
+        dump.of_kind(EventKind::Park).next().is_some(),
+        "idle workers must have recorded Park events"
+    );
+    assert!(dump.events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "dump is time-sorted");
+
+    let trace = dump.to_chrome_trace();
+    assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+    assert!(trace.contains("\"cat\":\"task\""), "task spans must render as ph:X events");
+    assert!(trace.contains("\"overwritten\""), "loss accounting must be in otherData");
+
+    // Flow arrows appear only when edges are supplied and both
+    // endpoints completed in the same generation.
+    let with_edges = dump.to_chrome_trace_with_edges(&[(0, 1), (1, 2)]);
+    assert!(with_edges.contains("\"ph\":\"s\""), "edge flow-start events");
+    assert!(with_edges.contains("\"ph\":\"f\""), "edge flow-finish events");
+    assert!(!trace.contains("\"ph\":\"s\""), "no arrows without edges");
+}
+
+#[test]
+fn failed_runs_stash_an_automatic_dump() {
+    let dump_dir = std::env::temp_dir().join(format!("flight-dumps-{}", std::process::id()));
+    std::fs::create_dir_all(&dump_dir).unwrap();
+    std::env::set_var("FLIGHT_DUMP_DIR", &dump_dir);
+
+    let pool = ThreadPool::new(2);
+    assert!(pool.last_flight_dump().is_none(), "no auto dump before any failure");
+
+    // Panic path.
+    let mut g = TaskGraph::new();
+    let a = g.add(|| {});
+    let b = g.add(|| panic!("observability test panic"));
+    g.precede(a, &[b]);
+    g.seal().unwrap();
+    assert!(matches!(g.run(&pool), Err(GraphError::NodePanicked { .. })));
+    let dump = pool.last_flight_dump().expect("panic must stash a flight dump");
+    assert!(dump.of_kind(EventKind::Abort).next().is_some(), "the abort is on the record");
+    assert!(pool.last_flight_dump().is_none(), "the stash is take-once");
+
+    // Deadline path.
+    let (mut gated, gate) = gated_chain();
+    let h = gated
+        .run_async_with_options(&pool, RunOptions::new().deadline(Duration::from_millis(15)))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    gate.store(true, Ordering::SeqCst);
+    assert!(matches!(h.wait(), Err(GraphError::DeadlineExceeded)));
+    assert!(
+        pool.last_flight_dump().is_some(),
+        "an exceeded deadline must stash a flight dump"
+    );
+
+    // Both failures also wrote Chrome-trace files for the CI artifact.
+    std::env::remove_var("FLIGHT_DUMP_DIR");
+    let files: Vec<_> = std::fs::read_dir(&dump_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().starts_with("flight-"))
+        .collect();
+    assert!(!files.is_empty(), "FLIGHT_DUMP_DIR must receive trace files");
+    let body = std::fs::read_to_string(files[0].path()).unwrap();
+    assert!(body.starts_with("{\"traceEvents\":["), "dump files are Chrome traces");
+    let _ = std::fs::remove_dir_all(&dump_dir);
+}
+
+#[test]
+fn disabling_observability_disables_accessors_not_runs() {
+    let pool = ThreadPool::with_config(PoolConfig {
+        num_threads: 2,
+        flight_recorder: false,
+        histograms: false,
+        ..PoolConfig::default()
+    });
+    assert!(pool.flight_dump().is_none());
+    assert!(pool.flight_recorder().is_none());
+    assert!(pool.queue_delay_histogram().is_none());
+    assert!(pool.node_duration_histogram().is_none());
+
+    let (mut g, counter) = Dag::diamond_chain(4).to_task_graph(64);
+    for _ in 0..3 {
+        g.run(&pool).unwrap();
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 3 * 16);
+    assert!(pool.last_flight_dump().is_none(), "no recorder, no auto dumps");
+    // Profiles ride the dynamic-rank span sampling, which stays on.
+    assert!(g.last_profile().is_some(), "profiles survive obs-off pools");
+}
+
+#[test]
+fn node_duration_histogram_counts_every_executed_node() {
+    let pool = ThreadPool::new(2);
+    let (mut g, _) = Dag::linear_chain(24).to_task_graph(256);
+    // Enough runs to cross the warm-up threshold the SLO checks use.
+    let runs = (HIST_MIN_SAMPLES as usize).div_ceil(24) + 1;
+    for _ in 0..runs {
+        g.run(&pool).unwrap();
+    }
+    let snap = pool.node_duration_histogram().expect("histograms on by default");
+    assert_eq!(snap.count, (runs * 24) as u64, "one sample per executed node");
+    assert!(snap.quantile(0.99) >= snap.quantile(0.5), "quantiles are monotone");
+    assert!(snap.mean() > 0, "busy-work nodes take measurable time");
+}

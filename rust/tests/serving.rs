@@ -522,6 +522,29 @@ fn wire_round_trip_against_spawned_server() {
         let stats = c.scrape().unwrap();
         assert!(stats.contains("tenant_completed{tenant=\"gold\"} 3"), "{stats}");
         assert!(stats.contains("pool_threads 2"), "{stats}");
+        // PR 9: the scrape is a real Prometheus exposition now — hold
+        // it to the strict validator, cross-process.
+        scheduling::obs::validate(&stats).expect("cross-process STATS must validate");
+        let v2 = c.scrape_v2().unwrap();
+        scheduling::obs::validate(&v2).expect("cross-process STATS2 must validate");
+        assert!(v2.contains("tenant_latency_ns_quantile{tenant=\"gold\",q=\"0.99\"}"), "{v2}");
+        let trace = c.dump().expect("default server pool has the flight recorder on");
+        assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+
+        // And the `validate` subcommand agrees (the CI smoke step runs
+        // exactly this against the live server).
+        let out = Command::new(env!("CARGO_BIN_EXE_graph_serve"))
+            .args(["validate", "--addr", addr])
+            .output()
+            .expect("run graph_serve validate");
+        let text = format!(
+            "{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(out.status.success(), "graph_serve validate failed:\n{text}");
+        assert!(text.contains("STATS: valid exposition"), "{text}");
+        assert!(text.contains("STATS2: valid exposition"), "{text}");
     });
     let _ = child.kill();
     let _ = child.wait();
