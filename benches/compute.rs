@@ -1,0 +1,277 @@
+//! COMPUTE — floating-point throughput of the data-parallel layer
+//! (PR 10): the first bench where the pool is measured in GFLOP/s of
+//! real work, not scheduling overhead.
+//!
+//! 1. **Blocked matmul** (COMPUTE-MM): serial naive oracle
+//!    (`matmul_ref`) vs serial cache-blocked (`matmul_blocked`) vs
+//!    `parallel_for`-powered (`matmul_blocked_par`) at 1/2/4/8
+//!    workers, 256²–1024² (the 1024² arm is skipped under
+//!    `BENCH_FAST=1`). Every fast arm is `allclose`-checked against
+//!    the oracle *inside the bench*, so CI cannot report GFLOP/s for
+//!    wrong answers. SHAPE: parallel blocked at 4 workers ≥ 3× the
+//!    serial naive reference on the 512² problem.
+//! 2. **Tile sweep** (COMPUTE-TILE): the `MATMUL_TILE` const swept
+//!    16–128 on the serial blocked kernel.
+//! 3. **Stencil** (COMPUTE-ST): serial 5-point `stencil_step` vs
+//!    `stencil_step_par` across 1/2/4/8 workers; the parallel result
+//!    must match the serial one bit-exactly.
+//! 4. **ABL-10 grain sweep**: `parallel_reduce` over a memory-bound
+//!    sum with the grain knob swept from pathological (1) to coarse,
+//!    measuring the per-block scheduling overhead the grain floor
+//!    exists to amortize.
+//!
+//! Prints `GFLOPS`/`SCALE` lines per arm (scaling efficiency =
+//! speedup over the 1-worker arm ÷ workers) and records wall times
+//! into the `BENCH_pr10.json` ledger. Knobs: `BENCH_FAST=1`,
+//! `THREADS` (ABL-10 pool size, default 4).
+
+use std::time::Duration;
+
+use scheduling::bench_harness::{bench_wall, record_json, BenchOptions, Report};
+use scheduling::graph::{parallel_reduce, ParOptions};
+use scheduling::pool::ThreadPool;
+use scheduling::runtime::HostTensor;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    matmul_bench(&opts);
+    tile_sweep(&opts);
+    stencil_bench(&opts);
+    grain_sweep(&opts);
+}
+
+fn gflops(flops: f64, mean: Duration) -> f64 {
+    flops / mean.as_secs_f64().max(1e-12) / 1e9
+}
+
+fn matmul_bench(opts: &BenchOptions) {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let sizes: &[usize] = if fast { &[256, 512] } else { &[256, 512, 1024] };
+
+    let mut report = Report::new(
+        "COMPUTE-MM blocked matmul GFLOP/s",
+        "serial naive oracle vs cache-blocked serial vs parallel_for row-blocks; \
+         flops = 2n^3; all fast arms allclose-checked against matmul_ref",
+    );
+
+    for &n in sizes {
+        let a = HostTensor::random(&[n, n], 0xA0 + n as u64);
+        let b = HostTensor::random(&[n, n], 0xB0 + n as u64);
+        let oracle = a.matmul_ref(&b);
+        let flops = 2.0 * (n as f64).powi(3);
+        let param = format!("{n}x{n}");
+
+        // Correctness gate before any timing: wrong answers must fail
+        // the bench, not ship GFLOP/s numbers.
+        assert!(
+            a.matmul_blocked(&b).allclose(&oracle, 1e-3, 1e-4),
+            "blocked matmul diverges from oracle at {n}"
+        );
+
+        // The naive oracle is quadratically painful to *time* at
+        // 1024²; its point is made at the smaller sizes.
+        if n <= 512 {
+            let s = bench_wall(opts, || {
+                std::hint::black_box(a.matmul_ref(&b));
+            });
+            println!("GFLOPS matmul@{param} serial-naive: {:.2}", gflops(flops, s.mean));
+            report.push(&param, "serial-naive", s);
+        }
+
+        let s = bench_wall(opts, || {
+            std::hint::black_box(a.matmul_blocked(&b));
+        });
+        println!("GFLOPS matmul@{param} serial-blocked: {:.2}", gflops(flops, s.mean));
+        report.push(&param, "serial-blocked", s);
+
+        for &w in &WORKER_COUNTS {
+            let pool = ThreadPool::new(w);
+            assert!(
+                a.matmul_blocked_par(&b, &pool)
+                    .unwrap()
+                    .allclose(&oracle, 1e-3, 1e-4),
+                "parallel matmul diverges from oracle at {n} with {w} workers"
+            );
+            let s = bench_wall(opts, || {
+                std::hint::black_box(a.matmul_blocked_par(&b, &pool).unwrap());
+            });
+            println!(
+                "GFLOPS matmul@{param} par-blocked-w{w}: {:.2}",
+                gflops(flops, s.mean)
+            );
+            report.push(&param, format!("par-blocked-w{w}"), s);
+        }
+
+        for &w in &WORKER_COUNTS[1..] {
+            if let Some(sp) = report.speedup(&param, &format!("par-blocked-w{w}"), "par-blocked-w1")
+            {
+                println!(
+                    "SCALE matmul@{param} w{w}: speedup {sp:.2}x efficiency {:.2}",
+                    sp / w as f64
+                );
+            }
+        }
+    }
+
+    report.print();
+    record_json("compute", "wall", 8, &report);
+
+    // The PR 10 acceptance shape: parallel blocked on 4 workers beats
+    // the serial naive reference ≥ 3× on the 512² problem (blocked
+    // kernel win × parallel speedup compound).
+    let r = report
+        .speedup("512x512", "par-blocked-w4", "serial-naive")
+        .unwrap_or(0.0);
+    println!(
+        "SHAPE matmul-par4-vs-naive@512: {r:.2}x {}",
+        if r >= 3.0 { "PASS" } else { "FAIL" }
+    );
+}
+
+fn tile_sweep(opts: &BenchOptions) {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n = if fast { 256 } else { 512 };
+    let a = HostTensor::random(&[n, n], 1);
+    let b = HostTensor::random(&[n, n], 2);
+    let oracle = a.matmul_ref(&b);
+    let flops = 2.0 * (n as f64).powi(3);
+
+    let mut report = Report::new(
+        "COMPUTE-TILE matmul tile-size sweep",
+        format!("serial blocked matmul at {n}x{n}; MATMUL_TILE default is 64"),
+    );
+    for tile in [16usize, 32, 64, 128] {
+        assert!(
+            a.matmul_blocked_tiled(&b, tile).allclose(&oracle, 1e-3, 1e-4),
+            "tile {tile} diverges"
+        );
+        let s = bench_wall(opts, || {
+            std::hint::black_box(a.matmul_blocked_tiled(&b, tile));
+        });
+        println!("GFLOPS matmul-tile@{tile}: {:.2}", gflops(flops, s.mean));
+        report.push(format!("{n}x{n}"), format!("tile{tile}"), s);
+    }
+    report.print();
+    record_json("compute", "wall", 1, &report);
+}
+
+fn stencil_bench(opts: &BenchOptions) {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n = if fast { 512 } else { 1024 };
+    let grid = HostTensor::random(&[n, n], 9);
+    let serial_out = grid.stencil_step();
+    // ~5 flops per interior cell (4 adds + 1 multiply).
+    let flops = 5.0 * ((n - 2) as f64).powi(2);
+    let param = format!("{n}x{n}");
+
+    let mut report = Report::new(
+        "COMPUTE-ST 5-point stencil step",
+        "serial stencil_step vs stencil_step_par row-blocks; parallel must match bit-exactly",
+    );
+
+    let s = bench_wall(opts, || {
+        std::hint::black_box(grid.stencil_step());
+    });
+    println!("GFLOPS stencil@{param} serial: {:.2}", gflops(flops, s.mean));
+    report.push(&param, "serial", s);
+
+    for &w in &WORKER_COUNTS {
+        let pool = ThreadPool::new(w);
+        let mut out = HostTensor::zeros(&[n, n]);
+        grid.stencil_step_par(&pool, &mut out).unwrap();
+        assert_eq!(
+            out.data, serial_out.data,
+            "parallel stencil diverges from serial at {w} workers"
+        );
+        let s = bench_wall(opts, || {
+            grid.stencil_step_par(&pool, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("GFLOPS stencil@{param} par-w{w}: {:.2}", gflops(flops, s.mean));
+        report.push(&param, format!("par-w{w}"), s);
+    }
+
+    for &w in &WORKER_COUNTS[1..] {
+        if let Some(sp) = report.speedup(&param, &format!("par-w{w}"), "par-w1") {
+            println!(
+                "SCALE stencil@{param} w{w}: speedup {sp:.2}x efficiency {:.2}",
+                sp / w as f64
+            );
+        }
+    }
+
+    report.print();
+    record_json("compute", "wall", 8, &report);
+}
+
+/// ABL-10: what does a block actually cost? A memory-bound sum where
+/// the body is nearly free, so per-block scheduling overhead is the
+/// whole story: grain 1 lets the splitter go to the full
+/// `threads × oversubscription` block count (fine for this size), and
+/// the coarse end serializes. The useful property is a wide flat
+/// middle — grain only matters at the pathological extremes.
+fn grain_sweep(opts: &BenchOptions) {
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+    let n = 1 << 20;
+    let data: Vec<f32> = (0..n).map(|i| (i % 97) as f32).collect();
+    let expected: f64 = data.iter().map(|&x| x as f64).sum();
+    let pool = ThreadPool::new(threads);
+
+    let mut report = Report::new(
+        "ABL-10 parallel_for grain-size sweep",
+        format!("parallel_reduce sum over {n} f32 on {threads} threads; grain = min block size"),
+    );
+
+    for grain in [1usize, 64, 1024, 16384, 262144] {
+        let sum = parallel_reduce(
+            &pool,
+            0..n,
+            grain,
+            0.0f64,
+            |r, acc| acc + data[r].iter().map(|&x| x as f64).sum::<f64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert!((sum - expected).abs() < 1e-3, "grain {grain}: bad sum {sum} vs {expected}");
+        let s = bench_wall(opts, || {
+            let sum = parallel_reduce(
+                &pool,
+                0..n,
+                grain,
+                0.0f64,
+                |r, acc| acc + data[r].iter().map(|&x| x as f64).sum::<f64>(),
+                |a, b| a + b,
+            )
+            .unwrap();
+            std::hint::black_box(sum);
+        });
+        report.push(format!("sum({n})"), format!("grain{grain}"), s);
+    }
+
+    // A default-split arm with explicit options, for the knob table in
+    // the README: oversubscription 4 at whatever grain falls out.
+    let s = bench_wall(opts, || {
+        let sum = scheduling::graph::parallel_reduce_with(
+            &pool,
+            0..n,
+            &ParOptions::new(),
+            0.0f64,
+            |r, acc| acc + data[r].iter().map(|&x| x as f64).sum::<f64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        std::hint::black_box(sum);
+    });
+    report.push(format!("sum({n})"), "default-split", s);
+
+    report.print();
+    record_json("ablations_compute", "wall", threads, &report);
+
+    // Midpoint grains should be close to the best arm — the knob has a
+    // wide plateau (informational, timing-sensitive: CHECK not FAIL).
+    if let Some(r) = report.speedup(&format!("sum({n})"), "grain1024", "grain1") {
+        println!("SHAPE abl10-grain-plateau@1M: {r:.2}x CHECK");
+    }
+}

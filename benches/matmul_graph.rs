@@ -19,7 +19,10 @@ use scheduling::workloads::matmul_graph::{BlockedMatmul, MatmulSchedule};
 
 fn main() {
     if find_artifacts_dir().is_none() {
-        eprintln!("SKIP matmul_graph bench: artifacts not built (run `make artifacts`)");
+        eprintln!(
+            "SKIP matmul_graph bench: artifacts not built (run `make artifacts`; \
+             host-kernel throughput is covered by `cargo bench --bench compute`)"
+        );
         return;
     }
     let size: usize = std::env::var("MM_SIZE").ok().and_then(|v| v.parse().ok()).unwrap_or(256);

@@ -7,7 +7,11 @@
 //! Reports throughput and latency percentiles, and verifies a sample
 //! of responses against host math.
 //!
-//! Requires `make artifacts`. Run:
+//! With `make artifacts` built, requests run on the PJRT executable
+//! and are spot-checked against the host oracle; without artifacts the
+//! same serving loop runs entirely on the cache-blocked host kernels
+//! (`HostTensor::matmul_blocked`, PR 10) — slower, but numerically the
+//! same model, so the example works out of the box. Run:
 //! `cargo run --release --example mlp_inference -- [REQUESTS] [THREADS]`
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -15,20 +19,22 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use scheduling::pool::ThreadPool;
-use scheduling::runtime::{find_artifacts_dir, HostTensor, Registry, Runtime};
+use scheduling::runtime::{find_artifacts_dir, Executable, HostTensor, Registry, Runtime};
 
 fn main() -> scheduling::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let requests: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(200);
     let threads: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(2);
 
-    if find_artifacts_dir().is_none() {
-        eprintln!("artifacts not built — run `make artifacts` first");
-        std::process::exit(2);
-    }
-    let runtime = Arc::new(Runtime::cpu()?);
-    let registry = Registry::open_default(runtime)?;
-    let exe = registry.get("mlp2_64")?;
+    // PJRT when artifacts exist, cache-blocked host kernels otherwise.
+    let exe: Option<Arc<Executable>> = if find_artifacts_dir().is_some() {
+        let runtime = Arc::new(Runtime::cpu()?);
+        let registry = Registry::open_default(runtime)?;
+        Some(registry.get("mlp2_64")?)
+    } else {
+        eprintln!("artifacts not built — serving with the cache-blocked host kernels instead");
+        None
+    };
 
     // Fixed model weights (shared by all requests).
     let w1 = Arc::new(HostTensor::random(&[64, 128], 100));
@@ -41,7 +47,10 @@ fn main() -> scheduling::util::error::Result<()> {
     let errors = Arc::new(AtomicUsize::new(0));
     let checked = Arc::new(AtomicUsize::new(0));
 
-    println!("serving {requests} requests (batch 32, 64->128->64 MLP) on {threads} workers");
+    let backend = if exe.is_some() { "pjrt" } else { "host-blocked" };
+    println!(
+        "serving {requests} requests (batch 32, 64->128->64 MLP, {backend} kernels) on {threads} workers"
+    );
     let start = Instant::now();
     for req in 0..requests {
         let exe = exe.clone();
@@ -50,13 +59,25 @@ fn main() -> scheduling::util::error::Result<()> {
         pool.submit(move || {
             let t0 = Instant::now();
             let x = HostTensor::random(&[32, 64], req as u64);
-            match exe.run1(&[x.clone(), (*w1).clone(), (*b1).clone(), (*w2).clone(), (*b2).clone()]) {
+            let result = match &exe {
+                Some(exe) => exe.run1(&[
+                    x.clone(),
+                    (*w1).clone(),
+                    (*b1).clone(),
+                    (*w2).clone(),
+                    (*b2).clone(),
+                ]),
+                None => Ok(mlp2_host(&x, &w1, &b1, &w2, &b2)),
+            };
+            match result {
                 Ok(y) => {
                     if y.shape != vec![32, 64] {
                         errors.fetch_add(1, Ordering::Relaxed);
                     } else if req % 50 == 0 {
-                        // Spot-check numerics against host math.
-                        let h = mlp2_host(&x, &w1, &b1, &w2, &b2);
+                        // Spot-check numerics against host math (for
+                        // the host backend this cross-checks the
+                        // blocked kernels against the naive oracle).
+                        let h = mlp2_host_ref(&x, &w1, &b1, &w2, &b2);
                         if y.allclose(&h, 1e-3, 1e-3) {
                             checked.fetch_add(1, Ordering::Relaxed);
                         } else {
@@ -92,16 +113,43 @@ fn main() -> scheduling::util::error::Result<()> {
         pct(0.99),
         lat[lat.len() - 1]
     );
-    println!(
-        "verified {} sampled responses against host math; kernel executions: {}",
-        checked.load(Ordering::Relaxed),
-        exe.executions()
-    );
+    match &exe {
+        Some(exe) => println!(
+            "verified {} sampled responses against host math; kernel executions: {}",
+            checked.load(Ordering::Relaxed),
+            exe.executions()
+        ),
+        None => println!(
+            "verified {} sampled responses against the naive host oracle",
+            checked.load(Ordering::Relaxed)
+        ),
+    }
     println!("mlp_inference OK");
     Ok(())
 }
 
+/// Two-layer MLP on the fast host path: cache-blocked matmuls + fused
+/// bias/GeLU loop.
 fn mlp2_host(
+    x: &HostTensor,
+    w1: &HostTensor,
+    b1: &HostTensor,
+    w2: &HostTensor,
+    b2: &HostTensor,
+) -> HostTensor {
+    let layer = |x: &HostTensor, w: &HostTensor, b: &HostTensor| {
+        let mut xw = x.matmul_blocked(w);
+        let d = w.shape[1];
+        for (idx, z) in xw.data.iter_mut().enumerate() {
+            *z = gelu(*z + b.data[idx % d]);
+        }
+        xw
+    };
+    layer(&layer(x, w1, b1), w2, b2)
+}
+
+/// The naive oracle (`matmul_ref`) used for spot checks.
+fn mlp2_host_ref(
     x: &HostTensor,
     w1: &HostTensor,
     b1: &HostTensor,
@@ -111,11 +159,13 @@ fn mlp2_host(
     let layer = |x: &HostTensor, w: &HostTensor, b: &HostTensor| {
         let xw = x.matmul_ref(w);
         let d = w.shape[1];
-        HostTensor::from_fn(&xw.shape.clone(), |idx| {
-            let z = xw.data[idx] + b.data[idx % d];
-            let inner = 0.797_884_6_f32 * (z + 0.044715 * z * z * z);
-            0.5 * z * (1.0 + inner.tanh())
-        })
+        HostTensor::from_fn(&xw.shape.clone(), |idx| gelu(xw.data[idx] + b.data[idx % d]))
     };
     layer(&layer(x, w1, b1), w2, b2)
+}
+
+/// Tanh-approximation GeLU, matching the compiled kernel.
+fn gelu(z: f32) -> f32 {
+    let inner = 0.797_884_6_f32 * (z + 0.044715 * z * z * z);
+    0.5 * z * (1.0 + inner.tanh())
 }

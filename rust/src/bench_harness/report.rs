@@ -149,10 +149,10 @@ pub fn csv_report(report: &Report) -> String {
 
 /// Default path of the perf-trajectory ledger, relative to the bench
 /// process working directory (`cargo bench` runs at the package root).
-/// One ledger per PR: `BENCH_pr1.json`–`BENCH_pr8.json` hold the
-/// frozen PR 1–8 baselines; this PR's runs accumulate in
-/// `BENCH_pr9.json` so successive ledgers can be diffed.
-pub const BENCH_JSON_DEFAULT: &str = "BENCH_pr9.json";
+/// One ledger per PR: `BENCH_pr1.json`–`BENCH_pr9.json` hold the
+/// frozen PR 1–9 baselines; this PR's runs accumulate in
+/// `BENCH_pr10.json` so successive ledgers can be diffed.
+pub const BENCH_JSON_DEFAULT: &str = "BENCH_pr10.json";
 
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -191,8 +191,8 @@ fn json_entry(bench: &str, metric: &str, threads: usize, report_title: &str, row
 }
 
 /// Appends `report` to the machine-readable benchmark ledger
-/// (`BENCH_pr9.json` at the package root by default; override the path
-/// with `BENCH_JSON=path`, disable with `BENCH_JSON=0`).
+/// (`BENCH_pr10.json` at the package root by default; override the
+/// path with `BENCH_JSON=path`, disable with `BENCH_JSON=0`).
 ///
 /// The ledger is one JSON object with an `entries` array of one-line
 /// objects — per (bench, param, series): median/mean wall or CPU time

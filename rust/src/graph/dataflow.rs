@@ -7,6 +7,27 @@
 //! dependency edges are derived automatically. The underlying execution
 //! is the unmodified §2.2 protocol.
 //!
+//! Values are **generation-stamped** (PR 10): every run attempt bumps
+//! the dataflow's epoch, every node stamps its slot with the epoch it
+//! ran under, and [`Output::take`]/[`Output::get`] only surface values
+//! whose stamp matches — so a cancelled, panicked, or otherwise aborted
+//! run can never serve a *previous* run's value as if fresh; stale
+//! reads return [`DataflowError::NotProduced`]. Outputs are therefore
+//! valid exactly for the last **successful** run.
+//!
+//! Two node families trade copying for reuse:
+//!
+//! * [`node`]/[`node1`]/[`node2`]/[`collect`] are by-value — each
+//!   consumer deep-clones its inputs out of the upstream slots.
+//!   Simple, and the right call for small values.
+//! * [`node_inplace`]/[`node1_inplace`]/[`node2_inplace`] are
+//!   **buffer-recycling**: inputs are *borrowed* from the upstream
+//!   slots (no clone) and the node's kernel writes into its own
+//!   retained output buffer, allocated once by `init` on the first run
+//!   and reused thereafter. A sealed dataflow built from these makes
+//!   **zero heap allocations** on re-runs, tensor payloads included —
+//!   proven by the `graph_alloc` counting-allocator tier.
+//!
 //! ```
 //! use scheduling::graph::Dataflow;
 //! use scheduling::pool::ThreadPool;
@@ -24,7 +45,8 @@
 //! assert_eq!(product.take().unwrap(), 21);
 //! ```
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::builder::{GraphError, NodeId, TaskGraph};
 use super::executor::RunOptions;
@@ -33,7 +55,8 @@ use crate::pool::ThreadPool;
 /// Errors specific to dataflow graphs.
 #[derive(Debug)]
 pub enum DataflowError {
-    /// The output was read before the graph ran (or was already taken).
+    /// The output was read before the graph ran, was already taken, or
+    /// belongs to a run that aborted before this node executed.
     NotProduced,
     /// The underlying graph failed.
     Graph(GraphError),
@@ -56,13 +79,37 @@ impl From<GraphError> for DataflowError {
     }
 }
 
-struct Slot<T>(Mutex<Option<T>>);
+/// Slot payload: the value plus the epoch it was produced under.
+struct SlotInner<T> {
+    value: Option<T>,
+    gen: u64,
+}
+
+struct Slot<T>(Mutex<SlotInner<T>>);
+
+impl<T> Slot<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Slot(Mutex::new(SlotInner {
+            value: None,
+            gen: 0,
+        })))
+    }
+}
+
+/// Locks a slot, shrugging off poison: a panicking node body aborts
+/// its *run* (PR 6 quarantine), and the generation stamp already
+/// guards readers against half-produced state — poisoning the mutex
+/// on top of that would wedge every later run of the same graph.
+fn lock_slot<T>(slot: &Slot<T>) -> MutexGuard<'_, SlotInner<T>> {
+    slot.0.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Handle to a node's typed result. Cloneable; also usable as an input
 /// to downstream nodes.
 pub struct Output<T> {
     slot: Arc<Slot<T>>,
     id: NodeId,
+    epoch: Arc<AtomicU64>,
 }
 
 /// Alias emphasizing the consuming side.
@@ -73,6 +120,7 @@ impl<T> Clone for Output<T> {
         Output {
             slot: self.slot.clone(),
             id: self.id,
+            epoch: self.epoch.clone(),
         }
     }
 }
@@ -84,9 +132,15 @@ impl<T> Output<T> {
         self.id
     }
 
-    /// Takes the produced value out of the slot.
+    /// Takes the produced value out of the slot. Inplace consumers of
+    /// this output rely on the value staying in place — prefer
+    /// [`get`](Output::get) when the node feeds an `*_inplace` node.
     pub fn take(&self) -> Result<T, DataflowError> {
-        self.slot.0.lock().unwrap().take().ok_or(DataflowError::NotProduced)
+        let mut inner = lock_slot(&self.slot);
+        if inner.gen != self.epoch.load(Ordering::SeqCst) {
+            return Err(DataflowError::NotProduced);
+        }
+        inner.value.take().ok_or(DataflowError::NotProduced)
     }
 
     /// Clones the produced value, leaving it in place (for re-runs and
@@ -95,7 +149,11 @@ impl<T> Output<T> {
     where
         T: Clone,
     {
-        self.slot.0.lock().unwrap().clone().ok_or(DataflowError::NotProduced)
+        let inner = lock_slot(&self.slot);
+        if inner.gen != self.epoch.load(Ordering::SeqCst) {
+            return Err(DataflowError::NotProduced);
+        }
+        inner.value.clone().ok_or(DataflowError::NotProduced)
     }
 }
 
@@ -103,6 +161,9 @@ impl<T> Output<T> {
 #[derive(Default)]
 pub struct Dataflow {
     graph: TaskGraph,
+    /// Bumped once per run attempt; node slots stamp the epoch they
+    /// produced under, and reads require a match.
+    epoch: Arc<AtomicU64>,
 }
 
 impl Dataflow {
@@ -117,12 +178,19 @@ impl Dataflow {
         T: Send + 'static,
         F: FnMut() -> T + Send + 'static,
     {
-        let slot = Arc::new(Slot(Mutex::new(None)));
-        let s = slot.clone();
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
         let id = self.graph.add_named(name, move || {
-            *s.0.lock().unwrap() = Some(f());
+            let v = f();
+            let mut inner = lock_slot(&s);
+            inner.value = Some(v);
+            inner.gen = ep.load(Ordering::SeqCst);
         });
-        Output { slot, id }
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
     }
 
     /// A unary node: consumes one upstream output (cloned from its
@@ -133,15 +201,22 @@ impl Dataflow {
         T: Send + 'static,
         F: FnMut(A) -> T + Send + 'static,
     {
-        let slot = Arc::new(Slot(Mutex::new(None)));
-        let s = slot.clone();
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
         let ain = a.clone();
         let id = self.graph.add_named(name, move || {
-            let av = ain.slot.0.lock().unwrap().clone().expect("predecessor value missing");
-            *s.0.lock().unwrap() = Some(f(av));
+            let av = lock_slot(&ain.slot).value.clone().expect("predecessor value missing");
+            let v = f(av);
+            let mut inner = lock_slot(&s);
+            inner.value = Some(v);
+            inner.gen = ep.load(Ordering::SeqCst);
         });
         self.graph.succeed(id, &[a.id]);
-        Output { slot, id }
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
     }
 
     /// A binary node: consumes two upstream outputs.
@@ -152,16 +227,23 @@ impl Dataflow {
         T: Send + 'static,
         F: FnMut(A, B) -> T + Send + 'static,
     {
-        let slot = Arc::new(Slot(Mutex::new(None)));
-        let s = slot.clone();
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
         let (ain, bin) = (a.clone(), b.clone());
         let id = self.graph.add_named(name, move || {
-            let av = ain.slot.0.lock().unwrap().clone().expect("predecessor value missing");
-            let bv = bin.slot.0.lock().unwrap().clone().expect("predecessor value missing");
-            *s.0.lock().unwrap() = Some(f(av, bv));
+            let av = lock_slot(&ain.slot).value.clone().expect("predecessor value missing");
+            let bv = lock_slot(&bin.slot).value.clone().expect("predecessor value missing");
+            let v = f(av, bv);
+            let mut inner = lock_slot(&s);
+            inner.value = Some(v);
+            inner.gen = ep.load(Ordering::SeqCst);
         });
         self.graph.succeed(id, &[a.id, b.id]);
-        Output { slot, id }
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
     }
 
     /// An n-ary reduction over homogeneous inputs.
@@ -171,19 +253,139 @@ impl Dataflow {
         T: Send + 'static,
         F: FnMut(Vec<A>) -> T + Send + 'static,
     {
-        let slot = Arc::new(Slot(Mutex::new(None)));
-        let s = slot.clone();
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
         let ins: Vec<Output<A>> = inputs.to_vec();
         let id = self.graph.add_named(name, move || {
             let vals: Vec<A> = ins
                 .iter()
-                .map(|i| i.slot.0.lock().unwrap().clone().expect("predecessor value missing"))
+                .map(|i| lock_slot(&i.slot).value.clone().expect("predecessor value missing"))
                 .collect();
-            *s.0.lock().unwrap() = Some(f(vals));
+            let v = f(vals);
+            let mut inner = lock_slot(&s);
+            inner.value = Some(v);
+            inner.gen = ep.load(Ordering::SeqCst);
         });
         let dep_ids: Vec<NodeId> = inputs.iter().map(|i| i.id).collect();
         self.graph.succeed(id, &dep_ids);
-        Output { slot, id }
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
+    }
+
+    /// A buffer-recycling source: `init` allocates the output once (on
+    /// the first run), and `f` refills it in place on every run. After
+    /// sealing, re-runs of this node make no heap allocations.
+    pub fn node_inplace<T, I, F>(&mut self, name: &str, mut init: I, mut f: F) -> Output<T>
+    where
+        T: Send + 'static,
+        I: FnMut() -> T + Send + 'static,
+        F: FnMut(&mut T) + Send + 'static,
+    {
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
+        let id = self.graph.add_named(name, move || {
+            let mut inner = lock_slot(&s);
+            if inner.value.is_none() {
+                inner.value = Some(init());
+            }
+            f(inner.value.as_mut().expect("just initialized"));
+            inner.gen = ep.load(Ordering::SeqCst);
+        });
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
+    }
+
+    /// A buffer-recycling unary node: the upstream value is *borrowed*
+    /// (no clone — safe because the predecessor completed
+    /// happens-before and slots are mutex-guarded), and `f` writes
+    /// into the retained output buffer.
+    ///
+    /// Don't [`take`](Output::take) an output that feeds an inplace
+    /// consumer between runs — the borrow expects the value in place
+    /// (the node panics with "predecessor value missing", aborting
+    /// that run like any node panic).
+    pub fn node1_inplace<A, T, I, F>(
+        &mut self,
+        name: &str,
+        a: &Output<A>,
+        mut init: I,
+        mut f: F,
+    ) -> Output<T>
+    where
+        A: Send + 'static,
+        T: Send + 'static,
+        I: FnMut() -> T + Send + 'static,
+        F: FnMut(&A, &mut T) + Send + 'static,
+    {
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
+        let ain = a.clone();
+        let id = self.graph.add_named(name, move || {
+            // Upstream lock is held across the kernel: the only other
+            // contenders are sibling consumers (readers of a finished
+            // value) and external `take`/`get` calls, never a lock
+            // cycle — every node locks upstreams before its own slot.
+            let a_inner = lock_slot(&ain.slot);
+            let av = a_inner.value.as_ref().expect("predecessor value missing");
+            let mut inner = lock_slot(&s);
+            if inner.value.is_none() {
+                inner.value = Some(init());
+            }
+            f(av, inner.value.as_mut().expect("just initialized"));
+            inner.gen = ep.load(Ordering::SeqCst);
+        });
+        self.graph.succeed(id, &[a.id]);
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
+    }
+
+    /// A buffer-recycling binary node: both upstream values borrowed,
+    /// output written in place (see [`node1_inplace`](Dataflow::node1_inplace)).
+    pub fn node2_inplace<A, B, T, I, F>(
+        &mut self,
+        name: &str,
+        a: &Output<A>,
+        b: &Output<B>,
+        mut init: I,
+        mut f: F,
+    ) -> Output<T>
+    where
+        A: Send + 'static,
+        B: Send + 'static,
+        T: Send + 'static,
+        I: FnMut() -> T + Send + 'static,
+        F: FnMut(&A, &B, &mut T) + Send + 'static,
+    {
+        let slot = Slot::new();
+        let (s, ep) = (slot.clone(), self.epoch.clone());
+        let (ain, bin) = (a.clone(), b.clone());
+        let id = self.graph.add_named(name, move || {
+            let a_inner = lock_slot(&ain.slot);
+            let av = a_inner.value.as_ref().expect("predecessor value missing");
+            let b_inner = lock_slot(&bin.slot);
+            let bv = b_inner.value.as_ref().expect("predecessor value missing");
+            let mut inner = lock_slot(&s);
+            if inner.value.is_none() {
+                inner.value = Some(init());
+            }
+            f(av, bv, inner.value.as_mut().expect("just initialized"));
+            inner.gen = ep.load(Ordering::SeqCst);
+        });
+        self.graph.succeed(id, &[a.id, b.id]);
+        Output {
+            slot,
+            id,
+            epoch: self.epoch.clone(),
+        }
     }
 
     /// Number of nodes.
@@ -203,12 +405,20 @@ impl Dataflow {
     }
 
     /// Runs the dataflow on `pool`, blocking until complete.
+    ///
+    /// Every call — successful or not — starts a new epoch, so after
+    /// an aborted run ([`GraphError::Cancelled`], a node panic, a
+    /// missed deadline) *all* outputs read as
+    /// [`DataflowError::NotProduced`] until the next successful run,
+    /// including nodes the aborted run never reached.
     pub fn run(&mut self, pool: &ThreadPool) -> Result<(), DataflowError> {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
         Ok(self.graph.run(pool)?)
     }
 
     /// [`Dataflow::run`] with explicit [`RunOptions`].
     pub fn run_with_options(&mut self, pool: &ThreadPool, options: RunOptions) -> Result<(), DataflowError> {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
         Ok(self.graph.run_with_options(pool, options)?)
     }
 }
@@ -216,6 +426,7 @@ impl Dataflow {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::CancelToken;
 
     #[test]
     fn arithmetic_pipeline() {
@@ -277,5 +488,122 @@ mod tests {
         assert_eq!(up.get().unwrap(), "SHARED");
         assert_eq!(len.get().unwrap(), 6);
         assert_eq!(a.get().unwrap(), "shared");
+    }
+
+    /// The PR 10 stale-value fix: a cancelled run must not let readers
+    /// see the previous run's values as if freshly produced.
+    #[test]
+    fn aborted_run_invalidates_previous_values() {
+        let mut df = Dataflow::new();
+        let a = df.node("a", || 7u32);
+        let b = df.node1("b", &a, |x| x + 1);
+        let pool = ThreadPool::new(2);
+        df.run(&pool).unwrap();
+        assert_eq!(b.get().unwrap(), 8);
+
+        let token = CancelToken::new();
+        token.cancel();
+        let err = df
+            .run_with_options(&pool, RunOptions::new().cancel_token(token))
+            .unwrap_err();
+        assert!(matches!(err, DataflowError::Graph(GraphError::Cancelled)));
+        // The old values are still physically in the slots, but they
+        // belong to a previous generation — reads must refuse them.
+        assert!(matches!(b.get(), Err(DataflowError::NotProduced)));
+        assert!(matches!(a.take(), Err(DataflowError::NotProduced)));
+
+        // A later successful run revalidates everything.
+        df.run(&pool).unwrap();
+        assert_eq!(b.get().unwrap(), 8);
+    }
+
+    /// Panicking nodes abort the run; the un-poisoning slot locks keep
+    /// the graph reusable, and stale reads stay invisible.
+    #[test]
+    fn panicked_run_invalidates_and_recovers() {
+        let mut df = Dataflow::new();
+        let mut boom = true;
+        let a = df.node("a", move || {
+            if boom {
+                boom = false;
+                panic!("first run fails");
+            }
+            3u64
+        });
+        let b = df.node1("b", &a, |x| x * 10);
+        let pool = ThreadPool::new(2);
+        let err = df.run(&pool).unwrap_err();
+        assert!(matches!(
+            err,
+            DataflowError::Graph(GraphError::NodePanicked { .. })
+        ));
+        assert!(matches!(b.get(), Err(DataflowError::NotProduced)));
+        df.run(&pool).unwrap();
+        assert_eq!(b.get().unwrap(), 30);
+    }
+
+    /// Inplace nodes keep refilling the same buffer: the Vec's heap
+    /// allocation must survive across re-runs.
+    #[test]
+    fn inplace_nodes_recycle_buffers() {
+        let mut df = Dataflow::new();
+        let mut tick = 0.0f32;
+        let src = df.node_inplace(
+            "src",
+            || vec![0.0f32; 1024],
+            move |buf: &mut Vec<f32>| {
+                tick += 1.0;
+                for v in buf.iter_mut() {
+                    *v = tick;
+                }
+            },
+        );
+        let addrs = Arc::new(Mutex::new(Vec::new()));
+        let rec = addrs.clone();
+        let scaled = df.node1_inplace(
+            "scale",
+            &src,
+            || vec![0.0f32; 1024],
+            move |a: &Vec<f32>, out: &mut Vec<f32>| {
+                rec.lock().unwrap().push(out.as_ptr() as usize);
+                for (o, v) in out.iter_mut().zip(a) {
+                    *o = v * 2.0;
+                }
+            },
+        );
+        let pool = ThreadPool::new(2);
+        df.graph_mut().seal().unwrap();
+        for pass in 1..=3 {
+            df.run(&pool).unwrap();
+            assert_eq!(scaled.get().unwrap()[0], 2.0 * pass as f32);
+        }
+        let addrs = addrs.lock().unwrap();
+        assert_eq!(addrs.len(), 3);
+        assert!(
+            addrs.iter().all(|&a| a == addrs[0]),
+            "output buffer must be recycled across runs, got {addrs:?}"
+        );
+    }
+
+    #[test]
+    fn node2_inplace_borrows_both_inputs() {
+        let mut df = Dataflow::new();
+        let a = df.node_inplace("a", || vec![1.0f32; 8], |_| {});
+        let b = df.node_inplace("b", || vec![2.0f32; 8], |_| {});
+        let sum = df.node2_inplace(
+            "sum",
+            &a,
+            &b,
+            || vec![0.0f32; 8],
+            |a: &Vec<f32>, b: &Vec<f32>, out: &mut Vec<f32>| {
+                for i in 0..out.len() {
+                    out[i] = a[i] + b[i];
+                }
+            },
+        );
+        let pool = ThreadPool::new(2);
+        df.run(&pool).unwrap();
+        df.run(&pool).unwrap();
+        assert!(sum.get().unwrap().iter().all(|&v| v == 3.0));
     }
 }

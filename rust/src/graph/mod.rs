@@ -59,12 +59,17 @@
 mod builder;
 mod dataflow;
 mod executor;
+mod par;
 mod schedule;
 mod trace;
 
 pub use builder::{GraphError, NodeId, TaskGraph};
 pub use dataflow::{Dataflow, DataflowError, Input, Output};
 pub use executor::{wait_all, wait_any, CancelToken, RunHandle, RunOptions};
+pub use par::{
+    parallel_for, parallel_for_with, parallel_reduce, parallel_reduce_with, ParOptions,
+    DEFAULT_OVERSUBSCRIPTION,
+};
 pub use schedule::RunPriority;
 pub use trace::{ShardDepthSample, SpanGuard, TraceEvent, Tracer};
 

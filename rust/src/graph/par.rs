@@ -1,0 +1,521 @@
+//! Data-parallel primitives over blocked index ranges (PR 10).
+//!
+//! [`parallel_for`] and [`parallel_reduce`] split an index range into
+//! contiguous blocks — the block count follows Shoshany's heuristic of
+//! `num_threads × oversubscription` (arXiv:2105.00613), floored by a
+//! caller-supplied `grain` — and execute the blocks on the pool as one
+//! shard-pinnable burst of inline tasks (each queued task captures a
+//! single `Arc`, so the PR 1 inline `RawTask` cell applies and the
+//! submission makes one batch publish + one batched wakeup).
+//!
+//! Scheduling is *claim-based* rather than pre-assigned: every helper
+//! task and the calling thread loop on a shared claim counter, so
+//!
+//! * index coverage is exactly-once by construction (each block index
+//!   is produced by one `fetch_add` winner);
+//! * blocks load-balance dynamically — a worker stuck behind a slow
+//!   block simply stops claiming while the others drain the rest;
+//! * the caller participates, which makes nested use from inside a
+//!   worker deadlock-free even on a one-thread pool: the caller claims
+//!   every block itself and the queued helpers no-op.
+//!
+//! Cancellation and panics ride the PR 6 abort machinery in miniature:
+//! a first-wins cause byte is checked at every block boundary, a
+//! [`CancelToken`] flips it to *cancelled*, and a panicking body is
+//! caught, recorded (first panic wins, with its block index), and
+//! surfaced as [`GraphError::NodePanicked`] after the loop quiesces.
+//! Like graph runs, a failed loop never tears down pool workers.
+//!
+//! [`TaskGraph::add_parallel_for`] is the graph-node form: it expands
+//! the loop into `start → blocks → join` plain nodes at build time, so
+//! a sealed graph re-runs the burst with zero allocations and the
+//! blocks show up individually (named `{name}/b{i}[{lo}..{hi})`,
+//! weighted by block length for PR 4 ranking) in `RunProfile` and
+//! Chrome traces.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::pool::task::RawTask;
+use crate::pool::ThreadPool;
+
+use super::{CancelToken, GraphError, NodeId, TaskGraph};
+
+/// Default blocks-per-worker multiplier: enough surplus blocks that a
+/// straggler block cannot serialize the tail of the loop, few enough
+/// that per-block overhead stays invisible next to real work.
+pub const DEFAULT_OVERSUBSCRIPTION: usize = 4;
+
+const CAUSE_NONE: u8 = 0;
+const CAUSE_CANCEL: u8 = 1;
+const CAUSE_PANIC: u8 = 2;
+
+/// Tuning knobs for [`parallel_for_with`] / [`parallel_reduce_with`].
+#[derive(Clone, Debug)]
+pub struct ParOptions {
+    /// Minimum indices per block (default 1). Raise it when the body
+    /// is so cheap that per-block scheduling would dominate; the ABL-10
+    /// bench sweeps this knob.
+    pub grain: usize,
+    /// Blocks-per-worker multiplier (default
+    /// [`DEFAULT_OVERSUBSCRIPTION`]).
+    pub oversubscription: usize,
+    /// Pin the helper burst to one shard (PR 5 locality), as
+    /// [`ThreadPool::submit_to_shard`] would.
+    pub shard: Option<usize>,
+    /// Cooperative cancellation, checked between blocks.
+    pub cancel: Option<CancelToken>,
+}
+
+impl Default for ParOptions {
+    fn default() -> Self {
+        ParOptions {
+            grain: 1,
+            oversubscription: DEFAULT_OVERSUBSCRIPTION,
+            shard: None,
+            cancel: None,
+        }
+    }
+}
+
+impl ParOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn grain(mut self, grain: usize) -> Self {
+        self.grain = grain;
+        self
+    }
+
+    pub fn oversubscription(mut self, oversubscription: usize) -> Self {
+        self.oversubscription = oversubscription;
+        self
+    }
+
+    pub fn shard(mut self, shard: usize) -> Self {
+        self.shard = Some(shard);
+        self
+    }
+
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+}
+
+/// `(block_size, num_blocks)` for `n` indices on `threads` workers.
+fn split_blocks(n: usize, threads: usize, opts: &ParOptions) -> (usize, usize) {
+    let desired = (threads.max(1) * opts.oversubscription.max(1)).max(1);
+    let block = opts.grain.max(1).max((n + desired - 1) / desired);
+    (block, (n + block - 1) / block)
+}
+
+/// Type-erased pointer to the caller-stack body closure. Sound to ship
+/// across threads because the pointee is `Sync` (enforced by the
+/// `F: Sync` bound where the pointer is created) and is only
+/// dereferenced for claimed blocks, all of which complete before the
+/// owning stack frame returns.
+struct SendPtr(*const ());
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Shared state of one in-flight loop. Helper tasks hold it behind an
+/// `Arc`; a helper that arrives after every block is claimed touches
+/// only the atomics (never `body`), so helpers outliving the call —
+/// still queued while the caller has already returned — are harmless.
+struct ParCore {
+    /// Next unclaimed block index; claimed by `fetch_add`.
+    next: AtomicUsize,
+    /// Blocks not yet finished; the decrement to zero notifies the
+    /// caller (same finisher handshake as `pool::scope`).
+    remaining: AtomicUsize,
+    nblocks: usize,
+    start: usize,
+    block: usize,
+    end: usize,
+    /// First-wins abort cause (`CAUSE_*`), checked per block.
+    cause: AtomicU8,
+    cancel: Option<CancelToken>,
+    /// Block index + rendered payload of the first panic.
+    panic: Mutex<Option<(usize, String)>>,
+    body: SendPtr,
+    call: unsafe fn(*const (), Range<usize>),
+    done_mutex: Mutex<()>,
+    done_cv: Condvar,
+}
+
+fn render_payload(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+/// Runs one claimed block: abort-cause check, body, finisher.
+fn run_block(core: &ParCore, b: usize) {
+    if core.cause.load(Ordering::Acquire) == CAUSE_NONE
+        && core.cancel.as_ref().map_or(false, |t| t.is_cancelled())
+    {
+        let _ = core.cause.compare_exchange(
+            CAUSE_NONE,
+            CAUSE_CANCEL,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+    if core.cause.load(Ordering::Acquire) == CAUSE_NONE {
+        let lo = core.start + b * core.block;
+        let hi = (lo + core.block).min(core.end);
+        // SAFETY: `b < nblocks` (checked by the claim loop), so the
+        // caller's stack frame — which owns the closure behind
+        // `body` — is still alive: it cannot return until `remaining`
+        // hits zero, and this block has not yet decremented it.
+        let hit = catch_unwind(AssertUnwindSafe(|| unsafe { (core.call)(core.body.0, lo..hi) }));
+        if let Err(payload) = hit {
+            if core
+                .cause
+                .compare_exchange(CAUSE_NONE, CAUSE_PANIC, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let mut slot = core.panic.lock().unwrap_or_else(|e| e.into_inner());
+                *slot = Some((b, render_payload(payload)));
+            }
+        }
+    }
+    if core.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Lock/unlock pairs with the caller's wait so the final
+        // notify cannot slip between its counter check and its park.
+        drop(core.done_mutex.lock().unwrap_or_else(|e| e.into_inner()));
+        core.done_cv.notify_all();
+    }
+}
+
+/// Claims and runs blocks until none are left. Shared by the helper
+/// tasks and the calling thread.
+fn drain(core: &ParCore) {
+    loop {
+        let b = core.next.fetch_add(1, Ordering::Relaxed);
+        if b >= core.nblocks {
+            return;
+        }
+        run_block(core, b);
+    }
+}
+
+/// Runs `body` over every sub-range of `range`, split into blocks of
+/// at least `grain` indices, in parallel on `pool`. Blocks cover the
+/// range exactly once; the call returns when every block has finished.
+///
+/// The calling thread participates (it claims blocks like a worker),
+/// so this is safe to call from inside a pool task — a nested loop on
+/// a saturated or one-thread pool degrades to serial execution instead
+/// of deadlocking.
+///
+/// # Errors
+///
+/// [`GraphError::NodePanicked`] if a body panicked (`node` is the
+/// block index; remaining blocks are skipped), [`GraphError::Cancelled`]
+/// if a [`ParOptions::cancel_token`] fired mid-loop. The pool survives
+/// either outcome.
+pub fn parallel_for<F>(
+    pool: &ThreadPool,
+    range: Range<usize>,
+    grain: usize,
+    body: F,
+) -> Result<(), GraphError>
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    parallel_for_with(pool, range, &ParOptions::new().grain(grain), body)
+}
+
+/// [`parallel_for`] with the full option set ([`ParOptions`]).
+pub fn parallel_for_with<F>(
+    pool: &ThreadPool,
+    range: Range<usize>,
+    opts: &ParOptions,
+    body: F,
+) -> Result<(), GraphError>
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let n = range.end.saturating_sub(range.start);
+    if n == 0 {
+        return Ok(());
+    }
+    let (block, nblocks) = split_blocks(n, pool.num_threads(), opts);
+
+    /// Monomorphized un-eraser for `ParCore::call`.
+    unsafe fn call_shim<F: Fn(Range<usize>) + Sync>(p: *const (), r: Range<usize>) {
+        (*(p as *const F))(r);
+    }
+
+    let core = Arc::new(ParCore {
+        next: AtomicUsize::new(0),
+        remaining: AtomicUsize::new(nblocks),
+        nblocks,
+        start: range.start,
+        block,
+        end: range.end,
+        cause: AtomicU8::new(CAUSE_NONE),
+        cancel: opts.cancel.clone(),
+        panic: Mutex::new(None),
+        body: SendPtr(&body as *const F as *const ()),
+        call: call_shim::<F>,
+        done_mutex: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+
+    // One helper per surplus block, published as a single burst. Each
+    // helper captures only the `Arc` (one word — stored inline in the
+    // task cell, no per-task allocation).
+    if nblocks > 1 {
+        pool.inner().submit_job_batch_sharded(
+            opts.shard,
+            (1..nblocks).map(|_| {
+                let core = core.clone();
+                RawTask::closure(move || drain(&core))
+            }),
+        );
+    }
+    drain(&core);
+
+    // Every block is claimed by now (the drain above only returns once
+    // `next` passes `nblocks`); wait for claimed blocks still running
+    // on workers. The caller ran at least one block itself, so on an
+    // idle pool this wait is usually already satisfied.
+    {
+        let mut guard = core.done_mutex.lock().unwrap_or_else(|e| e.into_inner());
+        while core.remaining.load(Ordering::Acquire) > 0 {
+            guard = core
+                .done_cv
+                .wait(guard)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    match core.cause.load(Ordering::Acquire) {
+        CAUSE_CANCEL => Err(GraphError::Cancelled),
+        CAUSE_PANIC => {
+            let taken = core.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+            let (b, payload) =
+                taken.unwrap_or((0, "<panic payload missing>".to_string()));
+            Err(GraphError::NodePanicked {
+                node: b,
+                name: None,
+                payload,
+            })
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Parallel reduction over `range`: each block folds its indices with
+/// `body` starting from a clone of `identity`, and block results merge
+/// through `join`. Blocks finish in a nondeterministic order, so
+/// `join` must be associative and commutative (sums, min/max, unions —
+/// not string concatenation).
+pub fn parallel_reduce<T, B, J>(
+    pool: &ThreadPool,
+    range: Range<usize>,
+    grain: usize,
+    identity: T,
+    body: B,
+    join: J,
+) -> Result<T, GraphError>
+where
+    T: Clone + Send,
+    B: Fn(Range<usize>, T) -> T + Sync,
+    J: Fn(T, T) -> T + Sync,
+{
+    parallel_reduce_with(pool, range, &ParOptions::new().grain(grain), identity, body, join)
+}
+
+/// [`parallel_reduce`] with the full option set ([`ParOptions`]).
+pub fn parallel_reduce_with<T, B, J>(
+    pool: &ThreadPool,
+    range: Range<usize>,
+    opts: &ParOptions,
+    identity: T,
+    body: B,
+    join: J,
+) -> Result<T, GraphError>
+where
+    T: Clone + Send,
+    B: Fn(Range<usize>, T) -> T + Sync,
+    J: Fn(T, T) -> T + Sync,
+{
+    let acc: Mutex<Option<T>> = Mutex::new(None);
+    parallel_for_with(pool, range, opts, |r: Range<usize>| {
+        let local = body(r, identity.clone());
+        let mut slot = acc.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(match slot.take() {
+            Some(prev) => join(prev, local),
+            None => local,
+        });
+    })?;
+    let folded = acc.into_inner().unwrap_or_else(|e| e.into_inner());
+    Ok(folded.unwrap_or(identity))
+}
+
+impl TaskGraph {
+    /// Adds a data-parallel loop to the graph as a `start → blocks →
+    /// join` fan-out/fan-in: `blocks` leaf nodes each running `body`
+    /// over one contiguous sub-range, named `{name}/b{i}[{lo}..{hi})`
+    /// and weighted by block length so PR 4 ranking and the PR 9
+    /// profile/trace see them individually. Returns `(start, join)`
+    /// for wiring into the surrounding graph.
+    ///
+    /// The expansion happens here, at build time — after [`seal`],
+    /// re-runs submit the burst through the sealed CSR topology with
+    /// zero allocations, like any other nodes.
+    ///
+    /// [`seal`]: TaskGraph::seal
+    pub fn add_parallel_for<F>(
+        &mut self,
+        name: &str,
+        range: Range<usize>,
+        blocks: usize,
+        body: F,
+    ) -> (NodeId, NodeId)
+    where
+        F: Fn(Range<usize>) + Send + Sync + 'static,
+    {
+        let start = self.add_named(format!("{name}/start"), || {});
+        let join = self.add_named(format!("{name}/join"), || {});
+        let n = range.end.saturating_sub(range.start);
+        if n == 0 {
+            self.precede(start, &[join]);
+            return (start, join);
+        }
+        let blocks = blocks.max(1).min(n);
+        let block = (n + blocks - 1) / blocks;
+        let body = Arc::new(body);
+        let mut ids = Vec::with_capacity(blocks);
+        let mut lo = range.start;
+        let mut i = 0usize;
+        while lo < range.end {
+            let hi = (lo + block).min(range.end);
+            let f = Arc::clone(&body);
+            let id = self.add_named(format!("{name}/b{i}[{lo}..{hi})"), move || f(lo..hi));
+            self.set_weight(id, (hi - lo).min(u32::MAX as usize) as u32);
+            ids.push(id);
+            lo = hi;
+            i += 1;
+        }
+        self.precede(start, &ids);
+        self.succeed(join, &ids);
+        (start, join)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        parallel_for(&pool, 0..n, 1, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn grain_floors_block_size() {
+        let (block, nblocks) = split_blocks(100, 4, &ParOptions::new().grain(40));
+        assert_eq!(block, 40);
+        assert_eq!(nblocks, 3);
+        // Without a grain: threads × oversubscription blocks.
+        let (block, nblocks) = split_blocks(1600, 4, &ParOptions::new());
+        assert_eq!(nblocks, 16);
+        assert_eq!(block, 100);
+        // Tiny ranges never produce empty blocks.
+        let (_, nblocks) = split_blocks(3, 8, &ParOptions::new());
+        assert!(nblocks <= 3 && nblocks >= 1);
+    }
+
+    #[test]
+    fn reduce_sums_the_range() {
+        let pool = ThreadPool::new(4);
+        let n = 5000u64;
+        let sum = parallel_reduce(
+            &pool,
+            0..n as usize,
+            64,
+            0u64,
+            |r, acc| acc + r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(sum, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn empty_range_is_ok() {
+        let pool = ThreadPool::new(2);
+        parallel_for(&pool, 7..7, 1, |_| panic!("never called")).unwrap();
+    }
+
+    #[test]
+    fn precancelled_token_cancels() {
+        let pool = ThreadPool::new(2);
+        let token = CancelToken::new();
+        token.cancel();
+        let opts = ParOptions::new().cancel_token(token);
+        let err = parallel_for_with(&pool, 0..1000, &opts, |_| {}).unwrap_err();
+        assert!(matches!(err, GraphError::Cancelled));
+    }
+
+    #[test]
+    fn body_panic_surfaces_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let err = parallel_for(&pool, 0..100, 10, |r| {
+            if r.contains(&42) {
+                panic!("boom at 42");
+            }
+        })
+        .unwrap_err();
+        match err {
+            GraphError::NodePanicked { payload, .. } => assert!(payload.contains("boom")),
+            other => panic!("unexpected error: {other:?}"),
+        }
+        // The loop aborted cleanly; the pool still runs work.
+        parallel_for(&pool, 0..100, 10, |_| {}).unwrap();
+    }
+
+    #[test]
+    fn graph_node_form_runs_and_reruns() {
+        let pool = ThreadPool::new(2);
+        let n = 257;
+        let hits: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let h = hits.clone();
+        let mut g = TaskGraph::new();
+        let (start, join) = g.add_parallel_for("loop", 0..n, 8, move |r| {
+            for i in r {
+                h[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        let pre = g.add(|| {});
+        let post = g.add(|| {});
+        g.precede(pre, &[start]);
+        g.succeed(post, &[join]);
+        g.seal().unwrap();
+        for pass in 1..=3u32 {
+            g.run(&pool).unwrap();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == pass));
+        }
+    }
+}

@@ -19,7 +19,7 @@ pub mod tensor;
 
 pub use client::{Executable, Runtime};
 pub use registry::{ArtifactEntry, Registry};
-pub use tensor::HostTensor;
+pub use tensor::{HostTensor, MATMUL_TILE};
 
 /// Default artifacts directory, relative to the repo root.
 pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

@@ -1,7 +1,78 @@
 //! Host-side tensors: the boundary type between the coordinator and
 //! the PJRT executables, plus reference math for end-to-end checks.
+//!
+//! Since PR 10 this is also where the *fast* host compute lives:
+//! cache-blocked kernels beside the naive oracles. [`matmul_blocked`]
+//! tiles the i-k-j loop nest so one `MATMUL_TILE²` panel of B stays in
+//! L1 while a panel of rows streams through it (the innermost j-loop
+//! is written over exact-length slices so LLVM vectorizes it into FMA
+//! lanes — the register-blocked micro-kernel), [`stencil_step`] is a
+//! 5-point average, and both have `parallel_for`-powered `_par`
+//! variants that split output rows across the pool as one blocked
+//! burst. Every fast path has an `allclose` oracle: `matmul_ref` for
+//! the matmuls, the serial stencil for the parallel one.
+//!
+//! [`matmul_blocked`]: HostTensor::matmul_blocked
+//! [`stencil_step`]: HostTensor::stencil_step
 
+use std::ops::Range;
+
+use crate::graph::{parallel_for, GraphError};
+use crate::pool::ThreadPool;
 use crate::util::Pcg32;
+
+/// Default square tile edge for the blocked matmul: a 64×64 `f32`
+/// panel is 16 KiB, so one B panel plus the active A/C rows fit in a
+/// 32 KiB L1. The compute bench sweeps this knob via
+/// [`HostTensor::matmul_blocked_tiled`].
+pub const MATMUL_TILE: usize = 64;
+
+/// Raw mutable base pointer smuggled into `parallel_for` bodies. The
+/// parallel kernels hand each block a *disjoint* row range of the
+/// output, so concurrent writes through this pointer never alias.
+#[derive(Clone, Copy)]
+struct SendMutPtr(*mut f32);
+
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+/// Accumulates `c += a @ b` for an `m × k` row-panel `a` against the
+/// full `k × n` matrix `b`, tiled over k and j. Shared by the serial
+/// and parallel entry points (the parallel one calls it per row-block).
+fn matmul_acc_panel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, tile: usize) {
+    let tile = tile.max(8);
+    for kk in (0..k).step_by(tile) {
+        let k_end = (kk + tile).min(k);
+        for jj in (0..n).step_by(tile) {
+            let j_end = (jj + tile).min(n);
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let c_row = &mut c[i * n + jj..i * n + j_end];
+                for p in kk..k_end {
+                    let a_ip = a_row[p];
+                    let b_row = &b[p * n + jj..p * n + j_end];
+                    // Exact-length slice pair: vectorizes to FMA lanes.
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += a_ip * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One 5-point stencil row: `out[j] = (c + up + down + left + right)/5`
+/// for interior j, boundary columns copied through.
+fn stencil_row(up: &[f32], cur: &[f32], down: &[f32], out: &mut [f32]) {
+    let n = cur.len();
+    out[0] = cur[0];
+    if n > 1 {
+        out[n - 1] = cur[n - 1];
+    }
+    for j in 1..n.saturating_sub(1) {
+        out[j] = (cur[j] + up[j] + down[j] + cur[j - 1] + cur[j + 1]) * 0.2;
+    }
+}
 
 /// A dense row-major `f32` tensor on the host.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,6 +205,148 @@ impl HostTensor {
     pub fn sum(&self) -> f64 {
         self.data.iter().map(|&x| x as f64).sum()
     }
+
+    fn matmul_dims(&self, rhs: &HostTensor) -> (usize, usize, usize) {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "inner dims mismatch");
+        (m, k, n)
+    }
+
+    /// Cache-blocked serial matmul `self @ rhs` with the default
+    /// [`MATMUL_TILE`]. Same contract as [`matmul_ref`], much faster
+    /// on matrices that outgrow L1.
+    ///
+    /// [`matmul_ref`]: HostTensor::matmul_ref
+    pub fn matmul_blocked(&self, rhs: &HostTensor) -> HostTensor {
+        self.matmul_blocked_tiled(rhs, MATMUL_TILE)
+    }
+
+    /// [`matmul_blocked`](HostTensor::matmul_blocked) with an explicit
+    /// tile edge (the ABL tile sweep's knob).
+    pub fn matmul_blocked_tiled(&self, rhs: &HostTensor, tile: usize) -> HostTensor {
+        let (m, _, n) = self.matmul_dims(rhs);
+        let mut out = HostTensor::zeros(&[m, n]);
+        self.matmul_blocked_acc(rhs, &mut out, tile);
+        out
+    }
+
+    /// Blocked matmul into an existing buffer (zeroed first): the
+    /// allocation-free form the inplace dataflow nodes use.
+    pub fn matmul_blocked_into(&self, rhs: &HostTensor, out: &mut HostTensor) {
+        let (m, _, n) = self.matmul_dims(rhs);
+        assert_eq!(out.shape, &[m, n], "output shape mismatch");
+        out.data.fill(0.0);
+        self.matmul_blocked_acc(rhs, out, MATMUL_TILE);
+    }
+
+    /// Accumulating blocked matmul `out += self @ rhs` — the K-loop
+    /// building block for tiled graph matmuls
+    /// (`workloads::BlockedMatmul`'s host kernel).
+    pub fn matmul_blocked_acc(&self, rhs: &HostTensor, out: &mut HostTensor, tile: usize) {
+        let (m, k, n) = self.matmul_dims(rhs);
+        assert_eq!(out.shape, &[m, n], "output shape mismatch");
+        matmul_acc_panel(&self.data, &rhs.data, &mut out.data, m, k, n, tile);
+    }
+
+    /// Parallel cache-blocked matmul: output rows are split into
+    /// blocks (Shoshany's `threads × oversubscription` heuristic) and
+    /// each block runs the serial panel kernel on the pool. Results
+    /// are bit-identical to [`matmul_blocked`] — the reduction order
+    /// per element is unchanged; only row ownership moves.
+    pub fn matmul_blocked_par(
+        &self,
+        rhs: &HostTensor,
+        pool: &ThreadPool,
+    ) -> Result<HostTensor, GraphError> {
+        let (m, k, n) = self.matmul_dims(rhs);
+        let mut out = HostTensor::zeros(&[m, n]);
+        {
+            let out_ptr = SendMutPtr(out.data.as_mut_ptr());
+            let (a, b) = (&self.data, &rhs.data);
+            parallel_for(pool, 0..m, 1, move |rows: Range<usize>| {
+                let a_panel = &a[rows.start * k..rows.end * k];
+                // SAFETY: `parallel_for` hands out disjoint row
+                // ranges, so blocks write non-overlapping slices of
+                // `out`, which outlives the loop (parallel_for joins
+                // before this function returns).
+                let c_panel = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(rows.start * n), rows.len() * n)
+                };
+                matmul_acc_panel(a_panel, b, c_panel, rows.len(), k, n, MATMUL_TILE);
+            })?;
+        }
+        Ok(out)
+    }
+
+    /// One serial 5-point stencil step (rank-2): interior cells become
+    /// the average of themselves and their 4 neighbours, boundary
+    /// cells copy through. Its own oracle — the parallel variant must
+    /// match it bit-exactly.
+    pub fn stencil_step(&self) -> HostTensor {
+        let mut out = HostTensor::zeros(&self.shape);
+        self.stencil_step_into(&mut out);
+        out
+    }
+
+    /// [`stencil_step`](HostTensor::stencil_step) into an existing
+    /// buffer (the inplace dataflow form).
+    pub fn stencil_step_into(&self, out: &mut HostTensor) {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(out.shape, self.shape, "output shape mismatch");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        if m == 0 || n == 0 {
+            return;
+        }
+        for i in 0..m {
+            let cur = &self.data[i * n..(i + 1) * n];
+            if i == 0 || i == m - 1 {
+                out.data[i * n..(i + 1) * n].copy_from_slice(cur);
+                continue;
+            }
+            let up = &self.data[(i - 1) * n..i * n];
+            let down = &self.data[(i + 1) * n..(i + 2) * n];
+            stencil_row(up, cur, down, &mut out.data[i * n..(i + 1) * n]);
+        }
+    }
+
+    /// Parallel 5-point stencil step: rows are split across the pool;
+    /// each block reads its row-range plus one halo row on either side
+    /// and writes its own rows only. Bit-identical to
+    /// [`stencil_step`](HostTensor::stencil_step).
+    pub fn stencil_step_par(
+        &self,
+        pool: &ThreadPool,
+        out: &mut HostTensor,
+    ) -> Result<(), GraphError> {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(out.shape, self.shape, "output shape mismatch");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        let out_ptr = SendMutPtr(out.data.as_mut_ptr());
+        let src = &self.data;
+        parallel_for(pool, 0..m, 1, move |rows: Range<usize>| {
+            for i in rows {
+                let cur = &src[i * n..(i + 1) * n];
+                // SAFETY: row `i` belongs to exactly one block (the
+                // blocks partition `0..m`), and `out` outlives the
+                // joined loop.
+                let out_row =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+                if i == 0 || i == m - 1 {
+                    out_row.copy_from_slice(cur);
+                    continue;
+                }
+                let up = &src[(i - 1) * n..i * n];
+                let down = &src[(i + 1) * n..(i + 2) * n];
+                stencil_row(up, cur, down, out_row);
+            }
+        })
+    }
 }
 
 impl std::fmt::Display for HostTensor {
@@ -203,5 +416,67 @@ mod tests {
         let a = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
         let b = HostTensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
         assert_eq!(a.add_ref(&b).data, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_reference() {
+        // Odd sizes exercise the partial-tile edges.
+        for &(m, k, n) in &[(1, 1, 1), (7, 5, 9), (64, 64, 64), (65, 33, 70), (128, 96, 100)] {
+            let a = HostTensor::random(&[m, k], 11);
+            let b = HostTensor::random(&[k, n], 13);
+            let oracle = a.matmul_ref(&b);
+            assert!(a.matmul_blocked(&b).allclose(&oracle, 1e-4, 1e-5), "{m}x{k}x{n}");
+            for tile in [8, 16, 37] {
+                assert!(
+                    a.matmul_blocked_tiled(&b, tile).allclose(&oracle, 1e-4, 1e-5),
+                    "{m}x{k}x{n} tile {tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_into_and_acc_reuse_buffers() {
+        let a = HostTensor::random(&[33, 17], 3);
+        let b = HostTensor::random(&[17, 29], 4);
+        let oracle = a.matmul_ref(&b);
+        let mut out = HostTensor::full(&[33, 29], 42.0); // stale contents must be cleared
+        a.matmul_blocked_into(&b, &mut out);
+        assert!(out.allclose(&oracle, 1e-4, 1e-5));
+        // The accumulating form adds on top: running it once more on
+        // the same buffer doubles the result.
+        a.matmul_blocked_acc(&b, &mut out, MATMUL_TILE);
+        let doubled = HostTensor::from_fn(&[33, 29], |i| 2.0 * oracle.data[i]);
+        assert!(out.allclose(&doubled, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn parallel_matmul_matches_blocked_bit_exactly() {
+        let pool = ThreadPool::new(4);
+        for &(m, k, n) in &[(5, 64, 31), (64, 64, 64), (130, 50, 71)] {
+            let a = HostTensor::random(&[m, k], 21);
+            let b = HostTensor::random(&[k, n], 22);
+            let serial = a.matmul_blocked(&b);
+            let par = a.matmul_blocked_par(&b, &pool).unwrap();
+            assert_eq!(par.data, serial.data, "{m}x{k}x{n}");
+            assert!(par.allclose(&a.matmul_ref(&b), 1e-4, 1e-5));
+        }
+    }
+
+    #[test]
+    fn stencil_serial_and_parallel_agree() {
+        let pool = ThreadPool::new(4);
+        for &(m, n) in &[(1, 1), (2, 2), (3, 7), (64, 64), (65, 129)] {
+            let grid = HostTensor::random(&[m, n], 7);
+            let serial = grid.stencil_step();
+            // Boundaries copy through.
+            assert_eq!(serial.data[..n], grid.data[..n]);
+            let mut par = HostTensor::zeros(&[m, n]);
+            grid.stencil_step_par(&pool, &mut par).unwrap();
+            assert_eq!(par.data, serial.data, "{m}x{n}");
+        }
+        // A uniform field is a fixed point of the averaging step.
+        let flat = HostTensor::full(&[8, 8], 1.5);
+        assert!(flat.stencil_step().allclose(&flat, 0.0, 1e-6));
     }
 }

@@ -10,6 +10,12 @@
 //! An optional wavefront mode chains tiles diagonally — same compute,
 //! dependency-bound schedule — to exercise the §2.2 executor on a
 //! realistic dependency pattern.
+//!
+//! Since PR 10 the tile kernel is pluggable: [`BlockedMatmul::new_host`]
+//! builds the same graph with the cache-blocked host kernel
+//! ([`HostTensor::matmul_blocked_acc`]) in the node bodies, so the
+//! workload runs — and benches — without `make artifacts`, and the
+//! PJRT and host paths share one schedule.
 
 use std::sync::{Arc, Mutex};
 
@@ -62,32 +68,51 @@ pub enum MatmulSchedule {
     Wavefront,
 }
 
-/// Blocked matmul runner; holds the tiles and the compiled kernel.
+/// What runs inside a `C[i][j]` node's K-loop.
+#[derive(Clone)]
+enum TileKernel {
+    /// AOT-compiled PJRT executable (`matmul_tile_<tile>`).
+    Pjrt(Arc<crate::runtime::Executable>),
+    /// Cache-blocked host kernel ([`HostTensor::matmul_blocked_acc`]).
+    Host,
+}
+
+/// Blocked matmul runner; holds the tiles and the tile kernel.
 pub struct BlockedMatmul {
     a_tiles: Arc<Vec<Vec<HostTensor>>>,
     b_tiles: Arc<Vec<Vec<HostTensor>>>,
     t: usize,
     tile: usize,
-    exe: Arc<crate::runtime::Executable>,
+    kernel: TileKernel,
 }
 
 impl BlockedMatmul {
     /// Prepares a `t × t`-tile multiplication of `a @ b` using the
     /// `matmul_tile_<tile>` artifact from `registry`.
     pub fn new(registry: &Registry, a: &HostTensor, b: &HostTensor, tile: usize) -> Result<Self> {
+        let exe = registry
+            .get(&format!("matmul_tile_{tile}"))
+            .context("matmul tile kernel not in registry")?;
+        Self::with_kernel(a, b, tile, TileKernel::Pjrt(exe))
+    }
+
+    /// Like [`new`](BlockedMatmul::new), but the K-loop runs the
+    /// cache-blocked host kernel — no artifacts or PJRT required.
+    pub fn new_host(a: &HostTensor, b: &HostTensor, tile: usize) -> Result<Self> {
+        Self::with_kernel(a, b, tile, TileKernel::Host)
+    }
+
+    fn with_kernel(a: &HostTensor, b: &HostTensor, tile: usize, kernel: TileKernel) -> Result<Self> {
         assert_eq!(a.shape, b.shape, "square blocked matmul only");
         assert_eq!(a.shape[0], a.shape[1]);
         let t = a.shape[0] / tile;
         crate::ensure!(t >= 1 && a.shape[0] % tile == 0, "matrix not divisible into {tile}-tiles");
-        let exe = registry
-            .get(&format!("matmul_tile_{tile}"))
-            .context("matmul tile kernel not in registry")?;
         Ok(Self {
             a_tiles: Arc::new(split_tiles(a, tile)),
             b_tiles: Arc::new(split_tiles(b, tile)),
             t,
             tile,
-            exe,
+            kernel,
         })
     }
 
@@ -109,18 +134,35 @@ impl BlockedMatmul {
         for i in 0..t {
             for j in 0..t {
                 let (a_tiles, b_tiles) = (self.a_tiles.clone(), self.b_tiles.clone());
-                let (out, errors, exe) = (out.clone(), errors.clone(), self.exe.clone());
+                let (out, errors, kernel) = (out.clone(), errors.clone(), self.kernel.clone());
                 let id = g.add_named(format!("C[{i}][{j}]"), move || {
                     let mut acc = HostTensor::zeros(&[tile, tile]);
                     for k in 0..t {
-                        // acc = a[i][k] @ b[k][j] + acc — one executable
-                        // call per K step (the L1 kernel fuses the add).
-                        match exe.run1(&[a_tiles[i][k].clone(), b_tiles[k][j].clone(), acc.clone()]) {
-                            Ok(next) => acc = next,
-                            Err(e) => {
-                                errors.lock().unwrap().push(format!("tile ({i},{j}) k={k}: {e:#}"));
-                                return;
+                        // acc = a[i][k] @ b[k][j] + acc — one K step.
+                        match &kernel {
+                            TileKernel::Pjrt(exe) => {
+                                // One executable call per step (the L1
+                                // kernel fuses the add).
+                                match exe.run1(&[
+                                    a_tiles[i][k].clone(),
+                                    b_tiles[k][j].clone(),
+                                    acc.clone(),
+                                ]) {
+                                    Ok(next) => acc = next,
+                                    Err(e) => {
+                                        errors
+                                            .lock()
+                                            .unwrap()
+                                            .push(format!("tile ({i},{j}) k={k}: {e:#}"));
+                                        return;
+                                    }
+                                }
                             }
+                            TileKernel::Host => a_tiles[i][k].matmul_blocked_acc(
+                                &b_tiles[k][j],
+                                &mut acc,
+                                crate::runtime::MATMUL_TILE,
+                            ),
                         }
                     }
                     *out[i][j].lock().unwrap() = Some(acc);
@@ -203,5 +245,24 @@ mod tests {
         let c = join_tiles(&ct);
         let expected = a.matmul_ref(&b);
         assert!(c.allclose(&expected, 1e-5, 1e-5), "diff={}", c.max_abs_diff(&expected));
+    }
+
+    #[test]
+    fn host_kernel_blocked_matmul_end_to_end() {
+        // The PR 10 artifact-free path: same graph, host tile kernel.
+        let a = HostTensor::random(&[12, 12], 5);
+        let b = HostTensor::random(&[12, 12], 6);
+        let mm = BlockedMatmul::new_host(&a, &b, 4).unwrap();
+        assert_eq!(mm.num_tasks(), 9);
+        let pool = ThreadPool::new(3);
+        let expected = a.matmul_ref(&b);
+        for sched in [MatmulSchedule::Independent, MatmulSchedule::Wavefront] {
+            let c = mm.run(&pool, sched).unwrap();
+            assert!(
+                c.allclose(&expected, 1e-4, 1e-5),
+                "{sched:?} diff={}",
+                c.max_abs_diff(&expected)
+            );
+        }
     }
 }

@@ -15,8 +15,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use scheduling::graph::{RunOptions, RunPriority};
+use scheduling::graph::{Dataflow, RunOptions, RunPriority};
 use scheduling::pool::ThreadPool;
+use scheduling::runtime::HostTensor;
 use scheduling::workloads::Dag;
 
 /// Counts every allocation (alloc / alloc_zeroed / realloc) made by
@@ -212,6 +213,64 @@ fn sealed_rerun_makes_zero_heap_allocations() {
     assert_eq!(
         allocs, 0,
         "dynamic-rerank: sealed re-runs with duration feedback must not allocate (saw {allocs})"
+    );
+
+    // PR 10: *tensor-valued* dataflow re-runs. The inplace node forms
+    // borrow upstream values (no clone) and refill retained buffers
+    // (`init` allocates once, on the first run), so a sealed dataflow
+    // of real compute — a cache-blocked matmul feeding a stencil —
+    // re-runs without a single heap allocation, payloads included.
+    let mut df = Dataflow::new();
+    let mut tick = 0.0f32;
+    let a = df.node_inplace(
+        "a",
+        || HostTensor::random(&[48, 32], 11),
+        move |t: &mut HostTensor| {
+            // Refill in place each run (values change, buffer doesn't).
+            tick += 1.0;
+            for (i, v) in t.data.iter_mut().enumerate() {
+                *v = ((i % 13) as f32 - 6.0) * 0.01 * tick;
+            }
+        },
+    );
+    let b = df.node_inplace("b", || HostTensor::random(&[32, 40], 12), |_| {});
+    let prod = df.node2_inplace(
+        "matmul",
+        &a,
+        &b,
+        || HostTensor::zeros(&[48, 40]),
+        |a: &HostTensor, b: &HostTensor, out: &mut HostTensor| a.matmul_blocked_into(b, out),
+    );
+    let smooth = df.node1_inplace(
+        "stencil",
+        &prod,
+        || HostTensor::zeros(&[48, 40]),
+        |p: &HostTensor, out: &mut HostTensor| p.stencil_step_into(out),
+    );
+    df.graph_mut().seal().unwrap();
+    for _ in 0..5 {
+        df.run(&pool).unwrap();
+    }
+    pool.wait_idle();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        df.run(&pool).unwrap();
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        allocs, 0,
+        "tensor-dataflow: sealed inplace re-runs must not allocate (saw {allocs} in 10 runs)"
+    );
+    // Outside the window: the values are real (15 runs → tick == 15).
+    let p = prod.get().unwrap();
+    let s = smooth.get().unwrap();
+    assert_eq!(s.shape, vec![48, 40]);
+    assert_eq!(s.data, p.stencil_step().data, "stencil output matches its input's oracle");
+    let a_now = a.get().unwrap();
+    assert!(
+        (a_now.data[1] - (1.0 - 6.0) * 0.01 * 15.0).abs() < 1e-5,
+        "source must have refilled on every run (got {})",
+        a_now.data[1]
     );
 
     // Sanity: the machinery is actually counting.

@@ -15,7 +15,10 @@
 //!   disables every accessor without disturbing runs — the ABL-9
 //!   comparison configuration;
 //! * the histograms feeding the tail-aware SLO checks accumulate one
-//!   node-duration sample per executed node.
+//!   node-duration sample per executed node;
+//! * a `TaskGraph::add_parallel_for` burst (PR 10) renders one
+//!   profiled span per block, with block index + sub-range in the
+//!   node names.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -198,6 +201,52 @@ fn disabling_observability_disables_accessors_not_runs() {
     assert!(pool.last_flight_dump().is_none(), "no recorder, no auto dumps");
     // Profiles ride the dynamic-rank span sampling, which stays on.
     assert!(g.last_profile().is_some(), "profiles survive obs-off pools");
+}
+
+/// PR 10: a `parallel_for` burst is legible in the observability
+/// surfaces — the run profile counts every block node individually,
+/// the graph names carry each block's index and sub-range, and the
+/// Chrome trace renders one task span per block.
+#[test]
+fn parallel_for_burst_renders_in_profile_and_trace() {
+    let pool = ThreadPool::new(2);
+    let blocks = 8usize;
+    let mut g = TaskGraph::new();
+    let (_start, _join) = g.add_parallel_for("burst", 0..4096, blocks, |r| {
+        std::hint::black_box(r.map(|i| i as u64).sum::<u64>());
+    });
+    g.seal().unwrap();
+    g.run(&pool).unwrap();
+
+    let p = g.last_profile().expect("a timed run must yield a profile");
+    assert_eq!(p.nodes, blocks + 2, "start + join + one profiled span per block");
+
+    // Each block is a named node carrying its index and sub-range
+    // (4096 / 8 = 512-wide blocks), so profiles and dot renderings can
+    // attribute time to individual sub-ranges.
+    let dot = g.to_dot();
+    for i in 0..blocks {
+        let label = format!("burst/b{i}[{}..{})", i * 512, (i + 1) * 512);
+        assert!(dot.contains(&label), "missing {label} in {dot}");
+    }
+
+    pool.wait_idle();
+    let dump = pool.flight_dump().expect("flight recorder is on by default");
+    let starts = dump.of_kind(EventKind::TaskStart).count();
+    assert!(starts >= blocks + 2, "one TaskStart per executed node (saw {starts})");
+    let trace = dump.to_chrome_trace();
+    assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+    let spans = trace.matches("\"ph\":\"X\"").count();
+    assert!(spans >= blocks + 2, "one task span per node (saw {spans})");
+    // `add_parallel_for` adds start and join first, so the block nodes
+    // are ids 2..blocks+2 — every one of them must have completed a
+    // span in the trace.
+    for node in 2..blocks + 2 {
+        assert!(
+            trace.contains(&format!("\"args\":{{\"node\":{node},\"gen\"")),
+            "block node {node} missing from the trace"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,265 @@
+//! Data-parallel tier (PR 10) — behavioural properties of
+//! `parallel_for` / `parallel_reduce` on real pools:
+//!
+//! * **exactly-once coverage**: every index in the range is visited
+//!   exactly once, for randomized range/grain/oversubscription
+//!   combinations, on flat and sharded pools;
+//! * **nesting**: calling the primitives from *inside* a pool task is
+//!   deadlock-free (the caller claims blocks itself), down to a
+//!   one-thread pool;
+//! * **abort machinery**: a mid-loop cancellation surfaces
+//!   `GraphError::Cancelled`, a panicking body surfaces
+//!   `GraphError::NodePanicked` with the first panic's payload, and in
+//!   both cases the pool keeps running later work;
+//! * **graph form**: `TaskGraph::add_parallel_for` expands to a sealed
+//!   fan-out/fan-in whose re-runs cover the range once per run.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use scheduling::graph::{
+    parallel_for, parallel_for_with, parallel_reduce, CancelToken, GraphError, ParOptions,
+    TaskGraph,
+};
+use scheduling::pool::{PoolConfig, ThreadPool};
+use scheduling::util::Pcg32;
+
+fn sharded_pool(num_threads: usize, shard_size: usize) -> ThreadPool {
+    ThreadPool::with_config(PoolConfig {
+        num_threads,
+        shard_size,
+        ..PoolConfig::default()
+    })
+}
+
+/// Runs one coverage trial: every index in `range` must be hit exactly
+/// once, whatever the split.
+fn coverage_trial(pool: &ThreadPool, range: Range<usize>, opts: &ParOptions) {
+    let n = range.end - range.start;
+    let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let base = range.start;
+    parallel_for_with(pool, range.clone(), opts, |r: Range<usize>| {
+        assert!(r.start >= base && r.end <= range.end, "block {r:?} outside {range:?}");
+        for i in r {
+            hits[i - base].fetch_add(1, Ordering::Relaxed);
+        }
+    })
+    .unwrap();
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(
+            h.load(Ordering::Relaxed),
+            1,
+            "index {} covered wrong number of times (grain {}, oversub {})",
+            base + i,
+            opts.grain,
+            opts.oversubscription
+        );
+    }
+}
+
+#[test]
+fn exactly_once_coverage_randomized() {
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    let flat = ThreadPool::new(4);
+    let sharded = sharded_pool(4, 2);
+    for trial in 0..40 {
+        let start = (rng.next_u32() % 1000) as usize;
+        let len = (rng.next_u32() % 5000) as usize;
+        let grain = 1 + (rng.next_u32() % 600) as usize;
+        let oversub = 1 + (rng.next_u32() % 8) as usize;
+        let opts = ParOptions::new().grain(grain).oversubscription(oversub);
+        let pool = if trial % 2 == 0 { &flat } else { &sharded };
+        coverage_trial(pool, start..start + len, &opts);
+    }
+}
+
+#[test]
+fn coverage_on_one_thread_pool_and_shard_pins() {
+    let single = ThreadPool::new(1);
+    coverage_trial(&single, 0..1000, &ParOptions::new());
+    // Shard-pinned burst on a sharded pool (2 shards of 2).
+    let sharded = sharded_pool(4, 2);
+    for shard in 0..sharded.num_shards() {
+        coverage_trial(&sharded, 0..2048, &ParOptions::new().shard(shard));
+    }
+}
+
+#[test]
+fn degenerate_ranges() {
+    let pool = ThreadPool::new(2);
+    // Empty: body never runs.
+    parallel_for(&pool, 5..5, 1, |_| panic!("empty range ran a block")).unwrap();
+    // Single index.
+    let hits = AtomicU32::new(0);
+    parallel_for(&pool, 7..8, 100, |r| {
+        assert_eq!(r, 7..8);
+        hits.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(hits.load(Ordering::Relaxed), 1);
+    // Grain far larger than the range: one block.
+    let blocks = AtomicU32::new(0);
+    parallel_for(&pool, 0..10, 1_000_000, |r| {
+        assert_eq!(r, 0..10);
+        blocks.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(blocks.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn nested_from_worker_does_not_deadlock() {
+    // The caller of the inner loop is a pool worker; with every other
+    // worker busy (or nonexistent) it must claim all blocks itself.
+    for threads in [1, 2, 4] {
+        let pool = Arc::new(ThreadPool::new(threads));
+        let covered = Arc::new(AtomicUsize::new(0));
+        let (p, c) = (pool.clone(), covered.clone());
+        pool.submit(move || {
+            let inner_hits = AtomicUsize::new(0);
+            parallel_for(&p, 0..512, 16, |r: Range<usize>| {
+                inner_hits.fetch_add(r.len(), Ordering::Relaxed);
+            })
+            .unwrap();
+            c.store(inner_hits.load(Ordering::Relaxed), Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(covered.load(Ordering::SeqCst), 512, "threads={threads}");
+    }
+}
+
+#[test]
+fn parallel_reduce_matches_serial_fold() {
+    let pool = ThreadPool::new(4);
+    let data: Vec<u64> = (0..10_000).map(|i| (i * 7 + 3) % 101).collect();
+    let expected: u64 = data.iter().sum();
+    for grain in [1, 33, 1000, 100_000] {
+        let sum = parallel_reduce(
+            &pool,
+            0..data.len(),
+            grain,
+            0u64,
+            |r, acc| acc + data[r].iter().sum::<u64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(sum, expected, "grain {grain}");
+    }
+    // Max via reduce: join is commutative+associative but not addition.
+    let max = parallel_reduce(
+        &pool,
+        0..data.len(),
+        64,
+        u64::MIN,
+        |r, acc| data[r].iter().copied().fold(acc, u64::max),
+        u64::max,
+    )
+    .unwrap();
+    assert_eq!(max, *data.iter().max().unwrap());
+}
+
+#[test]
+fn midloop_cancellation_stops_remaining_blocks() {
+    let pool = ThreadPool::new(2);
+    let token = CancelToken::new();
+    let ran = Arc::new(AtomicUsize::new(0));
+    let opts = ParOptions::new().grain(1).oversubscription(64).cancel_token(token.clone());
+    let r = ran.clone();
+    let t = token.clone();
+    // Cancel from inside the first few blocks; many blocks (grain 1,
+    // high oversubscription) guarantee plenty were still pending.
+    let err = parallel_for_with(&pool, 0..100_000, &opts, move |range: Range<usize>| {
+        r.fetch_add(range.len(), Ordering::Relaxed);
+        t.cancel();
+    })
+    .unwrap_err();
+    assert!(matches!(err, GraphError::Cancelled));
+    assert!(
+        ran.load(Ordering::Relaxed) < 100_000,
+        "cancellation should have skipped some blocks"
+    );
+    // The pool is not poisoned: a fresh loop runs fine.
+    parallel_for(&pool, 0..1000, 10, |_| {}).unwrap();
+}
+
+#[test]
+fn panic_quarantines_with_first_payload() {
+    let pool = ThreadPool::new(4);
+    let err = parallel_for(&pool, 0..1000, 10, |r: Range<usize>| {
+        if r.start == 0 {
+            panic!("block zero exploded");
+        }
+    })
+    .unwrap_err();
+    match err {
+        GraphError::NodePanicked { payload, .. } => {
+            assert!(payload.contains("exploded"), "payload: {payload}");
+        }
+        other => panic!("expected NodePanicked, got {other:?}"),
+    }
+    // Workers survive body panics; both primitives still work.
+    let sum = parallel_reduce(&pool, 0..100, 1, 0usize, |r, acc| acc + r.len(), |a, b| a + b)
+        .unwrap();
+    assert_eq!(sum, 100);
+}
+
+#[test]
+fn graph_parallel_for_reruns_cover_range_each_time() {
+    let pool = ThreadPool::new(4);
+    let n = 10_007; // prime: exercises ragged final blocks
+    let hits: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+    let order = Arc::new(AtomicUsize::new(0));
+
+    let mut g = TaskGraph::new();
+    let oo = order.clone();
+    let before = g.add_named("before", move || {
+        // Runs strictly before every block of the loop.
+        oo.store(1, Ordering::SeqCst);
+    });
+    let h = hits.clone();
+    let o = order.clone();
+    let (start, join) = g.add_parallel_for("sweep", 0..n, 32, move |r: Range<usize>| {
+        assert_eq!(o.load(Ordering::SeqCst), 1, "block ran before its predecessor");
+        for i in r {
+            h[i].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    let o2 = order.clone();
+    let after = g.add_named("after", move || o2.store(2, Ordering::SeqCst));
+    g.precede(before, &[start]);
+    g.succeed(after, &[join]);
+    g.seal().unwrap();
+
+    // Block nodes are individually named with their index and span
+    // (the PR 9 profile/trace surfaces render these labels).
+    assert_eq!(g.name(start), Some("sweep/start"));
+    assert_eq!(g.name(join), Some("sweep/join"));
+    let dot = g.to_dot();
+    assert!(dot.contains("sweep/b0[0.."), "block labels missing from graph: {dot}");
+
+    for pass in 1..=3u32 {
+        order.store(0, Ordering::SeqCst);
+        g.run(&pool).unwrap();
+        assert_eq!(order.load(Ordering::SeqCst), 2, "join must precede the after-node");
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), pass, "index {i} on pass {pass}");
+        }
+    }
+}
+
+#[test]
+fn graph_parallel_for_empty_range_still_orders() {
+    let pool = ThreadPool::new(2);
+    let mut g = TaskGraph::new();
+    let ran = Arc::new(AtomicUsize::new(0));
+    let (start, join) = g.add_parallel_for("empty", 3..3, 4, |_| panic!("no blocks expected"));
+    let r = ran.clone();
+    let tail = g.add(move || {
+        r.store(1, Ordering::SeqCst);
+    });
+    g.succeed(tail, &[join]);
+    let _ = start;
+    g.run(&pool).unwrap();
+    assert_eq!(ran.load(Ordering::SeqCst), 1);
+}

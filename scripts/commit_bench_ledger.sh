@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Roll CI-measured medians into the committed bench ledger.
 #
-# The committed BENCH_pr9.json starts life with null medians: the
+# The committed BENCH_pr10.json starts life with null medians: the
 # bench-smoke regression gate treats null-baseline rows as NEW (they
 # pass), so the gate only arms once real CI-hardware medians are
 # committed back. This script closes that loop: it downloads the
@@ -16,7 +16,7 @@
 # access; run from anywhere inside the checkout.
 set -euo pipefail
 
-LEDGER=BENCH_pr9.json
+LEDGER=BENCH_pr10.json
 cd "$(git rev-parse --show-toplevel)"
 
 if ! command -v gh >/dev/null 2>&1; then
